@@ -1,0 +1,53 @@
+//! Data-analytics scenario: TPC-DS queries on Zenix vs PyWren+Orion
+//! (the paper's §6.1.1 headline comparison), plus a real PJRT-executed
+//! groupby-aggregate stage.
+//!
+//!     cargo run --release --example analytics [dataset-GB]
+
+use zenix::apps::tpcds;
+use zenix::figures::{render, tpcds_figs};
+use zenix::runtime::{manifest::find_artifact_dir, spawn_compute_service, Tensor};
+use zenix::util::rng::Rng;
+
+fn main() -> zenix::Result<()> {
+    let gb: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+    println!("TPC-DS at {gb} GB — Zenix vs PyWren+Orion\n");
+
+    for (q, zenix, pywren) in tpcds_figs::fig08_09_tpcds(gb) {
+        let title = format!("query {q}");
+        println!("{}", render(&title, &[zenix.clone(), pywren.clone()]));
+        println!(
+            "  -> zenix saves {:.1}% memory GB·s, {:.2}x faster\n",
+            zenix.mem_savings_vs(&pywren) * 100.0,
+            zenix.speedup_vs(&pywren)
+        );
+    }
+
+    // One real stage through PJRT: the analytics_stage artifact is the
+    // segment-sum (groupby) kernel the TPC-DS stages run.
+    let dir = find_artifact_dir()?;
+    let (compute, _join) = spawn_compute_service(&dir)?;
+    let (n, k, d) = (2048, 64, 32);
+    let mut rng = Rng::new(5);
+    let mut seg = vec![0f32; n * k];
+    for i in 0..n {
+        seg[i * k + rng.range(0, k)] = 1.0;
+    }
+    let x = Tensor::new((0..n * d).map(|_| rng.normal() as f32).collect(), vec![n, d]);
+    let t0 = std::time::Instant::now();
+    let (sums, counts, _means) =
+        compute.analytics_stage(Tensor::new(seg, vec![n, k]), x)?;
+    println!(
+        "real PJRT analytics_stage: {n} rows -> {k} groups in {:.2} ms (checksum sums={:.1}, rows={})",
+        t0.elapsed().as_secs_f64() * 1000.0,
+        sums.data.iter().map(|v| v.abs()).sum::<f32>(),
+        counts.data.iter().sum::<f32>() as usize,
+    );
+    compute.shutdown();
+
+    let _ = tpcds::QUERIES; // the supported query list
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: deploy an annotated bulky application and watch Zenix
+//! adapt its resources per invocation.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Deploys the Cirrus-ported logistic-regression program (4 `@compute`
+//! + 3 `@data` annotations), invokes it with the paper's two input
+//! sizes, and shows how the platform sizes/places components per
+//! invocation — plus one real PJRT-executed training step to prove the
+//! compute path is live.
+
+use zenix::apps::{lr, Invocation};
+use zenix::coordinator::graph::ResourceGraph;
+use zenix::coordinator::Platform;
+use zenix::metrics::print_table;
+use zenix::runtime::{manifest::find_artifact_dir, spawn_compute_service, Tensor};
+use zenix::util::rng::Rng;
+
+fn main() -> zenix::Result<()> {
+    // 1. Deploy: annotated program -> resource graph (offline part).
+    let program = lr::program();
+    let graph = ResourceGraph::from_program(&program)?;
+    println!(
+        "deployed {:?}: {} compute + {} data components, {} waves",
+        program.name,
+        graph.n_compute(),
+        graph.n_data(),
+        graph.waves().len()
+    );
+
+    // 2. Invoke with the paper's two inputs; the platform adapts sizing
+    //    and placement per invocation (warm the history first, as the
+    //    paper's sampling-based profiler does).
+    let mut platform = Platform::testbed();
+    let mut rows = Vec::new();
+    for (label, mb) in [("12 MB input", lr::SMALL_INPUT_MB), ("44 MB input", lr::LARGE_INPUT_MB)] {
+        let scale = lr::scale_for_mb(mb);
+        for _ in 0..3 {
+            platform.invoke(&graph, Invocation::new(scale))?;
+        }
+        let mut r = platform.invoke(&graph, Invocation::new(scale))?;
+        r.system = format!("zenix ({label})");
+        println!(
+            "{label}: exec {:.2}s, peak {:.0} MB / {:.0} vCPU, {:.0}% co-located",
+            r.exec_ms / 1000.0,
+            r.peak_mem_mb,
+            r.peak_cpu,
+            r.local_fraction * 100.0
+        );
+        rows.push(r);
+    }
+    print_table("quickstart: per-invocation adaptation", &rows);
+
+    // 3. One real PJRT training step through the AOT artifact (the same
+    //    compute the `train` component's hot loop runs).
+    let dir = find_artifact_dir()?;
+    let (compute, _join) = spawn_compute_service(&dir)?;
+    let mut rng = Rng::new(1);
+    let (n, d) = (1024, 256);
+    let x = Tensor::new((0..n * d).map(|_| rng.normal() as f32).collect(), vec![n, d]);
+    let y = Tensor::new((0..n).map(|_| (rng.f32() > 0.5) as u8 as f32).collect(), vec![n, 1]);
+    let w = Tensor::zeros(&[d, 1]);
+    let (_, loss) = compute.lr_train_step(x, y, w, 1.0)?;
+    println!("\nreal PJRT lr_train_step executed: initial loss = {loss:.4} (ln 2 ≈ 0.6931)");
+    compute.shutdown();
+    Ok(())
+}

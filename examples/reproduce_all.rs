@@ -1,0 +1,185 @@
+//! Regenerate every figure/table in the paper's evaluation
+//! (DESIGN.md §5 experiment index) and write the rows to results/.
+//!
+//!     cargo run --release --example reproduce_all
+
+use std::fmt::Write as _;
+use std::fs;
+
+use zenix::apps::lr;
+use zenix::figures::{lr_figs, platform_figs, render, tpcds_figs, video_figs};
+
+fn main() -> zenix::Result<()> {
+    fs::create_dir_all("results")?;
+    let mut index = String::new();
+
+    let mut emit = |name: &str, body: String| {
+        println!("=== {name} ===\n{body}");
+        fs::write(format!("results/{name}.txt"), &body).expect("write result");
+        let _ = writeln!(index, "- results/{name}.txt");
+    };
+
+    // Fig 3
+    let mut s = String::new();
+    let _ = writeln!(s, "stage                  workers   total MB");
+    for (name, w, mb) in tpcds_figs::fig03_stage_variation() {
+        let _ = writeln!(s, "{name:<22} {w:>7} {mb:>10.0}");
+    }
+    emit("fig03_stage_variation", s);
+
+    // Fig 4
+    let mut s = String::new();
+    let _ = writeln!(s, "stage                  min MB    avg MB    max MB   max/min");
+    for (name, min, avg, max) in tpcds_figs::fig04_input_variation() {
+        let _ = writeln!(s, "{name:<22} {min:>8.0} {avg:>9.0} {max:>9.0} {:>8.1}x", max / min);
+    }
+    emit("fig04_input_variation", s);
+
+    // Fig 7
+    for (label, pro) in [("baseline", false), ("proactive", true)] {
+        let mut s = String::new();
+        for (ev, a, b) in platform_figs::fig07_startup_flow(pro) {
+            let _ = writeln!(s, "{ev:<34} {a:>8.0} -> {b:>8.0} ms");
+        }
+        emit(&format!("fig07_startup_flow_{label}"), s);
+    }
+
+    // Figs 8+9
+    let mut s = String::new();
+    for (q, z, w) in tpcds_figs::fig08_09_tpcds(20.0) {
+        let _ = writeln!(s, "{}", render(&format!("TPC-DS Q{q} (20 GB)"), &[z, w]));
+    }
+    emit("fig08_09_tpcds", s);
+
+    // Fig 10
+    emit("fig10_ablation_tpcds", render("Q16 ablation", &tpcds_figs::fig10_ablation(20.0)));
+
+    // Figs 11-13
+    let mut s = String::new();
+    for (res, rows) in video_figs::fig11_13_video() {
+        let _ = writeln!(s, "{}", render(res, &rows));
+    }
+    emit("fig11_13_video", s);
+
+    // Fig 14
+    emit("fig14_ablation_video", render("720P ablation", &video_figs::fig14_ablation()));
+
+    // Figs 15-17
+    emit(
+        "fig15_lr_small",
+        render("LR 12 MB input", &lr_figs::fig15_16_lr(lr::SMALL_INPUT_MB)),
+    );
+    emit(
+        "fig16_lr_large",
+        render("LR 44 MB input", &lr_figs::fig15_16_lr(lr::LARGE_INPUT_MB)),
+    );
+    let rows = lr_figs::fig17_breakdown();
+    let mut s = String::new();
+    let _ = writeln!(s, "{:<18} {:>9} {:>9} {:>9} {:>9} {:>9}", "system", "compute", "startup", "io", "serde", "sched");
+    for r in &rows {
+        let b = &r.breakdown;
+        let _ = writeln!(
+            s,
+            "{:<18} {:>8.2}s {:>8.2}s {:>8.2}s {:>8.2}s {:>8.2}s",
+            r.system,
+            b.compute_ms / 1000.0,
+            b.startup_ms / 1000.0,
+            b.io_ms / 1000.0,
+            b.serialize_ms / 1000.0,
+            b.sched_ms / 1000.0
+        );
+    }
+    emit("fig17_lr_breakdown", s);
+
+    // Fig 18
+    let mut s = String::new();
+    for (label, rows) in lr_figs::fig18_scaling_tech() {
+        let _ = writeln!(s, "{}", render(label, &rows));
+    }
+    emit("fig18_scaling_tech", s);
+
+    // Figs 19+20
+    let mut s = String::new();
+    for (gb, z, w) in tpcds_figs::fig19_20_q1_inputs() {
+        let _ = writeln!(
+            s,
+            "{gb:>5} GB: zenix {:>8.1} GB·s / {:>7.2}s   pywren {:>8.1} GB·s / {:>7.2}s   (saves {:.0}%, {:.1}x)",
+            z.consumption.alloc_gb_s(),
+            z.exec_ms / 1000.0,
+            w.consumption.alloc_gb_s(),
+            w.exec_ms / 1000.0,
+            z.mem_savings_vs(&w) * 100.0,
+            z.speedup_vs(&w)
+        );
+    }
+    emit("fig19_20_q1_inputs", s);
+
+    // Fig 21
+    let mut s = String::new();
+    for (senders, gb, local, remote, disagg) in tpcds_figs::fig21_placement() {
+        let _ = writeln!(s, "--- {senders} senders, {gb:.1} GB total");
+        let mut rows = vec![local, remote, disagg];
+        rows[0].system = "local".into();
+        rows[1].system = "remote-scale".into();
+        rows[2].system = "disagg".into();
+        let _ = writeln!(s, "{}", render("placement", &rows));
+    }
+    emit("fig21_placement", s);
+
+    // Fig 22
+    let mut s = String::new();
+    let _ = writeln!(s, "{:<10} {:<16} {:>12} {:>12}", "trace", "strategy", "mem-util", "slowdown");
+    for (arch, strat, util, slow) in platform_figs::fig22_sizing() {
+        let _ = writeln!(s, "{arch:<10} {strat:<16} {:>11.0}% {slow:>12.3}", util * 100.0);
+    }
+    emit("fig22_sizing", s);
+
+    // Fig 23
+    let mut s = String::new();
+    for (name, ms) in platform_figs::fig23_comm_startup() {
+        let _ = writeln!(s, "{name:<26} {ms:>8.0} ms");
+    }
+    emit("fig23_comm_startup", s);
+
+    // Fig 25
+    let mut s = String::new();
+    let _ = writeln!(s, "{:>8} {:>6} {:>9} {:>12} {:>10}", "array MB", "pat", "cache MB", "time ms", "overhead");
+    for (mb, pat, cache, ms, ovh) in platform_figs::fig25_swap() {
+        let _ = writeln!(s, "{mb:>8.0} {pat:>6} {cache:>9.0} {ms:>12.1} {:>9.1}%", ovh * 100.0);
+    }
+    emit("fig25_swap", s);
+
+    // Fig 26
+    let mut s = String::new();
+    let _ = writeln!(s, "{:<10} {:>9} {:>9} {:>9}", "archetype", "p10 MB", "p50 MB", "p90 MB");
+    for (a, p10, p50, p90) in platform_figs::fig26_trace_dists() {
+        let _ = writeln!(s, "{a:<10} {p10:>9.0} {p50:>9.0} {p90:>9.0}");
+    }
+    emit("fig26_trace_dists", s);
+
+    // Figs 27+28
+    let mut s = String::new();
+    for (app, z, ow) in platform_figs::fig27_28_small_apps() {
+        let _ = writeln!(s, "{}", render(app, &[z, ow]));
+    }
+    emit("fig27_28_small_apps", s);
+
+    // startup table
+    let mut s = String::new();
+    for (name, ms) in platform_figs::tab_startup_latency() {
+        let _ = writeln!(s, "{name:<26} {ms:>8.0} ms");
+    }
+    emit("tab_startup_latency", s);
+
+    // Fig 30
+    let mut s = String::new();
+    let _ = writeln!(s, "{:<12} {:>12} {:>12}", "system", "makespan s", "mem-util");
+    for (name, makespan, util) in platform_figs::fig30_cluster_util(30) {
+        let _ = writeln!(s, "{name:<12} {makespan:>12.1} {:>11.0}%", util * 100.0);
+    }
+    emit("fig30_cluster_util", s);
+
+    fs::write("results/INDEX.md", index)?;
+    println!("all figures regenerated under results/");
+    Ok(())
+}

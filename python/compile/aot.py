@@ -1,0 +1,81 @@
+"""Zenix AOT bridge: lower every L2 entry point to HLO *text*.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's pinned
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs, per entry point in model.SPECS:
+    artifacts/<name>.hlo.txt
+plus artifacts/manifest.json describing each entry's input/output
+signature so the rust runtime can type-check invocations.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    arrays >10 elements as `constant({...})`, which the xla_extension
+    0.5.1 text parser silently reads back as zeros (observed: the Pallas
+    DCT basis matrix came back null, zeroing every video coefficient).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    po = xc._xla.HloPrintOptions()
+    po.print_large_constants = True
+    # New-jax metadata attrs (source_end_line, ...) are rejected by the
+    # 0.5.1 parser; metadata is debug-only, drop it.
+    po.print_metadata = False
+    return comp.get_hlo_module().to_string(po)
+
+
+def _sig(avals):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in avals]
+
+
+def lower_all(outdir: pathlib.Path) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    manifest = {}
+    for name, (fn, args) in model.SPECS.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_avals = lowered.out_info
+        flat_out, _ = jax.tree.flatten(out_avals)
+        manifest[name] = {
+            "file": path.name,
+            "inputs": _sig(args),
+            "outputs": _sig(flat_out),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out))
+    print("AOT lowering complete.")
+
+
+if __name__ == "__main__":
+    main()

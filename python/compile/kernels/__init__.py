@@ -1,0 +1,8 @@
+"""Zenix L1: Pallas kernels for the bulky-application compute hot spots.
+
+All kernels lower with interpret=True (CPU-PJRT-executable HLO). The
+pure-jnp oracles live in `ref` and back the hypothesis sweeps in
+python/tests/test_kernels.py.
+"""
+
+from . import dct, lr, ref, segreduce  # noqa: F401

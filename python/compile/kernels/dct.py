@@ -1,0 +1,62 @@
+"""Pallas kernel: 8x8 blockwise DCT-II + quantization.
+
+The video-transcode workload (§6.1.2, ExCamera operators) reduces to a
+per-block transform + quantize. On the TPU (DESIGN.md §2) each 8x8 block
+transform D b D^T is two tiny matmuls; we batch `block_b` pixel blocks per
+grid step so the MXU sees (block_b*8, 8) x (8, 8) shaped work and the DCT
+basis + quant table stay resident in VMEM.
+
+BlockSpec schedule:
+  grid = (B // block_b,)
+  blocks tile : (block_b, 8, 8) streamed
+  d basis     : (8, 8)          resident
+  q table     : (8, 8)          resident
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 64
+
+
+def _dct_quant_kernel(b_ref, d_ref, q_ref, o_ref):
+    blocks = b_ref[...]          # (bb, 8, 8)
+    d = d_ref[...]               # (8, 8)
+    bb, n, _ = blocks.shape
+    # D @ b @ D^T for the whole tile: fold batch into rows so both
+    # contractions are plain 2-D matmuls (MXU-shaped).
+    left = jnp.dot(blocks.reshape(bb * n, n), d.T,
+                   preferred_element_type=jnp.float32)   # (bb*8, 8) = b D^T
+    left = left.reshape(bb, n, n).transpose(0, 2, 1)     # (bb, 8, 8) = (b D^T)^T
+    coef = jnp.dot(left.reshape(bb * n, n), d.T,
+                   preferred_element_type=jnp.float32)   # rows = D b D^T cols
+    coef = coef.reshape(bb, n, n).transpose(0, 2, 1)
+    o_ref[...] = jnp.round(coef / q_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dct_quant(blocks, q, *, block_b=DEFAULT_BLOCK_B):
+    """Quantized DCT coefficients. blocks: (B, 8, 8), q: (8, 8)."""
+    b, n, n2 = blocks.shape
+    assert n == n2 == 8, f"expected 8x8 blocks, got {n}x{n2}"
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"B={b} not a multiple of block_b={block_b}"
+    d = ref.dct_matrix(n, jnp.float32)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _dct_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
+        interpret=True,
+    )(blocks, d, q)

@@ -1,0 +1,97 @@
+"""Pallas kernel: blocked logistic-regression gradient.
+
+The paper's ML workload (§6.1.3, Cirrus-ported LR) spends its time in
+X^T (sigmoid(X w) - y). On a GPU this would be a fused CUDA kernel; the
+TPU re-think (DESIGN.md §2) tiles rows of X into VMEM and drives both
+matmuls (forward X@w and backward X^T@residual) through the MXU, with the
+(D, 1) accumulator resident in VMEM across the whole row-grid.
+
+BlockSpec schedule:
+  grid = (N // block_n,)
+  x tile    : (block_n, D)   streamed HBM -> VMEM per grid step
+  y tile    : (block_n, 1)   streamed
+  w         : (D, 1)         resident (same block every step)
+  out accum : (D, 1)         resident; revision i adds its partial sum
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+that the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile. 128 keeps the streamed tile MXU-aligned and the VMEM
+# footprint small: for D=256 fp32, x-tile = 128*256*4 = 128 KiB.
+DEFAULT_BLOCK_N = 128
+
+
+def _lr_grad_kernel(x_ref, w_ref, y_ref, o_ref, loss_ref, *, n_total):
+    """One row-block of gradient + loss; accumulates into both outputs.
+
+    Computing the loss inside the kernel reuses the forward logits: one
+    pass over X per step instead of two (EXPERIMENTS.md §Perf, L1/L2
+    change — removes the duplicate X@w matmul from the train-step HLO).
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]
+    z = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    p = jax.nn.sigmoid(z)
+    y = y_ref[...].astype(p.dtype)
+    resid = (p - y) / n_total
+    partial = jnp.dot(x.T.astype(p.dtype), resid,
+                      preferred_element_type=jnp.float32)
+    o_ref[...] += partial.astype(o_ref.dtype)
+    # stable BCE on the already-computed logits: logaddexp(0, z) - y*z
+    block_loss = jnp.sum(jnp.logaddexp(0.0, z) - y * z) / n_total
+    loss_ref[...] += block_loss.reshape(1, 1).astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lr_grad_loss(x, w, y, *, block_n=DEFAULT_BLOCK_N):
+    """Blocked BCE gradient + mean loss in one pass over X.
+
+    x: (N, D), w: (D, 1), y: (N, 1) -> ((D, 1) grad, () loss).
+
+    N must be a multiple of block_n (the AOT entry points use padded
+    batches; the runtime pads with zero rows whose labels are the
+    sigmoid(0) fixpoint contribution — zero rows contribute zero gradient
+    because x rows are zero).
+    """
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    grad, loss = pl.pallas_call(
+        functools.partial(_lr_grad_kernel, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, y)
+    return grad, loss.reshape(())
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lr_grad(x, w, y, *, block_n=DEFAULT_BLOCK_N):
+    """Gradient only (see [`lr_grad_loss`])."""
+    return lr_grad_loss(x, w, y, block_n=block_n)[0]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes and dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references.
+
+Zenix's bulky-application workloads map to three compute hot spots
+(DESIGN.md §2 Hardware-Adaptation):
+
+- logistic-regression gradient (the Cirrus-ported ML app, paper §6.1.3)
+- segment-sum aggregation (the TPC-DS groupby/ReduceBy proxy, §6.1.1/§6.2)
+- 8x8 blockwise DCT + quantization (the ExCamera transcode proxy, §6.1.2)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lr_grad_ref(x, w, y):
+    """Gradient of mean binary cross-entropy for logistic regression.
+
+    x: (N, D) features, w: (D, 1) weights, y: (N, 1) labels in {0,1}.
+    Returns (D, 1) gradient  X^T (sigmoid(Xw) - y) / N.
+    """
+    p = jax.nn.sigmoid(x @ w)
+    return x.T @ (p - y) / x.shape[0]
+
+
+def lr_loss_ref(x, w, y):
+    """Mean binary cross-entropy, computed stably from logits."""
+    z = x @ w
+    # log(1 + e^z) - y*z, stable via logaddexp
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def segsum_ref(seg_onehot, x):
+    """Segment-sum as a matmul: seg_onehot (N, K) one-hot rows, x (N, D).
+
+    Returns (K, D) per-segment sums. This is the MXU formulation of a
+    groupby-aggregate: S^T X instead of a hash/scatter aggregation.
+    """
+    return seg_onehot.T @ x
+
+
+def dct_matrix(n=8, dtype=jnp.float32):
+    """Orthonormal DCT-II basis matrix (n, n)."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.cos(np.pi * (2 * i + 1) * k / (2 * n)) * np.sqrt(2.0 / n)
+    m[0, :] = 1.0 / np.sqrt(n)
+    return jnp.asarray(m, dtype=dtype)
+
+
+def dct_quant_ref(blocks, q):
+    """Blockwise 2-D DCT-II followed by quantization.
+
+    blocks: (B, 8, 8) pixel blocks; q: (8, 8) quantization table.
+    Returns (B, 8, 8) quantized coefficients round(D b D^T / q).
+    """
+    d = dct_matrix(blocks.shape[-1], blocks.dtype)
+    coef = jnp.einsum("ij,bjk,lk->bil", d, blocks, d)
+    return jnp.round(coef / q)
+
+
+def idct_dequant_ref(coefs, q):
+    """Inverse of dct_quant_ref (up to quantization loss)."""
+    d = dct_matrix(coefs.shape[-1], coefs.dtype)
+    deq = coefs * q
+    return jnp.einsum("ji,bjk,kl->bil", d, deq, d)

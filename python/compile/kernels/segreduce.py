@@ -1,0 +1,57 @@
+"""Pallas kernel: segment-sum aggregation as a one-hot matmul.
+
+The TPC-DS stages Zenix schedules (§6.1.1) are dominated by
+groupby-aggregate / ReduceBy operators. A CPU implementation hashes; the
+TPU re-think (DESIGN.md §2) expresses the reduction as S^T X where S is
+the (N, K) one-hot segment-membership matrix, so the whole aggregation is
+a single MXU matmul streamed over row-tiles with the (K, D) accumulator
+resident in VMEM.
+
+BlockSpec schedule:
+  grid = (N // block_n,)
+  s tile : (block_n, K)  streamed
+  x tile : (block_n, D)  streamed
+  out    : (K, D)        resident accumulator
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _segsum_kernel(s_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    partial = jnp.dot(s_ref[...].T, x_ref[...],
+                      preferred_element_type=jnp.float32)
+    o_ref[...] += partial.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def segsum(seg_onehot, x, *, block_n=DEFAULT_BLOCK_N):
+    """Segment sums. seg_onehot: (N, K), x: (N, D) -> (K, D)."""
+    n, k = seg_onehot.shape
+    n2, d = x.shape
+    assert n == n2, f"row mismatch {n} vs {n2}"
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, d), jnp.float32),
+        interpret=True,
+    )(seg_onehot, x)

@@ -1,0 +1,122 @@
+"""Zenix L2: JAX compute graphs for the bulky applications (build-time).
+
+Each entry point here is a pure function lowered ONCE by `aot.py` to HLO
+text and executed from the rust runtime (rust/src/runtime/) via PJRT.
+Python never runs on the request path.
+
+Entry points (shapes fixed at AOT time, see SPECS):
+
+  lr_train_step  — one SGD step of binary logistic regression
+                   (the Cirrus-ported ML app, paper §6.1.3)
+  lr_eval        — loss + accuracy of a weight vector
+  analytics_stage— groupby-aggregate stage (sum/count/mean), the
+                   TPC-DS stage compute proxy (§6.1.1)
+  video_block    — DCT+quantize encode of a batch of 8x8 blocks plus
+                   reconstruction error (ExCamera proxy, §6.1.2)
+
+All heavy inner loops call the L1 Pallas kernels (kernels/*) so the
+paper's hot spots lower into the same HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dct, lr, ref, segreduce
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (Cirrus port, §6.1.3)
+# ---------------------------------------------------------------------------
+
+def lr_train_step(x, y, w, step_size):
+    """One SGD step. Returns (w_new, loss-before-step).
+
+    x: (N, D) float32, y: (N, 1) float32 {0,1}, w: (D, 1) float32,
+    step_size: () float32.
+
+    Gradient and loss come from one fused Pallas pass over X (the loss
+    reuses the forward logits — no second X@w matmul; §Perf).
+    """
+    grad, loss = lr.lr_grad_loss(x, w, y)
+    w_new = w - step_size * grad
+    return w_new, loss
+
+
+def lr_eval(x, y, w):
+    """Validation metrics. Returns (loss, accuracy)."""
+    z = x @ w
+    loss = jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+    pred = (z > 0.0).astype(jnp.float32)
+    acc = jnp.mean((pred == y).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Data analytics stage (TPC-DS proxy, §6.1.1)
+# ---------------------------------------------------------------------------
+
+def analytics_stage(seg_onehot, x):
+    """Groupby-aggregate over K segments: (sums, counts, means).
+
+    seg_onehot: (N, K) one-hot membership, x: (N, D) values.
+    sums: (K, D), counts: (K, 1), means: (K, D).
+    """
+    sums = segreduce.segsum(seg_onehot, x)
+    counts = jnp.sum(seg_onehot, axis=0, keepdims=True).T  # (K, 1)
+    means = sums / jnp.maximum(counts, 1.0)
+    return sums, counts, means
+
+
+# ---------------------------------------------------------------------------
+# Video block encode (ExCamera proxy, §6.1.2)
+# ---------------------------------------------------------------------------
+
+def video_block(blocks, q):
+    """Encode a batch of 8x8 pixel blocks. Returns (coefs, mse).
+
+    blocks: (B, 8, 8) float32 pixels, q: (8, 8) float32 quant table.
+    coefs: quantized DCT coefficients; mse: () reconstruction error —
+    the quality metric the transcode pipeline reports.
+    """
+    coefs = dct.dct_quant(blocks, q)
+    recon = ref.idct_dequant_ref(coefs, q)
+    mse = jnp.mean((recon - blocks) ** 2)
+    return coefs, mse
+
+
+# ---------------------------------------------------------------------------
+# AOT specs: entry name -> (fn, example-arg shapes/dtypes)
+# ---------------------------------------------------------------------------
+
+# Batch geometry for the AOT artifacts. The rust runtime pads inputs to
+# these shapes (zero rows are gradient-neutral for LR; empty segments and
+# zero blocks are harmless for the other two).
+LR_N, LR_D = 1024, 256
+AN_N, AN_K, AN_D = 2048, 64, 32
+VID_B = 256
+
+_f32 = jnp.float32
+
+
+def _s(shape):
+    return jax.ShapeDtypeStruct(shape, _f32)
+
+
+SPECS = {
+    "lr_train_step": (
+        lr_train_step,
+        (_s((LR_N, LR_D)), _s((LR_N, 1)), _s((LR_D, 1)), _s(())),
+    ),
+    "lr_eval": (
+        lr_eval,
+        (_s((LR_N, LR_D)), _s((LR_N, 1)), _s((LR_D, 1))),
+    ),
+    "analytics_stage": (
+        analytics_stage,
+        (_s((AN_N, AN_K)), _s((AN_N, AN_D))),
+    ),
+    "video_block": (
+        video_block,
+        (_s((VID_B, 8, 8)), _s((8, 8))),
+    ),
+}

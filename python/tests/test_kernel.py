@@ -1,0 +1,175 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes and dtypes of every Pallas kernel
+(interpret=True) against the pure-jnp references in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dct, lr, ref, segreduce
+
+jax.config.update("jax_enable_x64", False)
+
+# Hypothesis defaults: interpret-mode Pallas is slow, keep example counts
+# modest but meaningful.
+SWEEP = settings(max_examples=12, deadline=None)
+
+
+def _rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale,
+                       dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# lr_grad
+# ---------------------------------------------------------------------------
+
+class TestLrGrad:
+    @SWEEP
+    @given(
+        nb=st.integers(1, 6),
+        block=st.sampled_from([8, 32, 128]),
+        d=st.sampled_from([4, 16, 64, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shapes(self, nb, block, d, seed):
+        rng = np.random.default_rng(seed)
+        n = nb * block
+        x = _rand(rng, (n, d))
+        w = _rand(rng, (d, 1), scale=0.5)
+        y = jnp.asarray(rng.integers(0, 2, (n, 1)), jnp.float32)
+        got = lr.lr_grad(x, w, y, block_n=block)
+        want = ref.lr_grad_ref(x, w, y)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+    def test_bfloat16_inputs(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (256, 32), jnp.bfloat16)
+        w = _rand(rng, (32, 1), jnp.bfloat16, scale=0.5)
+        y = jnp.asarray(rng.integers(0, 2, (256, 1)), jnp.bfloat16)
+        got = lr.lr_grad(x, w, y, block_n=128)
+        want = ref.lr_grad_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                               y.astype(jnp.float32))
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-3)
+
+    def test_zero_rows_are_neutral(self):
+        """Padding rows (all-zero features+labels) must not perturb the
+        gradient direction — the rust runtime relies on this to pad
+        batches to the AOT shape."""
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (128, 16))
+        w = _rand(rng, (16, 1))
+        y = jnp.asarray(rng.integers(0, 2, (128, 1)), jnp.float32)
+        gpad = lr.lr_grad(
+            jnp.concatenate([x, jnp.zeros((128, 16))]),
+            w,
+            jnp.concatenate([y, 0.5 * jnp.ones((128, 1))]),
+            block_n=128,
+        )
+        g = ref.lr_grad_ref(x, w, y)
+        # padded mean divides by 2N; zero rows with y=0.5 add exactly 0.
+        np.testing.assert_allclose(gpad, g / 2.0, rtol=2e-5, atol=1e-6)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(2)
+        x, w = _rand(rng, (32, 8)), _rand(rng, (8, 1))
+        y = jnp.asarray(rng.integers(0, 2, (32, 1)), jnp.float32)
+        got = lr.lr_grad(x, w, y, block_n=32)
+        np.testing.assert_allclose(got, ref.lr_grad_ref(x, w, y),
+                                   rtol=2e-5, atol=1e-6)
+
+    def test_rejects_ragged_batch(self):
+        with pytest.raises(AssertionError):
+            lr.lr_grad(jnp.zeros((100, 8)), jnp.zeros((8, 1)),
+                       jnp.zeros((100, 1)), block_n=64)
+
+
+# ---------------------------------------------------------------------------
+# segsum
+# ---------------------------------------------------------------------------
+
+class TestSegSum:
+    @SWEEP
+    @given(
+        nb=st.integers(1, 4),
+        block=st.sampled_from([16, 64, 128]),
+        k=st.sampled_from([2, 8, 64]),
+        d=st.sampled_from([1, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, nb, block, k, d, seed):
+        rng = np.random.default_rng(seed)
+        n = nb * block
+        seg = jnp.asarray(np.eye(k, dtype=np.float32)[rng.integers(0, k, n)])
+        x = _rand(rng, (n, d))
+        got = segreduce.segsum(seg, x, block_n=block)
+        want = ref.segsum_ref(seg, x)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_empty_segments_stay_zero(self):
+        rng = np.random.default_rng(3)
+        n, k, d = 128, 8, 4
+        # all rows in segment 0 — segments 1..7 must be exactly zero
+        seg = jnp.zeros((n, k)).at[:, 0].set(1.0)
+        x = _rand(rng, (n, d))
+        got = segreduce.segsum(seg, x)
+        assert np.all(np.asarray(got[1:]) == 0.0)
+        np.testing.assert_allclose(got[0], x.sum(0), rtol=2e-5, atol=2e-5)
+
+    def test_counts_via_ones(self):
+        """Counts = segsum against a ones column — the analytics_stage
+        contract."""
+        rng = np.random.default_rng(4)
+        n, k = 256, 16
+        ids = rng.integers(0, k, n)
+        seg = jnp.asarray(np.eye(k, dtype=np.float32)[ids])
+        got = segreduce.segsum(seg, jnp.ones((n, 1)))
+        want = np.bincount(ids, minlength=k).astype(np.float32)[:, None]
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dct_quant
+# ---------------------------------------------------------------------------
+
+class TestDctQuant:
+    @SWEEP
+    @given(
+        bb=st.integers(1, 4),
+        block=st.sampled_from([8, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, bb, block, seed):
+        rng = np.random.default_rng(seed)
+        b = bb * block
+        blocks = jnp.asarray(rng.uniform(-128, 128, (b, 8, 8)), jnp.float32)
+        q = jnp.asarray(rng.uniform(1, 32, (8, 8)), jnp.float32)
+        got = dct.dct_quant(blocks, q, block_b=block)
+        want = ref.dct_quant_ref(blocks, q)
+        np.testing.assert_allclose(got, want, atol=1.0 + 1e-4)
+        # round() boundaries can flip by 1 ulp of the quotient; require
+        # near-exact agreement on >99% of coefficients.
+        frac_exact = np.mean(np.asarray(got) == np.asarray(want))
+        assert frac_exact > 0.99
+
+    def test_dct_matrix_orthonormal(self):
+        d = ref.dct_matrix(8)
+        np.testing.assert_allclose(d @ d.T, np.eye(8), atol=1e-6)
+
+    def test_roundtrip_error_small(self):
+        """Quantize at q=1 (lossless up to rounding): reconstruction error
+        bounded by quantization step."""
+        rng = np.random.default_rng(5)
+        blocks = jnp.asarray(rng.uniform(0, 255, (64, 8, 8)), jnp.float32)
+        q = jnp.ones((8, 8), jnp.float32)
+        coefs = dct.dct_quant(blocks, q)
+        recon = ref.idct_dequant_ref(coefs, q)
+        assert float(jnp.max(jnp.abs(recon - blocks))) < 4.0
+
+    def test_rejects_non_8x8(self):
+        with pytest.raises(AssertionError):
+            dct.dct_quant(jnp.zeros((16, 4, 4)), jnp.ones((4, 4)))

@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, training dynamics, and AOT round-trip."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _lr_data(n, d, seed=0):
+    """Linearly separable-ish synthetic LR data."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((d, 1)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = (x @ w_true + 0.1 * rng.standard_normal((n, 1)) > 0).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+class TestLrTraining:
+    def test_loss_decreases(self):
+        x, y = _lr_data(model.LR_N, model.LR_D)
+        w = jnp.zeros((model.LR_D, 1), jnp.float32)
+        losses = []
+        for _ in range(20):
+            w, loss = model.lr_train_step(x, y, w, jnp.float32(1.0))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses
+        assert losses == sorted(losses, reverse=True) or losses[-1] < losses[0]
+
+    def test_accuracy_improves(self):
+        x, y = _lr_data(model.LR_N, model.LR_D, seed=1)
+        w = jnp.zeros((model.LR_D, 1), jnp.float32)
+        _, acc0 = model.lr_eval(x, y, w)
+        for _ in range(60):
+            w, _ = model.lr_train_step(x, y, w, jnp.float32(2.0))
+        _, acc = model.lr_eval(x, y, w)
+        assert float(acc) > 0.9, (float(acc0), float(acc))
+
+    def test_train_step_matches_manual_sgd(self):
+        x, y = _lr_data(256, 16, seed=2)
+        w = jnp.asarray(np.random.default_rng(3).standard_normal((16, 1)),
+                        jnp.float32)
+        w2, loss = model.lr_train_step(x, y, w, jnp.float32(0.5))
+        want = w - 0.5 * ref.lr_grad_ref(x, w, y)
+        np.testing.assert_allclose(w2, want, rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(loss, ref.lr_loss_ref(x, w, y), rtol=1e-5)
+
+
+class TestAnalyticsStage:
+    def test_sums_counts_means_consistent(self):
+        rng = np.random.default_rng(7)
+        n, k, d = 512, 16, 8
+        ids = rng.integers(0, k, n)
+        seg = jnp.asarray(np.eye(k, dtype=np.float32)[ids])
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        sums, counts, means = model.analytics_stage(seg, x)
+        assert sums.shape == (k, d) and counts.shape == (k, 1)
+        np.testing.assert_allclose(counts[:, 0],
+                                   np.bincount(ids, minlength=k), atol=1e-5)
+        nz = np.asarray(counts[:, 0]) > 0
+        np.testing.assert_allclose(np.asarray(means)[nz],
+                                   np.asarray(sums)[nz]
+                                   / np.asarray(counts)[nz],
+                                   rtol=1e-5)
+
+    def test_empty_segment_mean_is_zero_not_nan(self):
+        seg = jnp.zeros((64, 4)).at[:, 0].set(1.0)
+        x = jnp.ones((64, 2))
+        _, _, means = model.analytics_stage(seg, x)
+        assert not np.any(np.isnan(np.asarray(means)))
+
+
+class TestVideoBlock:
+    def test_mse_increases_with_quantization(self):
+        rng = np.random.default_rng(9)
+        blocks = jnp.asarray(rng.uniform(0, 255, (model.VID_B, 8, 8)),
+                             jnp.float32)
+        mses = []
+        for qscale in [1.0, 8.0, 64.0]:
+            _, mse = model.video_block(blocks, qscale * jnp.ones((8, 8)))
+            mses.append(float(mse))
+        assert mses[0] < mses[1] < mses[2], mses
+
+    def test_output_shapes(self):
+        blocks = jnp.zeros((model.VID_B, 8, 8), jnp.float32)
+        coefs, mse = model.video_block(blocks, jnp.ones((8, 8)))
+        assert coefs.shape == (model.VID_B, 8, 8)
+        assert mse.shape == ()
+
+
+class TestAotArtifacts:
+    @pytest.fixture(scope="class")
+    def outdir(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        aot.lower_all(out)
+        return out
+
+    def test_all_entries_emitted(self, outdir):
+        manifest = json.loads((outdir / "manifest.json").read_text())
+        assert set(manifest) == set(model.SPECS)
+        for name, entry in manifest.items():
+            text = (outdir / entry["file"]).read_text()
+            assert "ENTRY" in text and "HloModule" in text, name
+
+    def test_manifest_signatures(self, outdir):
+        manifest = json.loads((outdir / "manifest.json").read_text())
+        lr_sig = manifest["lr_train_step"]
+        assert lr_sig["inputs"][0]["shape"] == [model.LR_N, model.LR_D]
+        assert lr_sig["inputs"][0]["dtype"] == "float32"
+        # train step returns (w_new, loss)
+        assert len(lr_sig["outputs"]) == 2
+        assert manifest["analytics_stage"]["outputs"][0]["shape"] == \
+            [model.AN_K, model.AN_D]
+
+    def test_hlo_text_has_no_custom_calls(self, outdir):
+        """interpret=True must have erased all Mosaic custom-calls; the
+        CPU PJRT client cannot execute them."""
+        for name in model.SPECS:
+            text = (outdir / f"{name}.hlo.txt").read_text()
+            assert "custom-call" not in text.lower() or \
+                "mosaic" not in text.lower(), name

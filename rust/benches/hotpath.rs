@@ -1,0 +1,113 @@
+//! Hot-path micro-benches across the three layers.
+//!
+//! - L3: end-to-end platform invoke (the simulator's own hot loop),
+//!   network/swap model evaluation, message-log append.
+//! - L1/L2 via PJRT: artifact execution latency (compile-once cached),
+//!   the real request-path cost of each AOT entry point.
+//!
+//!     cargo bench --bench hotpath
+
+use zenix::apps::{lr, tpcds, Invocation};
+use zenix::cluster::ClusterSpec;
+use zenix::coordinator::graph::ResourceGraph;
+use zenix::coordinator::msglog::{LogEntry, MessageLog};
+use zenix::coordinator::{Platform, ZenixConfig};
+use zenix::memory::{AccessPattern, SwapConfig, SwapSim};
+use zenix::net::{NetKind, NetModel};
+use zenix::runtime::{manifest::find_artifact_dir, spawn_compute_service, Tensor};
+use zenix::util::bench::Bencher;
+use zenix::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    b.header("L3 coordinator hot paths");
+
+    {
+        let graph = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), ZenixConfig::default());
+        b.bench("platform_invoke_lr", || {
+            std::hint::black_box(p.invoke(&graph, Invocation::new(1.0)).unwrap());
+        });
+    }
+    {
+        let graph = ResourceGraph::from_program(&tpcds::query(16)).unwrap();
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), ZenixConfig::default());
+        b.bench("platform_invoke_tpcds_q16", || {
+            std::hint::black_box(p.invoke(&graph, Invocation::new(0.2)).unwrap());
+        });
+    }
+    {
+        let net = NetModel::default();
+        b.bench("net_remote_accesses_model", || {
+            std::hint::black_box(net.remote_accesses(NetKind::Rdma, 10_000, 64.0, false));
+        });
+    }
+    {
+        let mut log = MessageLog::new();
+        let mut i = 0u64;
+        b.bench("msglog_append_flush", || {
+            i += 1;
+            log.append(LogEntry { invocation: i, compute: 0, result_mb: 1.0 });
+            log.flush();
+        });
+    }
+    {
+        let mut rng = Rng::new(5);
+        b.bench("swap_sim_pass_800mb", || {
+            let mut sim = SwapSim::new(
+                800.0,
+                SwapConfig { local_mb: 400.0, ..Default::default() },
+                NetModel::default(),
+            );
+            std::hint::black_box(sim.run_pass(AccessPattern::Sequential, &mut rng));
+        });
+    }
+
+    // ---- PJRT request path (requires `make artifacts`) ------------------
+    match find_artifact_dir() {
+        Ok(dir) => {
+            let (compute, _join) = spawn_compute_service(&dir).unwrap();
+            for entry in ["lr_train_step", "lr_eval", "analytics_stage", "video_block"] {
+                compute.warm(entry).unwrap();
+            }
+            b.header("PJRT request path (AOT artifacts, CPU)");
+            let mut rng = Rng::new(6);
+            let x = Tensor::new((0..1024 * 256).map(|_| rng.normal() as f32).collect(), vec![1024, 256]);
+            let y = Tensor::new((0..1024).map(|_| rng.f32().round()).collect(), vec![1024, 1]);
+            let w = Tensor::zeros(&[256, 1]);
+            b.bench("pjrt_lr_train_step_1024x256", || {
+                std::hint::black_box(
+                    compute
+                        .lr_train_step(x.clone(), y.clone(), w.clone(), 1.0)
+                        .unwrap(),
+                );
+            });
+            b.bench("pjrt_lr_eval", || {
+                std::hint::black_box(compute.lr_eval(x.clone(), y.clone(), w.clone()).unwrap());
+            });
+            let seg = {
+                let mut s = vec![0f32; 2048 * 64];
+                for i in 0..2048 {
+                    s[i * 64 + rng.range(0, 64)] = 1.0;
+                }
+                Tensor::new(s, vec![2048, 64])
+            };
+            let ax = Tensor::new((0..2048 * 32).map(|_| rng.normal() as f32).collect(), vec![2048, 32]);
+            b.bench("pjrt_analytics_stage_2048x64", || {
+                std::hint::black_box(compute.analytics_stage(seg.clone(), ax.clone()).unwrap());
+            });
+            let blocks = Tensor::new(
+                (0..256 * 64).map(|_| rng.uniform(0.0, 255.0) as f32).collect(),
+                vec![256, 8, 8],
+            );
+            let q = Tensor::new(vec![16.0; 64], vec![8, 8]);
+            b.bench("pjrt_video_block_256", || {
+                std::hint::black_box(compute.video_block(blocks.clone(), q.clone()).unwrap());
+            });
+            compute.shutdown();
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+
+    println!("\nhotpath benches complete ({}).", b.reports.len());
+}

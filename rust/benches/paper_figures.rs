@@ -1,0 +1,78 @@
+//! `cargo bench --bench paper_figures [-- <filter>]`
+//!
+//! One bench target per paper figure/table (DESIGN.md §5): each measures
+//! the wall time of regenerating the experiment and prints the rows the
+//! paper reports. Filters: `cargo bench --bench paper_figures -- fig08`.
+
+use zenix::apps::lr;
+use zenix::figures::{lr_figs, platform_figs, tpcds_figs, video_figs};
+use zenix::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    b.header("paper figures (regeneration wall time)");
+
+    b.bench("fig03_stage_variation", || {
+        std::hint::black_box(tpcds_figs::fig03_stage_variation());
+    });
+    b.bench("fig04_input_variation", || {
+        std::hint::black_box(tpcds_figs::fig04_input_variation());
+    });
+    b.bench("fig07_startup_flow", || {
+        std::hint::black_box(platform_figs::fig07_startup_flow(true));
+        std::hint::black_box(platform_figs::fig07_startup_flow(false));
+    });
+    b.bench("fig08_09_tpcds_mem_time", || {
+        std::hint::black_box(tpcds_figs::fig08_09_tpcds(20.0));
+    });
+    b.bench("fig10_ablation_tpcds", || {
+        std::hint::black_box(tpcds_figs::fig10_ablation(20.0));
+    });
+    b.bench("fig11_13_video", || {
+        std::hint::black_box(video_figs::fig11_13_video());
+    });
+    b.bench("fig14_ablation_video", || {
+        std::hint::black_box(video_figs::fig14_ablation());
+    });
+    b.bench("fig15_lr_mem_small", || {
+        std::hint::black_box(lr_figs::fig15_16_lr(lr::SMALL_INPUT_MB));
+    });
+    b.bench("fig16_lr_mem_large", || {
+        std::hint::black_box(lr_figs::fig15_16_lr(lr::LARGE_INPUT_MB));
+    });
+    b.bench("fig17_lr_time_breakdown", || {
+        std::hint::black_box(lr_figs::fig17_breakdown());
+    });
+    b.bench("fig18_scaling_tech", || {
+        std::hint::black_box(lr_figs::fig18_scaling_tech());
+    });
+    b.bench("fig19_20_q1_mem_time_inputs", || {
+        std::hint::black_box(tpcds_figs::fig19_20_q1_inputs());
+    });
+    b.bench("fig21_placement", || {
+        std::hint::black_box(tpcds_figs::fig21_placement());
+    });
+    b.bench("fig22_sizing", || {
+        std::hint::black_box(platform_figs::fig22_sizing());
+    });
+    b.bench("fig23_comm_startup", || {
+        std::hint::black_box(platform_figs::fig23_comm_startup());
+    });
+    b.bench("fig25_swap", || {
+        std::hint::black_box(platform_figs::fig25_swap());
+    });
+    b.bench("fig26_trace_dists", || {
+        std::hint::black_box(platform_figs::fig26_trace_dists());
+    });
+    b.bench("fig27_28_small_apps", || {
+        std::hint::black_box(platform_figs::fig27_28_small_apps());
+    });
+    b.bench("tab_startup_latency", || {
+        std::hint::black_box(platform_figs::tab_startup_latency());
+    });
+    b.bench("fig30_cluster_util", || {
+        std::hint::black_box(platform_figs::fig30_cluster_util(12));
+    });
+
+    println!("\n{} figure benches complete.", b.reports.len());
+}

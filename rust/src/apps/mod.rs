@@ -1,0 +1,21 @@
+//! Application model + the paper's workloads.
+//!
+//! Users of Zenix write *annotated monolithic programs* (§4.1):
+//! `@compute` marks call sites with distinctive parallelism, `@data`
+//! marks allocation sites with distinctive lifetime / input-dependent
+//! size, `@app_limit` caps total resources. [`program`] is the
+//! in-memory form of such a program (what the paper's Mira-based
+//! analyzer would extract; DESIGN.md §1 substitution table).
+//!
+//! The workload constructors mirror the paper's evaluation:
+//! [`tpcds`] (Q1/Q16/Q95 on Pandas), [`video`] (ExCamera transcode
+//! pipeline), [`lr`] (Cirrus logistic regression), and [`small`]
+//! (SeBS/FaaSProfiler single functions).
+
+pub mod lr;
+pub mod program;
+pub mod small;
+pub mod tpcds;
+pub mod video;
+
+pub use program::{ComputeSpec, DataSpec, Invocation, Program};

@@ -1,0 +1,264 @@
+//! Annotated monolithic programs (§4.1) and their input-dependent
+//! resource behaviour.
+//!
+//! A [`Program`] is the structured equivalent of a user source file with
+//! `@compute` / `@data` / `@app_limit` annotations: a set of compute
+//! sites (each possibly parallel), a set of data objects, trigger edges
+//! between computes, and access edges from computes to data. All
+//! resource quantities are *power-law functions of the input scale*
+//! (`base * scale^exp`) — the form that fits the paper's observations
+//! (TPC-DS: 33× resources for 10× input; video: 94× across 240P→4K).
+
+use crate::cluster::Resources;
+
+/// A `@compute`-annotated call site.
+#[derive(Debug, Clone)]
+pub struct ComputeSpec {
+    pub name: &'static str,
+    /// Total CPU work (vCPU·ms) at input scale 1.0 across all workers.
+    pub work_ms: f64,
+    /// Work scaling exponent in input scale.
+    pub work_exp: f64,
+    /// Worker parallelism at scale 1.0 (may be fractional pre-rounding).
+    pub parallelism: f64,
+    /// Parallelism scaling exponent.
+    pub par_exp: f64,
+    /// Per-worker peak memory (MB) at scale 1.0.
+    pub mem_mb: f64,
+    /// Per-worker memory scaling exponent.
+    pub mem_exp: f64,
+    /// Indices (into [`Program::data`]) of accessed data components.
+    pub accesses: Vec<usize>,
+    /// Indices (into [`Program::computes`]) of triggered successors.
+    pub triggers: Vec<usize>,
+    /// Fraction of runtime spent touching accessed data components
+    /// (drives the remote-access slowdown when not co-located).
+    pub access_intensity: f64,
+    /// AOT artifact entry point that implements this compute's hot loop
+    /// (None for synthetic stages that only exist in the simulator).
+    pub artifact: Option<&'static str>,
+}
+
+impl ComputeSpec {
+    /// Total CPU work (vCPU·ms) for `scale`.
+    pub fn work_at(&self, scale: f64) -> f64 {
+        self.work_ms * scale.powf(self.work_exp)
+    }
+
+    /// Rounded worker count for `scale` (>= 1).
+    pub fn parallelism_at(&self, scale: f64) -> usize {
+        (self.parallelism * scale.powf(self.par_exp)).round().max(1.0) as usize
+    }
+
+    /// Per-worker peak memory for `scale`.
+    pub fn mem_at(&self, scale: f64) -> f64 {
+        self.mem_mb * scale.powf(self.mem_exp)
+    }
+}
+
+/// A `@data`-annotated allocation site.
+#[derive(Debug, Clone)]
+pub struct DataSpec {
+    pub name: &'static str,
+    /// Size (MB) at input scale 1.0.
+    pub size_mb: f64,
+    /// Size scaling exponent.
+    pub size_exp: f64,
+    /// Shared between multiple compute components (placement cares:
+    /// shared data may stay remote when accessors are spread, §6.2).
+    pub shared: bool,
+}
+
+impl DataSpec {
+    pub fn size_at(&self, scale: f64) -> f64 {
+        self.size_mb * scale.powf(self.size_exp)
+    }
+}
+
+/// One triggering of the application.
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    /// Input scale relative to the program's reference input (1.0).
+    pub input_scale: f64,
+}
+
+impl Invocation {
+    pub fn new(input_scale: f64) -> Self {
+        Self { input_scale }
+    }
+}
+
+/// An annotated monolithic program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: &'static str,
+    /// `@app_limit(max_cpu, max_mem)`.
+    pub app_limit: Resources,
+    pub computes: Vec<ComputeSpec>,
+    pub data: Vec<DataSpec>,
+    /// Index of the entry compute component.
+    pub entry: usize,
+}
+
+impl Program {
+    /// Topological order of compute components following trigger edges
+    /// (the DAG the paper's analyzer derives from control flow; cycles
+    /// are a deploy-time error — recursion through `@compute` is
+    /// unsupported, §8.2).
+    pub fn topo_order(&self) -> crate::Result<Vec<usize>> {
+        let n = self.computes.len();
+        let mut indeg = vec![0usize; n];
+        for c in &self.computes {
+            for &t in &c.triggers {
+                anyhow::ensure!(t < n, "trigger edge out of range");
+                indeg[t] += 1;
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &t in &self.computes[i].triggers {
+                indeg[t] -= 1;
+                if indeg[t] == 0 {
+                    queue.push(t);
+                }
+            }
+        }
+        anyhow::ensure!(
+            order.len() == n,
+            "@compute trigger graph has a cycle (recursive @compute is unsupported)"
+        );
+        Ok(order)
+    }
+
+    /// Peak whole-app demand estimate for `scale` if everything ran
+    /// concurrently at its stage peak (the scheduler's "mark" quantity).
+    pub fn peak_estimate(&self, scale: f64) -> Resources {
+        let mut peak = Resources::ZERO;
+        for (i, c) in self.computes.iter().enumerate() {
+            let workers = c.parallelism_at(scale) as f64;
+            let stage = Resources::new(workers, workers * c.mem_at(scale))
+                .plus(self.stage_data(i, scale));
+            peak = Resources::new(peak.cpu.max(stage.cpu), peak.mem_mb.max(stage.mem_mb));
+        }
+        Resources::new(peak.cpu.min(self.app_limit.cpu), peak.mem_mb.min(self.app_limit.mem_mb))
+    }
+
+    /// Size of the data components a compute stage accesses.
+    pub fn stage_data(&self, compute: usize, scale: f64) -> Resources {
+        let mem: f64 = self.computes[compute]
+            .accesses
+            .iter()
+            .map(|&d| self.data[d].size_at(scale))
+            .sum();
+        Resources::mem_only(mem)
+    }
+
+    /// Validate edge indices and annotation sanity at deploy time.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.computes.is_empty(), "program has no @compute sites");
+        anyhow::ensure!(self.entry < self.computes.len(), "entry out of range");
+        for (i, c) in self.computes.iter().enumerate() {
+            for &d in &c.accesses {
+                anyhow::ensure!(d < self.data.len(), "compute {i} accesses unknown data {d}");
+            }
+            anyhow::ensure!(c.work_ms >= 0.0 && c.mem_mb >= 0.0, "negative resources");
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&c.access_intensity),
+                "access_intensity out of [0,1]"
+            );
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+}
+
+/// Builder-style helper to keep workload definitions terse.
+pub fn compute(name: &'static str, work_ms: f64, parallelism: f64, mem_mb: f64) -> ComputeSpec {
+    ComputeSpec {
+        name,
+        work_ms,
+        work_exp: 1.0,
+        parallelism,
+        par_exp: 0.0,
+        mem_mb,
+        mem_exp: 1.0,
+        accesses: vec![],
+        triggers: vec![],
+        access_intensity: 0.3,
+        artifact: None,
+    }
+}
+
+/// Builder-style helper for data specs.
+pub fn data(name: &'static str, size_mb: f64) -> DataSpec {
+    DataSpec { name, size_mb, size_exp: 1.0, shared: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_program() -> Program {
+        let mut a = compute("a", 100.0, 1.0, 64.0);
+        a.triggers = vec![1];
+        let mut b = compute("b", 200.0, 4.0, 32.0);
+        b.triggers = vec![2];
+        b.accesses = vec![0];
+        let c = compute("c", 50.0, 1.0, 16.0);
+        Program {
+            name: "test",
+            app_limit: Resources::new(10.0, 10240.0),
+            computes: vec![a, b, c],
+            data: vec![data("d0", 128.0)],
+            entry: 0,
+        }
+    }
+
+    #[test]
+    fn power_law_scaling() {
+        let mut c = compute("x", 100.0, 2.0, 50.0);
+        c.work_exp = 1.5;
+        c.par_exp = 0.5;
+        c.mem_exp = 1.0;
+        assert!((c.work_at(4.0) - 800.0).abs() < 1e-9);
+        assert_eq!(c.parallelism_at(4.0), 4);
+        assert_eq!(c.parallelism_at(0.01), 1); // floor at 1 worker
+        assert!((c.mem_at(2.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topo_order_respects_triggers() {
+        let p = linear_program();
+        let order = p.topo_order().unwrap();
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut p = linear_program();
+        p.computes[2].triggers = vec![0];
+        assert!(p.topo_order().is_err());
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn peak_estimate_capped_by_app_limit() {
+        let mut p = linear_program();
+        p.app_limit = Resources::new(2.0, 100.0);
+        let peak = p.peak_estimate(10.0);
+        assert!(peak.cpu <= 2.0 && peak.mem_mb <= 100.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_edges() {
+        let mut p = linear_program();
+        p.computes[0].accesses = vec![9];
+        assert!(p.validate().is_err());
+        let mut p2 = linear_program();
+        p2.computes[0].access_intensity = 1.5;
+        assert!(p2.validate().is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Small single-function serverless apps (paper appendix Figs 27/28).
+//!
+//! Five sub-second, <128 MB functions from SeBS [23] / FaaSProfiler
+//! [63]. These don't benefit from resource-centric scaling; the paper
+//! uses them to show Zenix still matches OpenWhisk's performance while
+//! allocating less (flexible sizing rather than fixed function sizes).
+
+use crate::cluster::Resources;
+
+use super::program::{compute, data, Program};
+
+/// Names of the five benchmark functions.
+pub const NAMES: [&str; 5] =
+    ["thumbnailer", "json-dynamic", "markdown2html", "dna-visualize", "compression"];
+
+/// Build one small app by name.
+pub fn app(name: &'static str) -> Program {
+    // (work vCPU·ms, mem MB) per function — sub-second, small-memory,
+    // consistent with the SeBS characterization.
+    let (work, mem) = match name {
+        "thumbnailer" => (420.0, 110.0),
+        "json-dynamic" => (180.0, 48.0),
+        "markdown2html" => (250.0, 64.0),
+        "dna-visualize" => (760.0, 96.0),
+        "compression" => (610.0, 120.0),
+        other => panic!("unknown small app {other}"),
+    };
+    let mut c = compute(name, work, 1.0, mem);
+    c.accesses = vec![0];
+    c.access_intensity = 0.2;
+    c.mem_exp = 0.0; // input-insensitive
+    c.work_exp = 0.0;
+    Program {
+        name,
+        app_limit: Resources::new(2.0, 256.0),
+        computes: vec![c],
+        data: vec![data("payload", mem * 0.3)],
+        entry: 0,
+    }
+}
+
+/// All five apps.
+pub fn all() -> Vec<Program> {
+    NAMES.iter().map(|n| app(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_validate_and_are_small() {
+        for p in all() {
+            p.validate().unwrap();
+            let c = &p.computes[0];
+            assert!(c.work_at(1.0) < 1000.0, "sub-second on one core");
+            assert!(c.mem_at(1.0) < 128.0, "under 128 MB");
+            // input-insensitive: same at any scale
+            assert_eq!(c.mem_at(0.1), c.mem_at(10.0));
+        }
+    }
+
+    #[test]
+    fn five_distinct_apps() {
+        let names: Vec<_> = all().iter().map(|p| p.name).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), 5);
+        assert_eq!(dedup.len(), 5);
+    }
+}

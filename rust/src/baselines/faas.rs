@@ -1,0 +1,144 @@
+//! Single-function FaaS baselines: OpenWhisk [5] and AWS Lambda [7].
+//!
+//! The whole bulky application runs as ONE function sized at its peak
+//! (§6.1.3): the function's fixed size is held for the entire execution,
+//! so every non-peak phase wastes the difference — the core
+//! function-model waste the paper quantifies (Figs 15/16, 27/28, 30).
+
+use crate::apps::{Invocation, Program};
+use crate::cluster::server::Consumption;
+use crate::cluster::startup::{StartupModel, StartupPath};
+use crate::metrics::{Breakdown, RunReport};
+
+use super::orion;
+
+/// Which FaaS provider semantics to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provider {
+    /// OpenWhisk on the local cluster: free CPU-to-memory ratio.
+    OpenWhisk,
+    /// AWS Lambda: menu sizes + CPU coupled to memory.
+    Lambda,
+}
+
+/// Run the whole program as a single peak-sized function.
+pub fn run(
+    program: &Program,
+    inv: Invocation,
+    provider: Provider,
+    warm: bool,
+    startup: &StartupModel,
+) -> RunReport {
+    let scale = inv.input_scale;
+    // Peak concurrent demand across the app (what the single function
+    // must be provisioned for — all phases share one allocation).
+    let peak = program.peak_estimate(scale);
+    let peak_with_data: f64 = peak.mem_mb
+        + program
+            .data
+            .iter()
+            .map(|d| d.size_at(scale))
+            .sum::<f64>()
+            .min(peak.mem_mb); // data lives inside the process
+    let (fn_mem, vcpus, eff) = match provider {
+        Provider::OpenWhisk => (peak_with_data, peak.cpu.max(1.0), 0.80),
+        Provider::Lambda => {
+            let m = orion::lambda_menu()
+                .into_iter()
+                .find(|&m| m >= peak_with_data.min(10240.0))
+                .unwrap_or(10240.0);
+            ((m).max(peak_with_data.min(10240.0)), (m / 1769.0).max(0.06), 0.80)
+        }
+    };
+
+    // Phases run serially inside the single function at its fixed size.
+    let mut compute_ms = 0.0f64;
+    let mut used_mem_ms = 0.0f64; // ∫ used memory dt
+    for c in &program.computes {
+        let workers = c.parallelism_at(scale).min(vcpus.ceil() as usize).max(1);
+        let phase_ms = c.work_at(scale) / (workers as f64).min(vcpus) / eff;
+        compute_ms += phase_ms;
+        let phase_mem = (workers as f64 * c.mem_at(scale)).min(fn_mem);
+        used_mem_ms += phase_mem * phase_ms;
+    }
+    let path = match provider {
+        Provider::OpenWhisk => StartupPath::OpenWhisk,
+        Provider::Lambda => StartupPath::Lambda,
+    };
+    let start_ms = if warm { startup.warm(path) } else { startup.cold(path) };
+    let total_ms = start_ms + compute_ms;
+
+    let dur_s = total_ms / 1000.0;
+    let consumption = Consumption {
+        alloc_cpu_s: vcpus * dur_s,
+        used_cpu_s: vcpus * eff * (compute_ms / 1000.0),
+        alloc_mem_mb_s: fn_mem * dur_s,
+        used_mem_mb_s: (used_mem_ms / 1000.0).min(fn_mem * dur_s),
+    };
+    RunReport {
+        system: match provider {
+            Provider::OpenWhisk => "openwhisk".into(),
+            Provider::Lambda => "lambda".into(),
+        },
+        workload: program.name.into(),
+        exec_ms: total_ms,
+        breakdown: Breakdown {
+            compute_ms,
+            startup_ms: start_ms,
+            ..Default::default()
+        },
+        consumption,
+        local_fraction: 1.0, // single process: everything local
+        peak_cpu: vcpus,
+        peak_mem_mb: fn_mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::lr;
+    use crate::cluster::StartupModel;
+
+    #[test]
+    fn openwhisk_wastes_on_non_peak_phases() {
+        let p = lr::program();
+        let r = run(&p, Invocation::new(1.0), Provider::OpenWhisk, false, &StartupModel::default());
+        assert!(r.exec_ms > 0.0);
+        // allocated ≫ used: non-train phases hold the train-sized alloc
+        assert!(r.consumption.alloc_mem_mb_s > 1.5 * r.consumption.used_mem_mb_s);
+    }
+
+    #[test]
+    fn lambda_picks_menu_size_and_couples_cpu() {
+        let p = lr::program();
+        let r = run(&p, Invocation::new(1.0), Provider::Lambda, false, &StartupModel::default());
+        assert_eq!(r.peak_mem_mb % 128.0, 0.0, "menu size");
+        assert!(r.peak_cpu < 8.0, "coupled vCPUs are limited");
+    }
+
+    #[test]
+    fn warm_start_faster() {
+        let p = lr::program();
+        let cold =
+            run(&p, Invocation::new(1.0), Provider::OpenWhisk, false, &StartupModel::default());
+        let warm =
+            run(&p, Invocation::new(1.0), Provider::OpenWhisk, true, &StartupModel::default());
+        assert!(warm.exec_ms < cold.exec_ms);
+    }
+
+    #[test]
+    fn small_input_still_pays_small_peak() {
+        let p = lr::program();
+        let small = run(
+            &p,
+            Invocation::new(lr::scale_for_mb(lr::SMALL_INPUT_MB)),
+            Provider::OpenWhisk,
+            false,
+            &StartupModel::default(),
+        );
+        let large =
+            run(&p, Invocation::new(1.0), Provider::OpenWhisk, false, &StartupModel::default());
+        assert!(small.consumption.alloc_gb_s() < large.consumption.alloc_gb_s());
+    }
+}

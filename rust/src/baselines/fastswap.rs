@@ -1,0 +1,108 @@
+//! FastSwap-style remote-memory swapping baseline [10] (§6.1.3, Fig 18).
+//!
+//! The application runs with local memory equal to Zenix's compute-
+//! component size while the *peak* memory is provisioned remotely for
+//! the whole run (disaggregation systems "assume compute nodes have
+//! insufficient memory and always make remote accesses", §2.3 — no
+//! autoscaling of the remote pool). All beyond-local accesses swap.
+
+use crate::apps::{Invocation, Program};
+use crate::cluster::server::Consumption;
+use crate::cluster::startup::{StartupModel, StartupPath};
+use crate::memory::{AccessPattern, SwapConfig, SwapSim};
+use crate::metrics::{Breakdown, RunReport};
+use crate::net::{NetKind, NetModel};
+use crate::util::rng::Rng;
+
+/// Run under swap-based disaggregation.
+///
+/// `local_frac` — fraction of each phase's working set resident locally
+/// (the paper matches Zenix's compute-component size).
+pub fn run(
+    program: &Program,
+    inv: Invocation,
+    local_frac: f64,
+    net: &NetModel,
+    startup: &StartupModel,
+) -> RunReport {
+    let scale = inv.input_scale;
+    let peak = program.peak_estimate(scale);
+    let remote_pool_mb = peak.mem_mb; // provisioned at peak, entire run
+    let mut breakdown = Breakdown::default();
+    let mut compute_total = 0.0f64;
+    let mut t = 0.0f64;
+    let mut used_mem_ms = 0.0f64;
+    let mut local_mem = 0.0f64;
+    let mut rng = Rng::new(0xFA57);
+
+    breakdown.startup_ms = startup.cold(StartupPath::OpenWhisk);
+    t += breakdown.startup_ms;
+
+    for c in &program.computes {
+        let workers = c.parallelism_at(scale).max(1);
+        let phase_mem = workers as f64 * c.mem_at(scale);
+        let local_mb = phase_mem * local_frac.clamp(0.05, 1.0);
+        local_mem = local_mem.max(local_mb);
+        let compute_ms = c.work_at(scale) / workers as f64 / 0.8;
+        // Swap overhead: one pass over the phase's working set through
+        // the page-granular simulator (calibrated slowdown), scaled by
+        // the phase's access intensity.
+        let mut sim = SwapSim::new(
+            phase_mem.max(1.0),
+            SwapConfig { local_mb, net: NetKind::Rdma, ..Default::default() },
+            *net,
+        );
+        let run = sim.run_pass(AccessPattern::Sequential, &mut rng);
+        let swap_factor = 1.0 + run.overhead().min(30.0) * c.access_intensity;
+        let phase_ms = compute_ms * swap_factor;
+        compute_total += compute_ms;
+        breakdown.io_ms += phase_ms - compute_ms;
+        used_mem_ms += phase_mem.min(local_mb + remote_pool_mb) * phase_ms;
+        t += phase_ms;
+    }
+    breakdown.compute_ms = compute_total;
+
+    let dur_s = t / 1000.0;
+    let vcpus = peak.cpu.max(1.0);
+    RunReport {
+        system: "fastswap".into(),
+        workload: program.name.into(),
+        exec_ms: t,
+        breakdown,
+        consumption: Consumption {
+            alloc_cpu_s: vcpus * dur_s,
+            used_cpu_s: vcpus * 0.8 * (compute_total / 1000.0),
+            // local + peak-provisioned remote pool for the whole run
+            alloc_mem_mb_s: (local_mem + remote_pool_mb) * dur_s,
+            used_mem_mb_s: (used_mem_ms / 1000.0).min((local_mem + remote_pool_mb) * dur_s),
+        },
+        local_fraction: local_frac,
+        peak_cpu: vcpus,
+        peak_mem_mb: local_mem + remote_pool_mb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::lr;
+
+    #[test]
+    fn swap_slower_than_full_local() {
+        let p = lr::program();
+        let full = run(&p, Invocation::new(1.0), 1.0, &NetModel::default(), &StartupModel::default());
+        let half = run(&p, Invocation::new(1.0), 0.3, &NetModel::default(), &StartupModel::default());
+        assert!(half.exec_ms > full.exec_ms);
+        assert!(half.breakdown.io_ms > full.breakdown.io_ms);
+    }
+
+    #[test]
+    fn remote_pool_provisioned_at_peak() {
+        let p = lr::program();
+        let r = run(&p, Invocation::new(1.0), 0.3, &NetModel::default(), &StartupModel::default());
+        let peak = p.peak_estimate(1.0);
+        assert!(r.peak_mem_mb >= peak.mem_mb, "remote pool covers peak");
+        // waste: allocation well above use
+        assert!(r.consumption.alloc_mem_mb_s > r.consumption.used_mem_mb_s);
+    }
+}

@@ -1,0 +1,87 @@
+//! Intermediate KV storage for function DAGs (Redis / S3 models).
+//!
+//! Function-DAG systems persist inter-stage data in a disaggregated
+//! store (§1, §2.2): every hop pays serialization + network, the data
+//! occupies memory *twice* (worker copy + store copy), and a Redis
+//! deployment is long-running and peak-provisioned (§6.1.3).
+
+use crate::cluster::clock::Millis;
+use crate::net::NetModel;
+
+/// Store flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvStore {
+    /// In-cluster Redis: fast, but provisioned (the paper runs 4
+    /// dedicated Redis servers).
+    Redis,
+    /// S3-style object store: slower per hop, no provisioned memory
+    /// charged to the tenant.
+    S3,
+}
+
+impl KvStore {
+    /// Latency of moving `mb` through the store once (read or write),
+    /// including serialization.
+    pub fn hop_ms(&self, net: &NetModel, mb: f64) -> Millis {
+        match self {
+            KvStore::Redis => net.kv_hop(mb),
+            // S3: higher base latency, lower bandwidth, same serde
+            KvStore::S3 => 25.0 + 2.0 * net.serialize_ms_per_mb * mb + mb / 1.2,
+        }
+    }
+
+    /// Memory (MB) the store itself holds for `mb` of live data.
+    pub fn store_copy_mb(&self, mb: f64) -> f64 {
+        match self {
+            KvStore::Redis => mb * 1.1, // structures overhead
+            KvStore::S3 => 0.0,         // not charged as cluster memory
+        }
+    }
+
+    /// Provisioned instance memory (MB) — Redis runs peak-provisioned
+    /// regardless of current load (§6.1.3 "long-running Redis instance
+    /// is provisioned for peak").
+    pub fn provisioned_mb(&self, peak_live_mb: f64) -> f64 {
+        match self {
+            KvStore::Redis => (peak_live_mb * 1.5).max(4096.0),
+            KvStore::S3 => 0.0,
+        }
+    }
+
+    /// Extra worker-side memory for serialization buffers (§6.1.3:
+    /// "serialization and deserialization also requires extra memory").
+    pub fn serde_buffer_mb(&self, mb: f64) -> f64 {
+        mb * 0.35
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redis_hop_faster_than_s3() {
+        let net = NetModel::default();
+        for mb in [1.0, 100.0, 1000.0] {
+            assert!(
+                KvStore::Redis.hop_ms(&net, mb) < KvStore::S3.hop_ms(&net, mb),
+                "mb={mb}"
+            );
+        }
+    }
+
+    #[test]
+    fn redis_charges_memory_s3_does_not() {
+        assert!(KvStore::Redis.store_copy_mb(100.0) >= 100.0);
+        assert_eq!(KvStore::S3.store_copy_mb(100.0), 0.0);
+        assert!(KvStore::Redis.provisioned_mb(100.0) >= 4096.0);
+        assert_eq!(KvStore::S3.provisioned_mb(100.0), 0.0);
+    }
+
+    #[test]
+    fn provisioning_scales_with_peak() {
+        let small = KvStore::Redis.provisioned_mb(1000.0);
+        let big = KvStore::Redis.provisioned_mb(100_000.0);
+        assert!(big > small);
+    }
+}

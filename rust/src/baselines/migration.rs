@@ -1,0 +1,130 @@
+//! Migration-based scaling baselines (§2.3, Fig 18).
+//!
+//! When a phase outgrows its server, migration-based systems move the
+//! whole execution state: we model (a) a **best case** that only pays
+//! pure data movement at full 100 Gbps line rate, and (b) **MigrOS**
+//! [54]-style transparent container live-migration (pre-copy rounds +
+//! downtime). Execution itself runs natively (no remote-access
+//! overhead) — exactly the trade the paper describes.
+
+use crate::apps::{Invocation, Program};
+use crate::cluster::server::Consumption;
+use crate::cluster::startup::{StartupModel, StartupPath};
+use crate::metrics::{Breakdown, RunReport};
+
+/// Migration flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// Pure data movement at line rate (lower bound).
+    BestCase,
+    /// MigrOS: pre-copy amplification + downtime per migration.
+    MigrOs,
+}
+
+impl Flavor {
+    /// Time (ms) to migrate `mb` of state.
+    fn migrate_ms(&self, mb: f64) -> f64 {
+        // 100 Gbps ≈ 12.5 GB/s ≈ 12.8 MB/ms line rate.
+        let line = mb / 12.8;
+        match self {
+            Flavor::BestCase => line,
+            // dirty-page re-copy rounds (~1.6× data) + stop-and-copy
+            // downtime + RDMA connection state re-establishment
+            Flavor::MigrOs => line * 1.6 + 180.0,
+        }
+    }
+}
+
+/// Run with migration as the only scaling mechanism: whenever the next
+/// phase needs more memory than the current server allocation, migrate
+/// to a bigger allocation (moving the live state).
+pub fn run(
+    program: &Program,
+    inv: Invocation,
+    flavor: Flavor,
+    startup: &StartupModel,
+) -> RunReport {
+    let scale = inv.input_scale;
+    let mut breakdown = Breakdown::default();
+    let mut t = startup.cold(StartupPath::OpenWhisk);
+    breakdown.startup_ms = t;
+    let mut cur_alloc_mb = 0.0f64;
+    let mut migrations = 0u32;
+    let mut consumption = Consumption::default();
+    let mut peak_mem = 0.0f64;
+
+    for c in &program.computes {
+        let workers = c.parallelism_at(scale).max(1);
+        let need = workers as f64 * c.mem_at(scale)
+            + c.accesses
+                .iter()
+                .map(|&d| program.data[d].size_at(scale))
+                .sum::<f64>();
+        if need > cur_alloc_mb {
+            if cur_alloc_mb > 0.0 {
+                // migrate the live state to a bigger placement
+                let mv = flavor.migrate_ms(cur_alloc_mb);
+                breakdown.io_ms += mv;
+                // resources held on BOTH servers during migration
+                consumption.alloc_mem_mb_s += (cur_alloc_mb + need) * mv / 1000.0;
+                consumption.alloc_cpu_s += workers as f64 * mv / 1000.0;
+                t += mv;
+                migrations += 1;
+            }
+            cur_alloc_mb = need;
+        }
+        let compute_ms = c.work_at(scale) / workers as f64 / 0.85;
+        breakdown.compute_ms += compute_ms;
+        consumption.alloc_cpu_s += workers as f64 * compute_ms / 1000.0;
+        consumption.used_cpu_s += workers as f64 * 0.85 * compute_ms / 1000.0;
+        consumption.alloc_mem_mb_s += cur_alloc_mb * compute_ms / 1000.0;
+        consumption.used_mem_mb_s += need.min(cur_alloc_mb) * compute_ms / 1000.0;
+        peak_mem = peak_mem.max(cur_alloc_mb);
+        t += compute_ms;
+    }
+
+    RunReport {
+        system: match flavor {
+            Flavor::BestCase => "migration-best".into(),
+            Flavor::MigrOs => "migros".into(),
+        },
+        workload: format!("{} ({migrations} migrations)", program.name),
+        exec_ms: t,
+        breakdown,
+        consumption,
+        local_fraction: 1.0, // native execution between migrations
+        peak_cpu: program.peak_estimate(scale).cpu,
+        peak_mem_mb: peak_mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lr, tpcds};
+
+    #[test]
+    fn migros_slower_than_best_case() {
+        let p = tpcds::query(95);
+        let best = run(&p, Invocation::new(1.0), Flavor::BestCase, &StartupModel::default());
+        let migros = run(&p, Invocation::new(1.0), Flavor::MigrOs, &StartupModel::default());
+        assert!(migros.exec_ms > best.exec_ms);
+    }
+
+    #[test]
+    fn bigger_state_migrates_longer() {
+        let p = lr::program();
+        let small = run(&p, Invocation::new(0.27), Flavor::BestCase, &StartupModel::default());
+        let large = run(&p, Invocation::new(1.0), Flavor::BestCase, &StartupModel::default());
+        assert!(large.breakdown.io_ms >= small.breakdown.io_ms);
+    }
+
+    #[test]
+    fn native_execution_no_remote_penalty() {
+        let p = lr::program();
+        let r = run(&p, Invocation::new(1.0), Flavor::BestCase, &StartupModel::default());
+        assert_eq!(r.local_fraction, 1.0);
+        // io time is migration only, bounded
+        assert!(r.breakdown.io_ms < r.breakdown.compute_ms);
+    }
+}

@@ -1,0 +1,24 @@
+//! Every system the paper compares against (§6), built on the same
+//! cost models as the Zenix platform so comparisons are apples-to-apples:
+//!
+//! - [`kvstore`] — Redis/S3-style intermediate storage (serialization +
+//!   transfer + provisioned instances).
+//! - [`orion`] — Orion's per-function size tuning [40] (used by the
+//!   PyWren and SF-Orion configurations).
+//! - [`dag`] — generic function-DAG executor: PyWren [36], gg [29],
+//!   ExCamera [30], AWS Step Functions configurations.
+//! - [`faas`] — single-function FaaS: OpenWhisk [5], AWS Lambda [7].
+//! - [`fastswap`] — remote-memory swapping baseline [10].
+//! - [`migration`] — live-migration baselines: best-case + MigrOS [54].
+//! - [`vpxenc`] — single-server native encoder [70].
+
+pub mod dag;
+pub mod faas;
+pub mod fastswap;
+pub mod kvstore;
+pub mod migration;
+pub mod orion;
+pub mod vpxenc;
+
+pub use dag::{DagParams, KvChoice};
+pub use kvstore::KvStore;

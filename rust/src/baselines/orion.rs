@@ -1,0 +1,114 @@
+//! Orion-style function sizing [40] (§2.2, §6.1.1, §6.1.3 SF-Orion).
+//!
+//! Orion picks one cost-optimal size per function from its latency/size
+//! profile — but that size is then *fixed* for the whole execution and
+//! all invocations (the limitation Zenix removes). We model the
+//! latency(size) curve as work-conserving with a memory floor: below the
+//! true need the function thrashes/fails; above it, latency stops
+//! improving, so cost (≈ mem × time) grows linearly.
+
+/// AWS Lambda-style size menu (MB): 128 MB steps up to 10 GB.
+pub fn lambda_menu() -> Vec<f64> {
+    (1..=80).map(|i| 128.0 * i as f64).collect()
+}
+
+/// Latency of a function given `mem_mb`, with true need `need_mb` and
+/// pure-compute latency `compute_ms` (CPU share scales with memory on
+/// AWS: cpu = mem / 1769 MB).
+pub fn latency_ms(mem_mb: f64, need_mb: f64, compute_ms: f64, cpu_per_1769mb: bool) -> f64 {
+    if mem_mb < need_mb {
+        return f64::INFINITY; // OOM — the paper's "application failure"
+    }
+    if cpu_per_1769mb {
+        // AWS couples CPU to memory: 1 vCPU per 1769 MB.
+        let vcpus = (mem_mb / 1769.0).max(1.0 / 16.0);
+        compute_ms / vcpus
+    } else {
+        compute_ms
+    }
+}
+
+/// Cost in GB·s for a size/latency pair.
+pub fn cost_gb_s(mem_mb: f64, latency_ms: f64) -> f64 {
+    (mem_mb / 1024.0) * (latency_ms / 1000.0)
+}
+
+/// Orion pick: minimize latency subject to cost ≤ (1 + slack) × the
+/// cost-optimal configuration (Orion's "right-sizing" balances both; we
+/// use its published behaviour of choosing near-cost-optimal but
+/// latency-aware sizes).
+pub fn orion_size(need_mb: f64, compute_ms: f64, slack: f64) -> f64 {
+    let menu = lambda_menu();
+    let co = cost_optimal_size(need_mb, compute_ms);
+    let co_cost = cost_gb_s(co, latency_ms(co, need_mb, compute_ms, true));
+    menu.iter()
+        .copied()
+        .filter(|&m| {
+            let l = latency_ms(m, need_mb, compute_ms, true);
+            l.is_finite() && cost_gb_s(m, l) <= co_cost * (1.0 + slack)
+        })
+        .min_by(|&a, &b| {
+            latency_ms(a, need_mb, compute_ms, true)
+                .partial_cmp(&latency_ms(b, need_mb, compute_ms, true))
+                .unwrap()
+                .then(a.partial_cmp(&b).unwrap())
+        })
+        .unwrap_or_else(|| menu.last().copied().unwrap())
+}
+
+/// Pure cost-optimal size (the SF-CO configuration / power-tuning
+/// tools [6, 9, 27]).
+pub fn cost_optimal_size(need_mb: f64, compute_ms: f64) -> f64 {
+    lambda_menu()
+        .into_iter()
+        .filter(|&m| m >= need_mb)
+        .min_by(|&a, &b| {
+            let ca = cost_gb_s(a, latency_ms(a, need_mb, compute_ms, true));
+            let cb = cost_gb_s(b, latency_ms(b, need_mb, compute_ms, true));
+            ca.partial_cmp(&cb).unwrap().then(a.partial_cmp(&b).unwrap())
+        })
+        .unwrap_or(10240.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn menu_has_aws_shape() {
+        let m = lambda_menu();
+        assert_eq!(m[0], 128.0);
+        assert_eq!(*m.last().unwrap(), 10240.0);
+        assert_eq!(m.len(), 80);
+    }
+
+    #[test]
+    fn undersized_is_infeasible() {
+        assert!(latency_ms(128.0, 512.0, 100.0, true).is_infinite());
+    }
+
+    #[test]
+    fn sizes_cover_need() {
+        for need in [100.0, 700.0, 2400.0, 9000.0] {
+            assert!(cost_optimal_size(need, 1000.0) >= need);
+            assert!(orion_size(need, 1000.0, 0.15) >= need);
+        }
+    }
+
+    #[test]
+    fn orion_at_least_as_fast_as_cost_optimal() {
+        let need = 700.0;
+        let co = cost_optimal_size(need, 5000.0);
+        let or = orion_size(need, 5000.0, 0.25);
+        let l_co = latency_ms(co, need, 5000.0, true);
+        let l_or = latency_ms(or, need, 5000.0, true);
+        assert!(l_or <= l_co + 1e-9);
+    }
+
+    #[test]
+    fn cpu_coupling_speeds_up_with_memory() {
+        let slow = latency_ms(1769.0, 100.0, 1000.0, true);
+        let fast = latency_ms(3538.0, 100.0, 1000.0, true);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,151 @@
+//! Virtual clock + discrete-event queue.
+//!
+//! All platform latencies (startup, network, compute durations) advance
+//! this clock rather than wall time, so an 8-server, multi-minute paper
+//! experiment replays in microseconds and the benches can sweep hundreds
+//! of configurations.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Milliseconds of simulated time.
+pub type Millis = f64;
+
+/// A discrete-event queue over an opaque event payload.
+///
+/// Events fire in (time, insertion-order) order, so simultaneous events
+/// are FIFO — deterministic replays for tests and benches.
+#[derive(Debug)]
+pub struct Clock<E> {
+    now: Millis,
+    seq: u64,
+    heap: BinaryHeap<Entry<E>>,
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    at: Millis,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> Default for Clock<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Clock<E> {
+    pub fn new() -> Self {
+        Self { now: 0.0, seq: 0, heap: BinaryHeap::new() }
+    }
+
+    /// Current simulated time (ms).
+    pub fn now(&self) -> Millis {
+        self.now
+    }
+
+    /// Schedule `event` to fire `delay` ms from now (clamped to >= 0).
+    pub fn schedule(&mut self, delay: Millis, event: E) {
+        self.schedule_at(self.now + delay.max(0.0), event);
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to >= now).
+    pub fn schedule_at(&mut self, at: Millis, event: E) {
+        let at = at.max(self.now);
+        self.heap.push(Entry { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its fire time.
+    pub fn next(&mut self) -> Option<(Millis, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at >= self.now, "time went backwards");
+        self.now = e.at;
+        Some((e.at, e.event))
+    }
+
+    /// Peek at the next fire time without advancing.
+    pub fn peek_time(&self) -> Option<Millis> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut c = Clock::new();
+        c.schedule(30.0, "c");
+        c.schedule(10.0, "a");
+        c.schedule(20.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| c.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(c.now(), 30.0);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut c = Clock::new();
+        for i in 0..10 {
+            c.schedule(5.0, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| c.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn negative_delay_clamps_to_now() {
+        let mut c = Clock::new();
+        c.schedule(10.0, "x");
+        c.next();
+        c.schedule(-5.0, "y");
+        let (t, _) = c.next().unwrap();
+        assert_eq!(t, 10.0);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = Clock::new();
+        c.schedule(10.0, 1);
+        c.schedule(5.0, 0);
+        let (t0, _) = c.next().unwrap();
+        c.schedule(1.0, 2); // scheduled at 6.0, before pending 10.0
+        let (t1, _) = c.next().unwrap();
+        let (t2, _) = c.next().unwrap();
+        assert!(t0 <= t1 && t1 <= t2);
+        assert_eq!((t0, t1, t2), (5.0, 6.0, 10.0));
+    }
+}

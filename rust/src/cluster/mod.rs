@@ -1,0 +1,104 @@
+//! Cluster substrate: servers, racks, containers, virtual clock and
+//! resource accounting.
+//!
+//! The paper evaluates on a private 8-server RDMA rack; this module is
+//! the discrete-event substitute (DESIGN.md §1): capacities, allocations
+//! and start-up latencies are modeled explicitly so that the paper's
+//! *allocation-shape* claims (GB·s, vCPU·s, makespan, utilization)
+//! reproduce on commodity hardware.
+
+pub mod clock;
+pub mod server;
+pub mod startup;
+pub mod topology;
+
+pub use clock::Clock;
+pub use server::{Server, ServerId};
+pub use startup::StartupModel;
+pub use topology::{Cluster, ClusterSpec, RackId};
+
+/// CPU (vCPUs) + memory (MB) bundle used for every allocation decision.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub cpu: f64,
+    pub mem_mb: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { cpu: 0.0, mem_mb: 0.0 };
+
+    pub fn new(cpu: f64, mem_mb: f64) -> Self {
+        Self { cpu, mem_mb }
+    }
+
+    pub fn cpu_only(cpu: f64) -> Self {
+        Self { cpu, mem_mb: 0.0 }
+    }
+
+    pub fn mem_only(mem_mb: f64) -> Self {
+        Self { cpu: 0.0, mem_mb }
+    }
+
+    /// Component-wise `self + other`.
+    pub fn plus(&self, other: Resources) -> Resources {
+        Resources { cpu: self.cpu + other.cpu, mem_mb: self.mem_mb + other.mem_mb }
+    }
+
+    /// Component-wise saturating `self - other` (never negative).
+    pub fn minus(&self, other: Resources) -> Resources {
+        Resources {
+            cpu: (self.cpu - other.cpu).max(0.0),
+            mem_mb: (self.mem_mb - other.mem_mb).max(0.0),
+        }
+    }
+
+    /// True iff `other` fits inside `self` (with float tolerance).
+    pub fn fits(&self, other: Resources) -> bool {
+        const EPS: f64 = 1e-9;
+        other.cpu <= self.cpu + EPS && other.mem_mb <= self.mem_mb + EPS
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources { cpu: self.cpu * k, mem_mb: self.mem_mb * k }
+    }
+
+    /// Scalar "size" used by best-fit comparisons: normalize CPU and
+    /// memory to a common scale (paper server shape: 32 cores / 64 GB)
+    /// and take the max so neither dimension dominates.
+    pub fn magnitude(&self) -> f64 {
+        (self.cpu / 32.0).max(self.mem_mb / 65536.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(4.0, 1024.0);
+        let b = Resources::new(1.0, 512.0);
+        assert_eq!(a.plus(b), Resources::new(5.0, 1536.0));
+        assert_eq!(a.minus(b), Resources::new(3.0, 512.0));
+        assert_eq!(b.minus(a), Resources::ZERO);
+        assert_eq!(a.scale(2.0), Resources::new(8.0, 2048.0));
+    }
+
+    #[test]
+    fn fits_with_tolerance() {
+        let cap = Resources::new(4.0, 1000.0);
+        assert!(cap.fits(Resources::new(4.0, 1000.0)));
+        assert!(cap.fits(Resources::new(3.9999999999, 1000.0)));
+        assert!(!cap.fits(Resources::new(4.1, 10.0)));
+        assert!(!cap.fits(Resources::new(1.0, 1001.0)));
+    }
+
+    #[test]
+    fn magnitude_orders_servers() {
+        // a mem-heavy remainder is "bigger" than a CPU-heavy small one
+        let m1 = Resources::new(16.0, 8192.0).magnitude();
+        let m2 = Resources::new(8.0, 32768.0).magnitude();
+        assert!(m1 > m2 * 0.9); // both well-defined, comparable scale
+        assert!(Resources::new(32.0, 65536.0).magnitude() > m1);
+    }
+}

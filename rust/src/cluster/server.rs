@@ -1,0 +1,253 @@
+//! A single server: capacity, allocations, low-priority marks, and
+//! time-integrated consumption counters.
+
+use super::clock::Millis;
+use super::{RackId, Resources};
+
+/// Dense server identifier (index into the cluster's server table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServerId(pub usize);
+
+/// Time-integrated resource consumption, split into allocated vs used.
+///
+/// `alloc_*` integrates what was *reserved* (what a provider bills);
+/// `used_*` integrates what the application actually exercised. The gap
+/// is the paper's "unused/wasted" bar in Figs 12-16.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Consumption {
+    /// vCPU·seconds allocated.
+    pub alloc_cpu_s: f64,
+    /// MB·seconds allocated.
+    pub alloc_mem_mb_s: f64,
+    /// vCPU·seconds actually used.
+    pub used_cpu_s: f64,
+    /// MB·seconds actually used.
+    pub used_mem_mb_s: f64,
+}
+
+impl Consumption {
+    pub fn plus(&self, o: &Consumption) -> Consumption {
+        Consumption {
+            alloc_cpu_s: self.alloc_cpu_s + o.alloc_cpu_s,
+            alloc_mem_mb_s: self.alloc_mem_mb_s + o.alloc_mem_mb_s,
+            used_cpu_s: self.used_cpu_s + o.used_cpu_s,
+            used_mem_mb_s: self.used_mem_mb_s + o.used_mem_mb_s,
+        }
+    }
+
+    /// Allocated GB·s of memory (the headline unit in the paper's plots).
+    pub fn alloc_gb_s(&self) -> f64 {
+        self.alloc_mem_mb_s / 1024.0
+    }
+
+    pub fn used_gb_s(&self) -> f64 {
+        self.used_mem_mb_s / 1024.0
+    }
+
+    /// Memory utilization: used / allocated (1.0 when nothing allocated).
+    pub fn mem_utilization(&self) -> f64 {
+        if self.alloc_mem_mb_s <= 0.0 {
+            1.0
+        } else {
+            (self.used_mem_mb_s / self.alloc_mem_mb_s).min(1.0)
+        }
+    }
+
+    pub fn cpu_utilization(&self) -> f64 {
+        if self.alloc_cpu_s <= 0.0 {
+            1.0
+        } else {
+            (self.used_cpu_s / self.alloc_cpu_s).min(1.0)
+        }
+    }
+}
+
+/// A server with explicit allocation bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Server {
+    pub id: ServerId,
+    pub rack: RackId,
+    pub capacity: Resources,
+    allocated: Resources,
+    used: Resources,
+    /// Low-priority reservation (§5.1.1): the scheduler marks a server
+    /// with an application's *potential* whole-app demand. Marks do not
+    /// block allocations, they only demote the server in placement
+    /// decisions for other applications.
+    marked: Resources,
+    last_change: Millis,
+    consumption: Consumption,
+}
+
+impl Server {
+    pub fn new(id: ServerId, rack: RackId, capacity: Resources) -> Self {
+        Self {
+            id,
+            rack,
+            capacity,
+            allocated: Resources::ZERO,
+            used: Resources::ZERO,
+            marked: Resources::ZERO,
+            last_change: 0.0,
+            consumption: Consumption::default(),
+        }
+    }
+
+    /// Free resources (capacity - allocated).
+    pub fn available(&self) -> Resources {
+        self.capacity.minus(self.allocated)
+    }
+
+    /// Free resources after honoring low-priority marks from other apps.
+    pub fn available_unmarked(&self) -> Resources {
+        self.capacity.minus(self.allocated).minus(self.marked)
+    }
+
+    pub fn allocated(&self) -> Resources {
+        self.allocated
+    }
+
+    pub fn used(&self) -> Resources {
+        self.used
+    }
+
+    pub fn marked(&self) -> Resources {
+        self.marked
+    }
+
+    fn integrate(&mut self, now: Millis) {
+        debug_assert!(now + 1e-9 >= self.last_change, "time went backwards");
+        let dt_s = (now - self.last_change).max(0.0) / 1000.0;
+        self.consumption.alloc_cpu_s += self.allocated.cpu * dt_s;
+        self.consumption.alloc_mem_mb_s += self.allocated.mem_mb * dt_s;
+        self.consumption.used_cpu_s += self.used.cpu * dt_s;
+        self.consumption.used_mem_mb_s += self.used.mem_mb * dt_s;
+        self.last_change = now;
+    }
+
+    /// Try to allocate `amount` at time `now`; false if it doesn't fit.
+    pub fn try_alloc(&mut self, amount: Resources, now: Millis) -> bool {
+        if !self.available().fits(amount) {
+            return false;
+        }
+        self.integrate(now);
+        self.allocated = self.allocated.plus(amount);
+        true
+    }
+
+    /// Release `amount` at time `now` (saturating).
+    pub fn free(&mut self, amount: Resources, now: Millis) {
+        self.integrate(now);
+        self.allocated = self.allocated.minus(amount);
+        // Used can never exceed allocated.
+        self.used = Resources {
+            cpu: self.used.cpu.min(self.allocated.cpu),
+            mem_mb: self.used.mem_mb.min(self.allocated.mem_mb),
+        };
+    }
+
+    /// Report the actually-used share of the allocation at `now`.
+    pub fn set_used(&mut self, used: Resources, now: Millis) {
+        self.integrate(now);
+        self.used = Resources {
+            cpu: used.cpu.min(self.allocated.cpu),
+            mem_mb: used.mem_mb.min(self.allocated.mem_mb),
+        };
+    }
+
+    /// Adjust the used share by a delta (saturating at 0/allocated).
+    pub fn add_used(&mut self, delta: Resources, now: Millis) {
+        let u = self.used.plus(delta);
+        self.set_used(u, now);
+    }
+
+    pub fn sub_used(&mut self, delta: Resources, now: Millis) {
+        let u = self.used.minus(delta);
+        self.set_used(u, now);
+    }
+
+    /// Place a low-priority mark (future-need hint).
+    pub fn mark(&mut self, amount: Resources) {
+        self.marked = self.marked.plus(amount);
+    }
+
+    /// Remove a low-priority mark (saturating).
+    pub fn unmark(&mut self, amount: Resources) {
+        self.marked = self.marked.minus(amount);
+    }
+
+    /// Finalize integrals up to `now` and read consumption counters.
+    pub fn consumption(&mut self, now: Millis) -> Consumption {
+        self.integrate(now);
+        self.consumption
+    }
+
+    /// Read consumption without advancing (test/diagnostic use).
+    pub fn consumption_raw(&self) -> Consumption {
+        self.consumption
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> Server {
+        Server::new(ServerId(0), RackId(0), Resources::new(32.0, 65536.0))
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut s = server();
+        assert!(s.try_alloc(Resources::new(4.0, 1024.0), 0.0));
+        assert_eq!(s.available(), Resources::new(28.0, 64512.0));
+        s.free(Resources::new(4.0, 1024.0), 10.0);
+        assert_eq!(s.available(), s.capacity);
+    }
+
+    #[test]
+    fn rejects_overcommit() {
+        let mut s = server();
+        assert!(s.try_alloc(Resources::new(32.0, 0.0), 0.0));
+        assert!(!s.try_alloc(Resources::new(0.1, 0.0), 1.0));
+        // memory axis independent
+        assert!(s.try_alloc(Resources::new(0.0, 65536.0), 2.0));
+        assert!(!s.try_alloc(Resources::new(0.0, 1.0), 3.0));
+    }
+
+    #[test]
+    fn consumption_integrates_alloc_and_used() {
+        let mut s = server();
+        s.try_alloc(Resources::new(10.0, 10240.0), 0.0);
+        s.set_used(Resources::new(5.0, 2048.0), 0.0);
+        // 2 seconds at alloc(10 cpu, 10 GB) used(5 cpu, 2 GB)
+        let c = s.consumption(2000.0);
+        assert!((c.alloc_cpu_s - 20.0).abs() < 1e-9);
+        assert!((c.alloc_mem_mb_s - 20480.0).abs() < 1e-9);
+        assert!((c.used_cpu_s - 10.0).abs() < 1e-9);
+        assert!((c.used_mem_mb_s - 4096.0).abs() < 1e-9);
+        assert!((c.mem_utilization() - 0.2).abs() < 1e-9);
+        assert!((c.cpu_utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn used_capped_by_allocated() {
+        let mut s = server();
+        s.try_alloc(Resources::new(2.0, 100.0), 0.0);
+        s.set_used(Resources::new(50.0, 5000.0), 0.0);
+        assert_eq!(s.used(), Resources::new(2.0, 100.0));
+        s.free(Resources::new(1.0, 50.0), 1.0);
+        assert_eq!(s.used(), Resources::new(1.0, 50.0));
+    }
+
+    #[test]
+    fn marks_do_not_block_allocation() {
+        let mut s = server();
+        s.mark(Resources::new(30.0, 60000.0));
+        assert!(s.available_unmarked().cpu < 3.0);
+        // but a real allocation still succeeds
+        assert!(s.try_alloc(Resources::new(30.0, 60000.0), 0.0));
+        s.unmark(Resources::new(30.0, 60000.0));
+        assert_eq!(s.marked(), Resources::ZERO);
+    }
+}

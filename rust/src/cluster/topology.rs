@@ -1,0 +1,164 @@
+//! Cluster topology: racks of servers, lookup helpers, and aggregate
+//! consumption readouts.
+
+use super::clock::Millis;
+use super::server::{Consumption, Server, ServerId};
+use super::Resources;
+
+/// Dense rack identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RackId(pub usize);
+
+/// Construction parameters for a cluster.
+///
+/// Default mirrors the paper's testbed: 1 rack × 8 servers, each with
+/// 2×16-core Xeons (32 vCPU) and 64 GB (§6 Environment).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub racks: usize,
+    pub servers_per_rack: usize,
+    pub server_capacity: Resources,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            racks: 1,
+            servers_per_rack: 8,
+            server_capacity: Resources::new(32.0, 65536.0),
+        }
+    }
+}
+
+impl ClusterSpec {
+    /// The paper's 8-server local rack.
+    pub fn paper_testbed() -> Self {
+        Self::default()
+    }
+
+    /// A multi-rack cluster for scheduler-scalability experiments.
+    pub fn multi_rack(racks: usize, servers_per_rack: usize) -> Self {
+        Self { racks, servers_per_rack, ..Self::default() }
+    }
+}
+
+/// Racks of servers with aggregate accounting.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    servers: Vec<Server>,
+}
+
+impl Cluster {
+    pub fn new(spec: ClusterSpec) -> Self {
+        let mut servers = Vec::with_capacity(spec.racks * spec.servers_per_rack);
+        for r in 0..spec.racks {
+            for s in 0..spec.servers_per_rack {
+                let id = ServerId(r * spec.servers_per_rack + s);
+                servers.push(Server::new(id, RackId(r), spec.server_capacity));
+            }
+        }
+        Self { spec, servers }
+    }
+
+    pub fn server(&self, id: ServerId) -> &Server {
+        &self.servers[id.0]
+    }
+
+    pub fn server_mut(&mut self, id: ServerId) -> &mut Server {
+        &mut self.servers[id.0]
+    }
+
+    pub fn servers(&self) -> &[Server] {
+        &self.servers
+    }
+
+    pub fn servers_mut(&mut self) -> &mut [Server] {
+        &mut self.servers
+    }
+
+    /// Server ids in one rack.
+    pub fn rack_servers(&self, rack: RackId) -> impl Iterator<Item = ServerId> + '_ {
+        self.servers
+            .iter()
+            .filter(move |s| s.rack == rack)
+            .map(|s| s.id)
+    }
+
+    pub fn racks(&self) -> impl Iterator<Item = RackId> {
+        (0..self.spec.racks).map(RackId)
+    }
+
+    /// Same-rack test for the locality policy.
+    pub fn same_rack(&self, a: ServerId, b: ServerId) -> bool {
+        self.server(a).rack == self.server(b).rack
+    }
+
+    /// Aggregate free resources in a rack (the global scheduler's
+    /// "rough amount of available resources" view, §5.3.1).
+    pub fn rack_available(&self, rack: RackId) -> Resources {
+        self.servers
+            .iter()
+            .filter(|s| s.rack == rack)
+            .fold(Resources::ZERO, |acc, s| acc.plus(s.available()))
+    }
+
+    /// Total capacity across the cluster.
+    pub fn total_capacity(&self) -> Resources {
+        self.servers
+            .iter()
+            .fold(Resources::ZERO, |acc, s| acc.plus(s.capacity))
+    }
+
+    /// Aggregate consumption up to `now` across all servers.
+    pub fn total_consumption(&mut self, now: Millis) -> Consumption {
+        let mut total = Consumption::default();
+        for s in &mut self.servers {
+            total = total.plus(&s.consumption(now));
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_paper_testbed() {
+        let c = Cluster::new(ClusterSpec::paper_testbed());
+        assert_eq!(c.servers().len(), 8);
+        assert_eq!(c.total_capacity(), Resources::new(256.0, 524288.0));
+        assert_eq!(c.racks().count(), 1);
+    }
+
+    #[test]
+    fn multi_rack_lookup() {
+        let c = Cluster::new(ClusterSpec::multi_rack(3, 4));
+        assert_eq!(c.servers().len(), 12);
+        assert_eq!(c.rack_servers(RackId(1)).count(), 4);
+        assert!(c.same_rack(ServerId(4), ServerId(7)));
+        assert!(!c.same_rack(ServerId(3), ServerId(4)));
+    }
+
+    #[test]
+    fn rack_available_tracks_allocations() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(2, 2));
+        let id = ServerId(0);
+        assert!(c.server_mut(id).try_alloc(Resources::new(10.0, 1000.0), 0.0));
+        let avail = c.rack_available(RackId(0));
+        assert_eq!(avail, Resources::new(54.0, 130072.0));
+        // rack 1 untouched
+        assert_eq!(c.rack_available(RackId(1)), Resources::new(64.0, 131072.0));
+    }
+
+    #[test]
+    fn total_consumption_aggregates() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(1, 2));
+        c.server_mut(ServerId(0)).try_alloc(Resources::new(1.0, 1024.0), 0.0);
+        c.server_mut(ServerId(1)).try_alloc(Resources::new(2.0, 2048.0), 0.0);
+        let total = c.total_consumption(1000.0);
+        assert!((total.alloc_cpu_s - 3.0).abs() < 1e-9);
+        assert!((total.alloc_mem_mb_s - 3072.0).abs() < 1e-9);
+    }
+}

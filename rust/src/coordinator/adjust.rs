@@ -1,0 +1,210 @@
+//! The init/incremental sizing optimizer (§5.2.3 + §9.3).
+//!
+//! For each component, pick `(init, step)` minimizing
+//!
+//! ```text
+//!   init + Σ_h  step · k_h · cost_factor          (expected alloc cost)
+//!   s.t.  ∀h:  init + k_h · step ≥ h              (coverage)
+//!         Σ_h max(init − h, 0) · t_h / Σ_h h  <  Thres   (waste bound)
+//! ```
+//!
+//! where `k_h = ⌈(h − init)⁺ / step⌉` is the number of runtime growths
+//! invocation `h` needs. The paper solves this as a MIP with OR-Tools;
+//! the domain is tiny (two variables over value grids derived from the
+//! history), so an exact search over the candidate grid is equivalent
+//! and fast — the appendix reports 10-15 ms for 10 000 candidate sets of
+//! 32 components, which `benches/scheduler.rs tab_solver_perf`
+//! reproduces.
+
+/// Solver parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdjustParams {
+    /// Relative cost of one increment allocation vs initial allocation
+    /// (growths happen at runtime: scheduling + possible remote region).
+    pub cost_factor: f64,
+    /// Waste-bound threshold (fraction of total demand).
+    pub threshold: f64,
+    /// Candidate grid resolution per axis.
+    pub grid: usize,
+}
+
+impl Default for AdjustParams {
+    fn default() -> Self {
+        Self { cost_factor: 1.6, threshold: 0.30, grid: 24 }
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sizing {
+    pub init_mb: f64,
+    pub step_mb: f64,
+    /// Objective value at the optimum.
+    pub cost: f64,
+}
+
+/// Number of growth increments history point `h` requires.
+#[inline]
+pub fn growths(init: f64, step: f64, h: f64) -> f64 {
+    if h <= init {
+        0.0
+    } else {
+        ((h - init) / step).ceil()
+    }
+}
+
+/// Exact objective for a candidate `(init, step)`.
+fn objective(init: f64, step: f64, history: &[f64], cost_factor: f64) -> f64 {
+    let growth_cost: f64 = history.iter().map(|&h| growths(init, step, h) * step).sum::<f64>()
+        / history.len() as f64;
+    init + growth_cost * cost_factor
+}
+
+/// Waste constraint: over-allocation weighted by execution share.
+/// `exec_ms[i]` defaults to 1.0 (uniform) when not supplied.
+fn waste(init: f64, history: &[f64], exec_ms: Option<&[f64]>) -> f64 {
+    let total_demand: f64 = history.iter().sum();
+    if total_demand <= 0.0 {
+        return 0.0;
+    }
+    let over: f64 = history
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| (init - h).max(0.0) * exec_ms.map_or(1.0, |t| t[i]))
+        .sum();
+    let t_mean = exec_ms.map_or(1.0, |t| {
+        t.iter().sum::<f64>() / t.len().max(1) as f64
+    });
+    over / (total_demand * t_mean.max(1e-12))
+}
+
+/// Solve for one component given its usage history (peak MB per past
+/// invocation) and optional execution times.
+pub fn solve(history: &[f64], exec_ms: Option<&[f64]>, params: AdjustParams) -> Sizing {
+    assert!(!history.is_empty(), "adjust::solve needs at least one observation");
+    let lo = history.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = history.iter().cloned().fold(0.0, f64::max);
+    let hi = hi.max(1.0);
+    let lo = lo.min(hi);
+
+    // Candidate grids: inits span [lo/2, hi]; steps span a useful range
+    // of the spread (min 16 MB granularity — page/slab rounding).
+    let g = params.grid.max(2);
+    let mut best = Sizing { init_mb: hi, step_mb: (hi / 4.0).max(16.0), cost: f64::MAX };
+    for i in 0..g {
+        let init = lo * 0.5 + (hi - lo * 0.5) * i as f64 / (g - 1) as f64;
+        if waste(init, history, exec_ms) >= params.threshold {
+            continue;
+        }
+        for s in 0..g {
+            let step = 16.0 + (hi - lo * 0.5).max(16.0) * s as f64 / (g - 1) as f64;
+            let cost = objective(init, step, history, params.cost_factor);
+            if cost < best.cost {
+                best = Sizing { init_mb: init, step_mb: step, cost };
+            }
+        }
+    }
+    if best.cost == f64::MAX {
+        // Waste bound unsatisfiable (e.g. huge variance): fall back to
+        // covering the minimum and growing — the least-waste choice.
+        let step = ((hi - lo) / 4.0).max(16.0);
+        best = Sizing {
+            init_mb: lo,
+            step_mb: step,
+            cost: objective(lo, step, history, params.cost_factor),
+        };
+    }
+    best
+}
+
+/// Solve a whole candidate set (one entry per component). This is the
+/// batched call the appendix benchmarks (10 000 candidates × 32
+/// components in 10-15 ms).
+pub fn solve_batch(histories: &[Vec<f64>], params: AdjustParams) -> Vec<Sizing> {
+    histories.iter().map(|h| solve(h, None, params)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_history_converges_to_peak() {
+        // identical invocations: best init covers them, zero growths
+        let history = vec![400.0; 50];
+        let s = solve(&history, None, AdjustParams::default());
+        assert!(s.init_mb >= 400.0 * 0.99, "{s:?}");
+        assert!((s.cost - s.init_mb).abs() < 1.0, "no growth cost expected");
+    }
+
+    #[test]
+    fn small_usage_gets_small_init() {
+        let history = vec![64.0, 70.0, 60.0, 66.0, 68.0];
+        let s = solve(&history, None, AdjustParams::default());
+        assert!(s.init_mb <= 80.0, "{s:?}");
+    }
+
+    #[test]
+    fn varying_history_balances_init_and_growth() {
+        // bimodal: many small, few huge — init should NOT provision peak
+        let mut history = vec![100.0; 90];
+        history.extend(vec![4000.0; 10]);
+        let s = solve(&history, None, AdjustParams::default());
+        assert!(s.init_mb < 2000.0, "peak-provisioning wastes: {s:?}");
+        assert!(s.step_mb >= 16.0);
+        // coverage always holds by construction
+        for &h in &history {
+            assert!(s.init_mb + growths(s.init_mb, s.step_mb, h) * s.step_mb >= h - 1e-9);
+        }
+    }
+
+    #[test]
+    fn optimum_beats_naive_choices() {
+        let mut history = vec![150.0; 70];
+        history.extend(vec![1200.0; 30]);
+        let p = AdjustParams::default();
+        let s = solve(&history, None, p);
+        let naive_peak = objective(1200.0, 64.0, &history, p.cost_factor);
+        let naive_min = objective(150.0, 64.0, &history, p.cost_factor);
+        assert!(s.cost <= naive_peak + 1e-9);
+        assert!(s.cost <= naive_min + 1e-9);
+    }
+
+    #[test]
+    fn growths_formula() {
+        assert_eq!(growths(100.0, 50.0, 80.0), 0.0);
+        assert_eq!(growths(100.0, 50.0, 100.0), 0.0);
+        assert_eq!(growths(100.0, 50.0, 101.0), 1.0);
+        assert_eq!(growths(100.0, 50.0, 250.0), 3.0);
+    }
+
+    #[test]
+    fn waste_constraint_excludes_fat_inits() {
+        // mostly tiny invocations: provisioning the rare peak violates
+        // the waste bound, so init stays small.
+        let mut history = vec![32.0; 95];
+        history.extend(vec![2048.0; 5]);
+        let s = solve(&history, None, AdjustParams { threshold: 0.2, ..Default::default() });
+        assert!(s.init_mb < 512.0, "{s:?}");
+    }
+
+    #[test]
+    fn exec_time_weighting_matters() {
+        // over-allocation on long-running invocations is worse
+        let history = vec![100.0, 1000.0];
+        let long_small = vec![100.0, 1.0]; // the small invocation runs long
+        let s1 = solve(&history, Some(&long_small), AdjustParams::default());
+        let s2 = solve(&history, None, AdjustParams::default());
+        assert!(s1.init_mb <= s2.init_mb + 1e-9);
+    }
+
+    #[test]
+    fn batch_solves_all() {
+        let histories: Vec<Vec<f64>> = (0..32)
+            .map(|i| (0..20).map(|j| 100.0 + (i * j) as f64).collect())
+            .collect();
+        let out = solve_batch(&histories, AdjustParams::default());
+        assert_eq!(out.len(), 32);
+        assert!(out.iter().all(|s| s.init_mb > 0.0 && s.step_mb >= 16.0));
+    }
+}

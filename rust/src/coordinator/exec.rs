@@ -1,0 +1,948 @@
+//! Adaptive execution engine (§5.1-5.2): the Zenix [`Platform`].
+//!
+//! Executes an application invocation against the cluster substrate:
+//!
+//! 1. the global scheduler routes the invocation to a rack;
+//! 2. the rack scheduler tries to fit the whole app on one server
+//!    (smallest-fit; marks the server's potential demand at low
+//!    priority);
+//! 3. compute components execute wave-by-wave (resource-graph topology):
+//!    sized from history (or the §9.3 solver / fixed sizes for the
+//!    ablations), placed by locality, materialized into the anchor
+//!    container when possible, auto-scaled when actual demand exceeds
+//!    the initial allocation (growths may land remote → swap slowdown);
+//! 4. data components launch with their first accessor, grow
+//!    local-first, and die with their last accessor;
+//! 5. component results go through the reliable message log, enabling
+//!    graph-cut recovery ([`super::failure`]).
+//!
+//! All latency constants flow from [`StartupModel`], [`NetModel`] and
+//! [`ControlPlane`] — the paper-calibrated models (DESIGN.md §1).
+
+use std::collections::HashMap;
+
+use crate::apps::Invocation;
+use crate::cluster::clock::Millis;
+use crate::cluster::server::Consumption;
+use crate::cluster::{Cluster, ClusterSpec, Resources, ServerId, StartupModel};
+use crate::memory::MemoryController;
+use crate::metrics::{Breakdown, RunReport};
+use crate::net::{ControlPath, ControlPlane, NetKind, NetModel};
+
+use super::adjust::{self, AdjustParams};
+use super::failure::{self, Crash};
+use super::graph::ResourceGraph;
+use super::history::{Metric, ProfileStore};
+use super::msglog::{LogEntry, MessageLog};
+use super::scheduler::{Allocation, GlobalScheduler, RackScheduler};
+
+/// Feature switches — the paper's ablation axes (Figs 10/14/22).
+#[derive(Debug, Clone, Copy)]
+pub struct ZenixConfig {
+    /// §5.1 adaptive scheduling/execution: co-location + materialization.
+    pub adaptive: bool,
+    /// §5.2.1-2 proactive: pre-warm, pre-launch, async connection setup.
+    pub proactive: bool,
+    /// §5.2.3 history-based init/step sizing (else fixed sizes below).
+    pub history_sizing: bool,
+    /// RDMA vs TCP stacks.
+    pub rdma: bool,
+    /// Fixed sizing fallback (the paper's 256 MB / 64 MB defaults).
+    pub fixed_init_mb: f64,
+    pub fixed_step_mb: f64,
+    /// Provision every component at its historical peak (Fig 22 "peak").
+    pub peak_provision: bool,
+    /// Force all data components remote (Fig 18/21 "disaggregation").
+    pub force_remote_data: bool,
+    /// CPU utilization Zenix sustains on allocated vCPUs (§6.1.1: 91.2%).
+    pub cpu_efficiency: f64,
+}
+
+impl Default for ZenixConfig {
+    fn default() -> Self {
+        Self {
+            adaptive: true,
+            proactive: true,
+            history_sizing: true,
+            rdma: true,
+            fixed_init_mb: 256.0,
+            fixed_step_mb: 64.0,
+            peak_provision: false,
+            force_remote_data: false,
+            cpu_efficiency: 0.912,
+        }
+    }
+}
+
+impl ZenixConfig {
+    /// Ablation step 1 (Fig 10): static resource graph only — separate
+    /// environments, no adaptive/proactive/history machinery.
+    pub fn static_graph() -> Self {
+        Self {
+            adaptive: false,
+            proactive: false,
+            history_sizing: false,
+            ..Self::default()
+        }
+    }
+
+    /// Ablation step 2: + adaptive scheduling/execution.
+    pub fn adaptive_only() -> Self {
+        Self { proactive: false, history_sizing: false, ..Self::default() }
+    }
+
+    fn net_kind(&self) -> NetKind {
+        if self.rdma {
+            NetKind::Rdma
+        } else {
+            NetKind::Tcp
+        }
+    }
+
+    fn control_path(&self) -> ControlPath {
+        if self.proactive {
+            ControlPath::NetVirtAsync
+        } else {
+            ControlPath::NetVirt
+        }
+    }
+}
+
+/// The Zenix platform instance.
+pub struct Platform {
+    pub cluster: Cluster,
+    pub config: ZenixConfig,
+    pub history: ProfileStore,
+    pub startup: StartupModel,
+    pub net: NetModel,
+    pub control: ControlPlane,
+    pub global: GlobalScheduler,
+    racks: Vec<RackScheduler>,
+    pub msglog: MessageLog,
+    now: Millis,
+    next_invocation: u64,
+    /// Apps with a kept-warm environment (§5.2.1 pre-warming of the
+    /// first component based on invocation history).
+    warm_pool: std::collections::HashSet<String>,
+    /// Static resource-graph profile (§4.2): the per-node size captured
+    /// by the offline sampling run (first observation). The non-history
+    /// configurations size components with this fixed estimate — the
+    /// function-model limitation the history mechanism removes.
+    static_profile: HashMap<(String, usize), f64>,
+    /// Cached §9.3 solver output per node, re-tuned every
+    /// [`RETUNE_EVERY`] executions (§5.2.3: "re-adjusts these two sizes
+    /// periodically after K executions"). Stores (init, step, solved-at).
+    sizing_cache: std::cell::RefCell<HashMap<(String, usize), (f64, f64, usize)>>,
+}
+
+/// Re-tune period K for the init/step solver (§5.2.3; the paper uses
+/// ~1000 — we re-tune more eagerly since test runs are short).
+pub const RETUNE_EVERY: usize = 16;
+
+impl Platform {
+    pub fn new(spec: ClusterSpec, config: ZenixConfig) -> Self {
+        let cluster = Cluster::new(spec);
+        let racks = cluster
+            .racks()
+            .map(|r| RackScheduler::new(&cluster, r))
+            .collect();
+        let mut global = GlobalScheduler::new(spec.racks);
+        let tmp = &cluster;
+        for r in tmp.racks() {
+            global.update_rack(r, tmp.rack_available(r));
+        }
+        Self {
+            cluster,
+            config,
+            history: ProfileStore::new(),
+            startup: StartupModel::default(),
+            net: NetModel::default(),
+            control: ControlPlane::default(),
+            global,
+            racks,
+            msglog: MessageLog::new(),
+            now: 0.0,
+            next_invocation: 0,
+            warm_pool: std::collections::HashSet::new(),
+            static_profile: HashMap::new(),
+            sizing_cache: std::cell::RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Paper-testbed platform with default config.
+    pub fn testbed() -> Self {
+        Self::new(ClusterSpec::paper_testbed(), ZenixConfig::default())
+    }
+
+    pub fn now(&self) -> Millis {
+        self.now
+    }
+
+    /// Execute one invocation; returns the run report.
+    pub fn invoke(&mut self, graph: &ResourceGraph, inv: Invocation) -> crate::Result<RunReport> {
+        self.invoke_inner(graph, inv, None)
+    }
+
+    /// Execute with a crash injected before the given wave completes;
+    /// recovery re-executes from the latest durable graph cut (§5.3.2).
+    pub fn invoke_with_crash(
+        &mut self,
+        graph: &ResourceGraph,
+        inv: Invocation,
+        crash: Crash,
+        at_wave: usize,
+    ) -> crate::Result<RunReport> {
+        self.invoke_inner(graph, inv, Some((crash, at_wave)))
+    }
+
+    fn invoke_inner(
+        &mut self,
+        graph: &ResourceGraph,
+        inv: Invocation,
+        crash: Option<(Crash, usize)>,
+    ) -> crate::Result<RunReport> {
+        let scale = inv.input_scale;
+        let program = &graph.program;
+        let inv_id = self.next_invocation;
+        self.next_invocation += 1;
+        let t0 = self.now;
+        let consumed_before = self.cluster.total_consumption(t0);
+        let mut breakdown = Breakdown::default();
+
+        // ---- global scheduling: route to a rack -------------------------
+        let estimate = program.peak_estimate(scale);
+        for r in self.cluster.racks() {
+            let avail = self.cluster.rack_available(r);
+            self.global.update_rack(r, avail);
+        }
+        let rack_id = self.global.route(estimate);
+        breakdown.sched_ms += 2.0 * self.control.sched_msg_ms; // request + dispatch
+        let rack = &self.racks[rack_id.0];
+
+        // ---- whole-app anchor (smallest fit) + low-priority mark --------
+        let anchor = if self.config.adaptive {
+            rack.whole_app_fit(&self.cluster, estimate)
+        } else {
+            None
+        };
+        if let Some(a) = anchor {
+            self.cluster.server_mut(a).mark(estimate);
+        }
+
+        // ---- wave-by-wave execution -------------------------------------
+        let mut mem = MemoryController::new();
+        let mut data_home: HashMap<usize, ServerId> = HashMap::new();
+        let mut comp_server: HashMap<usize, ServerId> = HashMap::new();
+        let merge_pairs = if self.config.adaptive {
+            graph.merge_candidates(scale, 1.6)
+        } else {
+            Vec::new()
+        };
+        let mut colocated_components = 0usize;
+        let mut total_components = 0usize;
+        let mut peak_cpu = 0.0f64;
+        let mut peak_mem = 0.0f64;
+        let mut wave_end = t0;
+        let mut prev_wave_dur = 0.0f64;
+        let mut executed: Vec<usize> = Vec::new();
+        let mut crash_state = crash;
+
+        let waves = graph.waves();
+        let mut wave_idx = 0;
+        while wave_idx < waves.len() {
+            let wave = &waves[wave_idx];
+            let wave_start = wave_end;
+            let mut wave_dur = 0.0f64;
+            let mut wave_cpu = 0.0f64;
+            let mut wave_mem = 0.0f64;
+            // deferred (time, server, event) timeline, applied sorted
+            let mut wave_events: Vec<(Millis, ServerId, TimelineEv)> = Vec::new();
+
+            for &c in wave {
+                let spec = &program.computes[c];
+                total_components += 1;
+
+                // -- sizing ---------------------------------------------
+                let workers = spec
+                    .parallelism_at(scale)
+                    .min(program.app_limit.cpu.max(1.0) as usize)
+                    .max(1);
+                let need_mb_worker = spec.mem_at(scale);
+                let need_mb = need_mb_worker * workers as f64;
+                let (init_mb, step_mb) = self.sizing(program.name, c, need_mb);
+                let vcpus = self.cpu_sizing(program.name, c, workers);
+                // first observation becomes the static profile estimate
+                self.static_profile
+                    .entry((program.name.to_string(), c))
+                    .or_insert(need_mb);
+
+                // -- placement ------------------------------------------
+                let data_servers: Vec<ServerId> = spec
+                    .accesses
+                    .iter()
+                    .filter_map(|d| data_home.get(d).copied())
+                    .collect();
+                let demand = Resources::new(vcpus as f64, init_mb);
+                let (server, colocated, granted) =
+                    self.place(rack_id, anchor, demand, &data_servers, wave_start);
+                comp_server.insert(c, server);
+                // run on what was actually granted (degraded when the
+                // cluster is saturated)
+                let vcpus_granted = granted.cpu.max(0.25);
+                let init_mb = granted.mem_mb;
+
+                // -- data components launched by first accessor ----------
+                let mut remote_frac = 0.0f64;
+                let mut n_accessed = 0usize;
+                for &d in &spec.accesses {
+                    let dspec = &program.data[d];
+                    let dsize = dspec.size_at(scale);
+                    if mem.get(d as u64).is_none() {
+                        let prefer = if self.config.force_remote_data {
+                            // disaggregation mode: data lives away from compute
+                            self.other_server(rack_id, server)
+                        } else {
+                            server
+                        };
+                        let target = self.pick_data_server(rack_id, prefer, dsize);
+                        if mem
+                            .launch(&mut self.cluster, d as u64, target, dsize, wave_start)
+                            .is_err()
+                        {
+                            // overloaded cluster: take what fits and leave
+                            // the rest to swap space (§5.1.2)
+                            let avail =
+                                (self.cluster.server(target).available().mem_mb * 0.9).max(1.0);
+                            mem.launch(
+                                &mut self.cluster,
+                                d as u64,
+                                target,
+                                avail.min(dsize),
+                                wave_start,
+                            )?;
+                        }
+                        data_home.insert(d, target);
+                    } else {
+                        // growth if this invocation needs more
+                        let cur = mem.get(d as u64).unwrap().total_mb();
+                        if dsize > cur {
+                            let accessors: Vec<ServerId> = graph
+                                .accessors_of(d)
+                                .iter()
+                                .filter_map(|a| comp_server.get(a).copied())
+                                .collect();
+                            let grow_to = super::placement::place_growth(
+                                &self.cluster,
+                                Resources::mem_only(dsize - cur),
+                                data_home[&d],
+                                &accessors,
+                            );
+                            if let Some(s) = grow_to {
+                                let _ = mem.grow(&mut self.cluster, d as u64, dsize - cur, &[s], wave_start);
+                            }
+                        }
+                    }
+                    mem.attach(d as u64, c as u64)?;
+                    if let Some(state) = mem.get(d as u64) {
+                        remote_frac += state.remote_fraction(server);
+                        n_accessed += 1;
+                    }
+                }
+                if n_accessed > 0 {
+                    remote_frac /= n_accessed as f64;
+                }
+                if self.config.force_remote_data {
+                    remote_frac = 1.0;
+                }
+
+                // -- startup --------------------------------------------
+                let merged = merge_pairs.iter().any(|&(_, b)| b == c)
+                    && anchor.map_or(false, |a| a == server);
+                let app_warm = self.warm_pool.contains(program.name);
+                let startup_ms = self.startup_cost(
+                    wave_idx,
+                    merged,
+                    colocated && self.config.adaptive,
+                    prev_wave_dur,
+                    app_warm,
+                );
+                breakdown.startup_ms += startup_ms;
+
+                // -- connection setup for remote data --------------------
+                let mut conn_ms = 0.0;
+                let kind = self.config.net_kind();
+                let path = self.config.control_path();
+                let mut seen: Vec<ServerId> = Vec::new();
+                for &d in &spec.accesses {
+                    for s in mem.region_servers(d as u64) {
+                        if s != server {
+                            let reuse = seen.contains(&s);
+                            conn_ms += self.control.conn_setup(path, kind, reuse);
+                            seen.push(s);
+                        }
+                    }
+                }
+                breakdown.sched_ms += conn_ms;
+
+                // -- compute duration ------------------------------------
+                // Historical-utilization CPU trimming (§5.1.2: 50% util
+                // on 10 vCPUs → 5 vCPUs next time) removes *idle* CPU:
+                // effective throughput is the smaller of the allocation
+                // and the workers' useful parallelism.
+                let work = spec.work_at(scale);
+                let eff = self.config.cpu_efficiency.max(0.05);
+                let throughput = vcpus_granted.min(workers as f64 * eff).max(0.05);
+                let compute_ms = work / throughput;
+                let slowdown = self
+                    .net
+                    .remote_slowdown(kind, remote_frac * spec.access_intensity);
+                let mut stage_ms = compute_ms * slowdown;
+                breakdown.compute_ms += compute_ms;
+                breakdown.io_ms += compute_ms * (slowdown - 1.0);
+
+                // -- memory autoscaling ----------------------------------
+                let mut alloc_now = init_mb;
+                if need_mb > init_mb {
+                    let growths = adjust::growths(init_mb, step_mb, need_mb);
+                    // each growth: scheduler round-trip + brief stall
+                    let growth_overhead = growths * (2.0 * self.control.sched_msg_ms + 2.0);
+                    stage_ms += growth_overhead;
+                    breakdown.sched_ms += growth_overhead;
+                    // growth lands local if it fits, else swap-remote
+                    let extra = need_mb - init_mb;
+                    let fits_local = self
+                        .cluster
+                        .server(server)
+                        .available()
+                        .fits(Resources::mem_only(extra));
+                    if !fits_local {
+                        // remote swap space for the overflow (§5.1.2)
+                        let swap_pen = self
+                            .net
+                            .remote_slowdown(kind, (extra / need_mb).min(1.0))
+                            - 1.0;
+                        stage_ms += compute_ms * swap_pen * 0.5;
+                        breakdown.io_ms += compute_ms * swap_pen * 0.5;
+                    }
+                    alloc_now = need_mb.min(alloc_now + growths * step_mb);
+                }
+
+                // -- commit allocation timeline --------------------------
+                // Allocations happened at wave_start (placement); the
+                // growth and free events are deferred and applied in
+                // time order after the wave loop — same-server events
+                // from concurrently-running components must reach the
+                // integrator monotonically or consumption double-counts.
+                let end = wave_start + startup_ms + stage_ms;
+                wave_dur = wave_dur.max(startup_ms + stage_ms);
+                let srv = self.cluster.server_mut(server);
+                let used_cpu = throughput.min(vcpus_granted);
+                srv.add_used(Resources::new(used_cpu, init_mb.min(need_mb)), wave_start);
+                let mid = wave_start + (startup_ms + stage_ms) / 2.0;
+                if alloc_now > init_mb {
+                    wave_events.push((
+                        mid,
+                        server,
+                        TimelineEv::Grow {
+                            comp: c,
+                            extra_mb: alloc_now - init_mb,
+                            used_mb: (need_mb - init_mb).max(0.0),
+                        },
+                    ));
+                }
+                wave_events.push((
+                    end,
+                    server,
+                    TimelineEv::Finish {
+                        comp: c,
+                        base_alloc: granted,
+                        used: Resources::new(used_cpu, need_mb.min(alloc_now.max(init_mb))),
+                    },
+                ));
+
+                wave_cpu += vcpus_granted;
+                wave_mem += alloc_now.max(init_mb) + graph
+                    .accessed_data(c)
+                    .iter()
+                    .map(|&d| program.data[d].size_at(scale))
+                    .sum::<f64>();
+                if colocated || data_servers.is_empty() || data_servers.contains(&server) {
+                    colocated_components += 1;
+                }
+
+                // -- reliable result message -----------------------------
+                self.msglog.append(LogEntry {
+                    invocation: inv_id,
+                    compute: c,
+                    result_mb: need_mb_worker * 0.1,
+                });
+                self.msglog.flush();
+                executed.push(c);
+
+                // -- record history --------------------------------------
+                self.history.record(program.name, c, Metric::MemMb, need_mb);
+                self.history.record(program.name, c, Metric::Cpu, workers as f64);
+                self.history
+                    .record(program.name, c, Metric::CpuUtil, eff);
+                self.history
+                    .record(program.name, c, Metric::LifetimeMs, stage_ms);
+            }
+
+            // -- apply deferred timeline events in time order ------------
+            wave_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut grown: HashMap<usize, f64> = HashMap::new();
+            for (at, server, ev) in wave_events {
+                match ev {
+                    TimelineEv::Grow { comp, extra_mb, used_mb } => {
+                        let srv = self.cluster.server_mut(server);
+                        if srv.try_alloc(Resources::mem_only(extra_mb), at) {
+                            srv.add_used(Resources::mem_only(used_mb), at);
+                            grown.insert(comp, extra_mb);
+                        }
+                    }
+                    TimelineEv::Finish { comp, base_alloc, used } => {
+                        let extra = grown.remove(&comp).unwrap_or(0.0);
+                        let srv = self.cluster.server_mut(server);
+                        srv.sub_used(used, at);
+                        srv.free(base_alloc.plus(Resources::mem_only(extra)), at);
+                    }
+                }
+            }
+
+            // -- data lifetime: release components whose last accessor ran
+            for d in 0..graph.n_data() {
+                if let Some((_, last)) = graph.data_lifetime(d) {
+                    if last == wave_idx && mem.get(d as u64).is_some() {
+                        let _ = mem.release(&mut self.cluster, d as u64, wave_end + wave_dur);
+                        data_home.remove(&d);
+                    }
+                }
+            }
+
+            peak_cpu = peak_cpu.max(wave_cpu);
+            peak_mem = peak_mem.max(wave_mem);
+            wave_end = wave_start + wave_dur;
+            prev_wave_dur = wave_dur;
+
+            // -- crash injection + recovery ------------------------------
+            if let Some((cr, at)) = crash_state {
+                if wave_idx == at {
+                    crash_state = None;
+                    let plan = failure::plan(graph, &self.msglog, inv_id, cr);
+                    // discard data components named by the plan
+                    for &d in &plan.discard_data {
+                        if mem.get(d as u64).is_some() {
+                            let _ = mem.release(&mut self.cluster, d as u64, wave_end);
+                            data_home.remove(&d);
+                        }
+                    }
+                    // re-execution: rewind to the earliest dirty wave; the
+                    // per-component loop will recreate data/allocations.
+                    if let Some(&first) = plan.reexecute.first() {
+                        let redo_wave = graph.wave[first];
+                        breakdown.sched_ms += 5.0; // recovery decision
+                        wave_idx = redo_wave;
+                        continue;
+                    }
+                }
+            }
+            wave_idx += 1;
+        }
+
+        // release any data still live (defensive; lifetimes should cover)
+        for d in 0..graph.n_data() {
+            if mem.get(d as u64).is_some() {
+                let _ = mem.release(&mut self.cluster, d as u64, wave_end);
+            }
+        }
+        if let Some(a) = anchor {
+            self.cluster.server_mut(a).unmark(estimate);
+        }
+
+        self.warm_pool.insert(program.name.to_string());
+        self.now = wave_end + 1.0;
+        let consumed_after = self.cluster.total_consumption(self.now);
+        let consumption = sub_consumption(consumed_after, consumed_before);
+
+        Ok(RunReport {
+            system: "zenix".into(),
+            workload: program.name.into(),
+            exec_ms: wave_end - t0,
+            breakdown,
+            consumption,
+            local_fraction: if total_components == 0 {
+                1.0
+            } else {
+                colocated_components as f64 / total_components as f64
+            },
+            peak_cpu,
+            peak_mem_mb: peak_mem,
+        })
+    }
+
+    // ---- helpers --------------------------------------------------------
+
+    /// Initial + incremental sizing for one compute component.
+    fn sizing(&self, app: &str, node: usize, need_mb: f64) -> (f64, f64) {
+        if self.config.peak_provision {
+            let peak = self
+                .history
+                .profile(app, node, Metric::MemMb)
+                .and_then(|p| p.max())
+                .unwrap_or(need_mb);
+            return (peak.max(need_mb), self.config.fixed_step_mb);
+        }
+        if self.config.history_sizing {
+            if let Some(p) = self.history.profile(app, node, Metric::MemMb) {
+                if p.len() >= 3 {
+                    // periodic re-tune (§5.2.3): solve once, reuse for K
+                    // executions — the solver is off the per-invocation
+                    // hot path (EXPERIMENTS.md §Perf).
+                    let key = (app.to_string(), node);
+                    let mut cache = self.sizing_cache.borrow_mut();
+                    if let Some(&(init, step, at)) = cache.get(&key) {
+                        if p.len() < at + RETUNE_EVERY {
+                            return (init, step);
+                        }
+                    }
+                    let s = adjust::solve(&p.values(), None, AdjustParams::default());
+                    cache.insert(key, (s.init_mb, s.step_mb, p.len()));
+                    return (s.init_mb, s.step_mb);
+                }
+            }
+            // First invocations: the offline sampling profile gives the
+            // static resource-graph estimate (§4.2) — start at the
+            // graph's own estimate.
+            return (need_mb, self.config.fixed_step_mb);
+        }
+        // Non-history configurations: the static profile estimate, fixed
+        // across invocations (grown at runtime when exceeded).
+        let static_init = self
+            .static_profile
+            .get(&(app.to_string(), node))
+            .copied()
+            .unwrap_or(need_mb);
+        (static_init, self.config.fixed_step_mb)
+    }
+
+    /// CPU sizing: workers shaped by historical utilization (§5.1.2:
+    /// 50% util on 10 vCPUs → 5 vCPUs next time).
+    fn cpu_sizing(&self, app: &str, node: usize, workers: usize) -> usize {
+        if !self.config.history_sizing {
+            return workers;
+        }
+        let util = self
+            .history
+            .profile(app, node, Metric::CpuUtil)
+            .and_then(|p| p.mean())
+            .unwrap_or(1.0);
+        ((workers as f64 * util).ceil() as usize).max(1)
+    }
+
+    /// Place a component; returns (server, colocated, granted). The
+    /// granted resources are what was *actually* allocated — under
+    /// cluster pressure the demand is halved until it fits (resource-cap
+    /// behaviour), and the component runs degraded on the grant.
+    fn place(
+        &mut self,
+        rack: crate::cluster::RackId,
+        anchor: Option<ServerId>,
+        demand: Resources,
+        data_servers: &[ServerId],
+        now: Millis,
+    ) -> (ServerId, bool, Resources) {
+        // anchor continuation: same container, resized (§5.1.1)
+        if let Some(a) = anchor {
+            if self.config.adaptive && self.cluster.server(a).available().fits(demand) {
+                let ok = self.cluster.server_mut(a).try_alloc(demand, now);
+                debug_assert!(ok);
+                return (a, true, demand);
+            }
+        }
+        match self.racks[rack.0].allocate(&mut self.cluster, demand, data_servers, now) {
+            Allocation::Placed { server, colocated } => (server, colocated, demand),
+            Allocation::Spill => {
+                // §5.3.1: bounce to global for another rack; single-rack
+                // clusters degrade to the least-loaded server with a
+                // halved demand (resource cap behaviour).
+                let mut d = demand;
+                loop {
+                    d = Resources::new((d.cpu / 2.0).max(1.0), d.mem_mb / 2.0);
+                    if let Some(id) = super::placement::smallest_fit(&self.cluster, d) {
+                        let ok = self.cluster.server_mut(id).try_alloc(d, now);
+                        debug_assert!(ok);
+                        return (id, false, d);
+                    }
+                    if d.cpu <= 1.0 && d.mem_mb < 64.0 {
+                        // take the emptiest server and grab what fits
+                        let id = self
+                            .cluster
+                            .servers()
+                            .iter()
+                            .max_by(|a, b| {
+                                a.available()
+                                    .magnitude()
+                                    .partial_cmp(&b.available().magnitude())
+                                    .unwrap()
+                            })
+                            .map(|s| s.id)
+                            .unwrap();
+                        let avail = self.cluster.server(id).available();
+                        let grant = Resources::new(
+                            avail.cpu.min(d.cpu).max(0.0),
+                            (avail.mem_mb * 0.5).min(d.mem_mb).max(0.0),
+                        );
+                        let ok = self.cluster.server_mut(id).try_alloc(grant, now);
+                        debug_assert!(ok);
+                        return (id, false, grant);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pick the server for a new data component: the accessor's server
+    /// when it fits (co-location, §5.1.1), else smallest fit in-rack,
+    /// else anywhere, else the emptiest server (overload).
+    fn pick_data_server(
+        &self,
+        rack: crate::cluster::RackId,
+        prefer: ServerId,
+        mb: f64,
+    ) -> ServerId {
+        let mem_demand = Resources::mem_only(mb);
+        if !self.config.force_remote_data
+            && self.cluster.server(prefer).available().fits(mem_demand)
+        {
+            return prefer;
+        }
+        let in_rack: Vec<ServerId> = self.racks[rack.0]
+            .servers()
+            .iter()
+            .copied()
+            .filter(|&s| !self.config.force_remote_data || s != prefer)
+            .collect();
+        super::placement::smallest_fit_among(
+            &self.cluster,
+            mem_demand,
+            &mut in_rack.iter().copied(),
+        )
+        .or_else(|| super::placement::smallest_fit(&self.cluster, mem_demand))
+        .unwrap_or_else(|| {
+            self.cluster
+                .servers()
+                .iter()
+                .max_by(|a, b| {
+                    a.available()
+                        .mem_mb
+                        .partial_cmp(&b.available().mem_mb)
+                        .unwrap()
+                })
+                .map(|s| s.id)
+                .unwrap_or(prefer)
+        })
+    }
+
+    fn other_server(&self, rack: crate::cluster::RackId, not: ServerId) -> ServerId {
+        self.racks[rack.0]
+            .servers()
+            .iter()
+            .copied()
+            .find(|&s| s != not)
+            .unwrap_or(not)
+    }
+
+    fn startup_cost(
+        &self,
+        wave_idx: usize,
+        merged: bool,
+        continued: bool,
+        prev_wave_ms: Millis,
+        app_warm: bool,
+    ) -> Millis {
+        use crate::cluster::startup::StartupPath;
+        if wave_idx == 0 {
+            // First environment of the invocation: warm-pool hit for
+            // frequently-invoked apps, else pre-warmed/cold container.
+            return if self.config.proactive && app_warm {
+                self.startup.warm(StartupPath::Zenix)
+            } else if self.config.proactive {
+                self.startup.cold(StartupPath::ZenixPrewarmed)
+            } else {
+                self.startup.cold(StartupPath::Zenix)
+            };
+        }
+        if merged || continued {
+            // same container, resized: negligible (cgroup update)
+            1.0
+        } else if self.config.proactive {
+            // pre-launched during the previous wave (§5.2.1)
+            (self.startup.cold(StartupPath::Zenix) - prev_wave_ms).max(0.0)
+        } else {
+            self.startup.cold(StartupPath::Zenix)
+        }
+    }
+}
+
+/// Deferred per-component allocation timeline event (applied in time
+/// order so per-server consumption integrals stay monotonic).
+#[derive(Debug, Clone, Copy)]
+enum TimelineEv {
+    /// Mid-stage memory growth (autoscaling).
+    Grow { comp: usize, extra_mb: f64, used_mb: f64 },
+    /// Component completion: release allocation, drop used.
+    Finish { comp: usize, base_alloc: Resources, used: Resources },
+}
+
+/// Consumption difference (after - before), saturating at zero.
+pub fn sub_consumption(after: Consumption, before: Consumption) -> Consumption {
+    Consumption {
+        alloc_cpu_s: (after.alloc_cpu_s - before.alloc_cpu_s).max(0.0),
+        alloc_mem_mb_s: (after.alloc_mem_mb_s - before.alloc_mem_mb_s).max(0.0),
+        used_cpu_s: (after.used_cpu_s - before.used_cpu_s).max(0.0),
+        used_mem_mb_s: (after.used_mem_mb_s - before.used_mem_mb_s).max(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lr, tpcds, video, Invocation};
+    use crate::coordinator::graph::ResourceGraph;
+
+    fn run(config: ZenixConfig, graph: &ResourceGraph, scale: f64) -> RunReport {
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), config);
+        p.invoke(graph, Invocation::new(scale)).unwrap()
+    }
+
+    /// Warm the history with a few invocations, then measure.
+    fn run_warm(config: ZenixConfig, graph: &ResourceGraph, scale: f64) -> RunReport {
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), config);
+        for _ in 0..4 {
+            p.invoke(graph, Invocation::new(scale)).unwrap();
+        }
+        p.invoke(graph, Invocation::new(scale)).unwrap()
+    }
+
+    #[test]
+    fn lr_runs_and_accounts() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let r = run(ZenixConfig::default(), &g, 1.0);
+        assert!(r.exec_ms > 0.0);
+        assert!(r.consumption.alloc_mem_mb_s > 0.0);
+        assert!(r.consumption.used_mem_mb_s <= r.consumption.alloc_mem_mb_s + 1e-6);
+        assert!(r.local_fraction > 0.5, "LR fits one server: {}", r.local_fraction);
+        assert!(r.peak_cpu > 0.0 && r.peak_mem_mb > 0.0);
+    }
+
+    #[test]
+    fn cluster_resources_restored_after_invocation() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::testbed();
+        p.invoke(&g, Invocation::new(1.0)).unwrap();
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO, "leak on {:?}", s.id);
+            assert_eq!(s.marked(), Resources::ZERO);
+        }
+    }
+
+    #[test]
+    fn adaptive_beats_static_graph() {
+        let g = ResourceGraph::from_program(&tpcds::query(16)).unwrap();
+        let stat = run_warm(ZenixConfig::static_graph(), &g, 0.2);
+        let adap = run_warm(ZenixConfig::adaptive_only(), &g, 0.2);
+        assert!(
+            adap.exec_ms < stat.exec_ms,
+            "adaptive {} vs static {}",
+            adap.exec_ms,
+            stat.exec_ms
+        );
+        assert!(adap.local_fraction >= stat.local_fraction);
+    }
+
+    #[test]
+    fn proactive_reduces_startup() {
+        let g = ResourceGraph::from_program(&video::pipeline()).unwrap();
+        let no = run_warm(ZenixConfig::adaptive_only(), &g, 1.0);
+        let yes = run_warm(ZenixConfig { history_sizing: false, ..ZenixConfig::default() }, &g, 1.0);
+        assert!(
+            yes.breakdown.startup_ms < no.breakdown.startup_ms,
+            "proactive {} vs {}",
+            yes.breakdown.startup_ms,
+            no.breakdown.startup_ms
+        );
+    }
+
+    #[test]
+    fn history_sizing_cuts_allocation_vs_fixed() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        // fixed 256/64 under-provisions the 2.4 GB train stage (lots of
+        // growths); history converges to right-sizing.
+        let fixed = run_warm(
+            ZenixConfig { history_sizing: false, ..ZenixConfig::default() },
+            &g,
+            1.0,
+        );
+        let hist = run_warm(ZenixConfig::default(), &g, 1.0);
+        assert!(
+            hist.exec_ms <= fixed.exec_ms * 1.05,
+            "history {} vs fixed {}",
+            hist.exec_ms,
+            fixed.exec_ms
+        );
+    }
+
+    #[test]
+    fn rdma_faster_than_tcp_when_remote() {
+        let g = ResourceGraph::from_program(&tpcds::query(95)).unwrap();
+        let scale = 1.0; // big enough to spread across servers
+        let rdma = run_warm(
+            ZenixConfig { force_remote_data: true, ..ZenixConfig::default() },
+            &g,
+            scale,
+        );
+        let tcp = run_warm(
+            ZenixConfig { force_remote_data: true, rdma: false, ..ZenixConfig::default() },
+            &g,
+            scale,
+        );
+        assert!(rdma.exec_ms < tcp.exec_ms);
+    }
+
+    #[test]
+    fn forced_remote_slower_than_local() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let local = run_warm(ZenixConfig::default(), &g, 1.0);
+        let remote = run_warm(
+            ZenixConfig { force_remote_data: true, ..ZenixConfig::default() },
+            &g,
+            1.0,
+        );
+        assert!(remote.exec_ms > local.exec_ms);
+        assert!(remote.breakdown.io_ms > local.breakdown.io_ms);
+    }
+
+    #[test]
+    fn crash_recovery_reexecutes_and_costs_time() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::testbed();
+        let clean = p.invoke(&g, Invocation::new(1.0)).unwrap();
+        let crashed = p
+            .invoke_with_crash(&g, Invocation::new(1.0), Crash::Compute(2), 2)
+            .unwrap();
+        assert!(crashed.exec_ms > clean.exec_ms, "redo adds time");
+        // no resource leak after recovery
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO);
+        }
+    }
+
+    #[test]
+    fn larger_inputs_cost_more() {
+        let g = ResourceGraph::from_program(&tpcds::query(1)).unwrap();
+        let small = run_warm(ZenixConfig::default(), &g, 0.05);
+        let large = run_warm(ZenixConfig::default(), &g, 1.0);
+        assert!(large.exec_ms > small.exec_ms);
+        assert!(large.consumption.alloc_gb_s() > small.consumption.alloc_gb_s());
+    }
+}

@@ -1,0 +1,206 @@
+//! Failure handling via resource-graph cuts (§5.3.2).
+//!
+//! On a compute crash: discard the crashed component and all data
+//! components it accesses; on a data-region crash: discard all compute
+//! components accessing that data component and the component's sibling
+//! regions. Then find the latest cut of the resource graph where every
+//! crossing edge is durably recorded in the message log, and re-execute
+//! everything past the cut from the logged inputs — *at-least-once*
+//! semantics, without re-running the whole bulky application.
+
+use std::collections::BTreeSet;
+
+use super::graph::ResourceGraph;
+use super::msglog::MessageLog;
+
+/// What crashed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Crash {
+    /// A compute component (by compute index).
+    Compute(usize),
+    /// A memory region of a data component (by data index).
+    DataRegion(usize),
+}
+
+/// The recovery plan: what to discard and what to re-execute.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryPlan {
+    /// Data components whose regions are discarded.
+    pub discard_data: BTreeSet<usize>,
+    /// Compute components to re-execute (in topo order).
+    pub reexecute: Vec<usize>,
+}
+
+/// Build the recovery plan for `crash` of `invocation`.
+///
+/// `log` supplies the durably-completed computes; everything else that
+/// is affected (directly or transitively through trigger edges) must
+/// re-run. A durably-completed compute only re-runs if it accesses
+/// discarded data *and* a discarded-downstream component needs its
+/// output regenerated — with at-least-once semantics we conservatively
+/// re-run any accessor of discarded data whose results are not durable,
+/// plus the full downstream closure of the crash.
+pub fn plan(
+    graph: &ResourceGraph,
+    log: &MessageLog,
+    invocation: u64,
+    crash: Crash,
+) -> RecoveryPlan {
+    let durable: BTreeSet<usize> = log.durable_computes(invocation).into_iter().collect();
+
+    // Seed: crashed computes + discarded data.
+    let mut discard_data: BTreeSet<usize> = BTreeSet::new();
+    let mut dirty: BTreeSet<usize> = BTreeSet::new();
+    match crash {
+        Crash::Compute(c) => {
+            dirty.insert(c);
+            // discard all data the crashed component accesses
+            for d in graph.accessed_data(c) {
+                discard_data.insert(d);
+            }
+        }
+        Crash::DataRegion(d) => {
+            // sibling regions of the same data component go too
+            discard_data.insert(d);
+            for c in graph.accessors_of(d) {
+                dirty.insert(c);
+            }
+        }
+    }
+
+    // Any live accessor of discarded data is dirty (its reads are gone).
+    loop {
+        let before = (dirty.len(), discard_data.len());
+        for &d in discard_data.clone().iter() {
+            for c in graph.accessors_of(d) {
+                // Durable results survive: a completed accessor's output
+                // is in the log, so it need not re-run *unless* it is
+                // downstream of another dirty node (handled below).
+                if !durable.contains(&c) {
+                    dirty.insert(c);
+                }
+            }
+        }
+        // Dirty computes invalidate the data they write/access.
+        for &c in dirty.clone().iter() {
+            for d in graph.accessed_data(c) {
+                discard_data.insert(d);
+            }
+        }
+        // Downstream closure over trigger edges: a dirty node's
+        // successors consume a re-generated output → they re-run
+        // (at-least-once), unless their input edge is durably logged.
+        for &c in dirty.clone().iter() {
+            for s in graph.successors(c) {
+                if !durable.contains(&s) {
+                    dirty.insert(s);
+                }
+            }
+        }
+        if (dirty.len(), discard_data.len()) == before {
+            break;
+        }
+    }
+
+    // Re-execution set in wave order (a topological order that the
+    // engine's wave rewind can follow directly).
+    let mut reexecute: Vec<usize> = dirty.into_iter().collect();
+    reexecute.sort_by_key(|&c| (graph.wave[c], c));
+    RecoveryPlan { discard_data, reexecute }
+}
+
+/// The latest graph cut: computes whose results are durable and which
+/// the plan does not re-execute — execution resumes after them.
+pub fn resume_frontier(
+    graph: &ResourceGraph,
+    log: &MessageLog,
+    invocation: u64,
+    plan: &RecoveryPlan,
+) -> Vec<usize> {
+    let durable: BTreeSet<usize> = log.durable_computes(invocation).into_iter().collect();
+    (0..graph.n_compute())
+        .filter(|c| durable.contains(c) && !plan.reexecute.contains(c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::lr;
+    use crate::coordinator::msglog::LogEntry;
+
+    fn graph() -> ResourceGraph {
+        // load(0) -> split(1) -> train(2) -> validate(3)
+        // data: train_set(0) r/w by 0,1,2; val_set(1) by 1,3; weights(2) by 2,3
+        ResourceGraph::from_program(&lr::program()).unwrap()
+    }
+
+    fn log_with(computes: &[usize]) -> MessageLog {
+        let mut log = MessageLog::new();
+        for &c in computes {
+            log.append(LogEntry { invocation: 1, compute: c, result_mb: 1.0 });
+        }
+        log.flush();
+        log
+    }
+
+    #[test]
+    fn crash_late_component_reexecutes_suffix_only() {
+        let g = graph();
+        let log = log_with(&[0, 1]);
+        let p = plan(&g, &log, 1, Crash::Compute(2));
+        // train crashed: re-run train + validate, NOT load/split
+        assert_eq!(p.reexecute, vec![2, 3]);
+        assert!(!p.reexecute.contains(&0));
+        let frontier = resume_frontier(&g, &log, 1, &p);
+        assert_eq!(frontier, vec![0, 1]);
+    }
+
+    #[test]
+    fn data_region_crash_discards_siblings_and_accessors() {
+        let g = graph();
+        let log = log_with(&[0]);
+        // weights (data 2) crashes: train + validate re-run
+        let p = plan(&g, &log, 1, Crash::DataRegion(2));
+        assert!(p.discard_data.contains(&2));
+        assert!(p.reexecute.contains(&2) && p.reexecute.contains(&3));
+        assert!(!p.reexecute.contains(&0), "durable load survives");
+    }
+
+    #[test]
+    fn nothing_durable_means_full_restart() {
+        let g = graph();
+        let log = MessageLog::new();
+        let p = plan(&g, &log, 1, Crash::Compute(0));
+        assert_eq!(p.reexecute, vec![0, 1, 2, 3]);
+        assert!(resume_frontier(&g, &log, 1, &p).is_empty());
+    }
+
+    #[test]
+    fn reexecute_is_topologically_ordered() {
+        let g = ResourceGraph::from_program(&crate::apps::video::pipeline()).unwrap();
+        let log = MessageLog::new();
+        let p = plan(&g, &log, 1, Crash::Compute(0));
+        // positions must respect wave order
+        for w in p.reexecute.windows(2) {
+            assert!(g.wave[w[0]] <= g.wave[w[1]]);
+        }
+    }
+
+    #[test]
+    fn unrelated_branch_not_reexecuted() {
+        let g = ResourceGraph::from_program(&crate::apps::video::pipeline()).unwrap();
+        // All decodes durable; one encode (compute 2+16..) crashes.
+        let durable: Vec<usize> = (0..2 + crate::apps::video::UNITS).collect();
+        let log = log_with(&durable);
+        let crash_enc = 2 + crate::apps::video::UNITS; // first encode
+        let p = plan(&g, &log, 1, Crash::Compute(crash_enc));
+        // sibling encodes are NOT durable here, but they are not affected
+        // either (disjoint data) — except through merge downstream.
+        assert!(p.reexecute.contains(&crash_enc));
+        // decodes stay durable / not re-executed
+        for d in 2..2 + crate::apps::video::UNITS {
+            assert!(!p.reexecute.contains(&d), "decode {d} should survive");
+        }
+    }
+}

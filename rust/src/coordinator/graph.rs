@@ -1,0 +1,246 @@
+//! The resource graph IR (§4.2).
+//!
+//! Each `@compute` site becomes a compute node, each `@data` site a data
+//! node. Trigger edges come from the program's control flow, access
+//! edges from its data-flow. The graph also records *wave* structure
+//! (longest-path depth over trigger edges): components in the same wave
+//! can run concurrently, which is what the adaptive scheduler exploits.
+
+use std::collections::HashMap;
+
+use crate::apps::Program;
+
+/// Node identifier within one resource graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// What a node stands for (index into the program's spec tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Compute(usize),
+    Data(usize),
+}
+
+/// The resource graph of one application.
+#[derive(Debug, Clone)]
+pub struct ResourceGraph {
+    pub program: Program,
+    /// node ids: computes first (same order as program.computes), then
+    /// data nodes (same order as program.data).
+    n_compute: usize,
+    n_data: usize,
+    /// trigger edges between compute nodes (by compute index).
+    pub triggers: Vec<(usize, usize)>,
+    /// access edges: (compute index, data index).
+    pub accesses: Vec<(usize, usize)>,
+    /// wave number per compute index (longest path from an entry).
+    pub wave: Vec<usize>,
+}
+
+impl ResourceGraph {
+    /// Derive the resource graph from an annotated program (what the
+    /// paper's Mira-based analyzer does offline).
+    pub fn from_program(program: &Program) -> crate::Result<Self> {
+        program.validate()?;
+        let n_compute = program.computes.len();
+        let n_data = program.data.len();
+        let mut triggers = Vec::new();
+        let mut accesses = Vec::new();
+        for (i, c) in program.computes.iter().enumerate() {
+            for &t in &c.triggers {
+                triggers.push((i, t));
+            }
+            for &d in &c.accesses {
+                accesses.push((i, d));
+            }
+        }
+        // Longest-path wave numbers over trigger edges.
+        let order = program.topo_order()?;
+        let mut wave = vec![0usize; n_compute];
+        for &i in &order {
+            for &t in &program.computes[i].triggers {
+                wave[t] = wave[t].max(wave[i] + 1);
+            }
+        }
+        Ok(Self { program: program.clone(), n_compute, n_data, triggers, accesses, wave })
+    }
+
+    pub fn n_compute(&self) -> usize {
+        self.n_compute
+    }
+
+    pub fn n_data(&self) -> usize {
+        self.n_data
+    }
+
+    pub fn compute_node(&self, i: usize) -> NodeId {
+        NodeId(i)
+    }
+
+    pub fn data_node(&self, d: usize) -> NodeId {
+        NodeId(self.n_compute + d)
+    }
+
+    pub fn kind(&self, id: NodeId) -> NodeKind {
+        if id.0 < self.n_compute {
+            NodeKind::Compute(id.0)
+        } else {
+            NodeKind::Data(id.0 - self.n_compute)
+        }
+    }
+
+    /// Compute indices grouped by wave, in wave order.
+    pub fn waves(&self) -> Vec<Vec<usize>> {
+        let max_wave = self.wave.iter().copied().max().unwrap_or(0);
+        let mut out = vec![Vec::new(); max_wave + 1];
+        for (i, &w) in self.wave.iter().enumerate() {
+            out[w].push(i);
+        }
+        out
+    }
+
+    /// Data indices accessed by compute `c`.
+    pub fn accessed_data(&self, c: usize) -> Vec<usize> {
+        self.accesses.iter().filter(|&&(ci, _)| ci == c).map(|&(_, d)| d).collect()
+    }
+
+    /// Compute indices accessing data `d`.
+    pub fn accessors_of(&self, d: usize) -> Vec<usize> {
+        self.accesses.iter().filter(|&&(_, di)| di == d).map(|&(c, _)| c).collect()
+    }
+
+    /// Direct successors (triggered computes) of compute `c`.
+    pub fn successors(&self, c: usize) -> Vec<usize> {
+        self.triggers.iter().filter(|&&(a, _)| a == c).map(|&(_, b)| b).collect()
+    }
+
+    /// Shared-data detection (§4.2: analysis "similar to Mira" finds
+    /// objects shared across compute components): data nodes with more
+    /// than one accessor.
+    pub fn shared_data(&self) -> Vec<usize> {
+        let mut count: HashMap<usize, usize> = HashMap::new();
+        for &(_, d) in &self.accesses {
+            *count.entry(d).or_insert(0) += 1;
+        }
+        let mut v: Vec<usize> =
+            count.into_iter().filter(|&(_, n)| n > 1).map(|(d, _)| d).collect();
+        v.sort();
+        v
+    }
+
+    /// Data lifetime window in waves: (first accessor wave, last
+    /// accessor wave). Data launches with its first accessor and dies
+    /// with its last (§5.1.2).
+    pub fn data_lifetime(&self, d: usize) -> Option<(usize, usize)> {
+        let waves: Vec<usize> = self.accessors_of(d).iter().map(|&c| self.wave[c]).collect();
+        if waves.is_empty() {
+            None
+        } else {
+            Some((
+                waves.iter().copied().min().unwrap(),
+                waves.iter().copied().max().unwrap(),
+            ))
+        }
+    }
+
+    /// Neighbour materialization candidates (§5.1.2): chains of
+    /// single-trigger compute pairs whose memory profiles are within
+    /// `similarity` ratio — merged into one physical component when
+    /// co-located.
+    pub fn merge_candidates(&self, scale: f64, similarity: f64) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for &(a, b) in &self.triggers {
+            let only_trigger = self.successors(a).len() == 1;
+            let only_pred = self.triggers.iter().filter(|&&(_, t)| t == b).count() == 1;
+            if !(only_trigger && only_pred) {
+                continue;
+            }
+            let ca = &self.program.computes[a];
+            let cb = &self.program.computes[b];
+            if ca.parallelism_at(scale) != cb.parallelism_at(scale) {
+                continue;
+            }
+            let (ma, mb) = (ca.mem_at(scale), cb.mem_at(scale));
+            let ratio = if ma > mb { ma / mb.max(1e-9) } else { mb / ma.max(1e-9) };
+            if ratio <= similarity {
+                out.push((a, b));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{lr, tpcds, video};
+
+    #[test]
+    fn lr_graph_structure() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        assert_eq!(g.n_compute(), 4);
+        assert_eq!(g.n_data(), 3);
+        // load -> split -> train -> validate: four waves of one
+        assert_eq!(g.waves().len(), 4);
+        assert_eq!(g.wave, vec![0, 1, 2, 3]);
+        // weights (data 2) is shared by train+validate
+        assert!(g.shared_data().contains(&2));
+    }
+
+    #[test]
+    fn video_waves_parallel_units() {
+        let g = ResourceGraph::from_program(&video::pipeline()).unwrap();
+        let waves = g.waves();
+        // slice+audio, decodes, encodes, merge, mux, finalize
+        assert!(waves[1].len() >= video::UNITS);
+        assert!(waves[2].len() >= video::UNITS);
+    }
+
+    #[test]
+    fn data_lifetime_spans_accessors() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        // train_set (data 0): accessed by load(w0), split(w1), train(w2)
+        assert_eq!(g.data_lifetime(0), Some((0, 2)));
+        // weights (data 2): train(w2), validate(w3)
+        assert_eq!(g.data_lifetime(2), Some((2, 3)));
+    }
+
+    #[test]
+    fn merge_candidates_need_chain_and_similarity() {
+        let g = ResourceGraph::from_program(&video::pipeline()).unwrap();
+        // mux -> finalize is a 1:1 chain of single-worker components with
+        // memory ratio ≈ 2.1: a candidate at similarity 2.5, not at 1.5.
+        let has_pair = |merges: &[(usize, usize)]| {
+            merges.iter().any(|&(a, b)| {
+                g.program.computes[a].name == "mux" && g.program.computes[b].name == "finalize"
+            })
+        };
+        assert!(has_pair(&g.merge_candidates(1.0, 2.5)));
+        assert!(!has_pair(&g.merge_candidates(1.0, 1.5)));
+        // decode -> encode differ in parallelism → never merged
+        let merges = g.merge_candidates(1.0, 10.0);
+        assert!(!merges.iter().any(|&(a, b)| {
+            g.program.computes[a].name == "decode" && g.program.computes[b].name == "encode"
+        }));
+    }
+
+    #[test]
+    fn accessors_and_successors_consistent() {
+        let g = ResourceGraph::from_program(&tpcds::query(16)).unwrap();
+        for d in 0..g.n_data() {
+            for c in g.accessors_of(d) {
+                assert!(g.accessed_data(c).contains(&d));
+            }
+        }
+        for (a, b) in g.triggers.clone() {
+            assert!(g.successors(a).contains(&b));
+        }
+    }
+
+    #[test]
+    fn node_id_mapping_roundtrips() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        assert_eq!(g.kind(g.compute_node(2)), NodeKind::Compute(2));
+        assert_eq!(g.kind(g.data_node(1)), NodeKind::Data(1));
+    }
+}

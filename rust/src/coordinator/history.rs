@@ -1,0 +1,225 @@
+//! History-based resource profiles (§4.2, §5.2.3).
+//!
+//! Zenix samples application runs and stores, per resource-graph node, a
+//! histogram of observed usage with *decaying weights*: recent
+//! invocations count more, so the profile tracks drift without
+//! overreacting to one-off inputs. The exec engine reads quantiles for
+//! initial sizing; the [`super::adjust`] solver consumes the weighted
+//! observations directly.
+
+use std::collections::HashMap;
+
+/// One node's decaying-weight usage record.
+///
+/// Weights are *implicit*: observation `i` carries sequence number
+/// `seq_i`, and its weight is `decay^(cur_seq - seq_i)`. Recording is
+/// O(1) (no re-multiplication sweep — EXPERIMENTS.md §Perf change 2);
+/// weights materialize lazily on query.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// (value, sequence-number) pairs, insertion order.
+    obs: std::collections::VecDeque<(f64, u64)>,
+    seq: u64,
+    decay: f64,
+    cap: usize,
+    /// Incrementally-maintained decayed sums: Σ w_i and Σ w_i·v_i
+    /// (weights decay by `decay` on each insert) — O(1) mean queries
+    /// (§Perf change 3). Eviction error is ≤ decay^cap ≈ 5e-6.
+    w_total: f64,
+    wv_total: f64,
+}
+
+impl Default for Profile {
+    fn default() -> Self {
+        Self::new(0.95, 256)
+    }
+}
+
+impl Profile {
+    pub fn new(decay: f64, cap: usize) -> Self {
+        Self {
+            obs: std::collections::VecDeque::new(),
+            seq: 0,
+            decay,
+            cap,
+            w_total: 0.0,
+            wv_total: 0.0,
+        }
+    }
+
+    /// Record one observation (most recent gets weight 1.0; older decay).
+    pub fn record(&mut self, value: f64) {
+        self.obs.push_back((value, self.seq));
+        self.seq += 1;
+        self.w_total = self.w_total * self.decay + 1.0;
+        self.wv_total = self.wv_total * self.decay + value;
+        if self.obs.len() > self.cap {
+            // oldest entry has the lowest weight by construction; its
+            // residual (≤ decay^cap) is left in the running sums.
+            self.obs.pop_front();
+        }
+    }
+
+    /// Materialized weight of one stored observation.
+    #[inline]
+    fn weight(&self, seq: u64) -> f64 {
+        self.decay.powi((self.seq - 1 - seq) as i32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.obs.is_empty()
+    }
+
+    /// Weighted quantile (q in [0,1]) of observed values.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.obs.is_empty() {
+            return None;
+        }
+        let mut v: Vec<(f64, f64)> =
+            self.obs.iter().map(|&(val, seq)| (val, self.weight(seq))).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total: f64 = v.iter().map(|(_, w)| w).sum();
+        let target = q.clamp(0.0, 1.0) * total;
+        let mut acc = 0.0;
+        for (val, w) in &v {
+            acc += w;
+            if acc + 1e-12 >= target {
+                return Some(*val);
+            }
+        }
+        v.last().map(|(val, _)| *val)
+    }
+
+    /// Weighted maximum == quantile(1.0) (peak provisioning).
+    pub fn max(&self) -> Option<f64> {
+        self.obs.iter().map(|(v, _)| *v).fold(None, |m, v| {
+            Some(m.map_or(v, |m: f64| m.max(v)))
+        })
+    }
+
+    /// Weighted mean (O(1): incrementally maintained).
+    pub fn mean(&self) -> Option<f64> {
+        if self.obs.is_empty() {
+            return None;
+        }
+        Some(self.wv_total / self.w_total)
+    }
+
+    /// Raw values (for the adjust solver).
+    pub fn values(&self) -> Vec<f64> {
+        self.obs.iter().map(|(v, _)| *v).collect()
+    }
+}
+
+/// Resource kinds tracked per node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Peak memory (MB) of a compute worker or data component.
+    MemMb,
+    /// vCPUs actually exercised.
+    Cpu,
+    /// CPU utilization of the allocated vCPUs (0..1).
+    CpuUtil,
+    /// Lifetime (ms).
+    LifetimeMs,
+}
+
+/// Profiles for every (application, node, metric) triple.
+#[derive(Debug, Default)]
+pub struct ProfileStore {
+    profiles: HashMap<(String, usize, Metric), Profile>,
+}
+
+impl ProfileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, app: &str, node: usize, metric: Metric, value: f64) {
+        self.profiles
+            .entry((app.to_string(), node, metric))
+            .or_default()
+            .record(value);
+    }
+
+    pub fn profile(&self, app: &str, node: usize, metric: Metric) -> Option<&Profile> {
+        self.profiles.get(&(app.to_string(), node, metric))
+    }
+
+    pub fn quantile(&self, app: &str, node: usize, metric: Metric, q: f64) -> Option<f64> {
+        self.profile(app, node, metric)?.quantile(q)
+    }
+
+    /// Number of recorded invocations for an app's node 0 (proxy for
+    /// "K executions" in the §5.2.3 re-tuning schedule).
+    pub fn executions(&self, app: &str, metric: Metric) -> usize {
+        self.profile(app, 0, metric).map_or(0, |p| p.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_uniform_values() {
+        let mut p = Profile::default();
+        for v in 1..=100 {
+            p.record(v as f64);
+        }
+        let q50 = p.quantile(0.5).unwrap();
+        // decay biases toward recent (larger) values
+        assert!(q50 >= 50.0, "{q50}");
+        assert_eq!(p.max(), Some(100.0));
+        assert!(p.quantile(0.0).unwrap() >= 1.0);
+        assert_eq!(p.quantile(1.0), Some(100.0));
+    }
+
+    #[test]
+    fn decay_prefers_recent() {
+        let mut p = Profile::new(0.5, 64);
+        for _ in 0..20 {
+            p.record(100.0);
+        }
+        for _ in 0..3 {
+            p.record(10.0);
+        }
+        // recent small values dominate the low quantiles quickly
+        assert!(p.quantile(0.3).unwrap() <= 100.0);
+        let mean = p.mean().unwrap();
+        assert!(mean < 60.0, "decayed mean {mean}");
+    }
+
+    #[test]
+    fn cap_bounds_memory() {
+        let mut p = Profile::new(0.99, 16);
+        for v in 0..100 {
+            p.record(v as f64);
+        }
+        assert_eq!(p.len(), 16);
+        // survivors are the most recent ones
+        assert!(p.values().iter().all(|&v| v >= 84.0));
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let mut s = ProfileStore::new();
+        s.record("app", 3, Metric::MemMb, 512.0);
+        s.record("app", 3, Metric::MemMb, 1024.0);
+        assert_eq!(s.quantile("app", 3, Metric::MemMb, 1.0), Some(1024.0));
+        assert_eq!(s.quantile("other", 3, Metric::MemMb, 1.0), None);
+        assert_eq!(s.quantile("app", 3, Metric::Cpu, 0.5), None);
+    }
+
+    #[test]
+    fn empty_profile_safe() {
+        let p = Profile::default();
+        assert_eq!(p.quantile(0.5), None);
+        assert_eq!(p.max(), None);
+        assert_eq!(p.mean(), None);
+    }
+}

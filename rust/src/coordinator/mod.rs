@@ -1,0 +1,28 @@
+//! The Zenix coordinator — the paper's system contribution.
+//!
+//! - [`graph`] — the *resource graph* IR (§4.2): compute/data component
+//!   nodes with trigger/access edges, derived from program annotations.
+//! - [`history`] — decaying-weight resource profiles per graph node
+//!   (§4.2 sampling + §5.2.3 history-based adjustment inputs).
+//! - [`adjust`] — the init/incremental sizing optimizer (§9.3).
+//! - [`placement`] — locality-based greedy placement (§5.1.1).
+//! - [`scheduler`] — two-level global/rack scheduler (§5.3.1).
+//! - [`msglog`] — reliable message log (Kafka substitute, §5.3.2).
+//! - [`failure`] — resource-graph-cut recovery (§5.3.2).
+//! - [`sync`] — distributed lock/barrier primitives (§5.3.3).
+//! - [`exec`] — the adaptive execution engine + [`exec::Platform`]:
+//!   sizing, materialization, autoscaling, proactive startup (§5.1-5.2).
+
+pub mod adjust;
+pub mod exec;
+pub mod failure;
+pub mod graph;
+pub mod history;
+pub mod msglog;
+pub mod placement;
+pub mod scheduler;
+pub mod sync;
+
+pub use exec::{Platform, ZenixConfig};
+pub use graph::{NodeId, NodeKind, ResourceGraph};
+pub use history::ProfileStore;

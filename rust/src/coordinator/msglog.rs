@@ -1,0 +1,132 @@
+//! Reliable message log (§5.3.2) — the Kafka substitute.
+//!
+//! Every compute component's result is appended here via "reliable
+//! messaging"; recovery replays from the latest resource-graph cut whose
+//! crossing edges are all persisted. Only the durability/replay
+//! semantics matter for the reproduction, so this is an append-only log
+//! with an explicit persistence watermark (messages below the watermark
+//! survive failures; above it they are lost with the crash).
+
+/// One logged component-completion message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    /// Invocation this entry belongs to.
+    pub invocation: u64,
+    /// Compute index that completed.
+    pub compute: usize,
+    /// Opaque result payload size (MB) — replayed as stage input.
+    pub result_mb: f64,
+}
+
+/// Append-only reliable log with a persistence watermark.
+#[derive(Debug, Default)]
+pub struct MessageLog {
+    entries: Vec<LogEntry>,
+    /// Entries `< persisted` are durable.
+    persisted: usize,
+}
+
+impl MessageLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a completion message; returns its sequence number.
+    /// Messages are durable once [`flush`](Self::flush) passes them.
+    pub fn append(&mut self, entry: LogEntry) -> usize {
+        self.entries.push(entry);
+        self.entries.len() - 1
+    }
+
+    /// Persist everything appended so far (the paper's reliable-message
+    /// send is synchronous; tests use partial flushes to model loss).
+    pub fn flush(&mut self) {
+        self.persisted = self.entries.len();
+    }
+
+    /// Persist only up to `seq` (exclusive) — for failure injection.
+    pub fn flush_to(&mut self, seq: usize) {
+        self.persisted = seq.min(self.entries.len());
+    }
+
+    /// Durable entries (what recovery can replay).
+    pub fn durable(&self) -> &[LogEntry] {
+        &self.entries[..self.persisted]
+    }
+
+    /// Simulate a crash: lose everything past the watermark.
+    pub fn crash(&mut self) {
+        self.entries.truncate(self.persisted);
+    }
+
+    /// Completed computes for `invocation` that are durably recorded.
+    pub fn durable_computes(&self, invocation: u64) -> Vec<usize> {
+        self.durable()
+            .iter()
+            .filter(|e| e.invocation == invocation)
+            .map(|e| e.compute)
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(c: usize) -> LogEntry {
+        LogEntry { invocation: 1, compute: c, result_mb: 10.0 }
+    }
+
+    #[test]
+    fn append_flush_durable() {
+        let mut log = MessageLog::new();
+        log.append(entry(0));
+        log.append(entry(1));
+        assert!(log.durable().is_empty());
+        log.flush();
+        assert_eq!(log.durable().len(), 2);
+        log.append(entry(2));
+        assert_eq!(log.durable().len(), 2);
+    }
+
+    #[test]
+    fn crash_loses_unpersisted_tail() {
+        let mut log = MessageLog::new();
+        log.append(entry(0));
+        log.flush();
+        log.append(entry(1));
+        log.append(entry(2));
+        log.crash();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.durable_computes(1), vec![0]);
+    }
+
+    #[test]
+    fn partial_flush_watermark() {
+        let mut log = MessageLog::new();
+        for c in 0..5 {
+            log.append(entry(c));
+        }
+        log.flush_to(3);
+        log.crash();
+        assert_eq!(log.durable_computes(1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn filters_by_invocation() {
+        let mut log = MessageLog::new();
+        log.append(LogEntry { invocation: 1, compute: 0, result_mb: 1.0 });
+        log.append(LogEntry { invocation: 2, compute: 5, result_mb: 1.0 });
+        log.flush();
+        assert_eq!(log.durable_computes(1), vec![0]);
+        assert_eq!(log.durable_computes(2), vec![5]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Locality-based greedy placement (§5.1.1).
+//!
+//! Policy, in priority order:
+//! 1. whole-application fit: choose the server with the *smallest*
+//!    available resources among those that fit the entire app (leaves
+//!    spacious servers for future larger invocations);
+//! 2. co-locate a component with the data components it accesses;
+//! 3. otherwise the smallest-available server that fits the component;
+//! 4. scale-up prefers the current server, then servers already running
+//!    accessors of the grown data component.
+
+use crate::cluster::{Cluster, Resources, ServerId};
+
+/// Choose the smallest-available server (by [`Resources::magnitude`])
+/// among those whose *unmarked* availability fits `demand`; fall back to
+/// marked capacity if necessary (marks are low-priority, not reserved).
+pub fn smallest_fit(cluster: &Cluster, demand: Resources) -> Option<ServerId> {
+    smallest_fit_among(cluster, demand, &mut cluster.servers().iter().map(|s| s.id))
+}
+
+/// Same as [`smallest_fit`] but restricted to `candidates`.
+pub fn smallest_fit_among(
+    cluster: &Cluster,
+    demand: Resources,
+    candidates: &mut dyn Iterator<Item = ServerId>,
+) -> Option<ServerId> {
+    let ids: Vec<ServerId> = candidates.collect();
+    let pick = |respect_marks: bool| -> Option<ServerId> {
+        ids.iter()
+            .map(|&id| cluster.server(id))
+            .filter(|s| {
+                let avail =
+                    if respect_marks { s.available_unmarked() } else { s.available() };
+                avail.fits(demand)
+            })
+            .min_by(|a, b| {
+                a.available()
+                    .magnitude()
+                    .partial_cmp(&b.available().magnitude())
+                    .unwrap()
+            })
+            .map(|s| s.id)
+    };
+    pick(true).or_else(|| pick(false))
+}
+
+/// Placement preference for a compute component that accesses data
+/// currently resident on `data_servers`: co-locate if any of them fits,
+/// else smallest fit anywhere in the rack.
+pub fn place_component(
+    cluster: &Cluster,
+    demand: Resources,
+    data_servers: &[ServerId],
+) -> Option<(ServerId, bool)> {
+    // Try servers already hosting the accessed data, smallest first.
+    if let Some(id) =
+        smallest_fit_among(cluster, demand, &mut data_servers.iter().copied())
+    {
+        return Some((id, true));
+    }
+    smallest_fit(cluster, demand).map(|id| {
+        let colocated = data_servers.contains(&id);
+        (id, colocated)
+    })
+}
+
+/// Scale-up preference (§5.1.1 last paragraph): current server first,
+/// then servers running accessors, then anywhere.
+pub fn place_growth(
+    cluster: &Cluster,
+    demand: Resources,
+    current: ServerId,
+    accessor_servers: &[ServerId],
+) -> Option<ServerId> {
+    if cluster.server(current).available().fits(demand) {
+        return Some(current);
+    }
+    if let Some(id) =
+        smallest_fit_among(cluster, demand, &mut accessor_servers.iter().copied())
+    {
+        return Some(id);
+    }
+    smallest_fit(cluster, demand)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterSpec {
+            racks: 1,
+            servers_per_rack: 4,
+            server_capacity: Resources::new(32.0, 65536.0),
+        })
+    }
+
+    #[test]
+    fn picks_smallest_fitting_server() {
+        let mut c = cluster();
+        // server 0: heavily loaded; server 1: lightly; 2,3: empty
+        c.server_mut(ServerId(0)).try_alloc(Resources::new(30.0, 60000.0), 0.0);
+        c.server_mut(ServerId(1)).try_alloc(Resources::new(8.0, 10000.0), 0.0);
+        // demand fits 1,2,3 → smallest available is 1
+        let got = smallest_fit(&c, Resources::new(16.0, 20000.0)).unwrap();
+        assert_eq!(got, ServerId(1));
+        // tiny demand fits 0 too → 0 is the smallest remainder
+        let got = smallest_fit(&c, Resources::new(1.0, 1000.0)).unwrap();
+        assert_eq!(got, ServerId(0));
+    }
+
+    #[test]
+    fn none_when_nothing_fits() {
+        let c = cluster();
+        assert!(smallest_fit(&c, Resources::new(64.0, 1.0)).is_none());
+    }
+
+    #[test]
+    fn colocation_preferred() {
+        let mut c = cluster();
+        c.server_mut(ServerId(2)).try_alloc(Resources::new(4.0, 4000.0), 0.0);
+        let (id, colo) =
+            place_component(&c, Resources::new(4.0, 4096.0), &[ServerId(2)]).unwrap();
+        assert_eq!(id, ServerId(2));
+        assert!(colo);
+    }
+
+    #[test]
+    fn falls_back_when_data_server_full() {
+        let mut c = cluster();
+        c.server_mut(ServerId(2)).try_alloc(Resources::new(32.0, 65536.0), 0.0);
+        let (id, colo) =
+            place_component(&c, Resources::new(4.0, 4096.0), &[ServerId(2)]).unwrap();
+        assert_ne!(id, ServerId(2));
+        assert!(!colo);
+    }
+
+    #[test]
+    fn growth_prefers_current_then_accessors() {
+        let mut c = cluster();
+        let cur = ServerId(0);
+        // current has room → stays
+        assert_eq!(
+            place_growth(&c, Resources::mem_only(1000.0), cur, &[ServerId(1)]),
+            Some(cur)
+        );
+        // fill current: falls to the accessor server
+        c.server_mut(cur).try_alloc(Resources::new(0.0, 65536.0), 0.0);
+        assert_eq!(
+            place_growth(&c, Resources::mem_only(1000.0), cur, &[ServerId(1)]),
+            Some(ServerId(1))
+        );
+        // fill accessor too: any fitting server
+        c.server_mut(ServerId(1)).try_alloc(Resources::new(0.0, 65536.0), 0.0);
+        let got = place_growth(&c, Resources::mem_only(1000.0), cur, &[ServerId(1)]).unwrap();
+        assert!(got == ServerId(2) || got == ServerId(3));
+    }
+
+    #[test]
+    fn marks_demote_but_do_not_block() {
+        let mut c = cluster();
+        // servers 1-3 marked for a future app; 0 unmarked but larger load
+        for i in 1..4 {
+            c.server_mut(ServerId(i)).mark(Resources::new(32.0, 65536.0));
+        }
+        c.server_mut(ServerId(0)).try_alloc(Resources::new(16.0, 30000.0), 0.0);
+        // prefers the unmarked server 0 even though 1-3 have more room
+        let got = smallest_fit(&c, Resources::new(8.0, 8192.0)).unwrap();
+        assert_eq!(got, ServerId(0));
+        // but a demand only marked servers can fit still places
+        let got = smallest_fit(&c, Resources::new(30.0, 60000.0)).unwrap();
+        assert_ne!(got, ServerId(0));
+    }
+}

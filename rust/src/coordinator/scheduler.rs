@@ -1,0 +1,265 @@
+//! Two-level scheduler (§5.3.1).
+//!
+//! One **global scheduler** per cluster tracks rough per-rack
+//! availability, balances application requests across racks, and owns
+//! the compilation database. One **rack scheduler** per rack holds the
+//! exact per-server view and serves per-component allocation requests.
+//! When a rack runs out, the request bounces back to the global
+//! scheduler for another rack.
+//!
+//! The decision paths are allocation-free so the scalability targets
+//! (§6.2: 50k apps/s global, 20k components/s rack) hold; see
+//! `rust/benches/scheduler.rs`.
+
+use std::collections::HashMap;
+
+use crate::cluster::{Cluster, RackId, Resources, ServerId};
+
+use super::placement;
+
+/// Compilation database entry (§4.2: two pre-compiled versions; runtime
+/// layouts compiled on demand and cached).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Compilation {
+    /// All accessed data local — native memory instructions.
+    AllLocal,
+    /// All accessed data remote — BulkX data-access APIs.
+    AllRemote,
+    /// Mixed layout, keyed by a bitmask of which data is local.
+    Mixed(u32),
+}
+
+/// The global scheduler.
+#[derive(Debug, Default)]
+pub struct GlobalScheduler {
+    /// Rough per-rack availability (refreshed by rack schedulers).
+    rack_avail: Vec<Resources>,
+    /// Compilation DB: (app, variant) -> compiled (cache hit at runtime).
+    compilations: HashMap<(String, Compilation), bool>,
+    /// Round-robin cursor for tie-breaking equally-loaded racks.
+    cursor: usize,
+}
+
+impl GlobalScheduler {
+    pub fn new(racks: usize) -> Self {
+        Self {
+            rack_avail: vec![Resources::ZERO; racks],
+            compilations: HashMap::new(),
+            cursor: 0,
+        }
+    }
+
+    /// Refresh the rough view for one rack (rack schedulers push this).
+    pub fn update_rack(&mut self, rack: RackId, avail: Resources) {
+        self.rack_avail[rack.0] = avail;
+    }
+
+    /// Route an application request: the rack with the most available
+    /// resources that fits `estimate` (load balancing), else the rack
+    /// with the most available overall (it will queue/spill).
+    pub fn route(&mut self, estimate: Resources) -> RackId {
+        let n = self.rack_avail.len();
+        let mut best: Option<(usize, f64)> = None;
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            let a = self.rack_avail[i];
+            let mag = a.magnitude();
+            let fits = a.fits(estimate);
+            match best {
+                Some((_, bm)) if !fits && bm >= mag => {}
+                Some((bi, bm)) => {
+                    let best_fits = self.rack_avail[bi].fits(estimate);
+                    if (fits && !best_fits) || (fits == best_fits && mag > bm) {
+                        best = Some((i, mag));
+                    }
+                }
+                None => best = Some((i, mag)),
+            }
+        }
+        self.cursor = (self.cursor + 1) % n;
+        RackId(best.map(|(i, _)| i).unwrap_or(0))
+    }
+
+    /// Look up / install a compilation (returns true on cache hit).
+    pub fn compilation(&mut self, app: &str, variant: Compilation) -> bool {
+        let key = (app.to_string(), variant);
+        if self.compilations.contains_key(&key) {
+            true
+        } else {
+            self.compilations.insert(key, true);
+            false
+        }
+    }
+}
+
+/// One rack's scheduler: exact server accounting within the rack.
+#[derive(Debug)]
+pub struct RackScheduler {
+    pub rack: RackId,
+    servers: Vec<ServerId>,
+}
+
+/// Outcome of a component allocation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Allocation {
+    /// Placed on a server; `colocated` = with its accessed data.
+    Placed { server: ServerId, colocated: bool },
+    /// Rack out of resources: bounce to the global scheduler (§5.3.1).
+    Spill,
+}
+
+impl RackScheduler {
+    pub fn new(cluster: &Cluster, rack: RackId) -> Self {
+        Self { rack, servers: cluster.rack_servers(rack).collect() }
+    }
+
+    pub fn servers(&self) -> &[ServerId] {
+        &self.servers
+    }
+
+    /// Try to fit the whole application on one server (§5.1.1 step 1).
+    pub fn whole_app_fit(&self, cluster: &Cluster, demand: Resources) -> Option<ServerId> {
+        placement::smallest_fit_among(cluster, demand, &mut self.servers.iter().copied())
+    }
+
+    /// Allocate one component; commits the allocation into the cluster.
+    pub fn allocate(
+        &self,
+        cluster: &mut Cluster,
+        demand: Resources,
+        data_servers: &[ServerId],
+        now: f64,
+    ) -> Allocation {
+        let rack_data: Vec<ServerId> = data_servers
+            .iter()
+            .copied()
+            .filter(|id| self.servers.contains(id))
+            .collect();
+        // restrict placement to this rack
+        let in_rack = |id: ServerId| self.servers.contains(&id);
+        let choice = placement::smallest_fit_among(
+            cluster,
+            demand,
+            &mut rack_data.iter().copied(),
+        )
+        .map(|id| (id, true))
+        .or_else(|| {
+            placement::smallest_fit_among(
+                cluster,
+                demand,
+                &mut self.servers.iter().copied(),
+            )
+            .map(|id| (id, rack_data.contains(&id)))
+        });
+        match choice {
+            Some((server, colocated)) if in_rack(server) => {
+                let ok = cluster.server_mut(server).try_alloc(demand, now);
+                debug_assert!(ok, "placement said it fits");
+                Allocation::Placed { server, colocated }
+            }
+            _ => Allocation::Spill,
+        }
+    }
+
+    /// Release a component's resources.
+    pub fn release(&self, cluster: &mut Cluster, server: ServerId, amount: Resources, now: f64) {
+        cluster.server_mut(server).free(amount, now);
+    }
+
+    /// Rough availability to push up to the global scheduler.
+    pub fn availability(&self, cluster: &Cluster) -> Resources {
+        cluster.rack_available(self.rack)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    fn cluster(racks: usize) -> Cluster {
+        Cluster::new(ClusterSpec::multi_rack(racks, 4))
+    }
+
+    #[test]
+    fn global_routes_to_most_available_fitting_rack() {
+        let c = cluster(3);
+        let mut g = GlobalScheduler::new(3);
+        for r in c.racks() {
+            g.update_rack(r, c.rack_available(r));
+        }
+        // rack 1 drained
+        g.update_rack(RackId(1), Resources::ZERO);
+        let got = g.route(Resources::new(8.0, 8192.0));
+        assert_ne!(got, RackId(1));
+    }
+
+    #[test]
+    fn global_round_robins_between_equal_racks() {
+        let mut g = GlobalScheduler::new(2);
+        g.update_rack(RackId(0), Resources::new(100.0, 100.0));
+        g.update_rack(RackId(1), Resources::new(100.0, 100.0));
+        let a = g.route(Resources::new(1.0, 1.0));
+        let b = g.route(Resources::new(1.0, 1.0));
+        assert_ne!(a, b, "equal racks should alternate");
+    }
+
+    #[test]
+    fn compilation_cache_hits_second_time() {
+        let mut g = GlobalScheduler::new(1);
+        assert!(!g.compilation("app", Compilation::AllLocal));
+        assert!(g.compilation("app", Compilation::AllLocal));
+        assert!(!g.compilation("app", Compilation::Mixed(0b101)));
+        assert!(g.compilation("app", Compilation::Mixed(0b101)));
+    }
+
+    #[test]
+    fn rack_allocates_and_spills() {
+        let mut c = cluster(2);
+        let rs = RackScheduler::new(&c, RackId(0));
+        // fill rack 0 completely
+        let per_server = Resources::new(32.0, 65536.0);
+        for id in rs.servers().to_vec() {
+            match rs.allocate(&mut c, per_server, &[], 0.0) {
+                Allocation::Placed { .. } => {}
+                Allocation::Spill => panic!("should fit on {id:?}"),
+            }
+        }
+        assert_eq!(rs.allocate(&mut c, Resources::new(1.0, 1.0), &[], 1.0), Allocation::Spill);
+        // rack 1 untouched
+        let rs1 = RackScheduler::new(&c, RackId(1));
+        assert!(matches!(
+            rs1.allocate(&mut c, Resources::new(1.0, 1.0), &[], 2.0),
+            Allocation::Placed { .. }
+        ));
+    }
+
+    #[test]
+    fn rack_prefers_colocated_data_server() {
+        let mut c = cluster(1);
+        let rs = RackScheduler::new(&c, RackId(0));
+        let data_server = ServerId(2);
+        c.server_mut(data_server).try_alloc(Resources::mem_only(1000.0), 0.0);
+        match rs.allocate(&mut c, Resources::new(2.0, 2048.0), &[data_server], 1.0) {
+            Allocation::Placed { server, colocated } => {
+                assert_eq!(server, data_server);
+                assert!(colocated);
+            }
+            Allocation::Spill => panic!("should place"),
+        }
+    }
+
+    #[test]
+    fn rack_ignores_foreign_data_servers() {
+        let mut c = cluster(2);
+        let rs = RackScheduler::new(&c, RackId(0));
+        // data server is in rack 1: allocation stays in rack 0, not colocated
+        match rs.allocate(&mut c, Resources::new(2.0, 2048.0), &[ServerId(7)], 0.0) {
+            Allocation::Placed { server, colocated } => {
+                assert!(rs.servers().contains(&server));
+                assert!(!colocated);
+            }
+            Allocation::Spill => panic!("should place"),
+        }
+    }
+}

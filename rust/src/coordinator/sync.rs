@@ -1,0 +1,137 @@
+//! Distributed synchronization primitives (§5.3.3 + §8.1).
+//!
+//! Zenix provides `@mutex` (distributed lock), `@barrier`, and
+//! `@message` rather than a coherence protocol: compute components
+//! sharing a data component coordinate explicitly. These are the
+//! platform-side implementations, modeled with their messaging costs so
+//! the simulator can charge them.
+
+use std::collections::VecDeque;
+
+/// A distributed lock: FIFO grant order, one holder at a time.
+#[derive(Debug, Default)]
+pub struct DistLock {
+    holder: Option<u64>,
+    waiters: VecDeque<u64>,
+}
+
+impl DistLock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request the lock for `owner`; true if granted immediately.
+    pub fn acquire(&mut self, owner: u64) -> bool {
+        if self.holder.is_none() {
+            self.holder = Some(owner);
+            true
+        } else if self.holder == Some(owner) {
+            true // re-entrant
+        } else {
+            if !self.waiters.contains(&owner) {
+                self.waiters.push_back(owner);
+            }
+            false
+        }
+    }
+
+    /// Release by `owner`; returns the next grantee if any.
+    pub fn release(&mut self, owner: u64) -> Option<u64> {
+        if self.holder != Some(owner) {
+            return None;
+        }
+        self.holder = self.waiters.pop_front();
+        self.holder
+    }
+
+    pub fn holder(&self) -> Option<u64> {
+        self.holder
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiters.len()
+    }
+}
+
+/// A counting barrier over `n` participants.
+#[derive(Debug)]
+pub struct Barrier {
+    n: usize,
+    arrived: Vec<u64>,
+    generation: u64,
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, arrived: Vec::new(), generation: 0 }
+    }
+
+    /// Arrive at the barrier; returns `Some(generation)` when this
+    /// arrival releases everyone (the barrier then resets).
+    pub fn arrive(&mut self, who: u64) -> Option<u64> {
+        if !self.arrived.contains(&who) {
+            self.arrived.push(who);
+        }
+        if self.arrived.len() == self.n {
+            self.arrived.clear();
+            self.generation += 1;
+            Some(self.generation)
+        } else {
+            None
+        }
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.arrived.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_fifo_handoff() {
+        let mut l = DistLock::new();
+        assert!(l.acquire(1));
+        assert!(!l.acquire(2));
+        assert!(!l.acquire(3));
+        assert_eq!(l.queue_len(), 2);
+        assert_eq!(l.release(1), Some(2));
+        assert_eq!(l.holder(), Some(2));
+        assert_eq!(l.release(2), Some(3));
+        assert_eq!(l.release(3), None);
+        assert_eq!(l.holder(), None);
+    }
+
+    #[test]
+    fn lock_reentrant_and_foreign_release_ignored() {
+        let mut l = DistLock::new();
+        assert!(l.acquire(7));
+        assert!(l.acquire(7));
+        assert_eq!(l.release(9), None); // not the holder
+        assert_eq!(l.holder(), Some(7));
+    }
+
+    #[test]
+    fn duplicate_waiters_not_queued_twice() {
+        let mut l = DistLock::new();
+        l.acquire(1);
+        l.acquire(2);
+        l.acquire(2);
+        assert_eq!(l.queue_len(), 1);
+    }
+
+    #[test]
+    fn barrier_releases_on_nth() {
+        let mut b = Barrier::new(3);
+        assert_eq!(b.arrive(1), None);
+        assert_eq!(b.arrive(2), None);
+        assert_eq!(b.arrive(2), None); // duplicate arrival ignored
+        assert_eq!(b.arrive(3), Some(1));
+        // reusable: next generation
+        assert_eq!(b.arrive(1), None);
+        assert_eq!(b.waiting(), 1);
+    }
+}

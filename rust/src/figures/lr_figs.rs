@@ -1,0 +1,113 @@
+//! Logistic-regression figures: 15, 16, 17, 18.
+
+use crate::apps::{lr, tpcds, Invocation};
+use crate::baselines::dag::{self, DagParams, KvChoice};
+use crate::baselines::{faas, fastswap, migration};
+use crate::cluster::StartupModel;
+use crate::coordinator::graph::ResourceGraph;
+use crate::coordinator::ZenixConfig;
+use crate::metrics::RunReport;
+use crate::net::NetModel;
+
+use super::zenix_run;
+
+/// Figs 15/16: LR memory consumption across schemes for one input size.
+/// Order: zenix-rdma, zenix-tcp, openwhisk, fastswap, lambda,
+/// sf-co(s3), sf-co(redis), sf-orion(s3), sf-orion(redis).
+pub fn fig15_16_lr(input_mb: f64) -> Vec<RunReport> {
+    let program = lr::program();
+    let graph = ResourceGraph::from_program(&program).unwrap();
+    let scale = lr::scale_for_mb(input_mb);
+    let inv = Invocation::new(scale);
+    let net = NetModel::default();
+    let st = StartupModel::default();
+
+    let mut rows = Vec::new();
+    let mut z_rdma = zenix_run(ZenixConfig::default(), &graph, scale);
+    z_rdma.system = "zenix-rdma".into();
+    rows.push(z_rdma);
+    let mut z_tcp = zenix_run(ZenixConfig { rdma: false, ..ZenixConfig::default() }, &graph, scale);
+    z_tcp.system = "zenix-tcp".into();
+    rows.push(z_tcp);
+    rows.push(faas::run(&program, inv, faas::Provider::OpenWhisk, false, &st));
+    rows.push(fastswap::run(&program, inv, 0.4, &net, &st));
+    rows.push(faas::run(&program, inv, faas::Provider::Lambda, false, &st));
+    for (params, label) in [
+        (DagParams::sf_co(scale, KvChoice::S3), "sf-co(s3)"),
+        (DagParams::sf_co(scale, KvChoice::Redis), "sf-co(redis)"),
+        (DagParams::sf_orion(scale, KvChoice::S3), "sf-orion(s3)"),
+        (DagParams::sf_orion(scale, KvChoice::Redis), "sf-orion(redis)"),
+    ] {
+        let mut r = dag::run(&program, inv, params, &net, &st);
+        r.system = label.into();
+        rows.push(r);
+    }
+    rows
+}
+
+/// Fig 17: execution-time breakdown with the 44 MB input (same schemes).
+pub fn fig17_breakdown() -> Vec<RunReport> {
+    fig15_16_lr(lr::LARGE_INPUT_MB)
+}
+
+/// Fig 18: runtime-scaling technologies on the TPC-DS join stage
+/// (scale factors 100 → 267 MB and 1000 → 14.7 GB): Zenix adaptive
+/// materialization vs swap disaggregation vs best-case migration vs
+/// MigrOS vs OpenWhisk. Returns (label, reports[5]).
+pub fn fig18_scaling_tech() -> Vec<(&'static str, Vec<RunReport>)> {
+    let st = StartupModel::default();
+    let net = NetModel::default();
+    [("SF-100", 0.267f64), ("SF-1000", 14.7)]
+        .iter()
+        .map(|&(label, join_gb)| {
+            // the Join stage modeled as a ReduceBy with that data size
+            let program = tpcds::reduce_by(16, join_gb * 1024.0);
+            let graph = ResourceGraph::from_program(&program).unwrap();
+            let inv = Invocation::new(1.0);
+            let mut zen = zenix_run(ZenixConfig::default(), &graph, 1.0);
+            zen.system = "zenix".into();
+            let mut swap = zenix_run(
+                ZenixConfig { force_remote_data: true, ..ZenixConfig::default() },
+                &graph,
+                1.0,
+            );
+            swap.system = "swap-disagg".into();
+            let best = migration::run(&program, inv, migration::Flavor::BestCase, &st);
+            let migros = migration::run(&program, inv, migration::Flavor::MigrOs, &st);
+            let ow = faas::run(&program, inv, faas::Provider::OpenWhisk, false, &st);
+            let _ = &net;
+            (label, vec![zen, swap, best, migros, ow])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zenix_lowest_memory_small_input() {
+        let rows = fig15_16_lr(lr::SMALL_INPUT_MB);
+        let z = rows[0].consumption.alloc_gb_s();
+        for other in &rows[2..] {
+            assert!(
+                z < other.consumption.alloc_gb_s(),
+                "zenix {} vs {} {}",
+                z,
+                other.system,
+                other.consumption.alloc_gb_s()
+            );
+        }
+    }
+
+    #[test]
+    fn sf_close_to_lambda_far_from_zenix() {
+        // §6.1.3: SF variants only save 2-5% vs single Lambda — far less
+        // than Zenix's savings over OpenWhisk.
+        let rows = fig15_16_lr(lr::LARGE_INPUT_MB);
+        let lambda = rows.iter().find(|r| r.system == "lambda").unwrap();
+        let sf = rows.iter().find(|r| r.system == "sf-co(s3)").unwrap();
+        let ratio = sf.consumption.alloc_gb_s() / lambda.consumption.alloc_gb_s();
+        assert!(ratio > 0.6 && ratio < 1.4, "{ratio}");
+    }
+}

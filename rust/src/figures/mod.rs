@@ -1,0 +1,58 @@
+//! Figure/table regeneration harness: one function per figure or table
+//! in the paper's evaluation (DESIGN.md §5 experiment index).
+//!
+//! Each function runs the relevant systems on the relevant workload and
+//! returns the table rows (also pretty-printable). Absolute numbers are
+//! testbed-specific; the *shape* — who wins, by roughly what factor,
+//! where crossovers fall — is the reproduction target, and
+//! `rust/tests/figures_shape.rs` asserts it.
+//!
+//! Used by `rust/benches/paper_figures.rs` (cargo bench) and
+//! `examples/reproduce_all.rs` (writes results/*.txt).
+
+pub mod lr_figs;
+pub mod platform_figs;
+pub mod tpcds_figs;
+pub mod video_figs;
+
+use crate::apps::Invocation;
+use crate::cluster::ClusterSpec;
+use crate::coordinator::graph::ResourceGraph;
+use crate::coordinator::{Platform, ZenixConfig};
+use crate::metrics::RunReport;
+
+/// Run Zenix with a warmed history (the paper measures steady state:
+/// profiles exist after the sampling runs).
+pub fn zenix_run(config: ZenixConfig, graph: &ResourceGraph, scale: f64) -> RunReport {
+    let mut p = Platform::new(ClusterSpec::paper_testbed(), config);
+    for _ in 0..4 {
+        p.invoke(graph, Invocation::new(scale)).expect("warmup");
+    }
+    p.invoke(graph, Invocation::new(scale)).expect("measured run")
+}
+
+/// Render a set of reports as a text block (figure-row format).
+pub fn render(title: &str, rows: &[RunReport]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<26} {:>12} {:>12} {:>12} {:>12} {:>10} {:>8}",
+        "system", "exec (s)", "mem GB·s", "used GB·s", "vCPU·s", "cpu-util", "local%"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<26} {:>12.2} {:>12.1} {:>12.1} {:>12.1} {:>9.0}% {:>7.0}%",
+            r.system,
+            r.exec_ms / 1000.0,
+            r.consumption.alloc_gb_s(),
+            r.consumption.used_gb_s(),
+            r.consumption.alloc_cpu_s,
+            r.consumption.cpu_utilization() * 100.0,
+            r.local_fraction * 100.0,
+        );
+    }
+    out
+}

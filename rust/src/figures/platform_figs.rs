@@ -1,0 +1,372 @@
+//! Platform-mechanism figures: 7, 22, 23, 25, 26, 27, 28, 30 and the
+//! appendix startup-latency table.
+
+use crate::apps::{small, Invocation};
+use crate::baselines::faas;
+use crate::cluster::startup::{StartupModel, StartupPath};
+use crate::coordinator::adjust::{self, AdjustParams};
+use crate::coordinator::graph::ResourceGraph;
+use crate::coordinator::ZenixConfig;
+use crate::memory::{swap, AccessPattern, SwapConfig};
+use crate::metrics::RunReport;
+use crate::net::{ControlPath, ControlPlane, NetKind};
+use crate::trace::{Archetype, UsageTrace};
+
+use super::zenix_run;
+
+/// Fig 7: startup flow for a 2-compute/1-data app — event timeline
+/// (label, start ms, end ms) with and without proactive startup.
+pub fn fig07_startup_flow(proactive: bool) -> Vec<(String, f64, f64)> {
+    let m = StartupModel::default();
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    // first compute environment
+    let first = if proactive {
+        m.cold(StartupPath::ZenixPrewarmed)
+    } else {
+        m.cold(StartupPath::Zenix)
+    };
+    events.push(("env: compute-1".to_string(), t, t + first));
+    t += first;
+    // data component allocated when compute-1 starts
+    events.push(("data: alloc+mmap".to_string(), t, t + 3.0));
+    // compute-1 runs; compute-2 pre-launches in background if proactive
+    let run1 = 600.0;
+    events.push(("compute-1 runs".to_string(), t, t + run1));
+    let second_start = if proactive { t } else { t + run1 };
+    let second = m.cold(StartupPath::Zenix);
+    events.push((
+        format!("env: compute-2{}", if proactive { " (pre-launched)" } else { "" }),
+        second_start,
+        second_start + second,
+    ));
+    // QP setup hidden behind user-code load when proactive
+    let qp = m.conn_setup(true, proactive);
+    let qp_start = (second_start + second).max(t + if proactive { 0.0 } else { run1 });
+    events.push(("QP establish".to_string(), qp_start, qp_start + qp.max(0.5)));
+    let run2_start = (t + run1).max(qp_start + qp);
+    events.push(("compute-2 runs".to_string(), run2_start, run2_start + 400.0));
+    events
+}
+
+/// Fig 22: sizing strategies on Azure-archetype traces.
+/// Returns (archetype, strategy, mean utilization, mean relative slowdown).
+pub fn fig22_sizing() -> Vec<(&'static str, &'static str, f64, f64)> {
+    let mut out = Vec::new();
+    const GROWTH_PENALTY: f64 = 0.012; // relative slowdown per growth step
+    for &arch in &Archetype::ALL {
+        let trace = UsageTrace::generate(arch, 400, 7);
+        let peaks = trace.peaks();
+        for strategy in ["fixed-256/64", "peak-provision", "zenix-history"] {
+            let mut utils = Vec::new();
+            let mut slowdowns = Vec::new();
+            let mut hist: Vec<f64> = Vec::new();
+            for (i, &m) in peaks.iter().enumerate() {
+                let (init, step) = match strategy {
+                    "fixed-256/64" => (256.0, 64.0),
+                    "peak-provision" => {
+                        let p = hist.iter().cloned().fold(m, f64::max);
+                        (p, 64.0)
+                    }
+                    _ => {
+                        if i >= 3 {
+                            let s = adjust::solve(&hist, None, AdjustParams::default());
+                            (s.init_mb, s.step_mb)
+                        } else {
+                            (m, 64.0)
+                        }
+                    }
+                };
+                let g = adjust::growths(init, step, m);
+                let alloc = init + g * step;
+                utils.push((m / alloc).min(1.0));
+                slowdowns.push(1.0 + g * GROWTH_PENALTY);
+                hist.push(m);
+            }
+            out.push((
+                arch.name(),
+                strategy,
+                crate::util::stats::mean(&utils),
+                crate::util::stats::mean(&slowdowns),
+            ));
+        }
+    }
+    out
+}
+
+/// Fig 23: communication-startup variants — total time until the first
+/// remote access can proceed (env setup + conn setup), per variant.
+pub fn fig23_comm_startup() -> Vec<(&'static str, f64)> {
+    let cp = ControlPlane::default();
+    let m = cp.startup;
+    vec![
+        // bar 1: vanilla OpenWhisk — no direct channel; relayed data path
+        ("openwhisk (relay)", m.cold(StartupPath::OpenWhisk)),
+        // bar 2: + overlay network
+        (
+            "openwhisk + overlay",
+            m.cold(StartupPath::OpenWhiskOverlay)
+                + cp.conn_setup(ControlPath::Overlay, NetKind::Tcp, false),
+        ),
+        // bar 3: overlay with RDMA data stack
+        (
+            "zenix-rdma + overlay",
+            m.cold(StartupPath::ZenixOverlay)
+                + cp.conn_setup(ControlPath::Overlay, NetKind::Rdma, false),
+        ),
+        // bar 4: network virtualization module, synchronous
+        (
+            "zenix netvirt",
+            m.cold(StartupPath::Zenix)
+                + cp.conn_setup(ControlPath::NetVirt, NetKind::Rdma, false),
+        ),
+        // bar 5: + async exchange (hidden)
+        (
+            "zenix netvirt+async",
+            m.cold(StartupPath::ZenixPrewarmed)
+                + cp.conn_setup(ControlPath::NetVirtAsync, NetKind::Rdma, false),
+        ),
+    ]
+}
+
+/// Fig 25: swap microbenchmark — total pass time (ms) per array size,
+/// pattern, and local-cache size, plus the no-swap baseline.
+pub fn fig25_swap() -> Vec<(f64, &'static str, f64, f64, f64)> {
+    let mut rows = Vec::new();
+    for &array_mb in &[100.0, 200.0, 400.0, 800.0, 1600.0] {
+        for (pat, name) in [(AccessPattern::Sequential, "seq"), (AccessPattern::Random, "rand")] {
+            for &cache in &[200.0, 400.0] {
+                let run = swap::pass_overhead(
+                    array_mb,
+                    pat,
+                    SwapConfig { local_mb: cache, ..Default::default() },
+                    11,
+                );
+                rows.push((array_mb, name, cache, run.total_ms, run.overhead()));
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 26: archetype usage distributions (p10/p50/p90 peak MB).
+pub fn fig26_trace_dists() -> Vec<(&'static str, f64, f64, f64)> {
+    Archetype::ALL
+        .iter()
+        .map(|&a| {
+            let t = UsageTrace::generate(a, 2000, 3);
+            let peaks = t.peaks();
+            (
+                a.name(),
+                crate::util::stats::percentile(&peaks, 10.0),
+                crate::util::stats::percentile(&peaks, 50.0),
+                crate::util::stats::percentile(&peaks, 90.0),
+            )
+        })
+        .collect()
+}
+
+/// Figs 27+28: small-app exec time + resource consumption, Zenix vs
+/// OpenWhisk. Returns (app, zenix, openwhisk).
+pub fn fig27_28_small_apps() -> Vec<(&'static str, RunReport, RunReport)> {
+    small::all()
+        .into_iter()
+        .map(|program| {
+            let graph = ResourceGraph::from_program(&program).unwrap();
+            let z = zenix_run(ZenixConfig::default(), &graph, 1.0);
+            let ow = faas::run(
+                &program,
+                Invocation::new(1.0),
+                faas::Provider::OpenWhisk,
+                true, // small functions hit the warm pool
+                &StartupModel::default(),
+            );
+            (program.name, z, ow)
+        })
+        .collect()
+}
+
+/// Appendix startup-latency table (cold + warm per system).
+pub fn tab_startup_latency() -> Vec<(&'static str, f64)> {
+    let m = StartupModel::default();
+    vec![
+        ("OpenWhisk", m.cold(StartupPath::OpenWhisk)),
+        ("OpenWhisk + Overlay", m.cold(StartupPath::OpenWhiskOverlay)),
+        ("Zenix + Overlay", m.cold(StartupPath::ZenixOverlay)),
+        ("Zenix no overlay", m.cold(StartupPath::Zenix)),
+        ("Full Zenix (pre-warm)", m.cold(StartupPath::ZenixPrewarmed)),
+        ("AWS Lambda", m.cold(StartupPath::Lambda)),
+        ("AWS Step Functions", m.cold(StartupPath::StepFunctions)),
+        ("AWS warm", m.warm(StartupPath::Lambda)),
+        ("OpenWhisk warm", m.warm(StartupPath::OpenWhisk)),
+        ("Zenix warm", m.warm(StartupPath::Zenix)),
+    ]
+}
+
+/// Fig 30: fixed-cluster comparison — a mixed workload replayed on the
+/// same total resources under Zenix vs peak-provisioned FaaS. Returns
+/// (system, makespan s, mean memory utilization).
+///
+/// Capacity-constrained list schedule: invocations run when their peak
+/// footprint fits the remaining cluster capacity.
+pub fn fig30_cluster_util(invocations: usize) -> Vec<(&'static str, f64, f64)> {
+    use crate::apps::{lr, tpcds, video};
+    let programs =
+        [lr::program(), tpcds::query(1), video::pipeline()];
+    let scales = [0.5, 1.0, 0.2];
+    let capacity_mb = 8.0 * 65536.0;
+
+    // Per-invocation footprints: (alloc MB during run, duration ms, used MB)
+    let mut zenix_jobs = Vec::new();
+    let mut faas_jobs = Vec::new();
+    for i in 0..invocations {
+        let idx = i % programs.len();
+        let program = &programs[idx];
+        let scale = scales[idx];
+        let graph = ResourceGraph::from_program(program).unwrap();
+        let z = zenix_run(ZenixConfig::default(), &graph, scale);
+        let dur = z.exec_ms.max(1.0);
+        zenix_jobs.push((
+            (z.consumption.alloc_mem_mb_s * 1000.0 / dur).max(1.0),
+            dur,
+            z.consumption.used_mem_mb_s * 1000.0 / dur,
+        ));
+        let f = faas::run(
+            program,
+            Invocation::new(scale),
+            faas::Provider::OpenWhisk,
+            i > 2,
+            &StartupModel::default(),
+        );
+        let fdur = f.exec_ms.max(1.0);
+        faas_jobs.push((
+            f.peak_mem_mb.max(1.0),
+            fdur,
+            f.consumption.used_mem_mb_s * 1000.0 / fdur,
+        ));
+    }
+
+    let mut out = Vec::new();
+    for (name, jobs) in [("zenix", &zenix_jobs), ("openwhisk", &faas_jobs)] {
+        let (makespan, util) = list_schedule(jobs, capacity_mb);
+        out.push((name, makespan / 1000.0, util));
+    }
+    out
+}
+
+/// Greedy capacity-constrained list scheduler: returns (makespan ms,
+/// time-weighted memory utilization of the *occupied* capacity).
+fn list_schedule(jobs: &[(f64, f64, f64)], capacity: f64) -> (f64, f64) {
+    // event-driven: (finish time, footprint, used)
+    let mut running: Vec<(f64, f64, f64)> = Vec::new();
+    let mut t = 0.0f64;
+    let mut used_integral = 0.0f64;
+    let mut alloc_integral = 0.0f64;
+    let mut last = 0.0f64;
+    let mut occupancy = 0.0f64;
+    let mut used_now = 0.0f64;
+    for &(mb, dur, used) in jobs {
+        let mb = mb.min(capacity);
+        // wait until it fits
+        while occupancy + mb > capacity {
+            // advance to earliest finish
+            running.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (ft, fmb, fused) = running.remove(0);
+            let now = ft.max(t);
+            alloc_integral += occupancy * (now - last);
+            used_integral += used_now * (now - last);
+            last = now;
+            t = now;
+            occupancy -= fmb;
+            used_now -= fused;
+        }
+        alloc_integral += occupancy * (t.max(last) - last);
+        used_integral += used_now * (t.max(last) - last);
+        last = t.max(last);
+        running.push((t + dur, mb, used));
+        occupancy += mb;
+        used_now += used;
+    }
+    let mut makespan = t;
+    running.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (ft, fmb, fused) in running {
+        alloc_integral += occupancy * (ft - last);
+        used_integral += used_now * (ft - last);
+        last = ft;
+        occupancy -= fmb;
+        used_now -= fused;
+        makespan = ft;
+    }
+    let util = if alloc_integral <= 0.0 { 1.0 } else { (used_integral / alloc_integral).min(1.0) };
+    (makespan, util)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig23_bars_ordered_like_paper() {
+        let bars = fig23_comm_startup();
+        let t = |name: &str| bars.iter().find(|b| b.0.contains(name)).unwrap().1;
+        assert!(t("overlay") > t("openwhisk (relay)"));
+        assert!(t("netvirt") < t("zenix-rdma + overlay"));
+        assert!(t("netvirt+async") < t("zenix netvirt"));
+    }
+
+    #[test]
+    fn fig22_history_beats_fixed_on_utilization() {
+        let rows = fig22_sizing();
+        for arch in ["large", "varying", "average"] {
+            let util = |strategy: &str| {
+                rows.iter()
+                    .find(|r| r.0 == arch && r.1 == strategy)
+                    .unwrap()
+                    .2
+            };
+            assert!(
+                util("zenix-history") > util("peak-provision") - 0.05,
+                "{arch}: history {} vs peak {}",
+                util("zenix-history"),
+                util("peak-provision")
+            );
+        }
+    }
+
+    #[test]
+    fn fig25_overhead_band_matches_paper() {
+        // paper: +1% to +26% overhead for the in-band configurations
+        let rows = fig25_swap();
+        let in_band: Vec<f64> = rows
+            .iter()
+            .filter(|(array, _, cache, _, _)| array <= cache) // fits: no swap
+            .map(|r| r.4)
+            .collect();
+        assert!(in_band.iter().all(|&o| o.abs() < 0.01), "no-swap must be ~0");
+        let swapping: Vec<f64> = rows
+            .iter()
+            .filter(|(array, _, cache, _, _)| array > cache)
+            .map(|r| r.4)
+            .collect();
+        assert!(swapping.iter().all(|&o| o > 0.0));
+    }
+
+    #[test]
+    fn fig07_proactive_timeline_shorter() {
+        let end = |evts: &[(String, f64, f64)]| {
+            evts.iter().map(|e| e.2).fold(0.0, f64::max)
+        };
+        let pro = fig07_startup_flow(true);
+        let base = fig07_startup_flow(false);
+        assert!(end(&pro) < end(&base));
+    }
+
+    #[test]
+    fn list_schedule_respects_capacity() {
+        let jobs = vec![(50.0, 10.0, 40.0); 4];
+        let (makespan, util) = list_schedule(&jobs, 100.0);
+        // only 2 fit at a time → two batches of 10 ms
+        assert!((makespan - 20.0).abs() < 1e-6, "{makespan}");
+        assert!(util > 0.7);
+    }
+}

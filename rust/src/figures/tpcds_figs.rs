@@ -1,0 +1,176 @@
+//! TPC-DS figures: 3, 4, 8, 9, 10, 19, 20, 21.
+
+use crate::apps::{tpcds, Invocation};
+use crate::baselines::dag::{self, DagParams};
+use crate::cluster::{ClusterSpec, StartupModel};
+use crate::coordinator::graph::ResourceGraph;
+use crate::coordinator::{Platform, ZenixConfig};
+use crate::metrics::RunReport;
+use crate::net::NetModel;
+
+use super::zenix_run;
+
+/// Fig 3: per-stage resource variation inside Q95 at 100 GB.
+/// Rows: (stage name, parallel workers, total stage memory MB).
+pub fn fig03_stage_variation() -> Vec<(String, usize, f64)> {
+    let p = tpcds::query(95);
+    let scale = tpcds::scale_for_gb(100.0);
+    p.computes
+        .iter()
+        .map(|c| {
+            let w = c.parallelism_at(scale);
+            (c.name.to_string(), w, w as f64 * c.mem_at(scale))
+        })
+        .collect()
+}
+
+/// Fig 4: per-stage memory across input sizes 10..200 GB for Q95.
+/// Rows: (stage, min MB, avg MB, max MB).
+pub fn fig04_input_variation() -> Vec<(String, f64, f64, f64)> {
+    let p = tpcds::query(95);
+    let sizes = [10.0, 20.0, 50.0, 100.0, 200.0];
+    p.computes
+        .iter()
+        .map(|c| {
+            let mems: Vec<f64> = sizes
+                .iter()
+                .map(|&gb| {
+                    let s = tpcds::scale_for_gb(gb);
+                    c.parallelism_at(s) as f64 * c.mem_at(s)
+                })
+                .collect();
+            let min = mems.iter().cloned().fold(f64::MAX, f64::min);
+            let max = mems.iter().cloned().fold(0.0, f64::max);
+            let avg = mems.iter().sum::<f64>() / mems.len() as f64;
+            (c.name.to_string(), min, avg, max)
+        })
+        .collect()
+}
+
+/// Figs 8+9: Zenix vs PyWren on Q1/Q16/Q95 — memory consumption and
+/// execution time. Returns (query, zenix report, pywren report).
+pub fn fig08_09_tpcds(gb: f64) -> Vec<(u32, RunReport, RunReport)> {
+    let scale = tpcds::scale_for_gb(gb);
+    tpcds::QUERIES
+        .iter()
+        .map(|&q| {
+            let program = tpcds::query(q);
+            let graph = ResourceGraph::from_program(&program).unwrap();
+            let z = zenix_run(ZenixConfig::default(), &graph, scale);
+            let w = dag::run(
+                &program,
+                Invocation::new(scale),
+                DagParams::pywren(scale),
+                &NetModel::default(),
+                &StartupModel::default(),
+            );
+            (q, z, w)
+        })
+        .collect()
+}
+
+/// Fig 10: ablation on Q16 — DAG → +static RG → +adaptive → +proactive
+/// +history. Returns reports in that order.
+pub fn fig10_ablation(gb: f64) -> Vec<RunReport> {
+    let scale = tpcds::scale_for_gb(gb);
+    let program = tpcds::query(16);
+    let graph = ResourceGraph::from_program(&program).unwrap();
+    let dag_base = dag::run(
+        &program,
+        Invocation::new(scale),
+        DagParams::pywren(scale),
+        &NetModel::default(),
+        &StartupModel::default(),
+    );
+    let mut rows = vec![dag_base];
+    for (name, cfg) in [
+        ("zenix:static-rg", ZenixConfig::static_graph()),
+        ("zenix:+adaptive", ZenixConfig::adaptive_only()),
+        ("zenix:+proactive+history", ZenixConfig::default()),
+    ] {
+        let mut r = zenix_run(cfg, &graph, scale);
+        r.system = name.into();
+        rows.push(r);
+    }
+    rows
+}
+
+/// Figs 19+20: Q1 memory/time across input sizes vs PyWren.
+/// Returns (gb, zenix, pywren).
+pub fn fig19_20_q1_inputs() -> Vec<(f64, RunReport, RunReport)> {
+    let program = tpcds::query(1);
+    let graph = ResourceGraph::from_program(&program).unwrap();
+    // PyWren provisioned once for the largest anticipated input (200 GB).
+    let provision_scale = tpcds::scale_for_gb(200.0);
+    [5.0, 10.0, 20.0, 100.0, 200.0]
+        .iter()
+        .map(|&gb| {
+            let scale = tpcds::scale_for_gb(gb);
+            let z = zenix_run(ZenixConfig::default(), &graph, scale);
+            let w = dag::run(
+                &program,
+                Invocation::new(scale),
+                DagParams {
+                    sizing: dag::FnSizing::PeakStatic { max_scale: provision_scale },
+                    ..DagParams::pywren(provision_scale)
+                },
+                &NetModel::default(),
+                &StartupModel::default(),
+            );
+            (gb, z, w)
+        })
+        .collect()
+}
+
+/// Fig 21: adaptive placement on the ReduceBy fan-in — local vs
+/// remote-scale vs disaggregated, across sender counts.
+/// Returns (senders, data GB, local, remote-scale, disagg) reports.
+pub fn fig21_placement() -> Vec<(usize, f64, RunReport, RunReport, RunReport)> {
+    [(3usize, 730.0f64), (30, 11300.0), (120, 113000.0)]
+        .iter()
+        .map(|&(senders, mb)| {
+            let program = tpcds::reduce_by(senders, mb);
+            let graph = ResourceGraph::from_program(&program).unwrap();
+            // local: everything on one machine (single-server cluster big
+            // enough to hold it).
+            let local = {
+                let spec = ClusterSpec {
+                    racks: 1,
+                    servers_per_rack: 1,
+                    server_capacity: crate::cluster::Resources::new(128.0, 262144.0),
+                };
+                let mut p = Platform::new(spec, ZenixConfig::default());
+                p.invoke(&graph, Invocation::new(1.0)).unwrap()
+            };
+            // remote-scale: paper testbed, data spills as it grows.
+            let remote = zenix_run(ZenixConfig::default(), &graph, 1.0);
+            // disagg: all data forced remote.
+            let disagg = zenix_run(
+                ZenixConfig { force_remote_data: true, ..ZenixConfig::default() },
+                &graph,
+                1.0,
+            );
+            (senders, mb / 1024.0, local, remote, disagg)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig03_has_variation() {
+        let rows = fig03_stage_variation();
+        assert_eq!(rows.len(), 5);
+        let max_w = rows.iter().map(|r| r.1).max().unwrap();
+        let min_w = rows.iter().map(|r| r.1).min().unwrap();
+        assert!(max_w >= 10 * min_w);
+    }
+
+    #[test]
+    fn fig04_max_exceeds_min_10x_somewhere() {
+        let rows = fig04_input_variation();
+        assert!(rows.iter().any(|(_, min, _, max)| max / min > 10.0));
+    }
+}

@@ -1,0 +1,91 @@
+//! Video-transcode figures: 11, 12, 13, 14.
+
+use crate::apps::{video, Invocation};
+use crate::baselines::dag::{self, DagParams};
+use crate::baselines::vpxenc;
+use crate::cluster::StartupModel;
+use crate::coordinator::graph::ResourceGraph;
+use crate::coordinator::ZenixConfig;
+use crate::metrics::RunReport;
+use crate::net::NetModel;
+
+use super::zenix_run;
+
+/// Figs 11-13: execution time / memory / CPU for each resolution across
+/// Zenix, ExCamera, gg, vpxenc. Returns (resolution, reports[4]).
+pub fn fig11_13_video() -> Vec<(&'static str, Vec<RunReport>)> {
+    let program = video::pipeline();
+    let graph = ResourceGraph::from_program(&program).unwrap();
+    let max_scale = video::Resolution::K4.scale(); // provision for 4K
+    video::Resolution::ALL
+        .iter()
+        .map(|res| {
+            let scale = res.scale();
+            let inv = Invocation::new(scale);
+            let z = zenix_run(ZenixConfig::default(), &graph, scale);
+            let ex = dag::run(
+                &program,
+                inv,
+                DagParams::excamera(max_scale),
+                &NetModel::default(),
+                &StartupModel::default(),
+            );
+            let gg = dag::run(
+                &program,
+                inv,
+                DagParams::gg(max_scale),
+                &NetModel::default(),
+                &StartupModel::default(),
+            );
+            let vp = vpxenc::run(&program, inv);
+            (res.name(), vec![z, ex, gg, vp])
+        })
+        .collect()
+}
+
+/// Fig 14: ablation on the 720P transcode (same axes as Fig 10).
+pub fn fig14_ablation() -> Vec<RunReport> {
+    let program = video::pipeline();
+    let graph = ResourceGraph::from_program(&program).unwrap();
+    let scale = video::Resolution::P720.scale();
+    let dag_base = dag::run(
+        &program,
+        Invocation::new(scale),
+        DagParams::gg(video::Resolution::K4.scale()),
+        &NetModel::default(),
+        &StartupModel::default(),
+    );
+    let mut rows = vec![dag_base];
+    for (name, cfg) in [
+        ("zenix:static-rg", ZenixConfig::static_graph()),
+        ("zenix:+adaptive", ZenixConfig::adaptive_only()),
+        ("zenix:+proactive+history", ZenixConfig::default()),
+    ] {
+        let mut r = zenix_run(cfg, &graph, scale);
+        r.system = name.into();
+        rows.push(r);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zenix_wins_at_every_resolution() {
+        for (res, rows) in fig11_13_video() {
+            let zenix = &rows[0];
+            for other in &rows[1..3] {
+                // beats the serverless baselines on memory GB·s
+                assert!(
+                    zenix.consumption.alloc_gb_s() < other.consumption.alloc_gb_s(),
+                    "{res}: zenix {} vs {} {}",
+                    zenix.consumption.alloc_gb_s(),
+                    other.system,
+                    other.consumption.alloc_gb_s()
+                );
+            }
+        }
+    }
+}

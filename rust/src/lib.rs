@@ -1,0 +1,40 @@
+//! # Zenix — resource-centric serverless for bulky applications
+//!
+//! Reproduction of the paper's platform (see `DESIGN.md`, which also
+//! records the Zenix/BulkX naming note). The crate is organised in the
+//! layers the paper describes:
+//!
+//! - [`cluster`] — the cluster substrate: servers, racks, containers, a
+//!   discrete-event virtual clock and resource accounting.
+//! - [`net`] — network cost models: TCP vs RDMA data paths and the
+//!   control-path variants of §5.2.2 / §9.4 (overlay, network
+//!   virtualization, scheduler-assisted async exchange).
+//! - [`memory`] — the memory controller: data components, local mmap vs
+//!   remote regions, growth, and the user-space NRU swap of §9.2.
+//! - [`apps`] — annotated-program model (`@compute` / `@data` /
+//!   `@app_limit`) and the paper's workloads (TPC-DS Q1/16/95, the
+//!   ExCamera video pipeline, Cirrus LR, SeBS small functions).
+//! - [`coordinator`] — the paper's contribution: resource-graph IR,
+//!   two-level scheduler, locality placement, adaptive materialization,
+//!   autoscaling, history-based sizing, proactive startup, failure
+//!   recovery.
+//! - [`baselines`] — every system the paper compares against.
+//! - [`runtime`] — PJRT execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text; python never on request path).
+//! - [`metrics`] — GB·s / vCPU·s accounting and figure-row printers.
+//! - [`trace`] — Azure-archetype invocation/usage trace generators.
+
+pub mod apps;
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+
+/// Convenient result alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;

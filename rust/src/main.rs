@@ -1,0 +1,105 @@
+//! Zenix CLI launcher.
+//!
+//! ```text
+//! zenix demo                      quickstart LR run (platform + PJRT)
+//! zenix invoke <app> [scale]      run one invocation on the testbed
+//! zenix figures                   regenerate the paper's figures
+//! zenix cluster [racks servers]   print cluster/topology summary
+//! zenix help
+//! ```
+//!
+//! Apps: lr, tpcds-q1, tpcds-q16, tpcds-q95, video, small:<name>.
+
+use zenix::apps::{lr, small, tpcds, video, Invocation, Program};
+use zenix::coordinator::graph::ResourceGraph;
+use zenix::coordinator::Platform;
+use zenix::metrics::print_table;
+
+fn program_by_name(name: &str) -> zenix::Result<Program> {
+    Ok(match name {
+        "lr" => lr::program(),
+        "tpcds-q1" => tpcds::query(1),
+        "tpcds-q16" => tpcds::query(16),
+        "tpcds-q95" => tpcds::query(95),
+        "video" => video::pipeline(),
+        other => {
+            if let Some(app) = other.strip_prefix("small:") {
+                let name = small::NAMES
+                    .iter()
+                    .find(|n| **n == app)
+                    .ok_or_else(|| anyhow::anyhow!("unknown small app {app:?} (have {:?})", small::NAMES))?;
+                small::app(name)
+            } else {
+                anyhow::bail!(
+                    "unknown app {other:?}; try lr, tpcds-q1, tpcds-q16, tpcds-q95, video, small:<name>"
+                );
+            }
+        }
+    })
+}
+
+fn cmd_invoke(app: &str, scale: f64) -> zenix::Result<()> {
+    let program = program_by_name(app)?;
+    let graph = ResourceGraph::from_program(&program)?;
+    let mut platform = Platform::testbed();
+    // warm the profiles like the paper's sampling runs
+    for _ in 0..3 {
+        platform.invoke(&graph, Invocation::new(scale))?;
+    }
+    let report = platform.invoke(&graph, Invocation::new(scale))?;
+    print_table(&format!("{app} @ scale {scale}"), &[report]);
+    Ok(())
+}
+
+fn cmd_cluster(racks: usize, servers: usize) {
+    let spec = zenix::cluster::ClusterSpec::multi_rack(racks, servers);
+    let cluster = zenix::cluster::Cluster::new(spec);
+    let cap = cluster.total_capacity();
+    println!(
+        "cluster: {racks} rack(s) × {servers} server(s) — {} servers, {:.0} vCPU, {:.0} GB",
+        cluster.servers().len(),
+        cap.cpu,
+        cap.mem_mb / 1024.0
+    );
+    for r in cluster.racks() {
+        let a = cluster.rack_available(r);
+        println!("  rack {:>2}: {:.0} vCPU / {:.0} GB available", r.0, a.cpu, a.mem_mb / 1024.0);
+    }
+}
+
+fn main() -> zenix::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("demo") => cmd_invoke("lr", 1.0),
+        Some("invoke") => {
+            let app = args.get(1).map(|s| s.as_str()).unwrap_or("lr");
+            let scale = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            cmd_invoke(app, scale)
+        }
+        Some("figures") => {
+            println!("regenerating all figures (also: cargo run --release --example reproduce_all)");
+            let status = std::process::Command::new(std::env::current_exe()?.parent().unwrap().join("examples/reproduce_all"))
+                .status();
+            if status.is_err() {
+                println!("run: cargo run --release --example reproduce_all");
+            }
+            Ok(())
+        }
+        Some("cluster") => {
+            let racks = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+            let servers = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+            cmd_cluster(racks, servers);
+            Ok(())
+        }
+        _ => {
+            println!(
+                "zenix — resource-centric serverless for bulky applications\n\n\
+                 usage:\n  zenix demo\n  zenix invoke <app> [scale]\n  zenix figures\n  zenix cluster [racks servers]\n\n\
+                 apps: lr, tpcds-q1, tpcds-q16, tpcds-q95, video, small:<name>\n\
+                 small apps: {:?}",
+                small::NAMES
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Per-server memory controller state for data components (§5.1.2).
+//!
+//! A *data component* is one resource-graph node; at runtime it
+//! materializes as one or more *physical memory regions*, each on some
+//! server. Co-located regions are mmap-ed into the accessing container;
+//! remote regions are reached over RDMA MRs or the TCP controller
+//! process (§9.1). Growth allocates additional regions, local-first
+//! (§5.1.1 scaling policy).
+
+use std::collections::HashMap;
+
+use crate::cluster::clock::Millis;
+use crate::cluster::{Cluster, Resources, ServerId};
+use crate::Result;
+
+/// Identifier of one physical memory region within a data component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegionId(pub usize);
+
+/// One physical region of a data component.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: RegionId,
+    pub server: ServerId,
+    pub mb: f64,
+    /// RDMA memory-region + protection-domain identity (§9.1 isolation:
+    /// one MR + PD per physical component). Modeled as a tag checked by
+    /// access validation.
+    pub mr_tag: u64,
+}
+
+/// Runtime state of one data component: its regions and accessors.
+#[derive(Debug, Clone, Default)]
+pub struct DataComponentState {
+    pub regions: Vec<Region>,
+    /// Live accessor compute components (by opaque id). The component
+    /// ends when the last accessor releases it (§5.1.2).
+    pub accessors: Vec<u64>,
+    next_region: usize,
+    next_mr_tag: u64,
+}
+
+impl DataComponentState {
+    pub fn total_mb(&self) -> f64 {
+        self.regions.iter().map(|r| r.mb).sum()
+    }
+
+    /// MB resident on `server`.
+    pub fn local_mb(&self, server: ServerId) -> f64 {
+        self.regions.iter().filter(|r| r.server == server).map(|r| r.mb).sum()
+    }
+
+    /// Fraction of this component remote to `server` (for slowdown
+    /// models). 0.0 when empty.
+    pub fn remote_fraction(&self, server: ServerId) -> f64 {
+        let total = self.total_mb();
+        if total <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.local_mb(server) / total
+        }
+    }
+}
+
+/// The memory controller: allocates/grows/releases data-component
+/// regions against cluster capacity.
+#[derive(Debug, Default)]
+pub struct MemoryController {
+    components: HashMap<u64, DataComponentState>,
+}
+
+impl MemoryController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&DataComponentState> {
+        self.components.get(&id)
+    }
+
+    /// Start a data component with an initial region on `server`
+    /// (invoked when its first accessor starts, §5.1.2).
+    pub fn launch(
+        &mut self,
+        cluster: &mut Cluster,
+        id: u64,
+        server: ServerId,
+        mb: f64,
+        now: Millis,
+    ) -> Result<RegionId> {
+        if self.components.contains_key(&id) {
+            anyhow::bail!("data component {id} already launched");
+        }
+        if !cluster.server_mut(server).try_alloc(Resources::mem_only(mb), now) {
+            anyhow::bail!("server {server:?} cannot fit {mb} MB");
+        }
+        cluster.server_mut(server).add_used(Resources::mem_only(mb), now);
+        let mut state = DataComponentState::default();
+        let rid = RegionId(0);
+        state.regions.push(Region { id: rid, server, mb, mr_tag: 0 });
+        state.next_region = 1;
+        state.next_mr_tag = 1;
+        self.components.insert(id, state);
+        Ok(rid)
+    }
+
+    /// Grow a component by `mb`, preferring its existing servers, then
+    /// any of `candidates` in order (§5.1.1: same server, then servers
+    /// running accessors, then smallest-available).
+    pub fn grow(
+        &mut self,
+        cluster: &mut Cluster,
+        id: u64,
+        mb: f64,
+        candidates: &[ServerId],
+        now: Millis,
+    ) -> Result<RegionId> {
+        let state = self
+            .components
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
+        let mut order: Vec<ServerId> = state.regions.iter().map(|r| r.server).collect();
+        order.extend_from_slice(candidates);
+        for server in order {
+            if cluster.server_mut(server).try_alloc(Resources::mem_only(mb), now) {
+                cluster.server_mut(server).add_used(Resources::mem_only(mb), now);
+                let rid = RegionId(state.next_region);
+                state.next_region += 1;
+                let mr_tag = state.next_mr_tag;
+                state.next_mr_tag += 1;
+                state.regions.push(Region { id: rid, server, mb, mr_tag });
+                return Ok(rid);
+            }
+        }
+        anyhow::bail!("no candidate server can fit {mb} MB for component {id}")
+    }
+
+    /// Register/unregister an accessor; the component is released when
+    /// the last accessor unregisters (returns freed MB).
+    pub fn attach(&mut self, id: u64, accessor: u64) -> Result<()> {
+        let state = self
+            .components
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
+        state.accessors.push(accessor);
+        Ok(())
+    }
+
+    pub fn detach(
+        &mut self,
+        cluster: &mut Cluster,
+        id: u64,
+        accessor: u64,
+        now: Millis,
+    ) -> Result<bool> {
+        let state = self
+            .components
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
+        if let Some(pos) = state.accessors.iter().position(|&a| a == accessor) {
+            state.accessors.swap_remove(pos);
+        }
+        if state.accessors.is_empty() {
+            self.release(cluster, id, now)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Release all regions of a component (end of life or failure
+    /// discard, §5.3.2).
+    pub fn release(&mut self, cluster: &mut Cluster, id: u64, now: Millis) -> Result<f64> {
+        let state = self
+            .components
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
+        let mut freed = 0.0;
+        for r in state.regions {
+            cluster.server_mut(r.server).sub_used(Resources::mem_only(r.mb), now);
+            cluster.server_mut(r.server).free(Resources::mem_only(r.mb), now);
+            freed += r.mb;
+        }
+        Ok(freed)
+    }
+
+    /// Servers currently holding regions of `id` (QP-reuse check, §9.4).
+    pub fn region_servers(&self, id: u64) -> Vec<ServerId> {
+        self.get(id)
+            .map(|s| s.regions.iter().map(|r| r.server).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, RackId};
+
+    fn small_cluster() -> Cluster {
+        // 2 servers × 1024 MB so growth must spill.
+        Cluster::new(ClusterSpec {
+            racks: 1,
+            servers_per_rack: 2,
+            server_capacity: Resources::new(8.0, 1024.0),
+        })
+    }
+
+    #[test]
+    fn launch_grow_release_conserves_memory() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 1, ServerId(0), 512.0, 0.0).unwrap();
+        assert_eq!(cluster.server(ServerId(0)).available().mem_mb, 512.0);
+        // grows locally first
+        mc.grow(&mut cluster, 1, 256.0, &[ServerId(1)], 1.0).unwrap();
+        assert_eq!(cluster.server(ServerId(0)).available().mem_mb, 256.0);
+        // then spills to the candidate when local is full
+        mc.grow(&mut cluster, 1, 512.0, &[ServerId(1)], 2.0).unwrap();
+        assert_eq!(cluster.server(ServerId(1)).available().mem_mb, 512.0);
+        assert_eq!(mc.get(1).unwrap().total_mb(), 1280.0);
+        let freed = mc.release(&mut cluster, 1, 3.0).unwrap();
+        assert_eq!(freed, 1280.0);
+        assert_eq!(cluster.server(ServerId(0)).available().mem_mb, 1024.0);
+        assert_eq!(cluster.server(ServerId(1)).available().mem_mb, 1024.0);
+    }
+
+    #[test]
+    fn remote_fraction_reflects_region_split() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 7, ServerId(0), 300.0, 0.0).unwrap();
+        assert_eq!(mc.get(7).unwrap().remote_fraction(ServerId(0)), 0.0);
+        // force the growth remote by filling server 0
+        cluster.server_mut(ServerId(0)).try_alloc(Resources::mem_only(724.0), 0.0);
+        mc.grow(&mut cluster, 7, 100.0, &[ServerId(1)], 1.0).unwrap();
+        let f = mc.get(7).unwrap().remote_fraction(ServerId(0));
+        assert!((f - 0.25).abs() < 1e-9, "{f}");
+        assert_eq!(mc.region_servers(7), vec![ServerId(0), ServerId(1)]);
+    }
+
+    #[test]
+    fn detach_releases_on_last_accessor() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 3, ServerId(0), 100.0, 0.0).unwrap();
+        mc.attach(3, 11).unwrap();
+        mc.attach(3, 12).unwrap();
+        assert!(!mc.detach(&mut cluster, 3, 11, 1.0).unwrap());
+        assert!(mc.get(3).is_some());
+        assert!(mc.detach(&mut cluster, 3, 12, 2.0).unwrap());
+        assert!(mc.get(3).is_none());
+        assert_eq!(cluster.server(ServerId(0)).available().mem_mb, 1024.0);
+    }
+
+    #[test]
+    fn launch_rejects_oversize_and_duplicates() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        assert!(mc.launch(&mut cluster, 1, ServerId(0), 4096.0, 0.0).is_err());
+        mc.launch(&mut cluster, 1, ServerId(0), 10.0, 0.0).unwrap();
+        assert!(mc.launch(&mut cluster, 1, ServerId(1), 10.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn grow_fails_when_cluster_full() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 1, ServerId(0), 1024.0, 0.0).unwrap();
+        mc.grow(&mut cluster, 1, 1024.0, &[ServerId(1)], 1.0).unwrap();
+        let err = mc.grow(&mut cluster, 1, 1.0, &[ServerId(1)], 2.0);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn mr_tags_unique_per_region() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 1, ServerId(0), 10.0, 0.0).unwrap();
+        mc.grow(&mut cluster, 1, 10.0, &[], 1.0).unwrap();
+        mc.grow(&mut cluster, 1, 10.0, &[], 2.0).unwrap();
+        let tags: Vec<u64> = mc.get(1).unwrap().regions.iter().map(|r| r.mr_tag).collect();
+        let mut dedup = tags.clone();
+        dedup.dedup();
+        assert_eq!(tags.len(), dedup.len());
+        let _ = RackId(0); // silence unused import in some cfgs
+    }
+}

@@ -1,0 +1,9 @@
+//! Memory controller substrate: data components as sets of physical
+//! memory regions, local mmap vs remote regions, growth, and the
+//! user-space swap system of §9.2.
+
+pub mod controller;
+pub mod swap;
+
+pub use controller::{DataComponentState, MemoryController, RegionId};
+pub use swap::{AccessPattern, SwapConfig, SwapSim};

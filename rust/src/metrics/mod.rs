@@ -1,0 +1,177 @@
+//! Resource/performance accounting and figure-row reporting.
+//!
+//! Every platform run (Zenix or baseline) produces a [`RunReport`]:
+//! end-to-end time, a latency breakdown, and time-integrated resource
+//! consumption split into used vs unused — the quantities on the y-axes
+//! of the paper's Figs 8-22.
+
+use crate::cluster::clock::Millis;
+use crate::cluster::server::Consumption;
+
+/// Where the end-to-end time went (Fig 10/17 breakdowns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Application compute.
+    pub compute_ms: Millis,
+    /// Environment startup (containers, runtimes, user code).
+    pub startup_ms: Millis,
+    /// Data movement: remote memory, KV-store hops, shuffles.
+    pub io_ms: Millis,
+    /// Serialization/deserialization (function-DAG baselines).
+    pub serialize_ms: Millis,
+    /// Scheduling + control-plane messaging.
+    pub sched_ms: Millis,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> Millis {
+        self.compute_ms + self.startup_ms + self.io_ms + self.serialize_ms + self.sched_ms
+    }
+
+    pub fn plus(&self, o: &Breakdown) -> Breakdown {
+        Breakdown {
+            compute_ms: self.compute_ms + o.compute_ms,
+            startup_ms: self.startup_ms + o.startup_ms,
+            io_ms: self.io_ms + o.io_ms,
+            serialize_ms: self.serialize_ms + o.serialize_ms,
+            sched_ms: self.sched_ms + o.sched_ms,
+        }
+    }
+}
+
+/// One system × workload run.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub system: String,
+    pub workload: String,
+    /// End-to-end makespan (critical path), ms.
+    pub exec_ms: Millis,
+    /// Critical-path breakdown (may not sum to exec_ms when stages
+    /// overlap; it decomposes the *work*, exec_ms measures the path).
+    pub breakdown: Breakdown,
+    /// Time-integrated resource consumption (allocated + used).
+    pub consumption: Consumption,
+    /// Fraction of components co-located on their data's server.
+    pub local_fraction: f64,
+    /// Peak concurrent resource footprint.
+    pub peak_cpu: f64,
+    pub peak_mem_mb: f64,
+}
+
+impl RunReport {
+    /// Allocated-but-unused memory GB·s (the hatched bar in Figs 12/15/16).
+    pub fn unused_gb_s(&self) -> f64 {
+        (self.consumption.alloc_gb_s() - self.consumption.used_gb_s()).max(0.0)
+    }
+
+    /// Relative savings of `self` vs `other` in allocated memory GB·s.
+    pub fn mem_savings_vs(&self, other: &RunReport) -> f64 {
+        let a = self.consumption.alloc_gb_s();
+        let b = other.consumption.alloc_gb_s();
+        if b <= 0.0 {
+            0.0
+        } else {
+            1.0 - a / b
+        }
+    }
+
+    /// Relative speedup of `self` vs `other`.
+    pub fn speedup_vs(&self, other: &RunReport) -> f64 {
+        if self.exec_ms <= 0.0 {
+            0.0
+        } else {
+            other.exec_ms / self.exec_ms
+        }
+    }
+}
+
+/// Pretty-print a paper-style comparison table.
+pub fn print_table(title: &str, rows: &[RunReport]) {
+    println!("\n### {title}");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>12} {:>10} {:>8}",
+        "system", "exec (s)", "mem GB·s", "used GB·s", "vCPU·s", "cpu-util", "local%"
+    );
+    for r in rows {
+        println!(
+            "{:<26} {:>12.2} {:>12.1} {:>12.1} {:>12.1} {:>9.0}% {:>7.0}%",
+            r.system,
+            r.exec_ms / 1000.0,
+            r.consumption.alloc_gb_s(),
+            r.consumption.used_gb_s(),
+            r.consumption.alloc_cpu_s,
+            r.consumption.cpu_utilization() * 100.0,
+            r.local_fraction * 100.0,
+        );
+    }
+}
+
+/// Print a breakdown table (Fig 10/17 style).
+pub fn print_breakdown(title: &str, rows: &[RunReport]) {
+    println!("\n### {title} (time breakdown, s)");
+    println!(
+        "{:<26} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "system", "compute", "startup", "io", "serde", "sched"
+    );
+    for r in rows {
+        let b = &r.breakdown;
+        println!(
+            "{:<26} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            r.system,
+            b.compute_ms / 1000.0,
+            b.startup_ms / 1000.0,
+            b.io_ms / 1000.0,
+            b.serialize_ms / 1000.0,
+            b.sched_ms / 1000.0,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(alloc_gb_s: f64, used_gb_s: f64, exec_ms: f64) -> RunReport {
+        RunReport {
+            system: "t".into(),
+            consumption: Consumption {
+                alloc_mem_mb_s: alloc_gb_s * 1024.0,
+                used_mem_mb_s: used_gb_s * 1024.0,
+                alloc_cpu_s: 10.0,
+                used_cpu_s: 5.0,
+            },
+            exec_ms,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn savings_and_speedup() {
+        let zenix = report(20.0, 18.0, 1000.0);
+        let pywren = report(100.0, 40.0, 2500.0);
+        assert!((zenix.mem_savings_vs(&pywren) - 0.8).abs() < 1e-9);
+        assert!((zenix.speedup_vs(&pywren) - 2.5).abs() < 1e-9);
+        assert!((zenix.unused_gb_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let b = Breakdown {
+            compute_ms: 1.0,
+            startup_ms: 2.0,
+            io_ms: 3.0,
+            serialize_ms: 4.0,
+            sched_ms: 5.0,
+        };
+        assert_eq!(b.total(), 15.0);
+        assert_eq!(b.plus(&b).total(), 30.0);
+    }
+
+    #[test]
+    fn degenerate_denominators() {
+        let a = report(0.0, 0.0, 0.0);
+        let b = report(0.0, 0.0, 0.0);
+        assert_eq!(a.mem_savings_vs(&b), 0.0);
+        assert_eq!(a.speedup_vs(&b), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Control-path model: how two components establish a connection.
+//!
+//! The paper's Fig 23 compares five variants; §9.4 details the
+//! scheduler-assisted metadata exchange that replaces overlay networks:
+//! both endpoints already hold a connection to their rack scheduler, the
+//! scheduler knows both placements, so it routes the QP metadata and the
+//! endpoints connect directly — and the exchange starts while user code
+//! is still loading, hiding it entirely.
+
+use crate::cluster::clock::Millis;
+use crate::cluster::startup::StartupModel;
+
+use super::datapath::NetKind;
+
+/// Connection-establishment strategy (Fig 23 bars).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlPath {
+    /// No direct channel: all traffic relayed through the platform
+    /// (vanilla OpenWhisk bar 1).
+    Relay,
+    /// Overlay network for direct component-to-component channels
+    /// (bar 2; ~40% of startup in the paper's measurement).
+    Overlay,
+    /// Zenix network-virtualization module, synchronous setup (bar 4).
+    NetVirt,
+    /// NetVirt + asynchronous exchange hidden behind user-code load
+    /// (bar 5, the full Zenix path).
+    NetVirtAsync,
+}
+
+/// Computes control-plane setup latency and per-connection state.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlPlane {
+    pub startup: StartupModel,
+    /// Scheduler message RTT for the metadata exchange (executor ->
+    /// scheduler -> peer executor, §9.4).
+    pub sched_msg_ms: Millis,
+}
+
+impl Default for ControlPlane {
+    fn default() -> Self {
+        Self { startup: StartupModel::default(), sched_msg_ms: 0.15 }
+    }
+}
+
+impl ControlPlane {
+    /// One-time environment cost of the chosen control path (charged at
+    /// container start, e.g. overlay attach).
+    pub fn env_setup(&self, path: ControlPath) -> Millis {
+        match path {
+            ControlPath::Relay => 0.0,
+            ControlPath::Overlay => self.startup.overlay_setup,
+            ControlPath::NetVirt | ControlPath::NetVirtAsync => self.startup.netvirt_setup,
+        }
+    }
+
+    /// Per-connection establishment cost on the critical path.
+    ///
+    /// QP reuse (§9.4): a second physical memory component on a server we
+    /// already talk to shares the existing QP — pass `reuse = true`.
+    pub fn conn_setup(&self, path: ControlPath, kind: NetKind, reuse: bool) -> Millis {
+        if reuse {
+            return 0.0;
+        }
+        let raw = match kind {
+            NetKind::Rdma => self.startup.qp_setup,
+            NetKind::Tcp => self.startup.tcp_setup,
+        };
+        match path {
+            // Relay: no direct channel is ever built; each access pays the
+            // relay penalty on the data path instead (see data-path
+            // callers); setup itself is free.
+            ControlPath::Relay => 0.0,
+            // Overlay must first discover the peer through the overlay
+            // fabric, then connect.
+            ControlPath::Overlay => 2.0 * self.sched_msg_ms + raw,
+            // NetVirt: scheduler pushes the peer location at init; only
+            // the exchange + handshake remain.
+            ControlPath::NetVirt => 2.0 * self.sched_msg_ms + raw,
+            // Async: exchange + handshake run during user-code load.
+            ControlPath::NetVirtAsync => {
+                let total = 2.0 * self.sched_msg_ms + raw;
+                (total - self.startup.user_code_load).max(0.0)
+            }
+        }
+    }
+
+    /// Data-path relay multiplier: Relay sends every message through the
+    /// platform (2 hops + copy); direct paths don't.
+    pub fn relay_factor(&self, path: ControlPath) -> f64 {
+        match path {
+            ControlPath::Relay => 2.6,
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig23_ordering() {
+        // Total first-communication latency per variant (env + conn),
+        // matching Fig 23's qualitative ordering:
+        //   overlay worst; netvirt better; async best (hidden).
+        let cp = ControlPlane::default();
+        let overlay =
+            cp.env_setup(ControlPath::Overlay) + cp.conn_setup(ControlPath::Overlay, NetKind::Tcp, false);
+        let netvirt =
+            cp.env_setup(ControlPath::NetVirt) + cp.conn_setup(ControlPath::NetVirt, NetKind::Rdma, false);
+        let asynchronous = cp.env_setup(ControlPath::NetVirtAsync)
+            + cp.conn_setup(ControlPath::NetVirtAsync, NetKind::Rdma, false);
+        assert!(netvirt < overlay);
+        assert!(asynchronous < netvirt);
+        assert_eq!(asynchronous, cp.startup.netvirt_setup); // conn fully hidden
+    }
+
+    #[test]
+    fn qp_reuse_is_free() {
+        let cp = ControlPlane::default();
+        assert_eq!(cp.conn_setup(ControlPath::NetVirt, NetKind::Rdma, true), 0.0);
+    }
+
+    #[test]
+    fn relay_penalizes_datapath_not_setup() {
+        let cp = ControlPlane::default();
+        assert_eq!(cp.conn_setup(ControlPath::Relay, NetKind::Tcp, false), 0.0);
+        assert!(cp.relay_factor(ControlPath::Relay) > 2.0);
+        assert_eq!(cp.relay_factor(ControlPath::NetVirt), 1.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Data-path cost model: per-message latency + bandwidth term, with the
+//! paper's optimizations (batching small requests, caching fetched data,
+//! one-sided zero-copy RDMA; §5.2.2, §9.5).
+
+use crate::cluster::clock::Millis;
+
+/// Which transport a pair of components communicates over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    /// Two-sided TCP through the memory controller (§9.1).
+    Tcp,
+    /// One-sided zero-copy RDMA (§9.5).
+    Rdma,
+}
+
+/// Transfer cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// One-way small-message latency (ms).
+    pub tcp_latency_ms: Millis,
+    pub rdma_latency_ms: Millis,
+    /// Effective bandwidth (MB per ms == GB/s).
+    pub tcp_bw_mb_per_ms: f64,
+    pub rdma_bw_mb_per_ms: f64,
+    /// Copy overhead factor for two-sided TCP (memory-controller copy in
+    /// and out; RDMA is zero-copy).
+    pub tcp_copy_factor: f64,
+    /// Serialization cost for KV-store style access (ms per MB) — this
+    /// is what PyWren/gg/SF pay on every Redis/S3 hop (§6.1.1/6.1.3).
+    pub serialize_ms_per_mb: f64,
+    /// Fraction of repeated accesses served by the local fetch cache.
+    pub cache_hit_rate: f64,
+    /// Average requests merged per batched API call (§4.2 "batching
+    /// accesses to multiple fields as one API call").
+    pub batch_factor: f64,
+    /// Intra-rack vs cross-rack multiplier on latency.
+    pub cross_rack_latency_factor: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        Self {
+            // 100 Gbps network: ~12.5 GB/s raw; TCP reaches ~60%,
+            // one-sided RDMA ~90% in practice.
+            tcp_latency_ms: 0.030,
+            rdma_latency_ms: 0.003,
+            tcp_bw_mb_per_ms: 7.5,
+            rdma_bw_mb_per_ms: 11.0,
+            tcp_copy_factor: 1.35,
+            serialize_ms_per_mb: 0.45,
+            cache_hit_rate: 0.35,
+            batch_factor: 8.0,
+            cross_rack_latency_factor: 3.0,
+        }
+    }
+}
+
+impl NetModel {
+    /// Cost of one bulk transfer of `mb` megabytes.
+    pub fn transfer(&self, kind: NetKind, mb: f64, cross_rack: bool) -> Millis {
+        let (lat, bw, copy) = match kind {
+            NetKind::Tcp => (self.tcp_latency_ms, self.tcp_bw_mb_per_ms, self.tcp_copy_factor),
+            NetKind::Rdma => (self.rdma_latency_ms, self.rdma_bw_mb_per_ms, 1.0),
+        };
+        let lat = if cross_rack { lat * self.cross_rack_latency_factor } else { lat };
+        lat + mb * copy / bw
+    }
+
+    /// Cost of `n` fine-grained remote accesses of `bytes_each`, with
+    /// Zenix's batching + caching applied.
+    pub fn remote_accesses(
+        &self,
+        kind: NetKind,
+        n: u64,
+        bytes_each: f64,
+        cross_rack: bool,
+    ) -> Millis {
+        if n == 0 {
+            return 0.0;
+        }
+        let effective = (n as f64) * (1.0 - self.cache_hit_rate) / self.batch_factor;
+        let mb = effective.ceil() * bytes_each * self.batch_factor / 1e6;
+        let per_msg = match kind {
+            NetKind::Tcp => self.tcp_latency_ms,
+            NetKind::Rdma => self.rdma_latency_ms,
+        };
+        let per_msg = if cross_rack { per_msg * self.cross_rack_latency_factor } else { per_msg };
+        effective.ceil() * per_msg + mb / self.bandwidth(kind)
+    }
+
+    /// KV-store hop (Redis/S3 style): serialize + transfer + deserialize.
+    /// Charged to the function-DAG baselines on every stage boundary.
+    pub fn kv_hop(&self, mb: f64) -> Millis {
+        2.0 * self.serialize_ms_per_mb * mb + self.transfer(NetKind::Tcp, mb, false)
+    }
+
+    fn bandwidth(&self, kind: NetKind) -> f64 {
+        match kind {
+            NetKind::Tcp => self.tcp_bw_mb_per_ms,
+            NetKind::Rdma => self.rdma_bw_mb_per_ms,
+        }
+    }
+
+    /// Slowdown factor for compute that reads a fraction of its working
+    /// set remotely instead of locally (used by the swap/disaggregation
+    /// experiments, Fig 18/21/25).
+    ///
+    /// Calibrated against the paper's swap microbench (Fig 25: +1%..+26%
+    /// for moderate remote fractions) and FastSwap-style full-remote
+    /// penalties (§6.1.3).
+    pub fn remote_slowdown(&self, kind: NetKind, remote_fraction: f64) -> f64 {
+        let base = match kind {
+            NetKind::Rdma => 0.55,  // one-sided, zero-copy: cheap faults
+            NetKind::Tcp => 1.60,   // two-sided + copies
+        };
+        1.0 + base * remote_fraction.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rdma_beats_tcp() {
+        let m = NetModel::default();
+        for mb in [0.001, 0.1, 10.0, 1000.0] {
+            assert!(
+                m.transfer(NetKind::Rdma, mb, false) < m.transfer(NetKind::Tcp, mb, false),
+                "mb={mb}"
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_monotone_in_size() {
+        let m = NetModel::default();
+        let mut prev = 0.0;
+        for mb in [0.0, 1.0, 10.0, 100.0] {
+            let t = m.transfer(NetKind::Tcp, mb, false);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn cross_rack_costs_more() {
+        let m = NetModel::default();
+        assert!(m.transfer(NetKind::Rdma, 1.0, true) > m.transfer(NetKind::Rdma, 1.0, false));
+        assert!(
+            m.remote_accesses(NetKind::Tcp, 100, 64.0, true)
+                > m.remote_accesses(NetKind::Tcp, 100, 64.0, false)
+        );
+    }
+
+    #[test]
+    fn batching_and_caching_reduce_fine_grained_cost() {
+        let m = NetModel::default();
+        let unopt = NetModel { batch_factor: 1.0, cache_hit_rate: 0.0, ..m };
+        let opt = m.remote_accesses(NetKind::Rdma, 10_000, 64.0, false);
+        let raw = unopt.remote_accesses(NetKind::Rdma, 10_000, 64.0, false);
+        assert!(opt < raw / 4.0, "opt={opt} raw={raw}");
+    }
+
+    #[test]
+    fn kv_hop_includes_serialization() {
+        let m = NetModel::default();
+        let hop = m.kv_hop(100.0);
+        let plain = m.transfer(NetKind::Tcp, 100.0, false);
+        assert!(hop > plain + 80.0); // 2×0.45 ms/MB × 100 MB = 90 ms extra
+    }
+
+    #[test]
+    fn remote_slowdown_bounds() {
+        let m = NetModel::default();
+        assert_eq!(m.remote_slowdown(NetKind::Rdma, 0.0), 1.0);
+        let rdma_full = m.remote_slowdown(NetKind::Rdma, 1.0);
+        let tcp_full = m.remote_slowdown(NetKind::Tcp, 1.0);
+        assert!(rdma_full > 1.3 && rdma_full < 2.0);
+        assert!(tcp_full > rdma_full);
+        // clamps out-of-range fractions
+        assert_eq!(m.remote_slowdown(NetKind::Tcp, 2.0), tcp_full);
+    }
+
+    #[test]
+    fn zero_accesses_free() {
+        let m = NetModel::default();
+        assert_eq!(m.remote_accesses(NetKind::Rdma, 0, 64.0, false), 0.0);
+    }
+}

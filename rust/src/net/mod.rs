@@ -1,0 +1,13 @@
+//! Network cost models: data path (TCP vs RDMA) and control path
+//! (connection establishment variants of §5.2.2 / §9.4-9.5).
+//!
+//! The paper runs on 100 Gbps ConnectX-5; we model transfers as
+//! `latency + bytes / bandwidth` with per-stack constants, plus the
+//! data-path optimizations Zenix applies (request batching, local
+//! caching of fetched data, zero-copy RDMA).
+
+pub mod control;
+pub mod datapath;
+
+pub use control::{ControlPath, ControlPlane};
+pub use datapath::{NetKind, NetModel};

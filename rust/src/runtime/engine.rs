@@ -1,0 +1,125 @@
+//! Single-threaded PJRT engine: compile-once, execute-many.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are cached per entry
+//! point, so the request path pays only buffer upload + execution.
+//!
+//! Not `Send`: see [`super::service`] for the threaded wrapper.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::Result;
+
+use super::manifest::Manifest;
+
+/// A dense f32 host tensor (all Zenix artifacts are float32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// The single element of a scalar tensor.
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+}
+
+/// Compile-once execute-many PJRT engine over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over `dir` (must hold `manifest.json`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached executable for) an entry point.
+    pub fn compile(&self, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(entry) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(entry)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(entry.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute `entry` on host tensors, validating against the manifest.
+    ///
+    /// Outputs come back as host tensors in the entry's declared order
+    /// (AOT lowers with `return_tuple=True`, so PJRT returns one tuple
+    /// literal which we decompose here).
+    pub fn invoke(&self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let sig = self.manifest.entry(entry)?.clone();
+        if inputs.len() != sig.inputs.len() {
+            anyhow::bail!(
+                "{entry}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if t.shape != s.shape {
+                anyhow::bail!(
+                    "{entry} input {i}: shape {:?} != manifest {:?}",
+                    t.shape,
+                    s.shape
+                );
+            }
+            let lit = xla::Literal::vec1(&t.data);
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            literals.push(if dims.is_empty() {
+                xla::Literal::scalar(t.data[0])
+            } else {
+                lit.reshape(&dims)?
+            });
+        }
+        let exe = self.compile(entry)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != sig.outputs.len() {
+            anyhow::bail!(
+                "{entry}: PJRT returned {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&sig.outputs)
+            .map(|(lit, s)| Ok(Tensor::new(lit.to_vec::<f32>()?, s.shape.clone())))
+            .collect()
+    }
+}

@@ -1,0 +1,166 @@
+//! Typed view of `artifacts/manifest.json` (written by `aot.py`).
+//!
+//! The manifest records every AOT entry point's input/output signature so
+//! the rust side can validate invocations before handing buffers to PJRT.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+use crate::Result;
+
+/// Shape + dtype of one tensor in an entry point's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    /// Total element count of the tensor.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &json::Value) -> Result<Self> {
+        let shape = v
+            .get("shape")?
+            .as_array()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: v.get("dtype")?.as_str()?.to_string() })
+    }
+}
+
+/// Signature of one AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    /// HLO text file name inside the artifact directory.
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: HashMap<String, EntrySig>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!("reading manifest in {dir:?}: {e} (run `make artifacts`)")
+        })?;
+        let root = json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for (name, v) in root.as_object()? {
+            let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                v.get(key)?.as_array()?.iter().map(TensorSig::from_json).collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    file: v.get("file")?.as_str()?.to_string(),
+                    inputs: sigs("inputs")?,
+                    outputs: sigs("outputs")?,
+                },
+            );
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Signature for `name`, or an error naming the available entries.
+    pub fn entry(&self, name: &str) -> Result<&EntrySig> {
+        self.entries.get(name).ok_or_else(|| {
+            let mut known: Vec<_> = self.entries.keys().cloned().collect();
+            known.sort();
+            anyhow::anyhow!("unknown entry point {name:?}; artifacts contain {known:?}")
+        })
+    }
+
+    /// Absolute path of the HLO text file for `name`.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+/// Locate the artifact directory: `$ZENIX_ARTIFACTS`, else walk up from
+/// the current directory looking for `artifacts/manifest.json`.
+pub fn find_artifact_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("ZENIX_ARTIFACTS") {
+        return Ok(PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join(super::DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found above the current directory; \
+                 run `make artifacts` or set ZENIX_ARTIFACTS"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmpdir::TempDir;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"f": {"file": "f.hlo.txt",
+                      "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                      "outputs": [{"shape": [], "dtype": "float32"}]}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_lookup() {
+        let tmp = TempDir::new("manifest").unwrap();
+        write_manifest(tmp.path());
+        let m = Manifest::load(tmp.path()).unwrap();
+        let e = m.entry("f").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert_eq!(e.outputs[0].elements(), 1);
+        assert!(m.hlo_path("f").unwrap().ends_with("f.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_entry_lists_known() {
+        let tmp = TempDir::new("manifest").unwrap();
+        write_manifest(tmp.path());
+        let m = Manifest::load(tmp.path()).unwrap();
+        let err = m.entry("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("\"f\""), "{err}");
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let tmp = TempDir::new("manifest").unwrap();
+        let err = Manifest::load(tmp.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        // Exercises the real manifest when `make artifacts` has run.
+        if let Ok(dir) = find_artifact_dir() {
+            let m = Manifest::load(dir).unwrap();
+            for name in ["lr_train_step", "lr_eval", "analytics_stage", "video_block"] {
+                assert!(m.entry(name).is_ok(), "missing {name}");
+            }
+        }
+    }
+}

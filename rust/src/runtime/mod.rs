@@ -1,0 +1,22 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers every L2 entry point to HLO *text*
+//! (`artifacts/<name>.hlo.txt`) plus `manifest.json`. This module loads
+//! the text with `HloModuleProto::from_text_file`, compiles it on the
+//! PJRT CPU client and executes it from the coordinator's hot path.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), so the
+//! [`engine::Engine`] lives on a dedicated compute thread and the rest of
+//! the system talks to it through the cloneable, `Send + Sync`
+//! [`service::ComputeHandle`].
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::{Engine, Tensor};
+pub use manifest::Manifest;
+pub use service::{spawn_compute_service, ComputeHandle};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,143 @@
+//! Threaded compute service: a `Send + Sync` handle over the `Rc`-based
+//! PJRT [`Engine`].
+//!
+//! One dedicated OS thread owns the engine; callers (tokio tasks, the
+//! coordinator event loop, benches) send requests over an mpsc channel
+//! and block on a oneshot-style response channel. Typed helpers cover the
+//! four Zenix artifacts.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+use super::engine::{Engine, Tensor};
+
+type Reply = mpsc::Sender<Result<Vec<Tensor>>>;
+
+enum Request {
+    Invoke { entry: String, inputs: Vec<Tensor>, reply: Reply },
+    /// Pre-compile an entry (warms the executable cache off the hot path —
+    /// the runtime analogue of the paper's pre-launch, §5.2.1).
+    Warm { entry: String, reply: Reply },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the compute thread.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Spawn the compute thread over an artifact directory.
+///
+/// Returns the handle plus the `JoinHandle`; dropping all handles (or
+/// calling [`ComputeHandle::shutdown`]) stops the thread.
+pub fn spawn_compute_service(
+    dir: impl AsRef<std::path::Path>,
+) -> Result<(ComputeHandle, JoinHandle<()>)> {
+    let dir = dir.as_ref().to_path_buf();
+    let (tx, rx) = mpsc::channel::<Request>();
+    // Engine::new touches the filesystem; build it on the service thread
+    // but surface construction errors synchronously via a handshake.
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let join = std::thread::Builder::new()
+        .name("zenix-compute".into())
+        .spawn(move || {
+            let engine = match Engine::new(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Invoke { entry, inputs, reply } => {
+                        let _ = reply.send(engine.invoke(&entry, &inputs));
+                    }
+                    Request::Warm { entry, reply } => {
+                        let _ = reply.send(engine.compile(&entry).map(|_| Vec::new()));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })?;
+    ready_rx.recv().map_err(|_| anyhow::anyhow!("compute thread died during init"))??;
+    Ok((ComputeHandle { tx }, join))
+}
+
+impl ComputeHandle {
+    /// Execute an entry point and wait for the host tensors.
+    pub fn invoke(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Invoke { entry: entry.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("compute thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("compute thread dropped reply"))?
+    }
+
+    /// Warm the executable cache for an entry point.
+    pub fn warm(&self, entry: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm { entry: entry.to_string(), reply })
+            .map_err(|_| anyhow::anyhow!("compute thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("compute thread dropped reply"))??;
+        Ok(())
+    }
+
+    /// Stop the compute thread (idempotent best-effort).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+
+    // ---- typed wrappers over the four Zenix artifacts ------------------
+
+    /// One LR SGD step: returns (w_new, loss).
+    pub fn lr_train_step(
+        &self,
+        x: Tensor,
+        y: Tensor,
+        w: Tensor,
+        step_size: f32,
+    ) -> Result<(Tensor, f32)> {
+        let mut out =
+            self.invoke("lr_train_step", vec![x, y, w, Tensor::scalar(step_size)])?;
+        let loss = out.pop().expect("loss").item();
+        let w_new = out.pop().expect("w_new");
+        Ok((w_new, loss))
+    }
+
+    /// LR validation metrics: returns (loss, accuracy).
+    pub fn lr_eval(&self, x: Tensor, y: Tensor, w: Tensor) -> Result<(f32, f32)> {
+        let mut out = self.invoke("lr_eval", vec![x, y, w])?;
+        let acc = out.pop().expect("acc").item();
+        let loss = out.pop().expect("loss").item();
+        Ok((loss, acc))
+    }
+
+    /// Groupby-aggregate stage: returns (sums, counts, means).
+    pub fn analytics_stage(
+        &self,
+        seg_onehot: Tensor,
+        x: Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let mut out = self.invoke("analytics_stage", vec![seg_onehot, x])?;
+        let means = out.pop().expect("means");
+        let counts = out.pop().expect("counts");
+        let sums = out.pop().expect("sums");
+        Ok((sums, counts, means))
+    }
+
+    /// Encode a batch of 8x8 blocks: returns (coefs, mse).
+    pub fn video_block(&self, blocks: Tensor, q: Tensor) -> Result<(Tensor, f32)> {
+        let mut out = self.invoke("video_block", vec![blocks, q])?;
+        let mse = out.pop().expect("mse").item();
+        let coefs = out.pop().expect("coefs");
+        Ok((coefs, mse))
+    }
+}

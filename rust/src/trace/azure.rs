@@ -1,0 +1,163 @@
+//! Synthetic Azure-style memory-usage traces (Fig 22 / 26 / 29).
+//!
+//! The paper picks four application archetypes out of the Azure dataset
+//! [64]:
+//!
+//! - **Small**   — most invocations use little memory (well under the
+//!   256 MB default initial allocation);
+//! - **Large**   — most invocations use a lot of memory;
+//! - **Varying** — usage differs wildly across invocations;
+//! - **Stable**  — near-identical usage on every invocation;
+//!
+//! plus the dataset-wide **Average** mixture (heavy-tailed lognormal,
+//! per the published characterization). Each generator returns per-
+//! invocation peak memory (MB) and execution time (ms).
+
+use crate::util::rng::Rng;
+
+/// Application archetype from the paper's Fig 26.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Archetype {
+    Small,
+    Large,
+    Varying,
+    Stable,
+    /// Dataset-wide mixture (heavy-tailed).
+    Average,
+}
+
+impl Archetype {
+    pub const ALL: [Archetype; 5] = [
+        Archetype::Small,
+        Archetype::Large,
+        Archetype::Varying,
+        Archetype::Stable,
+        Archetype::Average,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Archetype::Small => "small",
+            Archetype::Large => "large",
+            Archetype::Varying => "varying",
+            Archetype::Stable => "stable",
+            Archetype::Average => "average",
+        }
+    }
+}
+
+/// One invocation's observed usage.
+#[derive(Debug, Clone, Copy)]
+pub struct Usage {
+    pub peak_mem_mb: f64,
+    pub exec_ms: f64,
+}
+
+/// A sequence of invocations of one application.
+#[derive(Debug, Clone)]
+pub struct UsageTrace {
+    pub archetype: Archetype,
+    pub invocations: Vec<Usage>,
+}
+
+impl UsageTrace {
+    /// Generate `n` invocations of `archetype` with a deterministic seed.
+    pub fn generate(archetype: Archetype, n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xA2_0E);
+        let invocations = (0..n)
+            .map(|_| {
+                let peak_mem_mb = match archetype {
+                    // mostly < 128 MB, occasionally a bit more
+                    Archetype::Small => rng.lognormal(3.8, 0.5).clamp(8.0, 512.0),
+                    // mostly 1.5-6 GB
+                    Archetype::Large => rng.lognormal(7.9, 0.35).clamp(512.0, 16384.0),
+                    // anywhere from tens of MB to GBs
+                    Archetype::Varying => rng.lognormal(5.8, 1.4).clamp(16.0, 16384.0),
+                    // tight around 400 MB
+                    Archetype::Stable => rng.normal_with(400.0, 12.0).clamp(300.0, 500.0),
+                    // Azure-wide: heavy-tailed, median ~170 MB
+                    Archetype::Average => rng.lognormal(5.1, 1.1).clamp(8.0, 32768.0),
+                };
+                // Duration loosely correlates with memory (bulkier work
+                // runs longer), plus noise — consistent with [64].
+                let exec_ms = (peak_mem_mb.powf(0.6) * 40.0
+                    * rng.lognormal(0.0, 0.4))
+                .clamp(50.0, 600_000.0);
+                Usage { peak_mem_mb, exec_ms }
+            })
+            .collect();
+        Self { archetype, invocations }
+    }
+
+    pub fn peaks(&self) -> Vec<f64> {
+        self.invocations.iter().map(|u| u.peak_mem_mb).collect()
+    }
+
+    pub fn mean_peak(&self) -> f64 {
+        crate::util::stats::mean(&self.peaks())
+    }
+
+    pub fn max_peak(&self) -> f64 {
+        self.peaks().iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Coefficient of variation of peaks (Varying ≫ Stable).
+    pub fn peak_cv(&self) -> f64 {
+        let peaks = self.peaks();
+        let m = crate::util::stats::mean(&peaks);
+        if m <= 0.0 {
+            0.0
+        } else {
+            crate::util::stats::stddev(&peaks) / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(a: Archetype) -> UsageTrace {
+        UsageTrace::generate(a, 2000, 42)
+    }
+
+    #[test]
+    fn archetype_means_ordered() {
+        assert!(trace(Archetype::Small).mean_peak() < 200.0);
+        assert!(trace(Archetype::Large).mean_peak() > 1500.0);
+        assert!(trace(Archetype::Small).mean_peak() < trace(Archetype::Average).mean_peak());
+        assert!(trace(Archetype::Average).mean_peak() < trace(Archetype::Large).mean_peak());
+    }
+
+    #[test]
+    fn varying_has_high_cv_stable_low() {
+        assert!(trace(Archetype::Varying).peak_cv() > 1.0);
+        assert!(trace(Archetype::Stable).peak_cv() < 0.1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = UsageTrace::generate(Archetype::Average, 100, 9);
+        let b = UsageTrace::generate(Archetype::Average, 100, 9);
+        assert_eq!(a.peaks(), b.peaks());
+        let c = UsageTrace::generate(Archetype::Average, 100, 10);
+        assert_ne!(a.peaks(), c.peaks());
+    }
+
+    #[test]
+    fn durations_positive_and_bounded() {
+        for u in &trace(Archetype::Average).invocations {
+            assert!(u.exec_ms >= 50.0 && u.exec_ms <= 600_000.0);
+            assert!(u.peak_mem_mb > 0.0);
+        }
+    }
+
+    #[test]
+    fn average_is_heavy_tailed() {
+        let t = trace(Archetype::Average);
+        let peaks = t.peaks();
+        let mean = crate::util::stats::mean(&peaks);
+        let p50 = crate::util::stats::percentile(&peaks, 50.0);
+        assert!(mean > 1.3 * p50, "mean {mean} vs median {p50}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Invocation/usage trace generators.
+//!
+//! The paper's per-input sizing experiments (Fig 22, Fig 26/29) replay
+//! real Azure serverless memory-usage distributions. Those traces are
+//! not redistributable; `azure` generates synthetic traces matching the
+//! archetypes the paper characterizes (DESIGN.md §1 substitution table).
+
+pub mod azure;
+
+pub use azure::{Archetype, UsageTrace};

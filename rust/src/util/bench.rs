@@ -1,0 +1,155 @@
+//! Minimal measurement harness for the `harness = false` benches
+//! (std-only `criterion` replacement).
+//!
+//! Auto-tunes iteration counts to a target measurement time, reports
+//! mean / p50 / p95 / throughput, and supports `--filter <substr>` and
+//! `--quick` CLI args (as passed by `cargo bench -- <args>`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark's report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Report {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/second given `items` work items per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+/// Bench runner with criterion-like ergonomics.
+pub struct Bencher {
+    filter: Option<String>,
+    target: Duration,
+    pub reports: Vec<Report>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::from_args(std::env::args().skip(1))
+    }
+}
+
+impl Bencher {
+    /// Parse `--filter <substr>` / `--quick` style args.
+    pub fn from_args(args: impl Iterator<Item = String>) -> Self {
+        let mut filter = None;
+        let mut target = Duration::from_millis(800);
+        let mut args = args.peekable();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--filter" => filter = args.next(),
+                "--quick" => target = Duration::from_millis(100),
+                "--bench" => {} // cargo bench passes this through
+                other if !other.starts_with('-') && filter.is_none() => {
+                    filter = Some(other.to_string());
+                }
+                _ => {}
+            }
+        }
+        Self { filter, target, reports: Vec::new() }
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Measure `f`, auto-scaling iterations to the target time.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Option<Report> {
+        if !self.selected(name) {
+            return None;
+        }
+        // Warm-up + calibration: time one call, derive batch size.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = (self.target.as_nanos() / 20 / once.as_nanos()).max(1) as u64;
+        let samples = 20;
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                f();
+            }
+            times.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+        }
+        let report = Report {
+            name: name.to_string(),
+            iters: per_sample * samples as u64,
+            mean_ns: stats::mean(&times),
+            p50_ns: stats::percentile(&times, 50.0),
+            p95_ns: stats::percentile(&times, 95.0),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+            report.name,
+            fmt_ns(report.mean_ns),
+            fmt_ns(report.p50_ns),
+            fmt_ns(report.p95_ns),
+            report.iters,
+        );
+        self.reports.push(report.clone());
+        Some(report)
+    }
+
+    /// Print the column header once before a group of benches.
+    pub fn header(&self, group: &str) {
+        if self.filter.as_deref().map_or(true, |f| group.contains(f)) || true {
+            println!("\n== {group}");
+            println!("{:<48} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p95");
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_selects() {
+        let b = Bencher::from_args(["--filter".to_string(), "foo".to_string()].into_iter());
+        assert!(b.selected("foo_bar"));
+        assert!(!b.selected("baz"));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::from_args(["--quick".to_string()].into_iter());
+        let r = b.bench("spin", || { std::hint::black_box(1 + 1); }).unwrap();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert_eq!(b.reports.len(), 1);
+    }
+
+    #[test]
+    fn positional_arg_is_filter() {
+        let b = Bencher::from_args(["fig08".to_string()].into_iter());
+        assert!(b.selected("fig08_tpcds_memory"));
+        assert!(!b.selected("fig09_tpcds_time"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Std-only utility layer.
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! vendored, so the usual ecosystem crates are replaced by small,
+//! purpose-built modules:
+//!
+//! - [`json`] — minimal JSON parser (for `artifacts/manifest.json`).
+//! - [`rng`] — splitmix64/xoshiro256++ PRNG + distributions (replaces
+//!   `rand`/`rand_distr` for trace generation and randomized tests).
+//! - [`bench`] — measurement harness used by the `harness = false`
+//!   benches (replaces `criterion`).
+//! - [`quickcheck`] — randomized property-test driver (replaces
+//!   `proptest`) used by `rust/tests/proptests.rs`.
+//! - [`stats`] — mean/percentile/histogram helpers shared by metrics,
+//!   profiling and the benches.
+
+pub mod bench;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod tmpdir;

@@ -1,0 +1,71 @@
+//! Randomized property-test driver (std-only `proptest` replacement).
+//!
+//! `forall(n, gen, prop)` runs `prop` over `n` inputs drawn by `gen` from
+//! deterministic per-case seeds. On failure it panics with the case seed,
+//! so a failing case reproduces with `forall_seeded(seed, gen, prop)`.
+
+use super::rng::Rng;
+
+/// Base seed; per-case seeds derive from it so runs are reproducible.
+pub const BASE_SEED: u64 = 0x5EED_2E17;
+
+/// Run `prop` over `cases` generated inputs; panic with the seed on the
+/// first failure (either a `false` return or a propagated panic).
+pub fn forall<T: std::fmt::Debug>(
+    cases: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {seed:#x}):\n  input = {input:#?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn forall_seeded<T: std::fmt::Debug>(
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    assert!(prop(&input), "property failed (seed {seed:#x}): {input:#?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(50, |r| r.range(0, 100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_seed_in_message() {
+        forall(50, |r| r.range(0, 100), |&x| x < 5);
+    }
+
+    #[test]
+    fn deterministic_inputs_per_case() {
+        let mut first = Vec::new();
+        forall(10, |r| r.next_u64(), |&x| {
+            first.push(x);
+            true
+        });
+        let mut second = Vec::new();
+        forall(10, |r| r.next_u64(), |&x| {
+            second.push(x);
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,102 @@
+//! Summary-statistics helpers shared by metrics, traces and benches.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile by nearest-rank on a copy (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside clamp to edge bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    /// Fraction of mass at or below bin containing `x`.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t.max(0.0) as usize).min(n - 1);
+        let below: u64 = self.bins[..=idx].iter().sum();
+        below as f64 / self.total().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert!((stddev(&xs) - 1.4142).abs() < 1e-3);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.bins.iter().all(|&b| b == 1));
+        h.add(-5.0); // clamps low
+        h.add(50.0); // clamps high
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.total(), 12);
+        assert!((h.cdf_at(9.5) - 1.0).abs() < 1e-9);
+    }
+}

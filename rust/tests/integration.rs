@@ -1,0 +1,137 @@
+//! Integration tests: real PJRT execution of the AOT artifacts plus
+//! end-to-end coordinator flows. Requires `make artifacts`.
+
+use zenix::runtime::{manifest::find_artifact_dir, spawn_compute_service, Tensor};
+use zenix::util::rng::Rng;
+
+const LR_N: usize = 1024;
+const LR_D: usize = 256;
+
+fn lr_data(rng: &mut Rng) -> (Tensor, Tensor, Vec<f32>) {
+    // Linearly separable-ish data, mirrors python/tests/test_model.py.
+    let w_true: Vec<f32> = (0..LR_D).map(|_| rng.normal() as f32).collect();
+    let mut x = vec![0f32; LR_N * LR_D];
+    let mut y = vec![0f32; LR_N];
+    for i in 0..LR_N {
+        let mut dot = 0f32;
+        for j in 0..LR_D {
+            let v = rng.normal() as f32;
+            x[i * LR_D + j] = v;
+            dot += v * w_true[j];
+        }
+        y[i] = if dot + 0.1 * rng.normal() as f32 > 0.0 { 1.0 } else { 0.0 };
+    }
+    (
+        Tensor::new(x, vec![LR_N, LR_D]),
+        Tensor::new(y, vec![LR_N, 1]),
+        w_true,
+    )
+}
+
+#[test]
+fn lr_training_loss_decreases_via_pjrt() {
+    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let (compute, _join) = spawn_compute_service(&dir).unwrap();
+    let mut rng = Rng::new(42);
+    let (x, y, _) = lr_data(&mut rng);
+    let mut w = Tensor::zeros(&[LR_D, 1]);
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let (w2, loss) = compute.lr_train_step(x.clone(), y.clone(), w, 1.0).unwrap();
+        w = w2;
+        losses.push(loss);
+    }
+    assert!(
+        losses[29] < 0.6 * losses[0],
+        "loss did not decrease: first={} last={}",
+        losses[0],
+        losses[29]
+    );
+    let (_loss, acc) = compute.lr_eval(x, y, w).unwrap();
+    assert!(acc > 0.85, "accuracy too low: {acc}");
+    compute.shutdown();
+}
+
+#[test]
+fn analytics_stage_matches_host_reference() {
+    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let (compute, _join) = spawn_compute_service(&dir).unwrap();
+    let (n, k, d) = (2048, 64, 32);
+    let mut rng = Rng::new(7);
+    let mut seg = vec![0f32; n * k];
+    let mut x = vec![0f32; n * d];
+    let mut want_sums = vec![0f64; k * d];
+    let mut want_counts = vec![0f64; k];
+    for i in 0..n {
+        let s = rng.range(0, k);
+        seg[i * k + s] = 1.0;
+        want_counts[s] += 1.0;
+        for j in 0..d {
+            let v = rng.normal() as f32;
+            x[i * d + j] = v;
+            want_sums[s * d + j] += v as f64;
+        }
+    }
+    let (sums, counts, means) = compute
+        .analytics_stage(Tensor::new(seg, vec![n, k]), Tensor::new(x, vec![n, d]))
+        .unwrap();
+    for s in 0..k {
+        assert!((counts.data[s] as f64 - want_counts[s]).abs() < 1e-3);
+        for j in 0..d {
+            let got = sums.data[s * d + j] as f64;
+            assert!(
+                (got - want_sums[s * d + j]).abs() < 1e-2,
+                "segment {s} dim {j}: {got} vs {}",
+                want_sums[s * d + j]
+            );
+            if want_counts[s] > 0.0 {
+                let m = means.data[s * d + j] as f64;
+                assert!((m - want_sums[s * d + j] / want_counts[s]).abs() < 1e-2);
+            }
+        }
+    }
+    compute.shutdown();
+}
+
+#[test]
+fn video_block_mse_monotone_in_quantization() {
+    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let (compute, _join) = spawn_compute_service(&dir).unwrap();
+    let b = 256;
+    let mut rng = Rng::new(9);
+    let blocks = Tensor::new(
+        (0..b * 64).map(|_| rng.uniform(0.0, 255.0) as f32).collect(),
+        vec![b, 8, 8],
+    );
+    let mut mses = Vec::new();
+    for qscale in [1.0f32, 8.0, 64.0] {
+        let q = Tensor::new(vec![qscale; 64], vec![8, 8]);
+        let (coefs, mse) = compute.video_block(blocks.clone(), q).unwrap();
+        assert_eq!(coefs.shape, vec![b, 8, 8]);
+        mses.push(mse);
+    }
+    assert!(mses[0] < mses[1] && mses[1] < mses[2], "{mses:?}");
+    compute.shutdown();
+}
+
+#[test]
+fn invoke_rejects_bad_shapes_and_entries() {
+    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let (compute, _join) = spawn_compute_service(&dir).unwrap();
+    let err = compute.invoke("no_such_entry", vec![]).unwrap_err().to_string();
+    assert!(err.contains("unknown entry point"), "{err}");
+    let err = compute
+        .invoke("lr_eval", vec![Tensor::zeros(&[2, 2])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("expected 3 inputs"), "{err}");
+    let err = compute
+        .invoke(
+            "lr_eval",
+            vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[2, 1]), Tensor::zeros(&[2, 1])],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape"), "{err}");
+    compute.shutdown();
+}

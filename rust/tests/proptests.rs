@@ -1,0 +1,252 @@
+//! Randomized property tests over coordinator invariants (std-only
+//! quickcheck harness, `zenix::util::quickcheck`).
+
+use zenix::apps::{lr, program, tpcds, video, Invocation, Program};
+use zenix::cluster::{Cluster, ClusterSpec, Resources, ServerId};
+use zenix::coordinator::adjust::{self, AdjustParams};
+use zenix::coordinator::graph::ResourceGraph;
+use zenix::coordinator::msglog::{LogEntry, MessageLog};
+use zenix::coordinator::{failure, placement, Platform, ZenixConfig};
+use zenix::util::quickcheck::forall;
+use zenix::util::rng::Rng;
+
+/// Random alloc/free sequences never overcommit a server, and
+/// allocation bookkeeping stays conserved.
+#[test]
+fn server_never_overcommitted() {
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let ops: Vec<(f64, f64, bool)> = (0..rng.range(5, 60))
+                .map(|_| (rng.uniform(0.0, 40.0), rng.uniform(0.0, 80000.0), rng.chance(0.4)))
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut c = Cluster::new(ClusterSpec::paper_testbed());
+            let cap = c.server(ServerId(0)).capacity;
+            let mut live: Vec<Resources> = Vec::new();
+            let mut t = 0.0;
+            for &(cpu, mem, free) in ops {
+                t += 1.0;
+                let r = Resources::new(cpu, mem);
+                if free && !live.is_empty() {
+                    let r = live.pop().unwrap();
+                    c.server_mut(ServerId(0)).free(r, t);
+                } else if c.server_mut(ServerId(0)).try_alloc(r, t) {
+                    live.push(r);
+                }
+                let a = c.server(ServerId(0)).allocated();
+                if a.cpu > cap.cpu + 1e-6 || a.mem_mb > cap.mem_mb + 1e-6 {
+                    return false;
+                }
+            }
+            // free everything: must return to empty (float tolerance)
+            for r in live.drain(..) {
+                t += 1.0;
+                c.server_mut(ServerId(0)).free(r, t);
+            }
+            let a = c.server(ServerId(0)).allocated();
+            a.cpu.abs() < 1e-6 && a.mem_mb.abs() < 1e-6
+        },
+    );
+}
+
+/// Used consumption never exceeds allocated consumption.
+#[test]
+fn consumption_used_bounded_by_alloc() {
+    forall(
+        40,
+        |rng: &mut Rng| {
+            (0..rng.range(3, 30))
+                .map(|_| {
+                    (
+                        rng.uniform(0.0, 16.0),
+                        rng.uniform(0.0, 30000.0),
+                        rng.uniform(0.0, 32.0),
+                        rng.uniform(0.0, 70000.0),
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut c = Cluster::new(ClusterSpec::paper_testbed());
+            let mut t = 0.0;
+            for &(acpu, amem, ucpu, umem) in ops {
+                t += 10.0;
+                let s = c.server_mut(ServerId(0));
+                s.try_alloc(Resources::new(acpu, amem), t);
+                s.set_used(Resources::new(ucpu, umem), t);
+            }
+            let total = c.total_consumption(t + 100.0);
+            total.used_cpu_s <= total.alloc_cpu_s + 1e-6
+                && total.used_mem_mb_s <= total.alloc_mem_mb_s + 1e-6
+        },
+    );
+}
+
+/// The adjust solver always covers every history point and never beats
+/// the brute-force optimum on its own grid.
+#[test]
+fn solver_coverage_and_sanity() {
+    forall(
+        50,
+        |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            (0..n).map(|_| rng.lognormal(5.5, 1.2).max(1.0)).collect::<Vec<f64>>()
+        },
+        |history| {
+            let s = adjust::solve(history, None, AdjustParams::default());
+            if !(s.init_mb.is_finite() && s.step_mb >= 16.0) {
+                return false;
+            }
+            history.iter().all(|&h| {
+                s.init_mb + adjust::growths(s.init_mb, s.step_mb, h) * s.step_mb >= h - 1e-6
+            })
+        },
+    );
+}
+
+/// Placement never returns a server that cannot fit the demand.
+#[test]
+fn placement_respects_capacity() {
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let allocs: Vec<(usize, f64, f64)> = (0..rng.range(0, 20))
+                .map(|_| (rng.range(0, 8), rng.uniform(0.0, 32.0), rng.uniform(0.0, 65536.0)))
+                .collect();
+            let demand = (rng.uniform(0.0, 40.0), rng.uniform(0.0, 80000.0));
+            (allocs, demand)
+        },
+        |(allocs, (dc, dm))| {
+            let mut c = Cluster::new(ClusterSpec::paper_testbed());
+            for &(s, cpu, mem) in allocs {
+                c.server_mut(ServerId(s)).try_alloc(Resources::new(cpu, mem), 0.0);
+            }
+            let demand = Resources::new(*dc, *dm);
+            match placement::smallest_fit(&c, demand) {
+                Some(id) => c.server(id).available().fits(demand),
+                None => c.servers().iter().all(|s| !s.available().fits(demand)),
+            }
+        },
+    );
+}
+
+/// Every invocation leaves the cluster exactly as it found it (no
+/// resource leaks), across random configs, workloads and scales.
+#[test]
+fn invocations_never_leak_resources() {
+    let programs: Vec<Program> =
+        vec![lr::program(), tpcds::query(1), tpcds::query(95), video::pipeline()];
+    forall(
+        25,
+        |rng: &mut Rng| {
+            (
+                rng.range(0, 4),                 // program
+                rng.uniform(0.05, 2.0),          // scale
+                rng.chance(0.5),                 // adaptive
+                rng.chance(0.5),                 // proactive
+                rng.chance(0.5),                 // history
+                rng.chance(0.3),                 // force remote
+            )
+        },
+        |&(pi, scale, adaptive, proactive, history_sizing, force_remote)| {
+            let graph = ResourceGraph::from_program(&programs[pi]).unwrap();
+            let config = ZenixConfig {
+                adaptive,
+                proactive,
+                history_sizing,
+                force_remote_data: force_remote,
+                ..ZenixConfig::default()
+            };
+            let mut p = Platform::new(ClusterSpec::paper_testbed(), config);
+            for _ in 0..2 {
+                if p.invoke(&graph, Invocation::new(scale)).is_err() {
+                    return false;
+                }
+            }
+            p.cluster.servers().iter().all(|s| {
+                let a = s.allocated();
+                let m = s.marked();
+                a.cpu.abs() < 1e-6
+                    && a.mem_mb.abs() < 1e-6
+                    && m.cpu.abs() < 1e-6
+                    && m.mem_mb.abs() < 1e-6
+            })
+        },
+    );
+}
+
+/// Recovery plans: re-executed computes form a downstream-closed set in
+/// wave order, and durable unaffected computes are never re-run.
+#[test]
+fn recovery_plan_invariants() {
+    let graph = ResourceGraph::from_program(&video::pipeline()).unwrap();
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let durable: Vec<usize> =
+                (0..graph.n_compute()).filter(|_| rng.chance(0.5)).collect();
+            let crash = rng.range(0, graph.n_compute());
+            (durable, crash)
+        },
+        |(durable, crash)| {
+            let mut log = MessageLog::new();
+            for &c in durable {
+                log.append(LogEntry { invocation: 1, compute: c, result_mb: 1.0 });
+            }
+            log.flush();
+            let plan = failure::plan(&graph, &log, 1, failure::Crash::Compute(*crash));
+            // crashed compute always re-runs
+            if !plan.reexecute.contains(crash) {
+                return false;
+            }
+            // wave-ordered
+            for w in plan.reexecute.windows(2) {
+                if graph.wave[w[0]] > graph.wave[w[1]] {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Resource-graph topological waves respect trigger edges for random
+/// DAG programs.
+#[test]
+fn random_dag_waves_respect_triggers() {
+    forall(
+        40,
+        |rng: &mut Rng| {
+            // random layered DAG
+            let n = rng.range(2, 20);
+            let mut computes = Vec::new();
+            for i in 0..n {
+                let mut c = program::compute("n", rng.uniform(10.0, 1000.0), 1.0, 64.0);
+                // edges only forward
+                for j in (i + 1)..n {
+                    if rng.chance(0.25) {
+                        c.triggers.push(j);
+                    }
+                }
+                computes.push(c);
+            }
+            Program {
+                name: "random",
+                app_limit: Resources::new(64.0, 131072.0),
+                computes,
+                data: vec![],
+                entry: 0,
+            }
+        },
+        |prog| {
+            let graph = match ResourceGraph::from_program(prog) {
+                Ok(g) => g,
+                Err(_) => return false,
+            };
+            graph.triggers.iter().all(|&(a, b)| graph.wave[a] < graph.wave[b])
+        },
+    );
+}
