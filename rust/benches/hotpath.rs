@@ -109,5 +109,6 @@ fn main() {
         Err(e) => println!("(skipping PJRT benches: {e})"),
     }
 
+    b.write_json("BENCH_hotpath.json");
     println!("\nhotpath benches complete ({}).", b.reports.len());
 }

@@ -5,10 +5,17 @@
 //! scheduler 20k component requests/s; adjust solver 10 000 candidate
 //! sets × 32 components in 10-15 ms.
 //!
+//! The `placement_indexed_vs_linear` group measures the availability
+//! index against the retained linear-scan reference at 32/256/1024
+//! servers — the indexed path must hold a ≥5x edge at 1024 servers
+//! (checked by `scripts/ci.sh`).
+//!
 //!     cargo bench --bench scheduler
+//!     cargo bench --bench scheduler -- --json BENCH_scheduler.json
 
-use zenix::cluster::{Cluster, ClusterSpec, RackId, Resources};
+use zenix::cluster::{Cluster, ClusterSpec, RackId, Resources, ServerId};
 use zenix::coordinator::adjust::{self, AdjustParams};
+use zenix::coordinator::placement;
 use zenix::coordinator::scheduler::{Allocation, GlobalScheduler, RackScheduler};
 use zenix::util::bench::Bencher;
 use zenix::util::rng::Rng;
@@ -81,21 +88,61 @@ fn main() {
         }
     }
 
-    // ---- placement decision hot path ------------------------------------
+    // ---- placement decision hot path (paper testbed scale) --------------
     {
         let mut cluster = Cluster::new(ClusterSpec::paper_testbed());
         // pre-load some occupancy
         for i in 0..8 {
-            cluster
-                .server_mut(zenix::cluster::ServerId(i))
-                .try_alloc(Resources::new(i as f64 * 2.0, i as f64 * 4096.0), 0.0);
+            cluster.try_alloc(
+                ServerId(i),
+                Resources::new(i as f64 * 2.0, i as f64 * 4096.0),
+                0.0,
+            );
         }
         let mut rng = Rng::new(4);
         b.bench("placement_smallest_fit", || {
             let demand = Resources::new(rng.uniform(0.5, 8.0), rng.uniform(128.0, 8192.0));
-            std::hint::black_box(zenix::coordinator::placement::smallest_fit(&cluster, demand));
+            std::hint::black_box(placement::smallest_fit(&cluster, demand));
         });
     }
 
+    // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
+    b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
+    for &n in &[32usize, 256, 1024] {
+        // Single rack of n servers with fragmented occupancy so queries
+        // exercise bucket scans rather than trivially hitting bucket 63.
+        let mut cluster = Cluster::new(ClusterSpec::multi_rack(1, n));
+        let mut load = Rng::new(7);
+        for i in 0..n {
+            let cpu = load.uniform(0.0, 28.0);
+            let mem = load.uniform(0.0, 60000.0);
+            cluster.try_alloc(ServerId(i), Resources::new(cpu, mem), 0.0);
+            if load.chance(0.25) {
+                cluster.mark(ServerId(i), Resources::new(4.0, 8192.0));
+            }
+        }
+        let mut rng_i = Rng::new(8);
+        let indexed = b.bench(&format!("placement_smallest_fit_indexed_{n}"), || {
+            let demand =
+                Resources::new(rng_i.uniform(0.5, 8.0), rng_i.uniform(128.0, 8192.0));
+            std::hint::black_box(placement::smallest_fit(&cluster, demand));
+        });
+        let mut rng_l = Rng::new(8);
+        let linear = b.bench(&format!("placement_smallest_fit_linear_{n}"), || {
+            let demand =
+                Resources::new(rng_l.uniform(0.5, 8.0), rng_l.uniform(128.0, 8192.0));
+            std::hint::black_box(placement::smallest_fit_linear(&cluster, demand));
+        });
+        if let (Some(i), Some(l)) = (indexed, linear) {
+            println!(
+                "  -> {n} servers: indexed {:.0} ns vs linear {:.0} ns = {:.1}x speedup",
+                i.mean_ns,
+                l.mean_ns,
+                l.mean_ns / i.mean_ns
+            );
+        }
+    }
+
+    b.write_json("BENCH_scheduler.json");
     println!("\nscheduler benches complete ({}).", b.reports.len());
 }

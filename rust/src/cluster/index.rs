@@ -1,0 +1,409 @@
+//! Availability index for the placement hot path (§6.2 scalability).
+//!
+//! Every placement decision used to be an O(servers) linear scan that
+//! also heap-allocated a candidate vector. This module replaces the
+//! scan with a bucketed index so `smallest_fit` and the rack
+//! scheduler's allocation path are O(log-ish buckets + bucket
+//! occupancy) with **zero allocations per query**.
+//!
+//! # Bucket scheme
+//!
+//! Servers are bucketed by their *quantized available-resource
+//! magnitude*: `bucket = floor(available().magnitude() / capacity
+//! magnitude * BUCKETS)`, clamped to `BUCKETS - 1`. Because
+//! `Resources::fits` implies `available.magnitude() >=
+//! demand.magnitude()`, a query for `demand` only needs to scan buckets
+//! from `bucket(demand.magnitude())` upward — lower buckets cannot hold
+//! a fitting server. (The scan actually starts one epsilon earlier to
+//! honor the float tolerance inside `fits`.)
+//!
+//! Each bucket is split into an **unmarked** and a **marked** list,
+//! mirroring the §5.1.1 low-priority marks: the first placement pass
+//! prefers servers whose *unmarked* availability fits, the second pass
+//! falls back to raw availability. Unmarked servers need no separate
+//! `available_unmarked()` evaluation, so the common pass-1 probe stays
+//! a single 2-D compare per candidate.
+//!
+//! # Invariants
+//!
+//! - Every live server appears in exactly one (bucket, list) slot of the
+//!   global bucket set and exactly one slot of its rack's bucket set;
+//!   `slots` records both positions for O(1) removal (swap-remove with
+//!   back-pointer fixup).
+//! - Cached `avail`/`unmarked`/`mag` per entry are bit-identical to what
+//!   a fresh `Server::available()` / `available_unmarked()` /
+//!   `magnitude()` evaluation would return — queries never touch the
+//!   `Server` table, and decisions are identical to the retained
+//!   linear-scan reference (`placement::smallest_fit_linear`,
+//!   differential-tested in `rust/tests/proptests.rs`).
+//! - `rack_avail` carries per-rack availability sums, maintained
+//!   incrementally (signed deltas) and recomputed exactly on rebuild.
+//! - `synced_epoch` tracks the owning [`Cluster`]'s mutation epoch; raw
+//!   `server_mut` access bumps the epoch, and the next query lazily
+//!   rebuilds the whole index (dirty-epoch invalidation). The scheduler
+//!   hot path mutates through the `Cluster` hooks (`try_alloc`, `free`,
+//!   `mark`, `unmark`) which update the index in place, so rebuilds
+//!   only happen after cold-path raw access.
+//!
+//! # Complexity
+//!
+//! - update (hook path): O(bucket occupancy) worst case for the
+//!   swap-remove, O(1) expected.
+//! - `smallest_fit` / `smallest_fit_in_rack`: O(buckets scanned +
+//!   occupancy of the first bucket holding a fitting server); no
+//!   allocation.
+//! - rebuild after raw access: O(servers), amortized over however many
+//!   raw mutations preceded it.
+//!
+//! [`Cluster`]: super::topology::Cluster
+
+use super::server::{Server, ServerId};
+use super::topology::RackId;
+use super::Resources;
+
+/// Number of quantization buckets per bucket set. 64 keeps expected
+/// occupancy ≈ servers/64 per bucket at rack scale while the start-
+/// bucket pruning still skips the bulk of loaded servers.
+pub const BUCKETS: usize = 64;
+
+/// Safety margin subtracted from the demand magnitude before choosing
+/// the start bucket, covering the float tolerance inside
+/// [`Resources::fits`] so a server that "fits within epsilon" is never
+/// hidden in a lower bucket.
+const START_EPS: f64 = 1e-9;
+
+/// Cached availability snapshot of one server.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    id: ServerId,
+    avail: Resources,
+    unmarked: Resources,
+    /// `avail.magnitude()`, cached for the best-fit comparisons.
+    mag: f64,
+}
+
+impl Entry {
+    fn of(s: &Server) -> Self {
+        let avail = s.available();
+        Entry { id: s.id, avail, unmarked: s.available_unmarked(), mag: avail.magnitude() }
+    }
+}
+
+/// One quantization bucket: unmarked/marked split (§5.1.1).
+#[derive(Debug, Clone, Default)]
+struct Level {
+    clean: Vec<Entry>,
+    marked: Vec<Entry>,
+}
+
+/// A full bucket array (one global, one per rack).
+#[derive(Debug, Clone)]
+struct Buckets {
+    levels: Vec<Level>,
+}
+
+impl Buckets {
+    fn new() -> Self {
+        Self { levels: (0..BUCKETS).map(|_| Level::default()).collect() }
+    }
+
+    fn clear(&mut self) {
+        for level in &mut self.levels {
+            level.clean.clear();
+            level.marked.clear();
+        }
+    }
+}
+
+/// Position of a server's entry inside one bucket set.
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    level: usize,
+    marked: bool,
+    pos: usize,
+}
+
+/// The availability index. Owned by [`Cluster`]; see module docs.
+///
+/// [`Cluster`]: super::topology::Cluster
+#[derive(Debug, Clone)]
+pub struct PlacementIndex {
+    /// Quantization range: the (uniform) server capacity magnitude.
+    scale: f64,
+    global: Buckets,
+    racks: Vec<Buckets>,
+    /// Incremental per-rack availability sums as raw (cpu, mem_mb);
+    /// signed so deltas cancel exactly on alloc/free round trips.
+    rack_avail: Vec<(f64, f64)>,
+    /// Per server: (slot in `global`, slot in its rack's bucket set).
+    slots: Vec<(Slot, Slot)>,
+    synced_epoch: u64,
+}
+
+impl PlacementIndex {
+    /// Empty index for `racks` racks and `n_servers` servers with the
+    /// given capacity magnitude; callers must `rebuild` before queries.
+    pub fn new(racks: usize, n_servers: usize, scale: f64) -> Self {
+        Self {
+            scale,
+            global: Buckets::new(),
+            racks: (0..racks).map(|_| Buckets::new()).collect(),
+            rack_avail: vec![(0.0, 0.0); racks],
+            slots: vec![(Slot::default(), Slot::default()); n_servers],
+            synced_epoch: 0,
+        }
+    }
+
+    /// Epoch this index was last synchronized at.
+    pub fn synced_epoch(&self) -> u64 {
+        self.synced_epoch
+    }
+
+    fn bucket_of(&self, mag: f64) -> usize {
+        if self.scale <= 0.0 {
+            return 0;
+        }
+        ((mag / self.scale * BUCKETS as f64) as usize).min(BUCKETS - 1)
+    }
+
+    fn remove_from(
+        buckets: &mut Buckets,
+        slots: &mut [(Slot, Slot)],
+        which: usize,
+        id: ServerId,
+    ) -> Entry {
+        let slot = if which == 0 { slots[id.0].0 } else { slots[id.0].1 };
+        let level = &mut buckets.levels[slot.level];
+        let list = if slot.marked { &mut level.marked } else { &mut level.clean };
+        let entry = list.swap_remove(slot.pos);
+        debug_assert_eq!(entry.id, id, "slot table out of sync");
+        if let Some(moved) = list.get(slot.pos) {
+            let moved_slot =
+                if which == 0 { &mut slots[moved.id.0].0 } else { &mut slots[moved.id.0].1 };
+            moved_slot.pos = slot.pos;
+        }
+        entry
+    }
+
+    fn insert_into(
+        buckets: &mut Buckets,
+        slots: &mut [(Slot, Slot)],
+        which: usize,
+        e: Entry,
+        level: usize,
+        marked: bool,
+    ) {
+        let lvl = &mut buckets.levels[level];
+        let list = if marked { &mut lvl.marked } else { &mut lvl.clean };
+        list.push(e);
+        let slot = Slot { level, marked, pos: list.len() - 1 };
+        if which == 0 {
+            slots[e.id.0].0 = slot;
+        } else {
+            slots[e.id.0].1 = slot;
+        }
+    }
+
+    /// Re-index one server after an availability-changing mutation
+    /// (the `Cluster` alloc/free/mark/unmark hooks call this).
+    pub fn update(&mut self, s: &Server) {
+        let rack = s.rack.0;
+        let old = Self::remove_from(&mut self.global, &mut self.slots, 0, s.id);
+        Self::remove_from(&mut self.racks[rack], &mut self.slots, 1, s.id);
+        let e = Entry::of(s);
+        self.rack_avail[rack].0 += e.avail.cpu - old.avail.cpu;
+        self.rack_avail[rack].1 += e.avail.mem_mb - old.avail.mem_mb;
+        let level = self.bucket_of(e.mag);
+        let marked = s.marked() != Resources::ZERO;
+        Self::insert_into(&mut self.global, &mut self.slots, 0, e, level, marked);
+        Self::insert_into(&mut self.racks[rack], &mut self.slots, 1, e, level, marked);
+    }
+
+    /// Rebuild from scratch (dirty-epoch invalidation path). Entries are
+    /// inserted and rack sums accumulated in server-id order so the
+    /// sums are bit-identical to a linear fold over the server table.
+    pub fn rebuild(&mut self, servers: &[Server], epoch: u64) {
+        self.global.clear();
+        for rb in &mut self.racks {
+            rb.clear();
+        }
+        for sum in &mut self.rack_avail {
+            *sum = (0.0, 0.0);
+        }
+        for s in servers {
+            let e = Entry::of(s);
+            let rack = s.rack.0;
+            self.rack_avail[rack].0 += e.avail.cpu;
+            self.rack_avail[rack].1 += e.avail.mem_mb;
+            let level = self.bucket_of(e.mag);
+            let marked = s.marked() != Resources::ZERO;
+            Self::insert_into(&mut self.global, &mut self.slots, 0, e, level, marked);
+            Self::insert_into(&mut self.racks[rack], &mut self.slots, 1, e, level, marked);
+        }
+        self.synced_epoch = epoch;
+    }
+
+    /// Scan one bucket set from `start` upward; smallest `(mag, id)`
+    /// among entries whose (pass-dependent) availability fits wins —
+    /// exactly the linear scan's `min_by` + first-wins tie-break.
+    fn query(
+        buckets: &Buckets,
+        demand: Resources,
+        respect_marks: bool,
+        start: usize,
+    ) -> Option<ServerId> {
+        for level in &buckets.levels[start..] {
+            let mut best: Option<(f64, usize)> = None;
+            let mut consider = |mag: f64, id: usize| match best {
+                Some((bm, bid)) if bm < mag || (bm == mag && bid < id) => {}
+                _ => best = Some((mag, id)),
+            };
+            for e in &level.clean {
+                // unmarked == avail for clean entries: one compare serves
+                // both passes.
+                if e.avail.fits(demand) {
+                    consider(e.mag, e.id.0);
+                }
+            }
+            for e in &level.marked {
+                let a = if respect_marks { e.unmarked } else { e.avail };
+                if a.fits(demand) {
+                    consider(e.mag, e.id.0);
+                }
+            }
+            if let Some((_, id)) = best {
+                return Some(ServerId(id));
+            }
+        }
+        None
+    }
+
+    fn start_bucket(&self, demand: Resources) -> usize {
+        self.bucket_of((demand.magnitude() - START_EPS).max(0.0))
+    }
+
+    /// Cluster-wide smallest fit: unmarked-first, then any availability.
+    /// Decision-identical to `placement::smallest_fit_linear`.
+    pub fn smallest_fit(&self, demand: Resources) -> Option<ServerId> {
+        let start = self.start_bucket(demand);
+        Self::query(&self.global, demand, true, start)
+            .or_else(|| Self::query(&self.global, demand, false, start))
+    }
+
+    /// Smallest fit restricted to one rack.
+    pub fn smallest_fit_in_rack(&self, rack: RackId, demand: Resources) -> Option<ServerId> {
+        let start = self.start_bucket(demand);
+        let buckets = &self.racks[rack.0];
+        Self::query(buckets, demand, true, start)
+            .or_else(|| Self::query(buckets, demand, false, start))
+    }
+
+    /// Aggregate rack availability (the global scheduler's rough view),
+    /// O(1) from the maintained sums.
+    pub fn rack_available(&self, rack: RackId) -> Resources {
+        let (cpu, mem) = self.rack_avail[rack.0];
+        Resources::new(cpu.max(0.0), mem.max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterSpec};
+
+    fn cluster(racks: usize, servers: usize) -> Cluster {
+        Cluster::new(ClusterSpec {
+            racks,
+            servers_per_rack: servers,
+            server_capacity: Resources::new(32.0, 65536.0),
+        })
+    }
+
+    #[test]
+    fn hook_updates_match_fresh_rebuild() {
+        let mut c = cluster(2, 4);
+        assert!(c.try_alloc(ServerId(1), Resources::new(8.0, 8192.0), 0.0));
+        c.mark(ServerId(2), Resources::new(16.0, 32768.0));
+        c.free(ServerId(1), Resources::new(4.0, 4096.0), 1.0);
+        c.unmark(ServerId(2), Resources::new(8.0, 16384.0));
+        // Indexed answers equal a linear scan for a spread of demands.
+        for demand in [
+            Resources::new(1.0, 1024.0),
+            Resources::new(28.0, 60000.0),
+            Resources::new(30.0, 62000.0),
+            Resources::ZERO,
+        ] {
+            let indexed = c.with_index(|ix| ix.smallest_fit(demand));
+            let linear =
+                crate::coordinator::placement::smallest_fit_linear(&c, demand);
+            assert_eq!(indexed, linear, "demand {demand:?}");
+        }
+    }
+
+    #[test]
+    fn raw_access_invalidates_and_rebuilds() {
+        let mut c = cluster(1, 4);
+        // Raw mutation bypasses the hooks…
+        c.server_mut(ServerId(0)).try_alloc(Resources::new(32.0, 65536.0), 0.0);
+        // …but the next query rebuilds and sees it.
+        let got = c.with_index(|ix| ix.smallest_fit(Resources::new(4.0, 4096.0)));
+        assert_ne!(got, Some(ServerId(0)));
+        assert_eq!(
+            got,
+            crate::coordinator::placement::smallest_fit_linear(
+                &c,
+                Resources::new(4.0, 4096.0)
+            )
+        );
+    }
+
+    #[test]
+    fn rack_sums_track_hooks_and_rebuilds() {
+        let mut c = cluster(2, 2);
+        assert!(c.try_alloc(ServerId(0), Resources::new(10.0, 1000.0), 0.0));
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(54.0, 130072.0));
+        assert_eq!(c.rack_available(RackId(1)), Resources::new(64.0, 131072.0));
+        c.free(ServerId(0), Resources::new(10.0, 1000.0), 1.0);
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(64.0, 131072.0));
+    }
+
+    #[test]
+    fn marks_demote_in_pass_one_only() {
+        let mut c = cluster(1, 3);
+        // Server 0 lightly loaded but unmarked; 1 and 2 empty but marked.
+        assert!(c.try_alloc(ServerId(0), Resources::new(16.0, 30000.0), 0.0));
+        c.mark(ServerId(1), Resources::new(32.0, 65536.0));
+        c.mark(ServerId(2), Resources::new(32.0, 65536.0));
+        let small = Resources::new(8.0, 8192.0);
+        assert_eq!(c.with_index(|ix| ix.smallest_fit(small)), Some(ServerId(0)));
+        // A demand only the marked servers can hold still places (pass 2),
+        // tie between 1 and 2 broken by id like the linear scan.
+        let big = Resources::new(30.0, 60000.0);
+        assert_eq!(c.with_index(|ix| ix.smallest_fit(big)), Some(ServerId(1)));
+    }
+
+    #[test]
+    fn in_rack_query_stays_in_rack() {
+        let mut c = cluster(2, 2);
+        // Rack 0 nearly full; rack 1 empty.
+        assert!(c.try_alloc(ServerId(0), Resources::new(32.0, 65536.0), 0.0));
+        assert!(c.try_alloc(ServerId(1), Resources::new(30.0, 60000.0), 0.0));
+        let d = Resources::new(8.0, 8192.0);
+        assert_eq!(c.with_index(|ix| ix.smallest_fit_in_rack(RackId(0), d)), None);
+        let got = c.with_index(|ix| ix.smallest_fit_in_rack(RackId(1), d)).unwrap();
+        assert!(got == ServerId(2) || got == ServerId(3));
+    }
+
+    #[test]
+    fn boundary_demand_not_hidden_by_quantization() {
+        // Demand magnitude exactly on a bucket boundary (0.5 → bucket 32)
+        // must still find a server whose availability equals it.
+        let mut c = cluster(1, 2);
+        assert!(c.try_alloc(ServerId(0), Resources::new(16.0, 32768.0), 0.0));
+        let demand = Resources::new(16.0, 32768.0); // exactly what's left
+        assert_eq!(
+            c.with_index(|ix| ix.smallest_fit(demand)),
+            crate::coordinator::placement::smallest_fit_linear(&c, demand)
+        );
+    }
+}

@@ -8,11 +8,13 @@
 //! reproduce on commodity hardware.
 
 pub mod clock;
+pub mod index;
 pub mod server;
 pub mod startup;
 pub mod topology;
 
 pub use clock::Clock;
+pub use index::PlacementIndex;
 pub use server::{Server, ServerId};
 pub use startup::StartupModel;
 pub use topology::{Cluster, ClusterSpec, RackId};

@@ -1,5 +1,13 @@
 //! A single server: capacity, allocations, low-priority marks, and
 //! time-integrated consumption counters.
+//!
+//! Availability-changing mutations (`try_alloc`, `free`, `mark`,
+//! `unmark`) are mirrored into the cluster's [`PlacementIndex`] when
+//! they go through the `Cluster` hooks of the same names — the hot
+//! path must use those so placement queries stay incremental; direct
+//! `&mut Server` access instead invalidates the index wholesale.
+//!
+//! [`PlacementIndex`]: super::index::PlacementIndex
 
 use super::clock::Millis;
 use super::{RackId, Resources};

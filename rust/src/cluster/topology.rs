@@ -1,7 +1,19 @@
-//! Cluster topology: racks of servers, lookup helpers, and aggregate
-//! consumption readouts.
+//! Cluster topology: racks of servers, lookup helpers, aggregate
+//! consumption readouts, and the availability index that backs the
+//! placement hot path.
+//!
+//! Mutation discipline: the scheduler/executor hot path mutates servers
+//! through the [`Cluster`] hooks ([`Cluster::try_alloc`],
+//! [`Cluster::free`], [`Cluster::mark`], [`Cluster::unmark`]), which
+//! keep the [`PlacementIndex`] synchronized incrementally. Raw
+//! [`Cluster::server_mut`] access stays available for cold paths and
+//! tests; it bumps a mutation epoch and the next index query pays one
+//! O(servers) rebuild (dirty-epoch invalidation).
+
+use std::cell::{Cell, RefCell};
 
 use super::clock::Millis;
+use super::index::PlacementIndex;
 use super::server::{Consumption, Server, ServerId};
 use super::Resources;
 
@@ -47,6 +59,12 @@ impl ClusterSpec {
 pub struct Cluster {
     pub spec: ClusterSpec,
     servers: Vec<Server>,
+    /// Mutation epoch: bumped by raw mutable access (`server_mut`,
+    /// `servers_mut`); the index lazily rebuilds when it lags.
+    epoch: Cell<u64>,
+    /// Availability index (interior mutability so `&self` queries can
+    /// perform the lazy rebuild).
+    index: RefCell<PlacementIndex>,
 }
 
 impl Cluster {
@@ -58,14 +76,23 @@ impl Cluster {
                 servers.push(Server::new(id, RackId(r), spec.server_capacity));
             }
         }
-        Self { spec, servers }
+        let mut index = PlacementIndex::new(
+            spec.racks,
+            servers.len(),
+            spec.server_capacity.magnitude(),
+        );
+        index.rebuild(&servers, 0);
+        Self { spec, servers, epoch: Cell::new(0), index: RefCell::new(index) }
     }
 
     pub fn server(&self, id: ServerId) -> &Server {
         &self.servers[id.0]
     }
 
+    /// Raw mutable server access (cold paths/tests). Invalidates the
+    /// availability index; prefer the typed hooks on the hot path.
     pub fn server_mut(&mut self, id: ServerId) -> &mut Server {
+        self.epoch.set(self.epoch.get() + 1);
         &mut self.servers[id.0]
     }
 
@@ -73,9 +100,70 @@ impl Cluster {
         &self.servers
     }
 
+    /// Raw mutable access to all servers; invalidates the index.
     pub fn servers_mut(&mut self) -> &mut [Server] {
+        self.epoch.set(self.epoch.get() + 1);
         &mut self.servers
     }
+
+    // ---- index-maintaining mutation hooks (the placement hot path) ----
+
+    /// Allocate on one server, keeping the availability index in sync.
+    pub fn try_alloc(&mut self, id: ServerId, amount: Resources, now: Millis) -> bool {
+        let ok = self.servers[id.0].try_alloc(amount, now);
+        if ok {
+            self.index.get_mut().update(&self.servers[id.0]);
+        }
+        ok
+    }
+
+    /// Release resources on one server, keeping the index in sync.
+    pub fn free(&mut self, id: ServerId, amount: Resources, now: Millis) {
+        self.servers[id.0].free(amount, now);
+        self.index.get_mut().update(&self.servers[id.0]);
+    }
+
+    /// Place a low-priority mark (§5.1.1), keeping the index in sync.
+    pub fn mark(&mut self, id: ServerId, amount: Resources) {
+        self.servers[id.0].mark(amount);
+        self.index.get_mut().update(&self.servers[id.0]);
+    }
+
+    /// Remove a low-priority mark, keeping the index in sync.
+    pub fn unmark(&mut self, id: ServerId, amount: Resources) {
+        self.servers[id.0].unmark(amount);
+        self.index.get_mut().update(&self.servers[id.0]);
+    }
+
+    /// Report used share (consumption accounting only — usage does not
+    /// affect availability, so the index needs no update).
+    pub fn set_used(&mut self, id: ServerId, used: Resources, now: Millis) {
+        self.servers[id.0].set_used(used, now);
+    }
+
+    /// Adjust used share upward; accounting only, index untouched.
+    pub fn add_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        self.servers[id.0].add_used(delta, now);
+    }
+
+    /// Adjust used share downward; accounting only, index untouched.
+    pub fn sub_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        self.servers[id.0].sub_used(delta, now);
+    }
+
+    /// Run `f` against the availability index, rebuilding it first if a
+    /// raw mutation made it stale.
+    pub fn with_index<R>(&self, f: impl FnOnce(&PlacementIndex) -> R) -> R {
+        {
+            let mut ix = self.index.borrow_mut();
+            if ix.synced_epoch() != self.epoch.get() {
+                ix.rebuild(&self.servers, self.epoch.get());
+            }
+        }
+        f(&self.index.borrow())
+    }
+
+    // ---- lookups -------------------------------------------------------
 
     /// Server ids in one rack.
     pub fn rack_servers(&self, rack: RackId) -> impl Iterator<Item = ServerId> + '_ {
@@ -95,12 +183,10 @@ impl Cluster {
     }
 
     /// Aggregate free resources in a rack (the global scheduler's
-    /// "rough amount of available resources" view, §5.3.1).
+    /// "rough amount of available resources" view, §5.3.1). O(1) from
+    /// the index's maintained per-rack sums.
     pub fn rack_available(&self, rack: RackId) -> Resources {
-        self.servers
-            .iter()
-            .filter(|s| s.rack == rack)
-            .fold(Resources::ZERO, |acc, s| acc.plus(s.available()))
+        self.with_index(|ix| ix.rack_available(rack))
     }
 
     /// Total capacity across the cluster.
@@ -110,7 +196,9 @@ impl Cluster {
             .fold(Resources::ZERO, |acc, s| acc.plus(s.capacity))
     }
 
-    /// Aggregate consumption up to `now` across all servers.
+    /// Aggregate consumption up to `now` across all servers. (Advances
+    /// consumption integrals only; availability — and therefore the
+    /// index — is untouched.)
     pub fn total_consumption(&mut self, now: Millis) -> Consumption {
         let mut total = Consumption::default();
         for s in &mut self.servers {
@@ -150,6 +238,26 @@ mod tests {
         assert_eq!(avail, Resources::new(54.0, 130072.0));
         // rack 1 untouched
         assert_eq!(c.rack_available(RackId(1)), Resources::new(64.0, 131072.0));
+    }
+
+    #[test]
+    fn rack_available_tracks_hook_allocations() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(2, 2));
+        assert!(c.try_alloc(ServerId(0), Resources::new(10.0, 1000.0), 0.0));
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(54.0, 130072.0));
+        c.free(ServerId(0), Resources::new(10.0, 1000.0), 1.0);
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(64.0, 131072.0));
+    }
+
+    #[test]
+    fn hooks_and_raw_access_interleave() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(1, 2));
+        assert!(c.try_alloc(ServerId(0), Resources::new(4.0, 4096.0), 0.0));
+        // raw mutation invalidates; following hook + query still coherent
+        c.server_mut(ServerId(1)).try_alloc(Resources::new(8.0, 8192.0), 1.0);
+        assert!(c.try_alloc(ServerId(1), Resources::new(1.0, 1024.0), 2.0));
+        let total = c.rack_available(RackId(0));
+        assert_eq!(total, Resources::new(64.0 - 13.0, 131072.0 - 13312.0));
     }
 
     #[test]

@@ -133,6 +133,27 @@ pub struct Platform {
     /// [`RETUNE_EVERY`] executions (§5.2.3: "re-adjusts these two sizes
     /// periodically after K executions"). Stores (init, step, solved-at).
     sizing_cache: std::cell::RefCell<HashMap<(String, usize), (f64, f64, usize)>>,
+    /// Preallocated placement scratch reused across waves/invocations so
+    /// the per-component decision loop performs no candidate-vector
+    /// allocations (capacity grows once, then steady-state is
+    /// allocation-free).
+    scratch: PlacementCtx,
+}
+
+/// Scratch buffers for the wave loop's placement decisions. Taken out
+/// of the platform at the top of an invocation (`std::mem::take`) and
+/// restored at the end; every buffer is `clear()`ed before reuse so
+/// only capacity persists.
+#[derive(Debug, Default)]
+struct PlacementCtx {
+    /// Servers hosting the data a component accesses.
+    data_servers: Vec<ServerId>,
+    /// Servers running accessors of a growing data component.
+    accessors: Vec<ServerId>,
+    /// Remote servers already charged for connection setup (QP reuse).
+    conn_seen: Vec<ServerId>,
+    /// Deferred per-wave allocation timeline.
+    wave_events: Vec<(Millis, ServerId, TimelineEv)>,
 }
 
 /// Re-tune period K for the init/step solver (§5.2.3; the paper uses
@@ -166,6 +187,7 @@ impl Platform {
             warm_pool: std::collections::HashSet::new(),
             static_profile: HashMap::new(),
             sizing_cache: std::cell::RefCell::new(HashMap::new()),
+            scratch: PlacementCtx::default(),
         }
     }
 
@@ -208,6 +230,9 @@ impl Platform {
         let t0 = self.now;
         let consumed_before = self.cluster.total_consumption(t0);
         let mut breakdown = Breakdown::default();
+        // Reusable placement scratch (restored before returning; an
+        // early `?` only costs the buffers' capacity, not correctness).
+        let mut ctx = std::mem::take(&mut self.scratch);
 
         // ---- global scheduling: route to a rack -------------------------
         let estimate = program.peak_estimate(scale);
@@ -226,7 +251,7 @@ impl Platform {
             None
         };
         if let Some(a) = anchor {
-            self.cluster.server_mut(a).mark(estimate);
+            self.cluster.mark(a, estimate);
         }
 
         // ---- wave-by-wave execution -------------------------------------
@@ -256,7 +281,7 @@ impl Platform {
             let mut wave_cpu = 0.0f64;
             let mut wave_mem = 0.0f64;
             // deferred (time, server, event) timeline, applied sorted
-            let mut wave_events: Vec<(Millis, ServerId, TimelineEv)> = Vec::new();
+            ctx.wave_events.clear();
 
             for &c in wave {
                 let spec = &program.computes[c];
@@ -277,14 +302,12 @@ impl Platform {
                     .or_insert(need_mb);
 
                 // -- placement ------------------------------------------
-                let data_servers: Vec<ServerId> = spec
-                    .accesses
-                    .iter()
-                    .filter_map(|d| data_home.get(d).copied())
-                    .collect();
+                ctx.data_servers.clear();
+                ctx.data_servers
+                    .extend(spec.accesses.iter().filter_map(|d| data_home.get(d).copied()));
                 let demand = Resources::new(vcpus as f64, init_mb);
                 let (server, colocated, granted) =
-                    self.place(rack_id, anchor, demand, &data_servers, wave_start);
+                    self.place(rack_id, anchor, demand, &ctx.data_servers, wave_start);
                 comp_server.insert(c, server);
                 // run on what was actually granted (degraded when the
                 // cluster is saturated)
@@ -313,36 +336,49 @@ impl Platform {
                             // the rest to swap space (§5.1.2)
                             let avail =
                                 (self.cluster.server(target).available().mem_mb * 0.9).max(1.0);
-                            mem.launch(
+                            if let Err(e) = mem.launch(
                                 &mut self.cluster,
                                 d as u64,
                                 target,
                                 avail.min(dsize),
                                 wave_start,
-                            )?;
+                            ) {
+                                // current component's placement has no
+                                // Finish event yet: release it directly
+                                self.cluster.free(server, granted, wave_start);
+                                self.abort_invocation(ctx, &mut mem, anchor, estimate, wave_start);
+                                return Err(e);
+                            }
                         }
                         data_home.insert(d, target);
                     } else {
                         // growth if this invocation needs more
                         let cur = mem.get(d as u64).unwrap().total_mb();
                         if dsize > cur {
-                            let accessors: Vec<ServerId> = graph
-                                .accessors_of(d)
-                                .iter()
-                                .filter_map(|a| comp_server.get(a).copied())
-                                .collect();
+                            ctx.accessors.clear();
+                            ctx.accessors.extend(
+                                graph
+                                    .accessors_of_iter(d)
+                                    .filter_map(|a| comp_server.get(&a).copied()),
+                            );
                             let grow_to = super::placement::place_growth(
                                 &self.cluster,
                                 Resources::mem_only(dsize - cur),
                                 data_home[&d],
-                                &accessors,
+                                &ctx.accessors,
                             );
                             if let Some(s) = grow_to {
                                 let _ = mem.grow(&mut self.cluster, d as u64, dsize - cur, &[s], wave_start);
                             }
                         }
                     }
-                    mem.attach(d as u64, c as u64)?;
+                    if let Err(e) = mem.attach(d as u64, c as u64) {
+                        // current component's placement has no Finish
+                        // event yet: release it directly
+                        self.cluster.free(server, granted, wave_start);
+                        self.abort_invocation(ctx, &mut mem, anchor, estimate, wave_start);
+                        return Err(e);
+                    }
                     if let Some(state) = mem.get(d as u64) {
                         remote_frac += state.remote_fraction(server);
                         n_accessed += 1;
@@ -372,13 +408,13 @@ impl Platform {
                 let mut conn_ms = 0.0;
                 let kind = self.config.net_kind();
                 let path = self.config.control_path();
-                let mut seen: Vec<ServerId> = Vec::new();
+                ctx.conn_seen.clear();
                 for &d in &spec.accesses {
-                    for s in mem.region_servers(d as u64) {
+                    for s in mem.region_server_iter(d as u64) {
                         if s != server {
-                            let reuse = seen.contains(&s);
+                            let reuse = ctx.conn_seen.contains(&s);
                             conn_ms += self.control.conn_setup(path, kind, reuse);
-                            seen.push(s);
+                            ctx.conn_seen.push(s);
                         }
                     }
                 }
@@ -435,12 +471,15 @@ impl Platform {
                 // integrator monotonically or consumption double-counts.
                 let end = wave_start + startup_ms + stage_ms;
                 wave_dur = wave_dur.max(startup_ms + stage_ms);
-                let srv = self.cluster.server_mut(server);
                 let used_cpu = throughput.min(vcpus_granted);
-                srv.add_used(Resources::new(used_cpu, init_mb.min(need_mb)), wave_start);
+                self.cluster.add_used(
+                    server,
+                    Resources::new(used_cpu, init_mb.min(need_mb)),
+                    wave_start,
+                );
                 let mid = wave_start + (startup_ms + stage_ms) / 2.0;
                 if alloc_now > init_mb {
-                    wave_events.push((
+                    ctx.wave_events.push((
                         mid,
                         server,
                         TimelineEv::Grow {
@@ -450,7 +489,7 @@ impl Platform {
                         },
                     ));
                 }
-                wave_events.push((
+                ctx.wave_events.push((
                     end,
                     server,
                     TimelineEv::Finish {
@@ -461,12 +500,15 @@ impl Platform {
                 ));
 
                 wave_cpu += vcpus_granted;
-                wave_mem += alloc_now.max(init_mb) + graph
-                    .accessed_data(c)
-                    .iter()
-                    .map(|&d| program.data[d].size_at(scale))
-                    .sum::<f64>();
-                if colocated || data_servers.is_empty() || data_servers.contains(&server) {
+                wave_mem += alloc_now.max(init_mb)
+                    + graph
+                        .accessed_data_iter(c)
+                        .map(|d| program.data[d].size_at(scale))
+                        .sum::<f64>();
+                if colocated
+                    || ctx.data_servers.is_empty()
+                    || ctx.data_servers.contains(&server)
+                {
                     colocated_components += 1;
                 }
 
@@ -489,22 +531,20 @@ impl Platform {
             }
 
             // -- apply deferred timeline events in time order ------------
-            wave_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            ctx.wave_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
             let mut grown: HashMap<usize, f64> = HashMap::new();
-            for (at, server, ev) in wave_events {
+            for (at, server, ev) in ctx.wave_events.drain(..) {
                 match ev {
                     TimelineEv::Grow { comp, extra_mb, used_mb } => {
-                        let srv = self.cluster.server_mut(server);
-                        if srv.try_alloc(Resources::mem_only(extra_mb), at) {
-                            srv.add_used(Resources::mem_only(used_mb), at);
+                        if self.cluster.try_alloc(server, Resources::mem_only(extra_mb), at) {
+                            self.cluster.add_used(server, Resources::mem_only(used_mb), at);
                             grown.insert(comp, extra_mb);
                         }
                     }
                     TimelineEv::Finish { comp, base_alloc, used } => {
                         let extra = grown.remove(&comp).unwrap_or(0.0);
-                        let srv = self.cluster.server_mut(server);
-                        srv.sub_used(used, at);
-                        srv.free(base_alloc.plus(Resources::mem_only(extra)), at);
+                        self.cluster.sub_used(server, used, at);
+                        self.cluster.free(server, base_alloc.plus(Resources::mem_only(extra)), at);
                     }
                 }
             }
@@ -556,8 +596,9 @@ impl Platform {
             }
         }
         if let Some(a) = anchor {
-            self.cluster.server_mut(a).unmark(estimate);
+            self.cluster.unmark(a, estimate);
         }
+        self.scratch = ctx;
 
         self.warm_pool.insert(program.name.to_string());
         self.now = wave_end + 1.0;
@@ -581,6 +622,34 @@ impl Platform {
     }
 
     // ---- helpers --------------------------------------------------------
+
+    /// Best-effort error-path cleanup so a failed invocation cannot
+    /// leak placement state: apply the pending completion events of
+    /// the current wave (releasing committed compute allocations),
+    /// release every live data component, drop the anchor's
+    /// low-priority mark, and restore the scratch buffers.
+    fn abort_invocation(
+        &mut self,
+        mut ctx: PlacementCtx,
+        mem: &mut MemoryController,
+        anchor: Option<ServerId>,
+        estimate: Resources,
+        now: Millis,
+    ) {
+        for (_, server, ev) in ctx.wave_events.drain(..) {
+            // Grow events were never applied to the cluster; only the
+            // base allocations behind Finish events are live.
+            if let TimelineEv::Finish { base_alloc, used, .. } = ev {
+                self.cluster.sub_used(server, used, now);
+                self.cluster.free(server, base_alloc, now);
+            }
+        }
+        mem.release_all(&mut self.cluster, now);
+        if let Some(a) = anchor {
+            self.cluster.unmark(a, estimate);
+        }
+        self.scratch = ctx;
+    }
 
     /// Initial + incremental sizing for one compute component.
     fn sizing(&self, app: &str, node: usize, need_mb: f64) -> (f64, f64) {
@@ -654,7 +723,7 @@ impl Platform {
         // anchor continuation: same container, resized (§5.1.1)
         if let Some(a) = anchor {
             if self.config.adaptive && self.cluster.server(a).available().fits(demand) {
-                let ok = self.cluster.server_mut(a).try_alloc(demand, now);
+                let ok = self.cluster.try_alloc(a, demand, now);
                 debug_assert!(ok);
                 return (a, true, demand);
             }
@@ -669,12 +738,13 @@ impl Platform {
                 loop {
                     d = Resources::new((d.cpu / 2.0).max(1.0), d.mem_mb / 2.0);
                     if let Some(id) = super::placement::smallest_fit(&self.cluster, d) {
-                        let ok = self.cluster.server_mut(id).try_alloc(d, now);
+                        let ok = self.cluster.try_alloc(id, d, now);
                         debug_assert!(ok);
                         return (id, false, d);
                     }
                     if d.cpu <= 1.0 && d.mem_mb < 64.0 {
                         // take the emptiest server and grab what fits
+                        // (cold overload path: linear max is fine here)
                         let id = self
                             .cluster
                             .servers()
@@ -692,7 +762,7 @@ impl Platform {
                             avail.cpu.min(d.cpu).max(0.0),
                             (avail.mem_mb * 0.5).min(d.mem_mb).max(0.0),
                         );
-                        let ok = self.cluster.server_mut(id).try_alloc(grant, now);
+                        let ok = self.cluster.try_alloc(id, grant, now);
                         debug_assert!(ok);
                         return (id, false, grant);
                     }
@@ -716,31 +786,32 @@ impl Platform {
         {
             return prefer;
         }
-        let in_rack: Vec<ServerId> = self.racks[rack.0]
-            .servers()
-            .iter()
-            .copied()
-            .filter(|&s| !self.config.force_remote_data || s != prefer)
-            .collect();
-        super::placement::smallest_fit_among(
-            &self.cluster,
-            mem_demand,
-            &mut in_rack.iter().copied(),
-        )
-        .or_else(|| super::placement::smallest_fit(&self.cluster, mem_demand))
-        .unwrap_or_else(|| {
-            self.cluster
-                .servers()
-                .iter()
-                .max_by(|a, b| {
-                    a.available()
-                        .mem_mb
-                        .partial_cmp(&b.available().mem_mb)
-                        .unwrap()
-                })
-                .map(|s| s.id)
-                .unwrap_or(prefer)
-        })
+        // In-rack pass: indexed when unrestricted; a (non-allocating)
+        // filtered linear pass when disaggregation excludes `prefer`.
+        let in_rack = if self.config.force_remote_data {
+            super::placement::smallest_fit_among(
+                &self.cluster,
+                mem_demand,
+                self.racks[rack.0].servers().iter().copied().filter(|&s| s != prefer),
+            )
+        } else {
+            super::placement::smallest_fit_in_rack(&self.cluster, rack, mem_demand)
+        };
+        in_rack
+            .or_else(|| super::placement::smallest_fit(&self.cluster, mem_demand))
+            .unwrap_or_else(|| {
+                self.cluster
+                    .servers()
+                    .iter()
+                    .max_by(|a, b| {
+                        a.available()
+                            .mem_mb
+                            .partial_cmp(&b.available().mem_mb)
+                            .unwrap()
+                    })
+                    .map(|s| s.id)
+                    .unwrap_or(prefer)
+            })
     }
 
     fn other_server(&self, rack: crate::cluster::RackId, not: ServerId) -> ServerId {

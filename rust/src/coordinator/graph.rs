@@ -101,12 +101,23 @@ impl ResourceGraph {
 
     /// Data indices accessed by compute `c`.
     pub fn accessed_data(&self, c: usize) -> Vec<usize> {
-        self.accesses.iter().filter(|&&(ci, _)| ci == c).map(|&(_, d)| d).collect()
+        self.accessed_data_iter(c).collect()
+    }
+
+    /// Allocation-free variant of [`Self::accessed_data`] for the
+    /// executor's wave loop.
+    pub fn accessed_data_iter(&self, c: usize) -> impl Iterator<Item = usize> + '_ {
+        self.accesses.iter().filter(move |&&(ci, _)| ci == c).map(|&(_, d)| d)
     }
 
     /// Compute indices accessing data `d`.
     pub fn accessors_of(&self, d: usize) -> Vec<usize> {
-        self.accesses.iter().filter(|&&(_, di)| di == d).map(|&(c, _)| c).collect()
+        self.accessors_of_iter(d).collect()
+    }
+
+    /// Allocation-free variant of [`Self::accessors_of`].
+    pub fn accessors_of_iter(&self, d: usize) -> impl Iterator<Item = usize> + '_ {
+        self.accesses.iter().filter(move |&&(_, di)| di == d).map(|&(c, _)| c)
     }
 
     /// Direct successors (triggered computes) of compute `c`.

@@ -8,26 +8,62 @@
 //! 3. otherwise the smallest-available server that fits the component;
 //! 4. scale-up prefers the current server, then servers already running
 //!    accessors of the grown data component.
+//!
+//! Implementation: cluster- and rack-wide queries go through the
+//! [`PlacementIndex`] (O(buckets + occupancy), allocation-free);
+//! [`smallest_fit_linear`] keeps the original O(servers) scan as the
+//! reference implementation for differential testing
+//! (`rust/tests/proptests.rs` asserts decision identity). Candidate-
+//! restricted queries ([`smallest_fit_among`]) stay linear over the
+//! (small) candidate set but no longer allocate.
+//!
+//! [`PlacementIndex`]: crate::cluster::PlacementIndex
 
-use crate::cluster::{Cluster, Resources, ServerId};
+use crate::cluster::{Cluster, RackId, Resources, ServerId};
 
 /// Choose the smallest-available server (by [`Resources::magnitude`])
 /// among those whose *unmarked* availability fits `demand`; fall back to
 /// marked capacity if necessary (marks are low-priority, not reserved).
+///
+/// Index-backed: O(buckets + bucket occupancy), no allocation.
 pub fn smallest_fit(cluster: &Cluster, demand: Resources) -> Option<ServerId> {
-    smallest_fit_among(cluster, demand, &mut cluster.servers().iter().map(|s| s.id))
+    cluster.with_index(|ix| ix.smallest_fit(demand))
+}
+
+/// [`smallest_fit`] restricted to one rack, via the per-rack index.
+pub fn smallest_fit_in_rack(
+    cluster: &Cluster,
+    rack: RackId,
+    demand: Resources,
+) -> Option<ServerId> {
+    cluster.with_index(|ix| ix.smallest_fit_in_rack(rack, demand))
+}
+
+/// Reference implementation: the original O(servers) linear scan.
+/// Kept (and exercised by benches + differential proptests) as the
+/// semantic ground truth for [`smallest_fit`].
+pub fn smallest_fit_linear(cluster: &Cluster, demand: Resources) -> Option<ServerId> {
+    smallest_fit_among(cluster, demand, cluster.servers().iter().map(|s| s.id))
 }
 
 /// Same as [`smallest_fit`] but restricted to `candidates`.
-pub fn smallest_fit_among(
+///
+/// Generic over any cloneable id iterator so callers pass slices or
+/// filtered iterators directly — no per-call `Vec` collect (the old
+/// `&mut dyn Iterator` signature forced one).
+pub fn smallest_fit_among<I>(
     cluster: &Cluster,
     demand: Resources,
-    candidates: &mut dyn Iterator<Item = ServerId>,
-) -> Option<ServerId> {
-    let ids: Vec<ServerId> = candidates.collect();
+    candidates: I,
+) -> Option<ServerId>
+where
+    I: IntoIterator<Item = ServerId>,
+    I::IntoIter: Clone,
+{
+    let iter = candidates.into_iter();
     let pick = |respect_marks: bool| -> Option<ServerId> {
-        ids.iter()
-            .map(|&id| cluster.server(id))
+        iter.clone()
+            .map(|id| cluster.server(id))
             .filter(|s| {
                 let avail =
                     if respect_marks { s.available_unmarked() } else { s.available() };
@@ -53,9 +89,7 @@ pub fn place_component(
     data_servers: &[ServerId],
 ) -> Option<(ServerId, bool)> {
     // Try servers already hosting the accessed data, smallest first.
-    if let Some(id) =
-        smallest_fit_among(cluster, demand, &mut data_servers.iter().copied())
-    {
+    if let Some(id) = smallest_fit_among(cluster, demand, data_servers.iter().copied()) {
         return Some((id, true));
     }
     smallest_fit(cluster, demand).map(|id| {
@@ -75,8 +109,7 @@ pub fn place_growth(
     if cluster.server(current).available().fits(demand) {
         return Some(current);
     }
-    if let Some(id) =
-        smallest_fit_among(cluster, demand, &mut accessor_servers.iter().copied())
+    if let Some(id) = smallest_fit_among(cluster, demand, accessor_servers.iter().copied())
     {
         return Some(id);
     }
@@ -114,6 +147,26 @@ mod tests {
     fn none_when_nothing_fits() {
         let c = cluster();
         assert!(smallest_fit(&c, Resources::new(64.0, 1.0)).is_none());
+    }
+
+    #[test]
+    fn indexed_agrees_with_linear_reference() {
+        let mut c = cluster();
+        c.server_mut(ServerId(0)).try_alloc(Resources::new(30.0, 60000.0), 0.0);
+        c.server_mut(ServerId(1)).try_alloc(Resources::new(8.0, 10000.0), 0.0);
+        c.server_mut(ServerId(2)).mark(Resources::new(32.0, 65536.0));
+        for demand in [
+            Resources::new(1.0, 1000.0),
+            Resources::new(16.0, 20000.0),
+            Resources::new(31.0, 64000.0),
+            Resources::new(64.0, 1.0),
+        ] {
+            assert_eq!(
+                smallest_fit(&c, demand),
+                smallest_fit_linear(&c, demand),
+                "demand {demand:?}"
+            );
+        }
     }
 
     #[test]
@@ -171,5 +224,16 @@ mod tests {
         // but a demand only marked servers can fit still places
         let got = smallest_fit(&c, Resources::new(30.0, 60000.0)).unwrap();
         assert_ne!(got, ServerId(0));
+    }
+
+    #[test]
+    fn in_rack_restriction_honored() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(2, 2));
+        c.server_mut(ServerId(2)).try_alloc(Resources::new(1.0, 1024.0), 0.0);
+        // rack 1's smallest fit is its loaded server; rack 0 unaffected
+        let got = smallest_fit_in_rack(&c, RackId(1), Resources::new(4.0, 4096.0));
+        assert_eq!(got, Some(ServerId(2)));
+        let got = smallest_fit_in_rack(&c, RackId(0), Resources::new(4.0, 4096.0));
+        assert_eq!(got, Some(ServerId(0)));
     }
 }

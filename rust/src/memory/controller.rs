@@ -91,10 +91,12 @@ impl MemoryController {
         if self.components.contains_key(&id) {
             anyhow::bail!("data component {id} already launched");
         }
-        if !cluster.server_mut(server).try_alloc(Resources::mem_only(mb), now) {
+        // The Cluster hooks keep the placement index in sync (the
+        // executor launches data components inside its wave loop).
+        if !cluster.try_alloc(server, Resources::mem_only(mb), now) {
             anyhow::bail!("server {server:?} cannot fit {mb} MB");
         }
-        cluster.server_mut(server).add_used(Resources::mem_only(mb), now);
+        cluster.add_used(server, Resources::mem_only(mb), now);
         let mut state = DataComponentState::default();
         let rid = RegionId(0);
         state.regions.push(Region { id: rid, server, mb, mr_tag: 0 });
@@ -119,20 +121,30 @@ impl MemoryController {
             .components
             .get_mut(&id)
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
-        let mut order: Vec<ServerId> = state.regions.iter().map(|r| r.server).collect();
-        order.extend_from_slice(candidates);
-        for server in order {
-            if cluster.server_mut(server).try_alloc(Resources::mem_only(mb), now) {
-                cluster.server_mut(server).add_used(Resources::mem_only(mb), now);
+        // Probe existing region servers first, then the candidates, and
+        // commit on the first fit — no candidate list is materialized.
+        let mut placed = None;
+        for server in state.regions.iter().map(|r| r.server).chain(candidates.iter().copied())
+        {
+            if cluster.try_alloc(server, Resources::mem_only(mb), now) {
+                placed = Some(server);
+                break;
+            }
+        }
+        match placed {
+            Some(server) => {
+                cluster.add_used(server, Resources::mem_only(mb), now);
                 let rid = RegionId(state.next_region);
                 state.next_region += 1;
                 let mr_tag = state.next_mr_tag;
                 state.next_mr_tag += 1;
                 state.regions.push(Region { id: rid, server, mb, mr_tag });
-                return Ok(rid);
+                Ok(rid)
+            }
+            None => {
+                anyhow::bail!("no candidate server can fit {mb} MB for component {id}")
             }
         }
-        anyhow::bail!("no candidate server can fit {mb} MB for component {id}")
     }
 
     /// Register/unregister an accessor; the component is released when
@@ -176,18 +188,35 @@ impl MemoryController {
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
         let mut freed = 0.0;
         for r in state.regions {
-            cluster.server_mut(r.server).sub_used(Resources::mem_only(r.mb), now);
-            cluster.server_mut(r.server).free(Resources::mem_only(r.mb), now);
+            cluster.sub_used(r.server, Resources::mem_only(r.mb), now);
+            cluster.free(r.server, Resources::mem_only(r.mb), now);
             freed += r.mb;
         }
         Ok(freed)
     }
 
+    /// Release every live component (error-path cleanup); returns the
+    /// total MB freed.
+    pub fn release_all(&mut self, cluster: &mut Cluster, now: Millis) -> f64 {
+        let ids: Vec<u64> = self.components.keys().copied().collect();
+        let mut freed = 0.0;
+        for id in ids {
+            if let Ok(mb) = self.release(cluster, id, now) {
+                freed += mb;
+            }
+        }
+        freed
+    }
+
     /// Servers currently holding regions of `id` (QP-reuse check, §9.4).
     pub fn region_servers(&self, id: u64) -> Vec<ServerId> {
-        self.get(id)
-            .map(|s| s.regions.iter().map(|r| r.server).collect())
-            .unwrap_or_default()
+        self.region_server_iter(id).collect()
+    }
+
+    /// Allocation-free variant of [`Self::region_servers`] for the
+    /// executor's connection-setup loop.
+    pub fn region_server_iter(&self, id: u64) -> impl Iterator<Item = ServerId> + '_ {
+        self.get(id).into_iter().flat_map(|s| s.regions.iter().map(|r| r.server))
     }
 }
 

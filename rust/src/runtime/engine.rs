@@ -5,10 +5,19 @@
 //! `PjRtClient::compile` → `execute`. Executables are cached per entry
 //! point, so the request path pays only buffer upload + execution.
 //!
+//! The `xla` crate is not vendored in the offline build, so the real
+//! engine is gated behind the `pjrt` cargo feature; without it a stub
+//! [`Engine`] with the same API loads manifests but errors on
+//! compile/invoke, keeping every caller (service, benches, examples)
+//! compiling.
+//!
 //! Not `Send`: see [`super::service`] for the threaded wrapper.
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use crate::Result;
@@ -44,12 +53,14 @@ impl Tensor {
 }
 
 /// Compile-once execute-many PJRT engine over an artifact directory.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU-PJRT engine over `dir` (must hold `manifest.json`).
     pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
@@ -121,5 +132,39 @@ impl Engine {
             .zip(&sig.outputs)
             .map(|(lit, s)| Ok(Tensor::new(lit.to_vec::<f32>()?, s.shape.clone())))
             .collect()
+    }
+}
+
+/// Stub engine for builds without the `pjrt` feature: manifests load
+/// and validate, but compilation/execution reports the missing runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Load the manifest only; no PJRT client exists in this build.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { manifest: Manifest::load(dir)? })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always errors: the `xla` crate is not linked in this build.
+    pub fn compile(&self, entry: &str) -> Result<()> {
+        self.manifest.entry(entry)?;
+        anyhow::bail!(
+            "PJRT runtime unavailable for {entry:?}: rebuild with `--features pjrt` \
+             (requires the `xla` crate in Cargo.toml)"
+        )
+    }
+
+    /// Always errors after validating the entry exists; see [`Self::compile`].
+    pub fn invoke(&self, entry: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.compile(entry)?;
+        unreachable!("stub compile never succeeds")
     }
 }

@@ -2,9 +2,17 @@
 //! (std-only `criterion` replacement).
 //!
 //! Auto-tunes iteration counts to a target measurement time, reports
-//! mean / p50 / p95 / throughput, and supports `--filter <substr>` and
-//! `--quick` CLI args (as passed by `cargo bench -- <args>`).
+//! mean / p50 / p95 / throughput, and supports `--filter <substr>`,
+//! `--quick` and `--json <path>` CLI args (as passed by
+//! `cargo bench -- <args>`).
+//!
+//! Machine-readable output: `--json <path>` (or the `ZENIX_BENCH_JSON`
+//! env var naming a directory) makes [`Bencher::write_json`] emit a
+//! `{"bench": ..., "reports": [{name, mean_ns, p50_ns, p95_ns, iters,
+//! throughput}]}` document — the perf-trajectory record checked in as
+//! `BENCH_<bench>.json`.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use super::stats;
@@ -34,6 +42,8 @@ impl Report {
 pub struct Bencher {
     filter: Option<String>,
     target: Duration,
+    /// Explicit `--json <path>` destination (wins over the env var).
+    json_path: Option<PathBuf>,
     pub reports: Vec<Report>,
 }
 
@@ -44,15 +54,17 @@ impl Default for Bencher {
 }
 
 impl Bencher {
-    /// Parse `--filter <substr>` / `--quick` style args.
+    /// Parse `--filter <substr>` / `--quick` / `--json <path>` args.
     pub fn from_args(args: impl Iterator<Item = String>) -> Self {
         let mut filter = None;
         let mut target = Duration::from_millis(800);
+        let mut json_path = None;
         let mut args = args.peekable();
         while let Some(a) = args.next() {
             match a.as_str() {
                 "--filter" => filter = args.next(),
                 "--quick" => target = Duration::from_millis(100),
+                "--json" => json_path = args.next().map(PathBuf::from),
                 "--bench" => {} // cargo bench passes this through
                 other if !other.starts_with('-') && filter.is_none() => {
                     filter = Some(other.to_string());
@@ -60,7 +72,7 @@ impl Bencher {
                 _ => {}
             }
         }
-        Self { filter, target, reports: Vec::new() }
+        Self { filter, target, json_path, reports: Vec::new() }
     }
 
     fn selected(&self, name: &str) -> bool {
@@ -112,6 +124,50 @@ impl Bencher {
             println!("{:<48} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p95");
         }
     }
+
+    /// Destination for machine-readable output, if any: `--json <path>`
+    /// wins, else `$ZENIX_BENCH_JSON` is a directory to hold
+    /// `default_name`.
+    fn json_destination(&self, default_name: &str) -> Option<PathBuf> {
+        if let Some(p) = &self.json_path {
+            return Some(p.clone());
+        }
+        std::env::var_os("ZENIX_BENCH_JSON")
+            .map(|dir| PathBuf::from(dir).join(default_name))
+    }
+
+    /// Write all collected reports as JSON (name, mean_ns, p50_ns,
+    /// p95_ns, iters, throughput in items/s at 1 item/iteration) when a
+    /// destination is configured; silently a no-op otherwise. Errors are
+    /// reported to stderr but never fail the bench run.
+    pub fn write_json(&self, default_name: &str) {
+        let path = match self.json_destination(default_name) {
+            Some(p) => p,
+            None => return,
+        };
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": {:?},\n", default_name));
+        out.push_str("  \"reports\": [\n");
+        for (i, r) in self.reports.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {:?}, \"mean_ns\": {:.3}, \"p50_ns\": {:.3}, \
+                 \"p95_ns\": {:.3}, \"iters\": {}, \"throughput\": {:.3}}}{}\n",
+                r.name,
+                r.mean_ns,
+                r.p50_ns,
+                r.p95_ns,
+                r.iters,
+                r.throughput(1.0),
+                if i + 1 == self.reports.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        match std::fs::write(&path, out) {
+            Ok(()) => println!("(bench json written to {})", path.display()),
+            Err(e) => eprintln!("(bench json write to {} failed: {e})", path.display()),
+        }
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -151,5 +207,42 @@ mod tests {
         let b = Bencher::from_args(["fig08".to_string()].into_iter());
         assert!(b.selected("fig08_tpcds_memory"));
         assert!(!b.selected("fig09_tpcds_time"));
+    }
+
+    #[test]
+    fn json_mode_writes_parseable_reports() {
+        use crate::util::tmpdir::TempDir;
+        let tmp = TempDir::new("benchjson").unwrap();
+        let path = tmp.path().join("BENCH_test.json");
+        let mut b = Bencher::from_args(
+            [
+                "--quick".to_string(),
+                "--json".to_string(),
+                path.display().to_string(),
+            ]
+            .into_iter(),
+        );
+        b.bench("spin_a", || {
+            std::hint::black_box(1 + 1);
+        });
+        b.bench("spin_b", || {
+            std::hint::black_box(2 + 2);
+        });
+        b.write_json("BENCH_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let reports = v.get("reports").unwrap().as_array().unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].get("name").unwrap().as_str().unwrap(), "spin_a");
+        assert!(reports[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(reports[1].get("throughput").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn no_json_destination_is_a_noop() {
+        let b = Bencher::from_args(["--quick".to_string()].into_iter());
+        // must not panic or create files
+        b.write_json("BENCH_never.json");
+        assert!(!std::path::Path::new("BENCH_never.json").exists());
     }
 }

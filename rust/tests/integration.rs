@@ -4,6 +4,26 @@
 use zenix::runtime::{manifest::find_artifact_dir, spawn_compute_service, Tensor};
 use zenix::util::rng::Rng;
 
+/// Locate the AOT artifacts or skip the test (they require `make
+/// artifacts` plus a build with the `pjrt` feature; plain CI runs
+/// without either — even with artifacts present — and must stay
+/// green, since the stub Engine errors on every invoke).
+macro_rules! artifacts_or_skip {
+    () => {{
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping PJRT integration test: built without the `pjrt` feature");
+            return;
+        }
+        match find_artifact_dir() {
+            Ok(dir) => dir,
+            Err(e) => {
+                eprintln!("skipping PJRT integration test: {e}");
+                return;
+            }
+        }
+    }};
+}
+
 const LR_N: usize = 1024;
 const LR_D: usize = 256;
 
@@ -30,7 +50,7 @@ fn lr_data(rng: &mut Rng) -> (Tensor, Tensor, Vec<f32>) {
 
 #[test]
 fn lr_training_loss_decreases_via_pjrt() {
-    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let dir = artifacts_or_skip!();
     let (compute, _join) = spawn_compute_service(&dir).unwrap();
     let mut rng = Rng::new(42);
     let (x, y, _) = lr_data(&mut rng);
@@ -54,7 +74,7 @@ fn lr_training_loss_decreases_via_pjrt() {
 
 #[test]
 fn analytics_stage_matches_host_reference() {
-    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let dir = artifacts_or_skip!();
     let (compute, _join) = spawn_compute_service(&dir).unwrap();
     let (n, k, d) = (2048, 64, 32);
     let mut rng = Rng::new(7);
@@ -95,7 +115,7 @@ fn analytics_stage_matches_host_reference() {
 
 #[test]
 fn video_block_mse_monotone_in_quantization() {
-    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let dir = artifacts_or_skip!();
     let (compute, _join) = spawn_compute_service(&dir).unwrap();
     let b = 256;
     let mut rng = Rng::new(9);
@@ -116,7 +136,7 @@ fn video_block_mse_monotone_in_quantization() {
 
 #[test]
 fn invoke_rejects_bad_shapes_and_entries() {
-    let dir = find_artifact_dir().expect("run `make artifacts` first");
+    let dir = artifacts_or_skip!();
     let (compute, _join) = spawn_compute_service(&dir).unwrap();
     let err = compute.invoke("no_such_entry", vec![]).unwrap_err().to_string();
     assert!(err.contains("unknown entry point"), "{err}");

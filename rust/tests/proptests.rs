@@ -178,6 +178,89 @@ fn invocations_never_leak_resources() {
     );
 }
 
+/// The availability index is decision-identical to the retained
+/// linear-scan reference: random alloc/free/mark/unmark sequences
+/// driven through the index-maintaining `Cluster` hooks — with raw
+/// `server_mut` mutations interleaved to exercise dirty-epoch
+/// rebuilds — must produce identical `smallest_fit` answers, cluster-
+/// wide and per rack, and identical rack-availability aggregates.
+#[test]
+fn indexed_placement_matches_linear_reference() {
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let ops: Vec<(u8, usize, f64, f64)> = (0..rng.range(5, 80))
+                .map(|_| {
+                    (
+                        rng.range(0, 6) as u8,
+                        rng.range(0, 16),
+                        rng.uniform(0.0, 40.0),
+                        rng.uniform(0.0, 80000.0),
+                    )
+                })
+                .collect();
+            let demands: Vec<(f64, f64)> = (0..rng.range(2, 12))
+                .map(|_| (rng.uniform(0.0, 40.0), rng.uniform(0.0, 80000.0)))
+                .collect();
+            (ops, demands)
+        },
+        |(ops, demands)| {
+            let mut c = Cluster::new(ClusterSpec::multi_rack(2, 8));
+            let racks: Vec<Vec<ServerId>> = c
+                .racks()
+                .map(|r| c.rack_servers(r).collect())
+                .collect();
+            let agrees = |c: &Cluster, (dc, dm): (f64, f64)| -> bool {
+                let d = Resources::new(dc, dm);
+                if placement::smallest_fit(c, d) != placement::smallest_fit_linear(c, d) {
+                    return false;
+                }
+                for (ri, servers) in racks.iter().enumerate() {
+                    let rack = zenix::cluster::RackId(ri);
+                    let linear =
+                        placement::smallest_fit_among(c, d, servers.iter().copied());
+                    if placement::smallest_fit_in_rack(c, rack, d) != linear {
+                        return false;
+                    }
+                    // aggregate view matches a direct fold
+                    let fold = servers
+                        .iter()
+                        .fold(Resources::ZERO, |acc, &s| acc.plus(c.server(s).available()));
+                    let idx = c.rack_available(rack);
+                    if (idx.cpu - fold.cpu).abs() > 1e-6
+                        || (idx.mem_mb - fold.mem_mb).abs() > 1e-6
+                    {
+                        return false;
+                    }
+                }
+                true
+            };
+            let mut t = 0.0;
+            for (i, &(op, s, cpu, mem)) in ops.iter().enumerate() {
+                t += 1.0;
+                let id = ServerId(s);
+                let r = Resources::new(cpu, mem);
+                match op {
+                    0 | 1 => {
+                        c.try_alloc(id, r, t);
+                    }
+                    2 => c.free(id, Resources::new(cpu * 0.5, mem * 0.5), t),
+                    3 => c.mark(id, r),
+                    4 => c.unmark(id, Resources::new(cpu * 0.5, mem * 0.5)),
+                    // raw access: invalidates the index (rebuild path)
+                    _ => {
+                        c.server_mut(id).try_alloc(Resources::new(cpu * 0.25, mem * 0.25), t);
+                    }
+                }
+                if i % 7 == 0 && !agrees(&c, demands[0]) {
+                    return false;
+                }
+            }
+            demands.iter().all(|&d| agrees(&c, d))
+        },
+    );
+}
+
 /// Recovery plans: re-executed computes form a downstream-closed set in
 /// wave order, and durable unaffected computes are never re-run.
 #[test]

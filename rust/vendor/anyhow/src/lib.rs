@@ -1,0 +1,159 @@
+//! Minimal, offline, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so the real crates.io
+//! `anyhow` cannot be fetched. This shim implements the subset the
+//! Zenix crate actually uses:
+//!
+//! - [`Error`]: boxed dynamic error with `Display`/`Debug`,
+//!   `Send + Sync`, convertible from any `std::error::Error` via `?`;
+//! - [`Result`]: `Result<T, Error>` alias with a defaulted error type;
+//! - [`anyhow!`]: format-style error constructor;
+//! - [`bail!`]: early-return with a formatted error.
+//!
+//! Swapping back to the real crate is a one-line `Cargo.toml` change —
+//! no source edits — because every construct here matches the upstream
+//! names and semantics (for this subset).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error. Like upstream `anyhow::Error`, this type
+/// deliberately does **not** implement `std::error::Error` itself so
+/// the blanket `From<E: std::error::Error>` conversion below does not
+/// overlap with the reflexive `From<Error> for Error`.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from any error value.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// Construct from a displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Borrow the underlying dynamic error.
+    pub fn as_dyn(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream prints the message (plus a cause chain); the message
+        // alone is what our tests and panics rely on.
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Message-only error payload backing [`Error::msg`].
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// `Result` with a defaulted boxed error, mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn question_mark_passes_through_error() {
+        fn leaf() -> Result<u32> {
+            Err(anyhow!("leaf failed with code {}", 7))
+        }
+        fn outer() -> Result<u32> {
+            let v = leaf()?;
+            Ok(v)
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(e.to_string(), "leaf failed with code 7");
+    }
+
+    #[test]
+    fn bail_returns_formatted() {
+        fn f(x: i32) -> Result<()> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}

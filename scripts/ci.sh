@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Tier-1 gate + bench smoke run.
+#
+#   scripts/ci.sh            full gate: build, tests, bench smoke
+#   scripts/ci.sh --no-bench tier-1 only
+#
+# The bench smoke run fails loudly if the indexed placement path loses
+# its edge over the linear-scan reference (< 5x at 1024 servers) and
+# refreshes BENCH_scheduler.json / BENCH_hotpath.json in the repo root
+# so the perf trajectory stays tracked.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release"
+cargo build --release
+
+echo "== tier-1: cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" == "--no-bench" ]]; then
+    echo "CI gate passed (benches skipped)."
+    exit 0
+fi
+
+echo "== bench smoke: scheduler (quick budget, json to repo root)"
+out=$(mktemp)
+ZENIX_BENCH_JSON=. cargo bench --bench scheduler -- --quick | tee "$out"
+
+# Parse the "-> 1024 servers: indexed ... = N.Nx speedup" line.
+speedup=$(grep -E '1024 servers' "$out" | grep -oE '[0-9]+(\.[0-9]+)?x speedup' | head -1 | tr -dc '0-9.')
+if [[ -z "$speedup" ]]; then
+    echo "FAIL: could not find the 1024-server indexed-vs-linear speedup line" >&2
+    exit 1
+fi
+awk -v x="$speedup" 'BEGIN { exit (x + 0 >= 5.0) ? 0 : 1 }' || {
+    echo "FAIL: indexed placement speedup ${speedup}x < 5x at 1024 servers (perf regression)" >&2
+    exit 1
+}
+echo "indexed placement speedup at 1024 servers: ${speedup}x (>= 5x required)"
+
+echo "== bench smoke: hotpath (quick budget, json to repo root)"
+ZENIX_BENCH_JSON=. cargo bench --bench hotpath -- --quick
+
+echo "CI gate passed."
