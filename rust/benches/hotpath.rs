@@ -37,6 +37,38 @@ fn main() {
         });
     }
     {
+        // Warm-platform invoke: history profiles populated and the
+        // §9.3 re-tune cache hot, so the per-component sizing path is
+        // pure lookups. With interned-name cache keys (PR-2 satellite
+        // fix) those lookups allocate nothing — this row is the
+        // regression guard for that win (it tracks well below the cold
+        // platform_invoke_lr row, which pays solver re-tunes).
+        let graph = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), ZenixConfig::default());
+        for _ in 0..8 {
+            p.invoke(&graph, Invocation::new(1.0)).unwrap();
+        }
+        b.bench("platform_invoke_lr_warm_sizing_hit", || {
+            std::hint::black_box(p.invoke(&graph, Invocation::new(1.0)).unwrap());
+        });
+    }
+    {
+        // Direct history-profile lookup hit (app-first nested map:
+        // borrowed &str key, no per-lookup String).
+        use zenix::coordinator::history::{Metric, ProfileStore};
+        let mut store = ProfileStore::new();
+        for node in 0..8 {
+            for v in 0..32 {
+                store.record("logreg", node, Metric::MemMb, 100.0 + v as f64);
+            }
+        }
+        let mut node = 0usize;
+        b.bench("history_profile_lookup_hit", || {
+            node = (node + 1) % 8;
+            std::hint::black_box(store.profile("logreg", node, Metric::MemMb));
+        });
+    }
+    {
         let net = NetModel::default();
         b.bench("net_remote_accesses_model", || {
             std::hint::black_box(net.remote_accesses(NetKind::Rdma, 10_000, 64.0, false));

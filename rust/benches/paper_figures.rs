@@ -67,6 +67,15 @@ fn main() {
     b.bench("fig27_28_small_apps", || {
         std::hint::black_box(platform_figs::fig27_28_small_apps());
     });
+    b.bench("fig29_multi_tenant", || {
+        use zenix::trace::Archetype;
+        std::hint::black_box(platform_figs::fig29_multi_tenant(
+            Archetype::Average,
+            12,
+            200,
+            7,
+        ));
+    });
     b.bench("tab_startup_latency", || {
         std::hint::black_box(platform_figs::tab_startup_latency());
     });

@@ -106,6 +106,25 @@ fn main() {
         });
     }
 
+    // ---- multi-tenant driver end-to-end throughput ----------------------
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::trace::Archetype;
+        let mix = standard_mix(12, Archetype::Average);
+        let cfg = DriverConfig { seed: 7, invocations: 200, ..DriverConfig::default() };
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench("driver_200_invocations_12_apps", || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> multi-tenant driver: {:.0} overlapping invocations/s \
+                 (discrete-event replay incl. placement + accounting)",
+                r.throughput(200.0)
+            );
+        }
+    }
+
     // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
     b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
     for &n in &[32usize, 256, 1024] {

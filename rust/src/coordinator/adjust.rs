@@ -5,7 +5,7 @@
 //! ```text
 //!   init + Σ_h  step · k_h · cost_factor          (expected alloc cost)
 //!   s.t.  ∀h:  init + k_h · step ≥ h              (coverage)
-//!         Σ_h max(init − h, 0) · t_h / Σ_h h  <  Thres   (waste bound)
+//!         Σ_h max(init − h, 0) · t_h / Σ_h h · t_h  <  Thres   (waste bound)
 //! ```
 //!
 //! where `k_h = ⌈(h − init)⁺ / step⌉` is the number of runtime growths
@@ -60,22 +60,32 @@ fn objective(init: f64, step: f64, history: &[f64], cost_factor: f64) -> f64 {
     init + growth_cost * cost_factor
 }
 
-/// Waste constraint: over-allocation weighted by execution share.
-/// `exec_ms[i]` defaults to 1.0 (uniform) when not supplied.
+/// Waste constraint (the module-header formulation): over-allocation as
+/// a fraction of demand, both sides weighted by execution time —
+///
+/// ```text
+///   waste(init) = Σ_h max(init − h, 0) · t_h  /  Σ_h h · t_h
+/// ```
+///
+/// so over-provisioning a *long-running* invocation costs
+/// proportionally more. `exec_ms[i]` defaults to 1.0 (uniform) when not
+/// supplied, which reduces to Σ (init − h)⁺ / Σ h. (The code previously
+/// divided by `Σ h · t̄`, which disagrees with itself whenever exec
+/// time correlates with demand; the time-weighted demand integral is
+/// the dimensionally consistent reading of the doc comment.)
 fn waste(init: f64, history: &[f64], exec_ms: Option<&[f64]>) -> f64 {
-    let total_demand: f64 = history.iter().sum();
-    if total_demand <= 0.0 {
-        return 0.0;
+    let mut over = 0.0f64;
+    let mut demand = 0.0f64;
+    for (i, &h) in history.iter().enumerate() {
+        let t = exec_ms.map_or(1.0, |t| t[i]);
+        over += (init - h).max(0.0) * t;
+        demand += h * t;
     }
-    let over: f64 = history
-        .iter()
-        .enumerate()
-        .map(|(i, &h)| (init - h).max(0.0) * exec_ms.map_or(1.0, |t| t[i]))
-        .sum();
-    let t_mean = exec_ms.map_or(1.0, |t| {
-        t.iter().sum::<f64>() / t.len().max(1) as f64
-    });
-    over / (total_demand * t_mean.max(1e-12))
+    if demand <= 0.0 {
+        0.0
+    } else {
+        over / demand
+    }
 }
 
 /// Solve for one component given its usage history (peak MB per past
@@ -186,6 +196,24 @@ mod tests {
         history.extend(vec![2048.0; 5]);
         let s = solve(&history, None, AdjustParams { threshold: 0.2, ..Default::default() });
         assert!(s.init_mb < 512.0, "{s:?}");
+    }
+
+    /// Satellite-4 regression: pins the reconciled waste semantics on a
+    /// non-uniform `exec_ms` — time-weighted over-allocation over
+    /// time-weighted demand.
+    #[test]
+    fn waste_is_exec_time_weighted_fraction() {
+        let history = [100.0, 300.0];
+        let t = [3000.0, 1000.0];
+        // over  = (200−100)·3000 + 0·1000          = 300 000
+        // demand = 100·3000 + 300·1000             = 600 000
+        let w = waste(200.0, &history, Some(&t));
+        assert!((w - 0.5).abs() < 1e-12, "{w}");
+        // uniform weights reduce to Σ(init−h)⁺ / Σh
+        let u = waste(200.0, &history, None);
+        assert!((u - 100.0 / 400.0).abs() < 1e-12, "{u}");
+        // never negative, zero when init covers nothing
+        assert_eq!(waste(50.0, &history, Some(&t)), 0.0);
     }
 
     #[test]

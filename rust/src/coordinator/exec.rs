@@ -18,13 +18,26 @@
 //!
 //! All latency constants flow from [`StartupModel`], [`NetModel`] and
 //! [`ControlPlane`] — the paper-calibrated models (DESIGN.md §1).
+//!
+//! ## Re-entrant execution (multi-tenant)
+//!
+//! [`Platform::invoke`] runs one invocation to completion, but the
+//! engine itself is a *resumable state machine*: [`Platform::begin_at`]
+//! opens an [`OngoingInvocation`] at an arbitrary simulated time,
+//! [`Platform::start_wave`] executes one wave's scheduling/placement
+//! and emits its deferred allocation timeline, and
+//! [`Platform::wave_done`] advances to the next wave. A driver (see
+//! [`super::driver`]) holds many `OngoingInvocation`s at once and
+//! interleaves their timeline events in global time order, so
+//! concurrent invocations from different applications genuinely overlap
+//! on the shared cluster instead of serializing through `Platform::now`.
 
 use std::collections::HashMap;
 
 use crate::apps::Invocation;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
-use crate::cluster::{Cluster, ClusterSpec, Resources, ServerId, StartupModel};
+use crate::cluster::{Cluster, ClusterSpec, RackId, Resources, ServerId, StartupModel};
 use crate::memory::MemoryController;
 use crate::metrics::{Breakdown, RunReport};
 use crate::net::{ControlPath, ControlPlane, NetKind, NetModel};
@@ -122,17 +135,21 @@ pub struct Platform {
     now: Millis,
     next_invocation: u64,
     /// Apps with a kept-warm environment (§5.2.1 pre-warming of the
-    /// first component based on invocation history).
-    warm_pool: std::collections::HashSet<String>,
+    /// first component based on invocation history). Keyed by the
+    /// program's interned (`&'static`) name — membership tests on the
+    /// hot path allocate nothing.
+    warm_pool: std::collections::HashSet<&'static str>,
     /// Static resource-graph profile (§4.2): the per-node size captured
     /// by the offline sampling run (first observation). The non-history
     /// configurations size components with this fixed estimate — the
     /// function-model limitation the history mechanism removes.
-    static_profile: HashMap<(String, usize), f64>,
+    static_profile: HashMap<(&'static str, usize), f64>,
     /// Cached §9.3 solver output per node, re-tuned every
     /// [`RETUNE_EVERY`] executions (§5.2.3: "re-adjusts these two sizes
     /// periodically after K executions"). Stores (init, step, solved-at).
-    sizing_cache: std::cell::RefCell<HashMap<(String, usize), (f64, f64, usize)>>,
+    /// Keyed by the interned program name: cache hits are
+    /// allocation-free (no per-lookup `String`).
+    sizing_cache: std::cell::RefCell<HashMap<(&'static str, usize), (f64, f64, usize)>>,
     /// Preallocated placement scratch reused across waves/invocations so
     /// the per-component decision loop performs no candidate-vector
     /// allocations (capacity grows once, then steady-state is
@@ -141,7 +158,7 @@ pub struct Platform {
 }
 
 /// Scratch buffers for the wave loop's placement decisions. Taken out
-/// of the platform at the top of an invocation (`std::mem::take`) and
+/// of the platform at the top of a wave (`std::mem::take`) and
 /// restored at the end; every buffer is `clear()`ed before reuse so
 /// only capacity persists.
 #[derive(Debug, Default)]
@@ -152,13 +169,115 @@ struct PlacementCtx {
     accessors: Vec<ServerId>,
     /// Remote servers already charged for connection setup (QP reuse).
     conn_seen: Vec<ServerId>,
-    /// Deferred per-wave allocation timeline.
-    wave_events: Vec<(Millis, ServerId, TimelineEv)>,
 }
 
 /// Re-tune period K for the init/step solver (§5.2.3; the paper uses
 /// ~1000 — we re-tune more eagerly since test runs are short).
 pub const RETUNE_EVERY: usize = 16;
+
+/// Per-invocation execution state for the re-entrant entry points.
+///
+/// One `OngoingInvocation` is the paused continuation of one
+/// application invocation: which wave is next, where its components and
+/// data live, the deferred allocation timeline of the wave in flight,
+/// and the per-invocation accounting. The single-tenant
+/// [`Platform::invoke`] drives exactly one of these to completion; the
+/// multi-tenant [`super::driver`] holds many and interleaves them.
+pub struct OngoingInvocation {
+    pub(crate) scale: f64,
+    pub(crate) inv_id: u64,
+    pub(crate) t0: Millis,
+    pub(crate) consumed_before: Consumption,
+    pub(crate) breakdown: Breakdown,
+    pub(crate) mem: MemoryController,
+    pub(crate) data_home: HashMap<usize, ServerId>,
+    pub(crate) comp_server: HashMap<usize, ServerId>,
+    pub(crate) merge_pairs: Vec<(usize, usize)>,
+    pub(crate) colocated_components: usize,
+    pub(crate) total_components: usize,
+    pub(crate) peak_cpu: f64,
+    pub(crate) peak_mem: f64,
+    /// Start time of the wave about to run (after [`Platform::wave_done`]
+    /// it is the end of the previous wave).
+    pub(crate) wave_start: Millis,
+    pub(crate) prev_wave_dur: f64,
+    /// Duration of the wave most recently started.
+    pub(crate) wave_dur: f64,
+    pub(crate) crash_state: Option<(Crash, usize)>,
+    pub(crate) anchor: Option<ServerId>,
+    pub(crate) estimate: Resources,
+    pub(crate) rack_id: RackId,
+    pub(crate) waves: Vec<Vec<usize>>,
+    pub(crate) wave_idx: usize,
+    /// Growths that actually landed: comp -> (extra alloc MB, used MB
+    /// added, applied-at). `Finish` releases exactly these — a failed
+    /// `Grow` (saturated cluster) leaves nothing to subtract.
+    pub(crate) grown: HashMap<usize, (f64, f64, Millis)>,
+    /// Deferred allocation-timeline events of the wave in flight;
+    /// drained by the caller (sorted single-tenant, merged into the
+    /// driver's global heap multi-tenant).
+    pub(crate) pending: Vec<(Millis, ServerId, TimelineEv)>,
+    /// Attributed per-invocation consumption (compute allocations,
+    /// landed growths and data-component regions integrated over their
+    /// own lifetimes). The multi-tenant driver reports this — a
+    /// cluster-wide before/after diff would include the other tenants.
+    pub(crate) attrib: Consumption,
+    /// Live data components: data idx -> (last stamp, current MB).
+    pub(crate) data_track: HashMap<usize, (Millis, f64)>,
+    /// Runtime growth events this invocation needed (sizing convergence
+    /// signal: history sizing drives this toward zero).
+    pub(crate) growth_count: usize,
+    /// Whether wave 0 hit the warm pool (None before wave 0 ran).
+    pub(crate) first_wave_warm: Option<bool>,
+}
+
+impl OngoingInvocation {
+    /// Simulated time at which the wave in flight completes.
+    pub fn wave_done_at(&self) -> Millis {
+        self.wave_start + self.wave_dur
+    }
+
+    pub fn inv_id(&self) -> u64 {
+        self.inv_id
+    }
+
+    /// Runtime growth events so far (sizing-convergence telemetry).
+    pub fn growths(&self) -> usize {
+        self.growth_count
+    }
+
+    /// Whether the first environment hit the warm pool.
+    pub fn first_wave_warm(&self) -> Option<bool> {
+        self.first_wave_warm
+    }
+
+    /// Integrate a live data component's footprint up to `now`.
+    fn data_stamp(&mut self, d: usize, now: Millis) {
+        if let Some((last, mb)) = self.data_track.get_mut(&d) {
+            let dt_s = (now - *last).max(0.0) / 1000.0;
+            self.attrib.alloc_mem_mb_s += *mb * dt_s;
+            // data regions are fully resident: used == allocated
+            self.attrib.used_mem_mb_s += *mb * dt_s;
+            *last = now;
+        }
+    }
+
+    fn data_open(&mut self, d: usize, now: Millis, mb: f64) {
+        self.data_track.insert(d, (now, mb));
+    }
+
+    fn data_grow(&mut self, d: usize, now: Millis, extra_mb: f64) {
+        self.data_stamp(d, now);
+        if let Some((_, mb)) = self.data_track.get_mut(&d) {
+            *mb += extra_mb;
+        }
+    }
+
+    fn data_close(&mut self, d: usize, now: Millis) {
+        self.data_stamp(d, now);
+        self.data_track.remove(&d);
+    }
+}
 
 impl Platform {
     pub fn new(spec: ClusterSpec, config: ZenixConfig) -> Self {
@@ -205,6 +324,22 @@ impl Platform {
         self.invoke_inner(graph, inv, None)
     }
 
+    /// Execute one invocation dispatched at simulated time `at` (the
+    /// re-entrant single-shot entry: the invocation starts no earlier
+    /// than the platform's clock, so per-server consumption integrals
+    /// stay monotonic). For genuinely *overlapping* invocations use
+    /// [`super::driver::MultiTenantDriver`], which interleaves many
+    /// [`OngoingInvocation`]s in global time order.
+    pub fn invoke_at(
+        &mut self,
+        graph: &ResourceGraph,
+        inv: Invocation,
+        at: Millis,
+    ) -> crate::Result<RunReport> {
+        self.now = self.now.max(at);
+        self.invoke_inner(graph, inv, None)
+    }
+
     /// Execute with a crash injected before the given wave completes;
     /// recovery re-executes from the latest durable graph cut (§5.3.2).
     pub fn invoke_with_crash(
@@ -223,16 +358,48 @@ impl Platform {
         inv: Invocation,
         crash: Option<(Crash, usize)>,
     ) -> crate::Result<RunReport> {
+        // Cluster-wide baseline for the before/after consumption diff —
+        // only the single-tenant path needs it (the driver reports
+        // attributed integrals instead), so the O(servers) sweep stays
+        // out of `begin_at`.
+        let consumed_before = self.cluster.total_consumption(self.now);
+        let mut st = self.begin_at(graph, inv, self.now, crash);
+        st.consumed_before = consumed_before;
+        loop {
+            self.start_wave(graph, &mut st)?;
+            // Single-tenant: apply this wave's deferred events in time
+            // order right away (stable sort preserves push order on
+            // ties, like the driver's sequence-numbered heap).
+            let mut evs = std::mem::take(&mut st.pending);
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for (at, server, ev) in evs.drain(..) {
+                self.apply_timeline(&mut st, server, ev, at);
+            }
+            st.pending = evs; // keep capacity
+            if self.wave_done(graph, &mut st) {
+                break;
+            }
+        }
+        Ok(self.finish_invocation(graph, st, false))
+    }
+
+    // ---- re-entrant entry points (multi-tenant driver interface) --------
+
+    /// Open an invocation at simulated time `at`: route to a rack, mark
+    /// the whole-app anchor, and return the paused per-invocation state
+    /// (wave 0 not yet started — call [`Self::start_wave`]).
+    pub fn begin_at(
+        &mut self,
+        graph: &ResourceGraph,
+        inv: Invocation,
+        at: Millis,
+        crash: Option<(Crash, usize)>,
+    ) -> OngoingInvocation {
         let scale = inv.input_scale;
         let program = &graph.program;
         let inv_id = self.next_invocation;
         self.next_invocation += 1;
-        let t0 = self.now;
-        let consumed_before = self.cluster.total_consumption(t0);
         let mut breakdown = Breakdown::default();
-        // Reusable placement scratch (restored before returning; an
-        // early `?` only costs the buffers' capacity, not correctness).
-        let mut ctx = std::mem::take(&mut self.scratch);
 
         // ---- global scheduling: route to a rack -------------------------
         let estimate = program.peak_estimate(scale);
@@ -254,389 +421,478 @@ impl Platform {
             self.cluster.mark(a, estimate);
         }
 
-        // ---- wave-by-wave execution -------------------------------------
-        let mut mem = MemoryController::new();
-        let mut data_home: HashMap<usize, ServerId> = HashMap::new();
-        let mut comp_server: HashMap<usize, ServerId> = HashMap::new();
         let merge_pairs = if self.config.adaptive {
             graph.merge_candidates(scale, 1.6)
         } else {
             Vec::new()
         };
-        let mut colocated_components = 0usize;
-        let mut total_components = 0usize;
-        let mut peak_cpu = 0.0f64;
-        let mut peak_mem = 0.0f64;
-        let mut wave_end = t0;
-        let mut prev_wave_dur = 0.0f64;
-        let mut executed: Vec<usize> = Vec::new();
-        let mut crash_state = crash;
 
-        let waves = graph.waves();
-        let mut wave_idx = 0;
-        while wave_idx < waves.len() {
-            let wave = &waves[wave_idx];
-            let wave_start = wave_end;
-            let mut wave_dur = 0.0f64;
-            let mut wave_cpu = 0.0f64;
-            let mut wave_mem = 0.0f64;
-            // deferred (time, server, event) timeline, applied sorted
-            ctx.wave_events.clear();
+        OngoingInvocation {
+            scale,
+            inv_id,
+            t0: at,
+            // filled in by invoke_inner for the diff-based report; the
+            // driver's attributed accounting never reads it
+            consumed_before: Consumption::default(),
+            breakdown,
+            mem: MemoryController::new(),
+            data_home: HashMap::new(),
+            comp_server: HashMap::new(),
+            merge_pairs,
+            colocated_components: 0,
+            total_components: 0,
+            peak_cpu: 0.0,
+            peak_mem: 0.0,
+            wave_start: at,
+            prev_wave_dur: 0.0,
+            wave_dur: 0.0,
+            crash_state: crash,
+            anchor,
+            estimate,
+            rack_id,
+            waves: graph.waves(),
+            wave_idx: 0,
+            grown: HashMap::new(),
+            pending: Vec::new(),
+            attrib: Consumption::default(),
+            data_track: HashMap::new(),
+            growth_count: 0,
+            first_wave_warm: None,
+        }
+    }
 
-            for &c in wave {
-                let spec = &program.computes[c];
-                total_components += 1;
+    /// Execute the scheduling/placement of the next wave at
+    /// `st.wave_start`: size and place every component, launch/grow its
+    /// data, commit the immediate allocations, and emit the deferred
+    /// mid-wave/end-of-wave timeline into `st.pending`. On error the
+    /// invocation is fully aborted (no resource leak) before returning.
+    pub fn start_wave(
+        &mut self,
+        graph: &ResourceGraph,
+        st: &mut OngoingInvocation,
+    ) -> crate::Result<()> {
+        let scale = st.scale;
+        let program = &graph.program;
+        let rack_id = st.rack_id;
+        let anchor = st.anchor;
+        let wave_start = st.wave_start;
+        let mut wave_dur = 0.0f64;
+        let mut wave_cpu = 0.0f64;
+        let mut wave_mem = 0.0f64;
+        let mut ctx = std::mem::take(&mut self.scratch);
 
-                // -- sizing ---------------------------------------------
-                let workers = spec
-                    .parallelism_at(scale)
-                    .min(program.app_limit.cpu.max(1.0) as usize)
-                    .max(1);
-                let need_mb_worker = spec.mem_at(scale);
-                let need_mb = need_mb_worker * workers as f64;
-                let (init_mb, step_mb) = self.sizing(program.name, c, need_mb);
-                let vcpus = self.cpu_sizing(program.name, c, workers);
-                // first observation becomes the static profile estimate
-                self.static_profile
-                    .entry((program.name.to_string(), c))
-                    .or_insert(need_mb);
+        let n_comps = st.waves[st.wave_idx].len();
+        for k in 0..n_comps {
+            let c = st.waves[st.wave_idx][k];
+            let spec = &program.computes[c];
+            st.total_components += 1;
 
-                // -- placement ------------------------------------------
-                ctx.data_servers.clear();
-                ctx.data_servers
-                    .extend(spec.accesses.iter().filter_map(|d| data_home.get(d).copied()));
-                let demand = Resources::new(vcpus as f64, init_mb);
-                let (server, colocated, granted) =
-                    self.place(rack_id, anchor, demand, &ctx.data_servers, wave_start);
-                comp_server.insert(c, server);
-                // run on what was actually granted (degraded when the
-                // cluster is saturated)
-                let vcpus_granted = granted.cpu.max(0.25);
-                let init_mb = granted.mem_mb;
+            // -- sizing ---------------------------------------------
+            let workers = spec
+                .parallelism_at(scale)
+                .min(program.app_limit.cpu.max(1.0) as usize)
+                .max(1);
+            let need_mb_worker = spec.mem_at(scale);
+            let need_mb = need_mb_worker * workers as f64;
+            let (init_mb, step_mb) = self.sizing(program.name, c, need_mb);
+            let vcpus = self.cpu_sizing(program.name, c, workers);
+            // first observation becomes the static profile estimate
+            self.static_profile
+                .entry((program.name, c))
+                .or_insert(need_mb);
 
-                // -- data components launched by first accessor ----------
-                let mut remote_frac = 0.0f64;
-                let mut n_accessed = 0usize;
-                for &d in &spec.accesses {
-                    let dspec = &program.data[d];
-                    let dsize = dspec.size_at(scale);
-                    if mem.get(d as u64).is_none() {
-                        let prefer = if self.config.force_remote_data {
-                            // disaggregation mode: data lives away from compute
-                            self.other_server(rack_id, server)
-                        } else {
-                            server
-                        };
-                        let target = self.pick_data_server(rack_id, prefer, dsize);
-                        if mem
-                            .launch(&mut self.cluster, d as u64, target, dsize, wave_start)
-                            .is_err()
-                        {
-                            // overloaded cluster: take what fits and leave
-                            // the rest to swap space (§5.1.2)
-                            let avail =
-                                (self.cluster.server(target).available().mem_mb * 0.9).max(1.0);
-                            if let Err(e) = mem.launch(
-                                &mut self.cluster,
-                                d as u64,
-                                target,
-                                avail.min(dsize),
-                                wave_start,
-                            ) {
-                                // current component's placement has no
-                                // Finish event yet: release it directly
-                                self.cluster.free(server, granted, wave_start);
-                                self.abort_invocation(ctx, &mut mem, anchor, estimate, wave_start);
-                                return Err(e);
-                            }
-                        }
-                        data_home.insert(d, target);
+            // -- placement ------------------------------------------
+            ctx.data_servers.clear();
+            ctx.data_servers
+                .extend(spec.accesses.iter().filter_map(|d| st.data_home.get(d).copied()));
+            let demand = Resources::new(vcpus as f64, init_mb);
+            let (server, colocated, granted) =
+                self.place(rack_id, anchor, demand, &ctx.data_servers, wave_start);
+            st.comp_server.insert(c, server);
+            // run on what was actually granted (degraded when the
+            // cluster is saturated)
+            let vcpus_granted = granted.cpu.max(0.25);
+            let init_mb = granted.mem_mb;
+
+            // -- data components launched by first accessor ----------
+            let mut remote_frac = 0.0f64;
+            let mut n_accessed = 0usize;
+            for &d in &spec.accesses {
+                let dspec = &program.data[d];
+                let dsize = dspec.size_at(scale);
+                if st.mem.get(d as u64).is_none() {
+                    let prefer = if self.config.force_remote_data {
+                        // disaggregation mode: data lives away from compute
+                        self.other_server(rack_id, server)
                     } else {
-                        // growth if this invocation needs more
-                        let cur = mem.get(d as u64).unwrap().total_mb();
-                        if dsize > cur {
-                            ctx.accessors.clear();
-                            ctx.accessors.extend(
-                                graph
-                                    .accessors_of_iter(d)
-                                    .filter_map(|a| comp_server.get(&a).copied()),
-                            );
-                            let grow_to = super::placement::place_growth(
-                                &self.cluster,
-                                Resources::mem_only(dsize - cur),
-                                data_home[&d],
-                                &ctx.accessors,
-                            );
-                            if let Some(s) = grow_to {
-                                let _ = mem.grow(&mut self.cluster, d as u64, dsize - cur, &[s], wave_start);
+                        server
+                    };
+                    let target = self.pick_data_server(rack_id, prefer, dsize);
+                    let mut launched = dsize;
+                    if st
+                        .mem
+                        .launch(&mut self.cluster, d as u64, target, dsize, wave_start)
+                        .is_err()
+                    {
+                        // overloaded cluster: take what fits and leave
+                        // the rest to swap space (§5.1.2)
+                        let avail =
+                            (self.cluster.server(target).available().mem_mb * 0.9).max(1.0);
+                        launched = avail.min(dsize);
+                        if let Err(e) = st.mem.launch(
+                            &mut self.cluster,
+                            d as u64,
+                            target,
+                            launched,
+                            wave_start,
+                        ) {
+                            // current component's placement has no
+                            // Finish event yet: release it directly
+                            self.cluster.free(server, granted, wave_start);
+                            self.abort_invocation(ctx, st, wave_start);
+                            return Err(e);
+                        }
+                    }
+                    st.data_open(d, wave_start, launched);
+                    st.data_home.insert(d, target);
+                } else {
+                    // growth if this invocation needs more
+                    let cur = st.mem.get(d as u64).unwrap().total_mb();
+                    if dsize > cur {
+                        ctx.accessors.clear();
+                        ctx.accessors.extend(
+                            graph
+                                .accessors_of_iter(d)
+                                .filter_map(|a| st.comp_server.get(&a).copied()),
+                        );
+                        let grow_to = super::placement::place_growth(
+                            &self.cluster,
+                            Resources::mem_only(dsize - cur),
+                            st.data_home[&d],
+                            &ctx.accessors,
+                        );
+                        if let Some(s) = grow_to {
+                            if st
+                                .mem
+                                .grow(&mut self.cluster, d as u64, dsize - cur, &[s], wave_start)
+                                .is_ok()
+                            {
+                                st.data_grow(d, wave_start, dsize - cur);
                             }
                         }
                     }
-                    if let Err(e) = mem.attach(d as u64, c as u64) {
-                        // current component's placement has no Finish
-                        // event yet: release it directly
-                        self.cluster.free(server, granted, wave_start);
-                        self.abort_invocation(ctx, &mut mem, anchor, estimate, wave_start);
-                        return Err(e);
+                }
+                if let Err(e) = st.mem.attach(d as u64, c as u64) {
+                    // current component's placement has no Finish
+                    // event yet: release it directly
+                    self.cluster.free(server, granted, wave_start);
+                    self.abort_invocation(ctx, st, wave_start);
+                    return Err(e);
+                }
+                if let Some(state) = st.mem.get(d as u64) {
+                    remote_frac += state.remote_fraction(server);
+                    n_accessed += 1;
+                }
+            }
+            if n_accessed > 0 {
+                remote_frac /= n_accessed as f64;
+            }
+            if self.config.force_remote_data {
+                remote_frac = 1.0;
+            }
+
+            // -- startup --------------------------------------------
+            let merged = st.merge_pairs.iter().any(|&(_, b)| b == c)
+                && anchor.map_or(false, |a| a == server);
+            let app_warm = self.warm_pool.contains(program.name);
+            if st.wave_idx == 0 && st.first_wave_warm.is_none() {
+                st.first_wave_warm = Some(self.config.proactive && app_warm);
+            }
+            let startup_ms = self.startup_cost(
+                st.wave_idx,
+                merged,
+                colocated && self.config.adaptive,
+                st.prev_wave_dur,
+                app_warm,
+            );
+            st.breakdown.startup_ms += startup_ms;
+
+            // -- connection setup for remote data --------------------
+            let mut conn_ms = 0.0;
+            let kind = self.config.net_kind();
+            let path = self.config.control_path();
+            ctx.conn_seen.clear();
+            for &d in &spec.accesses {
+                for s in st.mem.region_server_iter(d as u64) {
+                    if s != server {
+                        let reuse = ctx.conn_seen.contains(&s);
+                        conn_ms += self.control.conn_setup(path, kind, reuse);
+                        ctx.conn_seen.push(s);
                     }
-                    if let Some(state) = mem.get(d as u64) {
-                        remote_frac += state.remote_fraction(server);
-                        n_accessed += 1;
-                    }
                 }
-                if n_accessed > 0 {
-                    remote_frac /= n_accessed as f64;
+            }
+            st.breakdown.sched_ms += conn_ms;
+
+            // -- compute duration ------------------------------------
+            // Historical-utilization CPU trimming (§5.1.2: 50% util
+            // on 10 vCPUs → 5 vCPUs next time) removes *idle* CPU:
+            // effective throughput is the smaller of the allocation
+            // and the workers' useful parallelism.
+            let work = spec.work_at(scale);
+            let eff = self.config.cpu_efficiency.max(0.05);
+            let throughput = vcpus_granted.min(workers as f64 * eff).max(0.05);
+            let compute_ms = work / throughput;
+            let slowdown = self
+                .net
+                .remote_slowdown(kind, remote_frac * spec.access_intensity);
+            let mut stage_ms = compute_ms * slowdown;
+            st.breakdown.compute_ms += compute_ms;
+            st.breakdown.io_ms += compute_ms * (slowdown - 1.0);
+
+            // -- memory autoscaling ----------------------------------
+            let mut alloc_now = init_mb;
+            if need_mb > init_mb {
+                let growths = adjust::growths(init_mb, step_mb, need_mb);
+                st.growth_count += growths as usize;
+                // each growth: scheduler round-trip + brief stall
+                let growth_overhead = growths * (2.0 * self.control.sched_msg_ms + 2.0);
+                stage_ms += growth_overhead;
+                st.breakdown.sched_ms += growth_overhead;
+                // growth lands local if it fits, else swap-remote
+                let extra = need_mb - init_mb;
+                let fits_local = self
+                    .cluster
+                    .server(server)
+                    .available()
+                    .fits(Resources::mem_only(extra));
+                if !fits_local {
+                    // remote swap space for the overflow (§5.1.2)
+                    let swap_pen = self
+                        .net
+                        .remote_slowdown(kind, (extra / need_mb).min(1.0))
+                        - 1.0;
+                    stage_ms += compute_ms * swap_pen * 0.5;
+                    st.breakdown.io_ms += compute_ms * swap_pen * 0.5;
                 }
-                if self.config.force_remote_data {
-                    remote_frac = 1.0;
-                }
+                alloc_now = need_mb.min(alloc_now + growths * step_mb);
+            }
 
-                // -- startup --------------------------------------------
-                let merged = merge_pairs.iter().any(|&(_, b)| b == c)
-                    && anchor.map_or(false, |a| a == server);
-                let app_warm = self.warm_pool.contains(program.name);
-                let startup_ms = self.startup_cost(
-                    wave_idx,
-                    merged,
-                    colocated && self.config.adaptive,
-                    prev_wave_dur,
-                    app_warm,
-                );
-                breakdown.startup_ms += startup_ms;
-
-                // -- connection setup for remote data --------------------
-                let mut conn_ms = 0.0;
-                let kind = self.config.net_kind();
-                let path = self.config.control_path();
-                ctx.conn_seen.clear();
-                for &d in &spec.accesses {
-                    for s in mem.region_server_iter(d as u64) {
-                        if s != server {
-                            let reuse = ctx.conn_seen.contains(&s);
-                            conn_ms += self.control.conn_setup(path, kind, reuse);
-                            ctx.conn_seen.push(s);
-                        }
-                    }
-                }
-                breakdown.sched_ms += conn_ms;
-
-                // -- compute duration ------------------------------------
-                // Historical-utilization CPU trimming (§5.1.2: 50% util
-                // on 10 vCPUs → 5 vCPUs next time) removes *idle* CPU:
-                // effective throughput is the smaller of the allocation
-                // and the workers' useful parallelism.
-                let work = spec.work_at(scale);
-                let eff = self.config.cpu_efficiency.max(0.05);
-                let throughput = vcpus_granted.min(workers as f64 * eff).max(0.05);
-                let compute_ms = work / throughput;
-                let slowdown = self
-                    .net
-                    .remote_slowdown(kind, remote_frac * spec.access_intensity);
-                let mut stage_ms = compute_ms * slowdown;
-                breakdown.compute_ms += compute_ms;
-                breakdown.io_ms += compute_ms * (slowdown - 1.0);
-
-                // -- memory autoscaling ----------------------------------
-                let mut alloc_now = init_mb;
-                if need_mb > init_mb {
-                    let growths = adjust::growths(init_mb, step_mb, need_mb);
-                    // each growth: scheduler round-trip + brief stall
-                    let growth_overhead = growths * (2.0 * self.control.sched_msg_ms + 2.0);
-                    stage_ms += growth_overhead;
-                    breakdown.sched_ms += growth_overhead;
-                    // growth lands local if it fits, else swap-remote
-                    let extra = need_mb - init_mb;
-                    let fits_local = self
-                        .cluster
-                        .server(server)
-                        .available()
-                        .fits(Resources::mem_only(extra));
-                    if !fits_local {
-                        // remote swap space for the overflow (§5.1.2)
-                        let swap_pen = self
-                            .net
-                            .remote_slowdown(kind, (extra / need_mb).min(1.0))
-                            - 1.0;
-                        stage_ms += compute_ms * swap_pen * 0.5;
-                        breakdown.io_ms += compute_ms * swap_pen * 0.5;
-                    }
-                    alloc_now = need_mb.min(alloc_now + growths * step_mb);
-                }
-
-                // -- commit allocation timeline --------------------------
-                // Allocations happened at wave_start (placement); the
-                // growth and free events are deferred and applied in
-                // time order after the wave loop — same-server events
-                // from concurrently-running components must reach the
-                // integrator monotonically or consumption double-counts.
-                let end = wave_start + startup_ms + stage_ms;
-                wave_dur = wave_dur.max(startup_ms + stage_ms);
-                let used_cpu = throughput.min(vcpus_granted);
-                self.cluster.add_used(
+            // -- commit allocation timeline --------------------------
+            // Allocations happened at wave_start (placement); the
+            // growth and free events are deferred and applied in
+            // time order after the wave's scheduling pass —
+            // same-server events from concurrently-running components
+            // must reach the integrator monotonically or consumption
+            // double-counts.
+            let end = wave_start + startup_ms + stage_ms;
+            wave_dur = wave_dur.max(startup_ms + stage_ms);
+            let used_cpu = throughput.min(vcpus_granted);
+            let base_used = Resources::new(used_cpu, init_mb.min(need_mb));
+            self.cluster.add_used(server, base_used, wave_start);
+            let mid = wave_start + (startup_ms + stage_ms) / 2.0;
+            if alloc_now > init_mb {
+                st.pending.push((
+                    mid,
                     server,
-                    Resources::new(used_cpu, init_mb.min(need_mb)),
-                    wave_start,
-                );
-                let mid = wave_start + (startup_ms + stage_ms) / 2.0;
-                if alloc_now > init_mb {
-                    ctx.wave_events.push((
-                        mid,
-                        server,
-                        TimelineEv::Grow {
-                            comp: c,
-                            extra_mb: alloc_now - init_mb,
-                            used_mb: (need_mb - init_mb).max(0.0),
-                        },
-                    ));
-                }
-                ctx.wave_events.push((
-                    end,
-                    server,
-                    TimelineEv::Finish {
+                    TimelineEv::Grow {
                         comp: c,
-                        base_alloc: granted,
-                        used: Resources::new(used_cpu, need_mb.min(alloc_now.max(init_mb))),
+                        extra_mb: alloc_now - init_mb,
+                        used_mb: (need_mb - init_mb).max(0.0),
                     },
                 ));
+            }
+            // `used` carries exactly the base share added above —
+            // `Finish` subtracts it plus whatever the (possibly
+            // failed) `Grow` actually added, never more.
+            st.pending.push((
+                end,
+                server,
+                TimelineEv::Finish {
+                    comp: c,
+                    started: wave_start,
+                    base_alloc: granted,
+                    used: base_used,
+                },
+            ));
 
-                wave_cpu += vcpus_granted;
-                wave_mem += alloc_now.max(init_mb)
-                    + graph
-                        .accessed_data_iter(c)
-                        .map(|d| program.data[d].size_at(scale))
-                        .sum::<f64>();
-                if colocated
-                    || ctx.data_servers.is_empty()
-                    || ctx.data_servers.contains(&server)
-                {
-                    colocated_components += 1;
-                }
-
-                // -- reliable result message -----------------------------
-                self.msglog.append(LogEntry {
-                    invocation: inv_id,
-                    compute: c,
-                    result_mb: need_mb_worker * 0.1,
-                });
-                self.msglog.flush();
-                executed.push(c);
-
-                // -- record history --------------------------------------
-                self.history.record(program.name, c, Metric::MemMb, need_mb);
-                self.history.record(program.name, c, Metric::Cpu, workers as f64);
-                self.history
-                    .record(program.name, c, Metric::CpuUtil, eff);
-                self.history
-                    .record(program.name, c, Metric::LifetimeMs, stage_ms);
+            wave_cpu += vcpus_granted;
+            wave_mem += alloc_now.max(init_mb)
+                + graph
+                    .accessed_data_iter(c)
+                    .map(|d| program.data[d].size_at(scale))
+                    .sum::<f64>();
+            if colocated
+                || ctx.data_servers.is_empty()
+                || ctx.data_servers.contains(&server)
+            {
+                st.colocated_components += 1;
             }
 
-            // -- apply deferred timeline events in time order ------------
-            ctx.wave_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            let mut grown: HashMap<usize, f64> = HashMap::new();
-            for (at, server, ev) in ctx.wave_events.drain(..) {
-                match ev {
-                    TimelineEv::Grow { comp, extra_mb, used_mb } => {
-                        if self.cluster.try_alloc(server, Resources::mem_only(extra_mb), at) {
-                            self.cluster.add_used(server, Resources::mem_only(used_mb), at);
-                            grown.insert(comp, extra_mb);
-                        }
-                    }
-                    TimelineEv::Finish { comp, base_alloc, used } => {
-                        let extra = grown.remove(&comp).unwrap_or(0.0);
-                        self.cluster.sub_used(server, used, at);
-                        self.cluster.free(server, base_alloc.plus(Resources::mem_only(extra)), at);
-                    }
-                }
-            }
+            // -- reliable result message -----------------------------
+            self.msglog.append(LogEntry {
+                invocation: st.inv_id,
+                compute: c,
+                result_mb: need_mb_worker * 0.1,
+            });
+            self.msglog.flush();
 
-            // -- data lifetime: release components whose last accessor ran
-            for d in 0..graph.n_data() {
-                if let Some((_, last)) = graph.data_lifetime(d) {
-                    if last == wave_idx && mem.get(d as u64).is_some() {
-                        let _ = mem.release(&mut self.cluster, d as u64, wave_end + wave_dur);
-                        data_home.remove(&d);
-                    }
-                }
-            }
-
-            peak_cpu = peak_cpu.max(wave_cpu);
-            peak_mem = peak_mem.max(wave_mem);
-            wave_end = wave_start + wave_dur;
-            prev_wave_dur = wave_dur;
-
-            // -- crash injection + recovery ------------------------------
-            if let Some((cr, at)) = crash_state {
-                if wave_idx == at {
-                    crash_state = None;
-                    let plan = failure::plan(graph, &self.msglog, inv_id, cr);
-                    // discard data components named by the plan
-                    for &d in &plan.discard_data {
-                        if mem.get(d as u64).is_some() {
-                            let _ = mem.release(&mut self.cluster, d as u64, wave_end);
-                            data_home.remove(&d);
-                        }
-                    }
-                    // re-execution: rewind to the earliest dirty wave; the
-                    // per-component loop will recreate data/allocations.
-                    if let Some(&first) = plan.reexecute.first() {
-                        let redo_wave = graph.wave[first];
-                        breakdown.sched_ms += 5.0; // recovery decision
-                        wave_idx = redo_wave;
-                        continue;
-                    }
-                }
-            }
-            wave_idx += 1;
+            // -- record history --------------------------------------
+            self.history.record(program.name, c, Metric::MemMb, need_mb);
+            self.history.record(program.name, c, Metric::Cpu, workers as f64);
+            self.history
+                .record(program.name, c, Metric::CpuUtil, eff);
+            self.history
+                .record(program.name, c, Metric::LifetimeMs, stage_ms);
         }
 
+        st.wave_dur = wave_dur;
+        st.peak_cpu = st.peak_cpu.max(wave_cpu);
+        st.peak_mem = st.peak_mem.max(wave_mem);
+        self.scratch = ctx;
+        Ok(())
+    }
+
+    /// Apply one deferred timeline event at its own time. The caller
+    /// (single-tenant loop or multi-tenant driver) guarantees events
+    /// reach this in global time order.
+    pub fn apply_timeline(
+        &mut self,
+        st: &mut OngoingInvocation,
+        server: ServerId,
+        ev: TimelineEv,
+        at: Millis,
+    ) {
+        match ev {
+            TimelineEv::Grow { comp, extra_mb, used_mb } => {
+                if self.cluster.try_alloc(server, Resources::mem_only(extra_mb), at) {
+                    self.cluster.add_used(server, Resources::mem_only(used_mb), at);
+                    st.grown.insert(comp, (extra_mb, used_mb, at));
+                }
+                // else: cluster full — the growth never landed, so the
+                // Finish below must not release or un-use it.
+            }
+            TimelineEv::Finish { comp, started, base_alloc, used } => {
+                let (extra, grown_used, grown_at) =
+                    st.grown.remove(&comp).unwrap_or((0.0, 0.0, at));
+                self.cluster
+                    .sub_used(server, used.plus(Resources::mem_only(grown_used)), at);
+                self.cluster
+                    .free(server, base_alloc.plus(Resources::mem_only(extra)), at);
+                // attributed per-invocation integrals
+                let dur_s = (at - started).max(0.0) / 1000.0;
+                let grown_s = (at - grown_at).max(0.0) / 1000.0;
+                st.attrib.alloc_cpu_s += base_alloc.cpu * dur_s;
+                st.attrib.alloc_mem_mb_s += base_alloc.mem_mb * dur_s + extra * grown_s;
+                st.attrib.used_cpu_s += used.cpu * dur_s;
+                st.attrib.used_mem_mb_s += used.mem_mb * dur_s + grown_used * grown_s;
+            }
+        }
+    }
+
+    /// Complete the wave in flight (all its timeline events applied):
+    /// release end-of-life data components, run crash recovery if one
+    /// was injected at this wave, and advance to the next wave.
+    /// Returns `true` when the invocation has no waves left — call
+    /// [`Self::finish_invocation`] next.
+    pub fn wave_done(&mut self, graph: &ResourceGraph, st: &mut OngoingInvocation) -> bool {
+        let now = st.wave_start + st.wave_dur;
+        // -- data lifetime: release components whose last accessor ran
+        for d in 0..graph.n_data() {
+            if let Some((_, last)) = graph.data_lifetime(d) {
+                if last == st.wave_idx && st.mem.get(d as u64).is_some() {
+                    st.data_close(d, now);
+                    let _ = st.mem.release(&mut self.cluster, d as u64, now);
+                    st.data_home.remove(&d);
+                }
+            }
+        }
+        st.prev_wave_dur = st.wave_dur;
+        st.wave_start = now;
+
+        // -- crash injection + recovery ------------------------------
+        if let Some((cr, at)) = st.crash_state {
+            if st.wave_idx == at {
+                st.crash_state = None;
+                let plan = failure::plan(graph, &self.msglog, st.inv_id, cr);
+                // discard data components named by the plan
+                for &d in &plan.discard_data {
+                    if st.mem.get(d as u64).is_some() {
+                        st.data_close(d, now);
+                        let _ = st.mem.release(&mut self.cluster, d as u64, now);
+                        st.data_home.remove(&d);
+                    }
+                }
+                // re-execution: rewind to the earliest dirty wave; the
+                // per-component loop will recreate data/allocations.
+                if let Some(&first) = plan.reexecute.first() {
+                    let redo_wave = graph.wave[first];
+                    st.breakdown.sched_ms += 5.0; // recovery decision
+                    st.wave_idx = redo_wave;
+                    return false;
+                }
+            }
+        }
+        st.wave_idx += 1;
+        st.wave_idx >= st.waves.len()
+    }
+
+    /// Close a completed invocation: release surviving data, drop the
+    /// anchor mark, admit the app to the warm pool, and build the run
+    /// report. With `attributed` the consumption is the invocation's
+    /// own integral ([`OngoingInvocation::attrib`]); otherwise it is
+    /// the cluster-wide before/after diff (exact when single-tenant).
+    pub fn finish_invocation(
+        &mut self,
+        graph: &ResourceGraph,
+        mut st: OngoingInvocation,
+        attributed: bool,
+    ) -> RunReport {
+        let wave_end = st.wave_start;
         // release any data still live (defensive; lifetimes should cover)
         for d in 0..graph.n_data() {
-            if mem.get(d as u64).is_some() {
-                let _ = mem.release(&mut self.cluster, d as u64, wave_end);
+            if st.mem.get(d as u64).is_some() {
+                st.data_close(d, wave_end);
+                let _ = st.mem.release(&mut self.cluster, d as u64, wave_end);
             }
         }
-        if let Some(a) = anchor {
-            self.cluster.unmark(a, estimate);
+        if let Some(a) = st.anchor {
+            self.cluster.unmark(a, st.estimate);
         }
-        self.scratch = ctx;
+        self.warm_pool.insert(graph.program.name);
+        self.now = self.now.max(wave_end + 1.0);
+        let consumption = if attributed {
+            st.attrib
+        } else {
+            let consumed_after = self.cluster.total_consumption(self.now);
+            sub_consumption(consumed_after, st.consumed_before)
+        };
 
-        self.warm_pool.insert(program.name.to_string());
-        self.now = wave_end + 1.0;
-        let consumed_after = self.cluster.total_consumption(self.now);
-        let consumption = sub_consumption(consumed_after, consumed_before);
-
-        Ok(RunReport {
+        RunReport {
             system: "zenix".into(),
-            workload: program.name.into(),
-            exec_ms: wave_end - t0,
-            breakdown,
+            workload: graph.program.name.into(),
+            exec_ms: wave_end - st.t0,
+            breakdown: st.breakdown,
             consumption,
-            local_fraction: if total_components == 0 {
+            local_fraction: if st.total_components == 0 {
                 1.0
             } else {
-                colocated_components as f64 / total_components as f64
+                st.colocated_components as f64 / st.total_components as f64
             },
-            peak_cpu,
-            peak_mem_mb: peak_mem,
-        })
+            peak_cpu: st.peak_cpu,
+            peak_mem_mb: st.peak_mem,
+        }
     }
 
     // ---- helpers --------------------------------------------------------
 
     /// Best-effort error-path cleanup so a failed invocation cannot
     /// leak placement state: apply the pending completion events of
-    /// the current wave (releasing committed compute allocations),
-    /// release every live data component, drop the anchor's
+    /// the current wave (releasing committed compute allocations and
+    /// exactly the used shares that were added), unwind any landed
+    /// growths, release every live data component, drop the anchor's
     /// low-priority mark, and restore the scratch buffers.
-    fn abort_invocation(
-        &mut self,
-        mut ctx: PlacementCtx,
-        mem: &mut MemoryController,
-        anchor: Option<ServerId>,
-        estimate: Resources,
-        now: Millis,
-    ) {
-        for (_, server, ev) in ctx.wave_events.drain(..) {
+    fn abort_invocation(&mut self, ctx: PlacementCtx, st: &mut OngoingInvocation, now: Millis) {
+        for (_, server, ev) in st.pending.drain(..) {
             // Grow events were never applied to the cluster; only the
             // base allocations behind Finish events are live.
             if let TimelineEv::Finish { base_alloc, used, .. } = ev {
@@ -644,15 +900,36 @@ impl Platform {
                 self.cluster.free(server, base_alloc, now);
             }
         }
-        mem.release_all(&mut self.cluster, now);
-        if let Some(a) = anchor {
-            self.cluster.unmark(a, estimate);
+        // Landed growths from earlier waves whose Finish never ran
+        // (defensive: normally empty by the time a new wave starts).
+        let mut grown: Vec<(usize, (f64, f64, Millis))> = st.grown.drain().collect();
+        grown.sort_by_key(|&(comp, _)| comp);
+        for (comp, (extra, grown_used, _)) in grown {
+            if let Some(&server) = st.comp_server.get(&comp) {
+                self.cluster.sub_used(server, Resources::mem_only(grown_used), now);
+                self.cluster.free(server, Resources::mem_only(extra), now);
+            }
+        }
+        // Release live data in index order (deterministic float
+        // accumulation; HashMap order must not leak into the integrals).
+        let mut tracked: Vec<usize> = st.data_track.keys().copied().collect();
+        tracked.sort_unstable();
+        for d in tracked {
+            st.data_close(d, now);
+            let _ = st.mem.release(&mut self.cluster, d as u64, now);
+        }
+        st.mem.release_all(&mut self.cluster, now); // backstop: empty by now
+        if let Some(a) = st.anchor {
+            self.cluster.unmark(a, st.estimate);
         }
         self.scratch = ctx;
     }
 
-    /// Initial + incremental sizing for one compute component.
-    fn sizing(&self, app: &str, node: usize, need_mb: f64) -> (f64, f64) {
+    /// Initial + incremental sizing for one compute component. The app
+    /// name is the program's interned `&'static str`, so the re-tune
+    /// cache lookup is allocation-free on hits (the PR-2 satellite fix;
+    /// see `benches/hotpath.rs platform_invoke_lr_warm_sizing_hit`).
+    fn sizing(&self, app: &'static str, node: usize, need_mb: f64) -> (f64, f64) {
         if self.config.peak_provision {
             let peak = self
                 .history
@@ -666,16 +943,20 @@ impl Platform {
                 if p.len() >= 3 {
                     // periodic re-tune (§5.2.3): solve once, reuse for K
                     // executions — the solver is off the per-invocation
-                    // hot path (EXPERIMENTS.md §Perf).
-                    let key = (app.to_string(), node);
+                    // hot path (EXPERIMENTS.md §Perf). Counted against
+                    // the *cumulative* observation count: the retention
+                    // window saturates at its cap, which would stop
+                    // re-tuning forever on long-running apps.
+                    let recorded = p.total_recorded() as usize;
+                    let key = (app, node);
                     let mut cache = self.sizing_cache.borrow_mut();
                     if let Some(&(init, step, at)) = cache.get(&key) {
-                        if p.len() < at + RETUNE_EVERY {
+                        if recorded < at + RETUNE_EVERY {
                             return (init, step);
                         }
                     }
                     let s = adjust::solve(&p.values(), None, AdjustParams::default());
-                    cache.insert(key, (s.init_mb, s.step_mb, p.len()));
+                    cache.insert(key, (s.init_mb, s.step_mb, recorded));
                     return (s.init_mb, s.step_mb);
                 }
             }
@@ -688,7 +969,7 @@ impl Platform {
         // across invocations (grown at runtime when exceeded).
         let static_init = self
             .static_profile
-            .get(&(app.to_string(), node))
+            .get(&(app, node))
             .copied()
             .unwrap_or(need_mb);
         (static_init, self.config.fixed_step_mb)
@@ -858,11 +1139,15 @@ impl Platform {
 /// Deferred per-component allocation timeline event (applied in time
 /// order so per-server consumption integrals stay monotonic).
 #[derive(Debug, Clone, Copy)]
-enum TimelineEv {
-    /// Mid-stage memory growth (autoscaling).
+pub enum TimelineEv {
+    /// Mid-stage memory growth (autoscaling). Applied best-effort: on a
+    /// saturated cluster the growth silently fails and the matching
+    /// `Finish` releases nothing for it.
     Grow { comp: usize, extra_mb: f64, used_mb: f64 },
-    /// Component completion: release allocation, drop used.
-    Finish { comp: usize, base_alloc: Resources, used: Resources },
+    /// Component completion: release the base allocation plus whatever
+    /// growth actually landed, and drop exactly the used share that was
+    /// added (`used` is the base share committed at placement).
+    Finish { comp: usize, started: Millis, base_alloc: Resources, used: Resources },
 }
 
 /// Consumption difference (after - before), saturating at zero.
@@ -1015,5 +1300,64 @@ mod tests {
         let large = run_warm(ZenixConfig::default(), &g, 1.0);
         assert!(large.exec_ms > small.exec_ms);
         assert!(large.consumption.alloc_gb_s() > small.consumption.alloc_gb_s());
+    }
+
+    #[test]
+    fn invoke_at_dispatches_at_future_time() {
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::testbed();
+        let r = p.invoke_at(&g, Invocation::new(0.5), 10_000.0).unwrap();
+        assert!(r.exec_ms > 0.0);
+        assert!(p.now() >= 10_000.0 + r.exec_ms);
+        // dispatching in the past clamps to the platform clock (server
+        // consumption integrals must stay monotone)
+        let clock = p.now();
+        p.invoke_at(&g, Invocation::new(0.5), 0.0).unwrap();
+        assert!(p.now() > clock);
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO);
+        }
+    }
+
+    /// Satellite-2 regression: when a mid-wave growth cannot land
+    /// (saturated cluster), `Finish` must subtract only the used share
+    /// that was actually added — the old code subtracted the full grown
+    /// amount, eating other tenants' used integrals on the same server.
+    #[test]
+    fn failed_growth_does_not_steal_foreign_used_share() {
+        let spec = ClusterSpec {
+            racks: 1,
+            servers_per_rack: 1,
+            server_capacity: Resources::new(32.0, 4096.0),
+        };
+        let mut p = Platform::new(spec, ZenixConfig::default());
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        // Warm the history at a small scale: the later big invocation
+        // is then history-sized well below its need, forcing runtime
+        // growths (§5.2.3).
+        for _ in 0..4 {
+            p.invoke(&g, Invocation::new(0.3)).unwrap();
+        }
+        // A foreign tenant holds (and uses) most of the server, so the
+        // big invocation's Grow events cannot land.
+        let tenant = Resources::new(0.0, 3500.0);
+        assert!(p.cluster.try_alloc(ServerId(0), tenant, p.now()));
+        p.cluster.add_used(ServerId(0), tenant, p.now());
+        // The invocation runs degraded (or aborts) — either way it must
+        // clean up exactly what it added, nothing more.
+        let _ = p.invoke(&g, Invocation::new(1.0));
+        let s = p.cluster.server(ServerId(0));
+        assert!(
+            (s.allocated().mem_mb - tenant.mem_mb).abs() < 1e-6
+                && s.allocated().cpu.abs() < 1e-6,
+            "foreign allocation intact: {:?}",
+            s.allocated()
+        );
+        assert!(
+            (s.used().mem_mb - tenant.mem_mb).abs() < 1e-6,
+            "foreign used share must survive: {:?} vs {:?}",
+            s.used(),
+            tenant
+        );
     }
 }

@@ -70,6 +70,14 @@ impl Profile {
         self.obs.len()
     }
 
+    /// Total observations ever recorded (monotonic, not capped by the
+    /// retention window). The §5.2.3 re-tune schedule counts against
+    /// this — the windowed [`Self::len`] saturates at `cap`, which
+    /// would silently stop periodic re-tuning after the window fills.
+    pub fn total_recorded(&self) -> u64 {
+        self.seq
+    }
+
     pub fn is_empty(&self) -> bool {
         self.obs.is_empty()
     }
@@ -129,9 +137,14 @@ pub enum Metric {
 }
 
 /// Profiles for every (application, node, metric) triple.
+///
+/// Keyed app-first (`HashMap<String, …>`) so lookups borrow the `&str`
+/// key directly — the executor's per-component sizing path queries this
+/// on every invocation and must not allocate a `String` per lookup
+/// (PR-2 hot-path fix; `benches/hotpath.rs history_profile_lookup_hit`).
 #[derive(Debug, Default)]
 pub struct ProfileStore {
-    profiles: HashMap<(String, usize, Metric), Profile>,
+    profiles: HashMap<String, HashMap<(usize, Metric), Profile>>,
 }
 
 impl ProfileStore {
@@ -140,14 +153,20 @@ impl ProfileStore {
     }
 
     pub fn record(&mut self, app: &str, node: usize, metric: Metric, value: f64) {
+        // allocate the owned app key only on first sight of the app
+        if !self.profiles.contains_key(app) {
+            self.profiles.insert(app.to_string(), HashMap::new());
+        }
         self.profiles
-            .entry((app.to_string(), node, metric))
+            .get_mut(app)
+            .expect("just inserted")
+            .entry((node, metric))
             .or_default()
             .record(value);
     }
 
     pub fn profile(&self, app: &str, node: usize, metric: Metric) -> Option<&Profile> {
-        self.profiles.get(&(app.to_string(), node, metric))
+        self.profiles.get(app)?.get(&(node, metric))
     }
 
     pub fn quantile(&self, app: &str, node: usize, metric: Metric, q: f64) -> Option<f64> {
@@ -203,6 +222,18 @@ mod tests {
         assert_eq!(p.len(), 16);
         // survivors are the most recent ones
         assert!(p.values().iter().all(|&v| v >= 84.0));
+    }
+
+    #[test]
+    fn total_recorded_outlives_window_cap() {
+        // The re-tune schedule must keep advancing after the retention
+        // window fills (len saturates at cap; seq does not).
+        let mut p = Profile::new(0.95, 16);
+        for v in 0..40 {
+            p.record(v as f64);
+        }
+        assert_eq!(p.len(), 16);
+        assert_eq!(p.total_recorded(), 40);
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //! - [`sync`] — distributed lock/barrier primitives (§5.3.3).
 //! - [`exec`] — the adaptive execution engine + [`exec::Platform`]:
 //!   sizing, materialization, autoscaling, proactive startup (§5.1-5.2).
+//! - [`driver`] — multi-tenant trace-driven workload driver: overlapping
+//!   invocations from N apps interleaved on one shared platform over
+//!   simulated time (the Fig 22/26/29 load scenario).
 
 pub mod adjust;
+pub mod driver;
 pub mod exec;
 pub mod failure;
 pub mod graph;
@@ -23,6 +27,7 @@ pub mod placement;
 pub mod scheduler;
 pub mod sync;
 
-pub use exec::{Platform, ZenixConfig};
+pub use driver::{DriverConfig, DriverReport, MultiTenantDriver, Schedule, TenantApp};
+pub use exec::{OngoingInvocation, Platform, ZenixConfig};
 pub use graph::{NodeId, NodeKind, ResourceGraph};
 pub use history::ProfileStore;

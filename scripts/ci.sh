@@ -22,6 +22,26 @@ if [[ "${1:-}" == "--no-bench" ]]; then
     exit 0
 fi
 
+echo "== driver smoke: 1k invocations / 20 apps, deterministic per seed"
+drv1=$(cargo run --release --example multi_tenant -- --apps 20 --invocations 1000 --seed 7)
+drv2=$(cargo run --release --example multi_tenant -- --apps 20 --invocations 1000 --seed 7)
+dig1=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$drv1" | head -1)
+dig2=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$drv2" | head -1)
+if [[ -z "$dig1" || "$dig1" != "$dig2" ]]; then
+    echo "FAIL: multi-tenant driver not deterministic per seed ('$dig1' vs '$dig2')" >&2
+    exit 1
+fi
+savings=$(grep -oE 'alloc-savings vs faas-static: -?[0-9]+(\.[0-9]+)?' <<<"$drv1" | grep -oE '\-?[0-9]+(\.[0-9]+)?$' | head -1)
+if [[ -z "$savings" ]]; then
+    echo "FAIL: could not find the alloc-savings line in the driver output" >&2
+    exit 1
+fi
+awk -v s="$savings" 'BEGIN { exit (s + 0 >= 50.0) ? 0 : 1 }' || {
+    echo "FAIL: multi-tenant savings ${savings}% < 50% vs faas-static (paper: up to 90%)" >&2
+    exit 1
+}
+echo "driver smoke passed: ${dig1}, ${savings}% allocated-memory savings vs faas-static"
+
 echo "== bench smoke: scheduler (quick budget, json to repo root)"
 out=$(mktemp)
 ZENIX_BENCH_JSON=. cargo bench --bench scheduler -- --quick | tee "$out"
