@@ -3,6 +3,10 @@
 //!     cargo run --release --example multi_tenant -- \
 //!         --apps 20 --invocations 1000 --seed 7 --archetype average
 //!
+//! `--streaming` switches the report path to O(apps)-memory streaming
+//! statistics (moments + P² quantiles) — use it for 100k+ invocation
+//! traces; the digest is identical to the exact-storage default.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
 //! deterministic Poisson arrival schedule, and dispatches the
@@ -29,10 +33,15 @@ fn main() {
     let mut invocations = 1000usize;
     let mut seed = 7u64;
     let mut arch = Archetype::Average;
+    let mut exact_stats = true;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
         match args[i].as_str() {
+            "--streaming" => {
+                exact_stats = false;
+                i += 1;
+            }
             "--apps" => {
                 apps = arg_value(&args, i, "--apps").parse().expect("--apps N");
                 i += 2;
@@ -67,11 +76,12 @@ fn main() {
 
     println!(
         "multi-tenant driver: {apps} apps, {invocations} invocations, \
-         archetype={}, seed={seed}",
-        arch.name()
+         archetype={}, seed={seed}, stats={}",
+        arch.name(),
+        if exact_stats { "exact" } else { "streaming (O(apps) memory)" }
     );
     let mix = standard_mix(apps, arch);
-    let cfg = DriverConfig { seed, invocations, ..DriverConfig::default() };
+    let cfg = DriverConfig { seed, invocations, exact_stats, ..DriverConfig::default() };
     let driver = MultiTenantDriver::new(&mix, cfg);
     let out = driver.run_comparison();
 

@@ -39,7 +39,7 @@ fn main() -> zenix::Result<()> {
             platform.invoke(&graph, Invocation::new(scale))?;
         }
         let mut r = platform.invoke(&graph, Invocation::new(scale))?;
-        r.system = format!("zenix ({label})");
+        r.system = format!("zenix ({label})").into();
         println!(
             "{label}: exec {:.2}s, peak {:.0} MB / {:.0} vCPU, {:.0}% co-located",
             r.exec_ms / 1000.0,

@@ -125,6 +125,35 @@ fn main() {
         }
     }
 
+    // ---- 100k-invocation trace: the allocation-free steady state --------
+    // ISSUE 3 acceptance row: streaming stats (O(apps) report memory),
+    // pooled shells/slab/cursor event loop. The per-invocation rate must
+    // improve ≥5x on the PR 2 projection for driver_200_invocations_12_apps
+    // (~300 µs/invocation) — scripts/ci.sh gates on ≤60 µs/invocation.
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::trace::Archetype;
+        let mix = standard_mix(16, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_invocations", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> 100k-invocation driver: {:.1} µs/invocation \
+                 ({:.0} invocations/s, streaming stats, O(apps) report memory)",
+                r.mean_ns / 1e3 / 100_000.0,
+                r.throughput(100_000.0)
+            );
+        }
+    }
+
     // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
     b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
     for &n in &[32usize, 256, 1024] {

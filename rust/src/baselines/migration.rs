@@ -88,7 +88,7 @@ pub fn run(
             Flavor::BestCase => "migration-best".into(),
             Flavor::MigrOs => "migros".into(),
         },
-        workload: format!("{} ({migrations} migrations)", program.name),
+        workload: format!("{} ({migrations} migrations)", program.name).into(),
         exec_ms: t,
         breakdown,
         consumption,

@@ -65,6 +65,12 @@ pub struct Cluster {
     /// Availability index (interior mutability so `&self` queries can
     /// perform the lazy rebuild).
     index: RefCell<PlacementIndex>,
+    /// Racks whose availability changed since the last
+    /// [`Self::for_each_dirty_rack`] drain (the global scheduler's
+    /// incremental refresh feed — replaces the executor's O(racks)
+    /// sweep per invocation). Push order, deduplicated via `rack_dirty`.
+    dirty_racks: Vec<usize>,
+    rack_dirty: Vec<bool>,
 }
 
 impl Cluster {
@@ -82,7 +88,16 @@ impl Cluster {
             spec.server_capacity.magnitude(),
         );
         index.rebuild(&servers, 0);
-        Self { spec, servers, epoch: Cell::new(0), index: RefCell::new(index) }
+        Self {
+            spec,
+            servers,
+            epoch: Cell::new(0),
+            index: RefCell::new(index),
+            // every rack starts dirty so the first drain seeds the
+            // global scheduler with the full picture
+            dirty_racks: (0..spec.racks).collect(),
+            rack_dirty: vec![true; spec.racks],
+        }
     }
 
     pub fn server(&self, id: ServerId) -> &Server {
@@ -93,6 +108,7 @@ impl Cluster {
     /// availability index; prefer the typed hooks on the hot path.
     pub fn server_mut(&mut self, id: ServerId) -> &mut Server {
         self.epoch.set(self.epoch.get() + 1);
+        self.mark_all_racks_dirty();
         &mut self.servers[id.0]
     }
 
@@ -103,7 +119,47 @@ impl Cluster {
     /// Raw mutable access to all servers; invalidates the index.
     pub fn servers_mut(&mut self) -> &mut [Server] {
         self.epoch.set(self.epoch.get() + 1);
+        self.mark_all_racks_dirty();
         &mut self.servers
+    }
+
+    fn mark_rack_dirty(&mut self, rack: usize) {
+        if !self.rack_dirty[rack] {
+            self.rack_dirty[rack] = true;
+            self.dirty_racks.push(rack);
+        }
+    }
+
+    fn mark_all_racks_dirty(&mut self) {
+        for r in 0..self.spec.racks {
+            self.mark_rack_dirty(r);
+        }
+    }
+
+    /// Visit every rack whose availability changed since the last
+    /// drain, handing `(rack, current availability)` to `f` (in
+    /// first-dirtied order — deterministic under a deterministic
+    /// mutation sequence). Allocation-free in steady state: the drain
+    /// list's capacity is reused. The executor drains this into
+    /// `GlobalScheduler::update_rack` on each admission instead of
+    /// sweeping all racks.
+    pub fn for_each_dirty_rack(&mut self, mut f: impl FnMut(RackId, Resources)) {
+        if self.dirty_racks.is_empty() {
+            return;
+        }
+        let mut dirty = std::mem::take(&mut self.dirty_racks);
+        for &r in &dirty {
+            self.rack_dirty[r] = false;
+        }
+        for &r in &dirty {
+            f(RackId(r), self.rack_available(RackId(r)));
+        }
+        dirty.clear();
+        // restore the drained list so its capacity is reused (`f`
+        // cannot re-dirty racks — `self` is exclusively borrowed for
+        // the duration of this call, so the live list is still empty)
+        debug_assert!(self.dirty_racks.is_empty());
+        self.dirty_racks = dirty;
     }
 
     // ---- index-maintaining mutation hooks (the placement hot path) ----
@@ -113,6 +169,8 @@ impl Cluster {
         let ok = self.servers[id.0].try_alloc(amount, now);
         if ok {
             self.index.get_mut().update(&self.servers[id.0]);
+            let rack = self.servers[id.0].rack.0;
+            self.mark_rack_dirty(rack);
         }
         ok
     }
@@ -121,18 +179,24 @@ impl Cluster {
     pub fn free(&mut self, id: ServerId, amount: Resources, now: Millis) {
         self.servers[id.0].free(amount, now);
         self.index.get_mut().update(&self.servers[id.0]);
+        let rack = self.servers[id.0].rack.0;
+        self.mark_rack_dirty(rack);
     }
 
     /// Place a low-priority mark (§5.1.1), keeping the index in sync.
     pub fn mark(&mut self, id: ServerId, amount: Resources) {
         self.servers[id.0].mark(amount);
         self.index.get_mut().update(&self.servers[id.0]);
+        let rack = self.servers[id.0].rack.0;
+        self.mark_rack_dirty(rack);
     }
 
     /// Remove a low-priority mark, keeping the index in sync.
     pub fn unmark(&mut self, id: ServerId, amount: Resources) {
         self.servers[id.0].unmark(amount);
         self.index.get_mut().update(&self.servers[id.0]);
+        let rack = self.servers[id.0].rack.0;
+        self.mark_rack_dirty(rack);
     }
 
     /// Report used share (consumption accounting only — usage does not
@@ -258,6 +322,30 @@ mod tests {
         assert!(c.try_alloc(ServerId(1), Resources::new(1.0, 1024.0), 2.0));
         let total = c.rack_available(RackId(0));
         assert_eq!(total, Resources::new(64.0 - 13.0, 131072.0 - 13312.0));
+    }
+
+    #[test]
+    fn dirty_rack_drain_tracks_changes() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(3, 2));
+        let mut seen: Vec<usize> = Vec::new();
+        c.for_each_dirty_rack(|r, _| seen.push(r.0));
+        assert_eq!(seen, vec![0, 1, 2], "all racks dirty at construction");
+        seen.clear();
+        c.for_each_dirty_rack(|r, _| seen.push(r.0));
+        assert!(seen.is_empty(), "drain clears dirtiness");
+        // hook mutations dirty exactly the touched rack (deduplicated)
+        c.try_alloc(ServerId(2), Resources::new(1.0, 1.0), 0.0);
+        c.free(ServerId(2), Resources::new(1.0, 1.0), 1.0);
+        c.for_each_dirty_rack(|r, avail| {
+            seen.push(r.0);
+            assert_eq!(avail, Resources::new(64.0, 131072.0));
+        });
+        assert_eq!(seen, vec![1]);
+        // raw access conservatively dirties every rack
+        seen.clear();
+        let _ = c.server_mut(ServerId(0));
+        c.for_each_dirty_rack(|r, _| seen.push(r.0));
+        assert_eq!(seen, vec![0, 1, 2]);
     }
 
     #[test]

@@ -23,6 +23,37 @@
 //!
 //! Everything is deterministic per seed: arrivals, scales, event
 //! ordering (time, then insertion sequence) and the report digest.
+//!
+//! ## Event-loop architecture (allocation-free steady state)
+//!
+//! The loop is built to replay 100k+ invocation traces in bounded
+//! memory with zero steady-state allocation per arrival:
+//!
+//! - **Arrival cursor** — the schedule is already time-sorted, so
+//!   arrivals are consumed through an index cursor instead of being
+//!   pre-pushed into the event heap; the [`BinaryHeap`] holds only the
+//!   *in-flight* timeline/wave events (O(overlap), not
+//!   O(invocations)). Ties between an arrival and a heap event resolve
+//!   to the arrival, reproducing the old all-in-heap sequence order.
+//! - **Slab slot table** — in-flight [`OngoingInvocation`]s live in a
+//!   slab with an intrusive free list: completed slots are reused, so
+//!   the table is O(peak overlap) instead of growing one slot per
+//!   arrival, and lookups stay dense-indexed. Slot indices embedded in
+//!   heap events are never stale: a wave's timeline events always
+//!   sort before its `WaveDone` (same time, lower sequence), so a slot
+//!   is only freed when no events reference it.
+//! - **Streaming aggregation** — with `DriverConfig::exact_stats`
+//!   false, per-app latency/growth samples are *not* stored; the
+//!   report keeps streaming moments + P² quantile estimators
+//!   ([`crate::metrics::streaming`]) so report memory is O(apps).
+//!   Exact storage remains the default for the small CI traces. Both
+//!   modes produce the identical digest (the digest folds counts,
+//!   ordered-sum means and consumption integrals — none of which
+//!   differ between modes).
+//! - Invocation shells, message-log entries and rack-availability
+//!   refreshes are pooled/retired/incremental on the [`Platform`] side
+//!   (see `exec.rs`); the counting-allocator test
+//!   `rust/tests/alloc_free.rs` pins the end-to-end property.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -33,6 +64,7 @@ use crate::baselines::faas;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
 use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel};
+use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 use crate::trace::{Archetype, UsageTrace};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -74,6 +106,13 @@ pub struct DriverConfig {
     pub mean_iat_ms: f64,
     pub cluster: ClusterSpec,
     pub config: ZenixConfig,
+    /// Store every per-invocation sample for exact report statistics
+    /// (default; right for the small CI traces). `false` switches the
+    /// report path to streaming moments + P² quantile estimators so a
+    /// 1M-invocation trace runs in O(apps) report memory; the digest is
+    /// identical in both modes, only `p95_exec_ms` and the early/late
+    /// growth telemetry become (tightly bounded) estimates.
+    pub exact_stats: bool,
 }
 
 impl Default for DriverConfig {
@@ -84,6 +123,7 @@ impl Default for DriverConfig {
             mean_iat_ms: 400.0,
             cluster: ClusterSpec::paper_testbed(),
             config: ZenixConfig::default(),
+            exact_stats: true,
         }
     }
 }
@@ -196,10 +236,58 @@ pub struct DriverReport {
     /// the run genuinely overlapped tenants on the cluster.
     pub max_in_flight: usize,
     /// Index-aligned with the schedule: which arrivals this system
-    /// completed (all-true for the closed-form FaaS baseline).
-    pub completed_mask: Vec<bool>,
+    /// completed (all-true for the closed-form FaaS baseline). A
+    /// bitset — one bit per arrival, the only per-invocation structure
+    /// the report retains (needed for the apples-to-apples FaaS
+    /// replay over exactly the completed work).
+    pub completed_mask: BitMask,
     /// Order-stable digest of the quantized results (determinism gate).
     pub digest: u64,
+}
+
+/// Dense bitset, one bit per schedule index.
+#[derive(Debug, Clone, Default)]
+pub struct BitMask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitMask {
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0u64; (len + 63) / 64], len }
+    }
+
+    /// All-true mask of length `len`.
+    pub fn ones(len: usize) -> Self {
+        let mut m = Self::new(len);
+        for (i, w) in m.words.iter_mut().enumerate() {
+            let bits = (len - i * 64).min(64);
+            *w = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
 }
 
 impl DriverReport {
@@ -244,8 +332,6 @@ impl MultiTenantOutcome {
 // ---- event heap ---------------------------------------------------------
 
 enum EvKind {
-    /// Index into the schedule's arrival list.
-    Arrival(usize),
     /// Deferred allocation-timeline event of one ongoing invocation.
     Timeline { slot: usize, server: ServerId, ev: TimelineEv },
     /// The in-flight wave of `slot` completes.
@@ -281,6 +367,306 @@ impl Ord for HeapEv {
     }
 }
 
+// ---- in-flight slot slab ------------------------------------------------
+
+/// Sentinel for "no next free slot".
+const NIL: usize = usize::MAX;
+
+enum Slot {
+    /// Intrusive free-list link.
+    Free { next: usize },
+    Busy { app: usize, sched: usize, st: OngoingInvocation },
+}
+
+/// Slab of in-flight invocations: O(peak overlap) slots, reused through
+/// an intrusive free list (the old `Vec<Option<_>>` grew one slot per
+/// arrival — O(invocations) memory and a pointless linear footprint at
+/// 100k+ traces).
+struct Slab {
+    slots: Vec<Slot>,
+    free_head: usize,
+    live: usize,
+}
+
+impl Slab {
+    fn new() -> Self {
+        Self { slots: Vec::with_capacity(64), free_head: NIL, live: 0 }
+    }
+
+    fn insert(&mut self, app: usize, sched: usize, st: OngoingInvocation) -> usize {
+        self.live += 1;
+        if self.free_head != NIL {
+            let i = self.free_head;
+            self.free_head = match self.slots[i] {
+                Slot::Free { next } => next,
+                Slot::Busy { .. } => unreachable!("free list points at a busy slot"),
+            };
+            self.slots[i] = Slot::Busy { app, sched, st };
+            i
+        } else {
+            self.slots.push(Slot::Busy { app, sched, st });
+            self.slots.len() - 1
+        }
+    }
+
+    /// (app, schedule index) of a busy slot.
+    fn meta(&self, i: usize) -> Option<(usize, usize)> {
+        match self.slots.get(i) {
+            Some(&Slot::Busy { app, sched, .. }) => Some((app, sched)),
+            _ => None,
+        }
+    }
+
+    fn state_mut(&mut self, i: usize) -> Option<&mut OngoingInvocation> {
+        match self.slots.get_mut(i) {
+            Some(Slot::Busy { st, .. }) => Some(st),
+            _ => None,
+        }
+    }
+
+    /// Remove a busy slot, linking it into the free list.
+    fn take(&mut self, i: usize) -> Option<(usize, usize, OngoingInvocation)> {
+        match self.slots.get(i) {
+            Some(Slot::Busy { .. }) => {}
+            _ => return None,
+        }
+        let prev = std::mem::replace(&mut self.slots[i], Slot::Free { next: self.free_head });
+        self.free_head = i;
+        self.live -= 1;
+        match prev {
+            Slot::Busy { app, sched, st } => Some((app, sched, st)),
+            Slot::Free { .. } => unreachable!("checked busy above"),
+        }
+    }
+
+    /// Currently busy slots.
+    fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Total slots ever needed at once (capacity telemetry).
+    fn high_water(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+// ---- streaming aggregation ----------------------------------------------
+
+/// Fixed-capacity ring holding the most recent samples (for the "late
+/// quarter" growth telemetry without storing the whole run).
+struct RingMean {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+}
+
+impl RingMean {
+    fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { buf: Vec::with_capacity(cap), cap, next: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    fn mean(&self) -> f64 {
+        stats::mean(&self.buf)
+    }
+}
+
+/// Per-app accumulator: exact sample storage (exact mode) or streaming
+/// moments + P² p95 + bounded growth windows (streaming mode).
+struct AppAgg {
+    // exact mode
+    exec: Vec<f64>,
+    growths: Vec<f64>,
+    // streaming mode
+    moments: StreamingMoments,
+    p95: P2Quantile,
+    early_cap: usize,
+    early_n: usize,
+    early_growth_sum: f64,
+    late_growths: RingMean,
+    // both modes
+    warm: usize,
+    cold: usize,
+    consumption: Consumption,
+}
+
+/// Streams completion records into per-app aggregates and folds the
+/// order-stable digest exactly like the old stored-sample path (counts,
+/// ordered-sum means and consumption integrals are identical in both
+/// modes, so the digest is too).
+struct Aggregator<'a> {
+    apps: &'a [TenantApp],
+    exact: bool,
+    per_app: Vec<AppAgg>,
+    completed: usize,
+}
+
+impl<'a> Aggregator<'a> {
+    /// `sched_counts[a]` = arrivals scheduled for app `a` (sizes the
+    /// streaming early/late quarter windows; completions aren't known
+    /// up front in streaming mode).
+    fn new(apps: &'a [TenantApp], sched_counts: &[usize], exact: bool) -> Self {
+        // Bounded window: quarter of the scheduled arrivals, capped so
+        // report memory stays O(apps) for arbitrarily long traces.
+        const WINDOW_CAP: usize = 512;
+        let per_app = (0..apps.len())
+            .map(|a| {
+                let quarter = (sched_counts[a] + 3) / 4;
+                let window = quarter.clamp(1, WINDOW_CAP);
+                AppAgg {
+                    exec: Vec::new(),
+                    growths: Vec::new(),
+                    moments: StreamingMoments::new(),
+                    p95: P2Quantile::new(0.95),
+                    early_cap: window,
+                    early_n: 0,
+                    early_growth_sum: 0.0,
+                    late_growths: RingMean::new(window),
+                    warm: 0,
+                    cold: 0,
+                    consumption: Consumption::default(),
+                }
+            })
+            .collect();
+        Self { apps, exact, per_app, completed: 0 }
+    }
+
+    fn record(&mut self, app: usize, exec_ms: f64, growths: usize, warm: bool, c: Consumption) {
+        self.completed += 1;
+        let a = &mut self.per_app[app];
+        if self.exact {
+            a.exec.push(exec_ms);
+            a.growths.push(growths as f64);
+        } else {
+            a.moments.push(exec_ms);
+            a.p95.push(exec_ms);
+            if a.early_n < a.early_cap {
+                a.early_n += 1;
+                a.early_growth_sum += growths as f64;
+            }
+            a.late_growths.push(growths as f64);
+        }
+        if warm {
+            a.warm += 1;
+        } else {
+            a.cold += 1;
+        }
+        a.consumption = a.consumption.plus(&c);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        self,
+        label: &str,
+        failed_per_app: Vec<usize>,
+        fleet: Consumption,
+        makespan_ms: f64,
+        max_in_flight: usize,
+        completed_mask: BitMask,
+    ) -> DriverReport {
+        let quarter_mean = |xs: &[f64], late: bool| -> f64 {
+            if xs.is_empty() {
+                return 0.0;
+            }
+            let q = (xs.len() + 3) / 4;
+            let slice = if late { &xs[xs.len() - q..] } else { &xs[..q] };
+            stats::mean(slice)
+        };
+
+        let exact = self.exact;
+        let apps: Vec<AppStats> = self
+            .per_app
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                let (completed, mean, p95, early, late) = if exact {
+                    (
+                        a.exec.len(),
+                        if a.exec.is_empty() { 0.0 } else { stats::mean(&a.exec) },
+                        if a.exec.is_empty() {
+                            0.0
+                        } else {
+                            stats::percentile(&a.exec, 95.0)
+                        },
+                        quarter_mean(&a.growths, false),
+                        quarter_mean(&a.growths, true),
+                    )
+                } else {
+                    (
+                        a.moments.count() as usize,
+                        a.moments.mean(),
+                        a.p95.value(),
+                        if a.early_n == 0 {
+                            0.0
+                        } else {
+                            a.early_growth_sum / a.early_n as f64
+                        },
+                        a.late_growths.mean(),
+                    )
+                };
+                AppStats {
+                    name: self.apps[i].graph.program.name,
+                    completed,
+                    failed: failed_per_app[i],
+                    mean_exec_ms: mean,
+                    p95_exec_ms: p95,
+                    consumption: a.consumption,
+                    warm_hits: a.warm,
+                    cold_starts: a.cold,
+                    early_growths_per_inv: early,
+                    late_growths_per_inv: late,
+                }
+            })
+            .collect();
+
+        let completed = self.completed;
+        let failed: usize = failed_per_app.iter().sum();
+        let warm_hits: usize = self.per_app.iter().map(|a| a.warm).sum();
+        let cold_starts: usize = self.per_app.iter().map(|a| a.cold).sum();
+
+        // order-stable FNV-style digest over quantized results
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
+        };
+        let q = |x: f64| (x * 1024.0).round() as i64 as u64;
+        mix(completed as u64);
+        mix(failed as u64);
+        mix(warm_hits as u64);
+        mix(q(fleet.alloc_mem_mb_s));
+        mix(q(fleet.used_mem_mb_s));
+        mix(q(makespan_ms));
+        for a in &apps {
+            mix(a.completed as u64);
+            mix(q(a.mean_exec_ms));
+            mix(q(a.consumption.alloc_mem_mb_s));
+        }
+
+        DriverReport {
+            system: label.to_string(),
+            apps,
+            fleet,
+            makespan_ms,
+            completed,
+            failed,
+            warm_hits,
+            cold_starts,
+            max_in_flight,
+            completed_mask,
+            digest: h,
+        }
+    }
+}
+
 // ---- the driver ---------------------------------------------------------
 
 /// Drives a registered multi-tenant mix against the systems under
@@ -288,15 +674,6 @@ impl Ord for HeapEv {
 pub struct MultiTenantDriver<'a> {
     apps: &'a [TenantApp],
     cfg: DriverConfig,
-}
-
-/// Completion record (internal aggregation).
-struct DoneInv {
-    app: usize,
-    exec_ms: f64,
-    growths: usize,
-    warm: bool,
-    consumption: Consumption,
 }
 
 impl<'a> MultiTenantDriver<'a> {
@@ -338,93 +715,118 @@ impl<'a> MultiTenantDriver<'a> {
 
     /// The discrete-event loop: one shared [`Platform`], overlapping
     /// invocations interleaved in global time order.
+    ///
+    /// Arrivals are consumed through a cursor over the (time-sorted)
+    /// schedule; the heap holds only in-flight events. An arrival tied
+    /// with a heap event wins — identical to the old all-in-heap
+    /// ordering, where every arrival carried a lower sequence number
+    /// than any timeline event.
     fn run_platform(&self, schedule: &Schedule, config: ZenixConfig, label: &str) -> DriverReport {
         let mut platform = Platform::new(self.cfg.cluster, config);
-        let mut heap: BinaryHeap<HeapEv> = BinaryHeap::with_capacity(schedule.arrivals.len() * 4);
+        let mut heap: BinaryHeap<HeapEv> = BinaryHeap::with_capacity(256);
         let mut seq = 0u64;
-        for (i, arr) in schedule.arrivals.iter().enumerate() {
-            heap.push(HeapEv { at: arr.at, seq, kind: EvKind::Arrival(i) });
-            seq += 1;
+        let mut slab = Slab::new();
+        let mut sched_counts = vec![0usize; self.apps.len()];
+        for arr in &schedule.arrivals {
+            sched_counts[arr.app] += 1;
         }
-
-        let mut slots: Vec<Option<(usize, usize, OngoingInvocation)>> = Vec::new();
-        let mut done: Vec<DoneInv> = Vec::new();
-        let mut completed_mask = vec![false; schedule.arrivals.len()];
+        let mut agg = Aggregator::new(self.apps, &sched_counts, self.cfg.exact_stats);
+        let mut completed_mask = BitMask::new(schedule.arrivals.len());
         let mut failed_per_app = vec![0usize; self.apps.len()];
         let mut in_flight = 0usize;
         let mut max_in_flight = 0usize;
         let mut end_time = 0.0f64;
+        let mut next_arrival = 0usize;
 
-        while let Some(HeapEv { at, kind, .. }) = heap.pop() {
-            end_time = end_time.max(at);
-            match kind {
-                EvKind::Arrival(i) => {
-                    let arr = schedule.arrivals[i];
-                    let graph = &self.apps[arr.app].graph;
-                    let mut st =
-                        platform.begin_at(graph, Invocation::new(arr.scale), at, None);
-                    let slot = slots.len();
-                    match platform.start_wave(graph, &mut st) {
-                        Ok(()) => {
-                            in_flight += 1;
-                            max_in_flight = max_in_flight.max(in_flight);
-                            drain_pending(&mut heap, &mut seq, slot, &mut st);
-                            heap.push(HeapEv {
-                                at: st.wave_done_at(),
-                                seq,
-                                kind: EvKind::WaveDone { slot },
-                            });
-                            seq += 1;
-                            slots.push(Some((arr.app, i, st)));
-                        }
-                        Err(_) => {
-                            // saturated beyond degradation: admission fails
-                            failed_per_app[arr.app] += 1;
-                            slots.push(None);
-                        }
+        loop {
+            let take_arrival = match (schedule.arrivals.get(next_arrival), heap.peek()) {
+                (Some(a), Some(h)) => a.at <= h.at,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+
+            if take_arrival {
+                let i = next_arrival;
+                next_arrival += 1;
+                let arr = schedule.arrivals[i];
+                end_time = end_time.max(arr.at);
+                let graph = &self.apps[arr.app].graph;
+                let mut st = platform.begin_at(graph, Invocation::new(arr.scale), arr.at, None);
+                match platform.start_wave(graph, &mut st) {
+                    Ok(()) => {
+                        in_flight += 1;
+                        max_in_flight = max_in_flight.max(in_flight);
+                        let slot = slab.insert(arr.app, i, st);
+                        let st = slab.state_mut(slot).expect("just inserted");
+                        drain_pending(&mut heap, &mut seq, slot, st);
+                        heap.push(HeapEv {
+                            at: st.wave_done_at(),
+                            seq,
+                            kind: EvKind::WaveDone { slot },
+                        });
+                        seq += 1;
+                    }
+                    Err(_) => {
+                        // saturated beyond degradation: admission fails
+                        failed_per_app[arr.app] += 1;
+                        platform.recycle_shell(st);
                     }
                 }
+                continue;
+            }
+
+            let HeapEv { at, kind, .. } = heap.pop().expect("peeked above");
+            end_time = end_time.max(at);
+            match kind {
                 EvKind::Timeline { slot, server, ev } => {
-                    if let Some((_, _, st)) = slots[slot].as_mut() {
+                    if let Some(st) = slab.state_mut(slot) {
                         platform.apply_timeline(st, server, ev, at);
                     }
                 }
                 EvKind::WaveDone { slot } => {
-                    let taken = slots[slot].take();
-                    let (app_idx, sched_idx, mut st) = match taken {
-                        Some(tuple) => tuple,
+                    let (app_idx, _sched_idx) = match slab.meta(slot) {
+                        Some(m) => m,
                         None => continue,
                     };
                     let graph = &self.apps[app_idx].graph;
-                    if platform.wave_done(graph, &mut st) {
+                    let finished = {
+                        let st = slab.state_mut(slot).expect("busy slot");
+                        platform.wave_done(graph, st)
+                    };
+                    if finished {
+                        let (app_idx, sched_idx, st) =
+                            slab.take(slot).expect("busy slot");
                         in_flight -= 1;
                         let warm = st.first_wave_warm().unwrap_or(false);
                         let growths = st.growths();
-                        let report = platform.finish_invocation(graph, st, true);
-                        completed_mask[sched_idx] = true;
-                        done.push(DoneInv {
-                            app: app_idx,
-                            exec_ms: report.exec_ms,
-                            growths,
-                            warm,
-                            consumption: report.consumption,
-                        });
+                        let (exec_ms, consumption) =
+                            platform.finish_invocation_attrib(graph, st);
+                        completed_mask.set(sched_idx);
+                        agg.record(app_idx, exec_ms, growths, warm, consumption);
                     } else {
-                        match platform.start_wave(graph, &mut st) {
+                        let start = {
+                            let st = slab.state_mut(slot).expect("busy slot");
+                            platform.start_wave(graph, st)
+                        };
+                        match start {
                             Ok(()) => {
-                                drain_pending(&mut heap, &mut seq, slot, &mut st);
+                                let st = slab.state_mut(slot).expect("busy slot");
+                                drain_pending(&mut heap, &mut seq, slot, st);
                                 heap.push(HeapEv {
                                     at: st.wave_done_at(),
                                     seq,
                                     kind: EvKind::WaveDone { slot },
                                 });
                                 seq += 1;
-                                slots[slot] = Some((app_idx, sched_idx, st));
                             }
                             Err(_) => {
                                 // mid-run abort (already cleaned up)
                                 in_flight -= 1;
                                 failed_per_app[app_idx] += 1;
+                                if let Some((_, _, st)) = slab.take(slot) {
+                                    platform.recycle_shell(st);
+                                }
                             }
                         }
                     }
@@ -432,16 +834,11 @@ impl<'a> MultiTenantDriver<'a> {
             }
         }
 
+        debug_assert!(slab.high_water() <= schedule.arrivals.len());
+        debug_assert_eq!(slab.live(), in_flight, "slab/in-flight accounting out of sync");
+        debug_assert_eq!(in_flight, 0, "events drained with invocations still in flight");
         let fleet = platform.cluster.total_consumption(end_time);
-        self.aggregate(
-            label,
-            done,
-            failed_per_app,
-            fleet,
-            end_time,
-            max_in_flight,
-            completed_mask,
-        )
+        agg.finish(label, failed_per_app, fleet, end_time, max_in_flight, completed_mask)
     }
 
     /// The statically-sized FaaS baseline over the identical schedule.
@@ -462,20 +859,26 @@ impl<'a> MultiTenantDriver<'a> {
     /// function size is still configured from the full schedule, a
     /// deployment-time decision. Used to compare against a platform run
     /// on exactly the work that run completed.
+    ///
+    /// Two passes, both O(apps) memory: pass 1 derives the deployed
+    /// (max) sizes, pass 2 *recomputes* each closed-form report and
+    /// streams it into the aggregator — nothing per-invocation is
+    /// stored (the old implementation kept every `RunReport` from pass
+    /// 1, O(invocations) heap for a deterministic recomputation).
     pub fn run_faas_static_on(
         &self,
         schedule: &Schedule,
-        mask: Option<&[bool]>,
+        mask: Option<&BitMask>,
     ) -> DriverReport {
         let startup = StartupModel::default();
-        // Pass 1: per-invocation reports + the per-app deployed size —
-        // the max over the whole schedule, so the charge is independent
-        // of arrival order (the function is configured once, up front).
-        let mut fn_mem = vec![0.0f64; self.apps.len()];
-        let mut fn_cpu = vec![0.0f64; self.apps.len()];
-        let mut seen = vec![false; self.apps.len()];
-        let mut runs: Vec<(bool, crate::metrics::RunReport)> =
-            Vec::with_capacity(schedule.arrivals.len());
+        let n_apps = self.apps.len();
+        // Pass 1: the per-app deployed size — the max over the whole
+        // schedule, so the charge is independent of arrival order (the
+        // function is configured once, up front).
+        let mut fn_mem = vec![0.0f64; n_apps];
+        let mut fn_cpu = vec![0.0f64; n_apps];
+        let mut seen = vec![false; n_apps];
+        let mut sched_counts = vec![0usize; n_apps];
         for arr in &schedule.arrivals {
             let program = &self.apps[arr.app].graph.program;
             let warm = seen[arr.app];
@@ -487,18 +890,31 @@ impl<'a> MultiTenantDriver<'a> {
                 &startup,
             );
             seen[arr.app] = true;
+            sched_counts[arr.app] += 1;
             fn_mem[arr.app] = fn_mem[arr.app].max(r.peak_mem_mb);
             fn_cpu[arr.app] = fn_cpu[arr.app].max(r.peak_cpu);
-            runs.push((warm, r));
         }
         // Pass 2: every charged invocation holds the deployed (max)
-        // size for its full duration.
-        let mut done: Vec<DoneInv> = Vec::with_capacity(schedule.arrivals.len());
+        // size for its full duration (faas::run is deterministic, so
+        // re-evaluating beats storing 100k reports).
+        let mut agg = Aggregator::new(self.apps, &sched_counts, self.cfg.exact_stats);
+        let mut fleet = Consumption::default();
         let mut makespan = 0.0f64;
-        for (idx, (arr, (warm, r))) in schedule.arrivals.iter().zip(runs).enumerate() {
-            if mask.map_or(false, |m| !m[idx]) {
+        let mut seen2 = vec![false; n_apps];
+        for (idx, arr) in schedule.arrivals.iter().enumerate() {
+            let program = &self.apps[arr.app].graph.program;
+            let warm = seen2[arr.app];
+            seen2[arr.app] = true;
+            if mask.map_or(false, |m| !m.get(idx)) {
                 continue;
             }
+            let r = faas::run(
+                program,
+                Invocation::new(arr.scale),
+                faas::Provider::OpenWhisk,
+                warm,
+                &startup,
+            );
             let dur_s = r.exec_ms / 1000.0;
             let consumption = Consumption {
                 alloc_cpu_s: fn_cpu[arr.app] * dur_s,
@@ -507,118 +923,17 @@ impl<'a> MultiTenantDriver<'a> {
                 used_mem_mb_s: r.consumption.used_mem_mb_s,
             };
             makespan = makespan.max(arr.at + r.exec_ms);
-            done.push(DoneInv {
-                app: arr.app,
-                exec_ms: r.exec_ms,
-                growths: 0,
-                warm,
-                consumption,
-            });
+            fleet = fleet.plus(&consumption);
+            agg.record(arr.app, r.exec_ms, 0, warm, consumption);
         }
-        let fleet = done
-            .iter()
-            .fold(Consumption::default(), |acc, d| acc.plus(&d.consumption));
-        let failed = vec![0usize; self.apps.len()];
+        let failed = vec![0usize; n_apps];
         // FaaS functions overlap freely (provider capacity is opaque).
         let max_in_flight = 0;
-        let charged = mask
-            .map(|m| m.to_vec())
-            .unwrap_or_else(|| vec![true; schedule.arrivals.len()]);
-        self.aggregate("faas-static", done, failed, fleet, makespan, max_in_flight, charged)
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn aggregate(
-        &self,
-        label: &str,
-        done: Vec<DoneInv>,
-        failed_per_app: Vec<usize>,
-        fleet: Consumption,
-        makespan_ms: f64,
-        max_in_flight: usize,
-        completed_mask: Vec<bool>,
-    ) -> DriverReport {
-        let n_apps = self.apps.len();
-        let mut exec: Vec<Vec<f64>> = vec![Vec::new(); n_apps];
-        let mut growths: Vec<Vec<f64>> = vec![Vec::new(); n_apps];
-        let mut warm = vec![0usize; n_apps];
-        let mut cold = vec![0usize; n_apps];
-        let mut consumption = vec![Consumption::default(); n_apps];
-        for d in &done {
-            exec[d.app].push(d.exec_ms);
-            growths[d.app].push(d.growths as f64);
-            if d.warm {
-                warm[d.app] += 1;
-            } else {
-                cold[d.app] += 1;
-            }
-            consumption[d.app] = consumption[d.app].plus(&d.consumption);
-        }
-
-        let quarter_mean = |xs: &[f64], late: bool| -> f64 {
-            if xs.is_empty() {
-                return 0.0;
-            }
-            let q = (xs.len() + 3) / 4;
-            let slice = if late { &xs[xs.len() - q..] } else { &xs[..q] };
-            stats::mean(slice)
+        let charged = match mask {
+            Some(m) => m.clone(),
+            None => BitMask::ones(schedule.arrivals.len()),
         };
-
-        let apps: Vec<AppStats> = (0..n_apps)
-            .map(|a| AppStats {
-                name: self.apps[a].graph.program.name,
-                completed: exec[a].len(),
-                failed: failed_per_app[a],
-                mean_exec_ms: if exec[a].is_empty() { 0.0 } else { stats::mean(&exec[a]) },
-                p95_exec_ms: if exec[a].is_empty() {
-                    0.0
-                } else {
-                    stats::percentile(&exec[a], 95.0)
-                },
-                consumption: consumption[a],
-                warm_hits: warm[a],
-                cold_starts: cold[a],
-                early_growths_per_inv: quarter_mean(&growths[a], false),
-                late_growths_per_inv: quarter_mean(&growths[a], true),
-            })
-            .collect();
-
-        let completed = done.len();
-        let failed: usize = failed_per_app.iter().sum();
-        let warm_hits: usize = warm.iter().sum();
-        let cold_starts: usize = cold.iter().sum();
-
-        // order-stable FNV-style digest over quantized results
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        let mut mix = |v: u64| {
-            h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
-        };
-        let q = |x: f64| (x * 1024.0).round() as i64 as u64;
-        mix(completed as u64);
-        mix(failed as u64);
-        mix(warm_hits as u64);
-        mix(q(fleet.alloc_mem_mb_s));
-        mix(q(fleet.used_mem_mb_s));
-        mix(q(makespan_ms));
-        for a in &apps {
-            mix(a.completed as u64);
-            mix(q(a.mean_exec_ms));
-            mix(q(a.consumption.alloc_mem_mb_s));
-        }
-
-        DriverReport {
-            system: label.to_string(),
-            apps,
-            fleet,
-            makespan_ms,
-            completed,
-            failed,
-            warm_hits,
-            cold_starts,
-            max_in_flight,
-            completed_mask,
-            digest: h,
-        }
+        agg.finish("faas-static", failed, fleet, makespan, max_in_flight, charged)
     }
 }
 
@@ -628,7 +943,10 @@ fn drain_pending(
     slot: usize,
     st: &mut OngoingInvocation,
 ) {
-    for (at, server, ev) in st.pending.drain(..) {
+    // `pending` is in push order; the global sequence numbers preserve
+    // that order among same-time events (the per-wave sequence in the
+    // tuple is only needed by the single-tenant sort).
+    for (at, _wave_seq, server, ev) in st.pending.drain(..) {
         heap.push(HeapEv { at, seq: *seq, kind: EvKind::Timeline { slot, server, ev } });
         *seq += 1;
     }
@@ -801,6 +1119,86 @@ mod tests {
             improving * 2 >= eligible,
             "sizing diverged: {improving}/{eligible} improving"
         );
+    }
+
+    /// Streaming aggregation must be digest-identical to exact storage
+    /// (counts, ordered-sum means and consumption integrals agree
+    /// bit-for-bit); only p95 becomes a tightly bounded P² estimate.
+    #[test]
+    fn streaming_stats_preserve_digest_and_means() {
+        let apps = standard_mix(6, Archetype::Average);
+        let exact_cfg = small_cfg(9, 240);
+        let stream_cfg = DriverConfig { exact_stats: false, ..exact_cfg };
+        let exact = MultiTenantDriver::new(&apps, exact_cfg).run_comparison();
+        let streaming = MultiTenantDriver::new(&apps, stream_cfg).run_comparison();
+        assert_eq!(exact.zenix.digest, streaming.zenix.digest);
+        assert_eq!(exact.peak.digest, streaming.peak.digest);
+        assert_eq!(exact.faas.digest, streaming.faas.digest);
+        assert_eq!(exact.zenix.completed, streaming.zenix.completed);
+        assert_eq!(
+            exact.zenix.completed_mask.count_ones(),
+            streaming.zenix.completed_mask.count_ones()
+        );
+        for (a, b) in exact.zenix.apps.iter().zip(&streaming.zenix.apps) {
+            assert_eq!(a.completed, b.completed, "{}", a.name);
+            assert_eq!(
+                a.mean_exec_ms.to_bits(),
+                b.mean_exec_ms.to_bits(),
+                "{}: streaming mean must be bit-identical",
+                a.name
+            );
+            if a.completed >= 30 {
+                assert!(
+                    (b.p95_exec_ms - a.p95_exec_ms).abs()
+                        <= 0.10 * a.p95_exec_ms.abs() + 5.0,
+                    "{}: P² p95 {} vs exact {}",
+                    a.name,
+                    b.p95_exec_ms,
+                    a.p95_exec_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slab_free_list_reuses_slots() {
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), ZenixConfig::default());
+        let g = ResourceGraph::from_program(&crate::apps::lr::program()).unwrap();
+        let mut slab = Slab::new();
+        let st_a = p.begin_at(&g, Invocation::new(0.1), 0.0, None);
+        let st_b = p.begin_at(&g, Invocation::new(0.1), 1.0, None);
+        let a = slab.insert(0, 0, st_a);
+        let b = slab.insert(1, 7, st_b);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(slab.meta(b), Some((1, 7)));
+        let (app, sched, st_back) = slab.take(a).expect("busy");
+        assert_eq!((app, sched), (0, 0));
+        assert!(slab.take(a).is_none(), "double-take must be a no-op");
+        assert!(slab.state_mut(a).is_none());
+        // freed slot is reused before the slab grows
+        let c = slab.insert(2, 9, st_back);
+        assert_eq!(c, a, "intrusive free list must hand back the freed slot");
+        assert_eq!(slab.high_water(), 2, "slab stays at peak overlap");
+        assert_eq!(slab.meta(c), Some((2, 9)));
+    }
+
+    #[test]
+    fn bitmask_set_get_ones() {
+        let mut m = BitMask::new(70);
+        assert_eq!(m.len(), 70);
+        assert_eq!(m.count_ones(), 0);
+        m.set(0);
+        m.set(63);
+        m.set(64);
+        m.set(69);
+        assert!(m.get(0) && m.get(63) && m.get(64) && m.get(69));
+        assert!(!m.get(1) && !m.get(65));
+        assert_eq!(m.count_ones(), 4);
+        let all = BitMask::ones(70);
+        assert_eq!(all.count_ones(), 70);
+        assert!(all.get(69));
+        assert_eq!(BitMask::ones(64).count_ones(), 64);
+        assert!(BitMask::new(0).is_empty());
     }
 
     #[test]

@@ -31,6 +31,22 @@
 //! interleaves their timeline events in global time order, so
 //! concurrent invocations from different applications genuinely overlap
 //! on the shared cluster instead of serializing through `Platform::now`.
+//!
+//! ## Allocation-free steady state
+//!
+//! The per-invocation control path reuses state the way the platform it
+//! models reuses environments: completed [`OngoingInvocation`] shells
+//! are recycled through a pool on [`Platform`] (every buffer keeps its
+//! capacity; [`Platform::begin_at`] clears instead of reallocating),
+//! the per-component tables are dense `Vec`s indexed by the graph's
+//! dense component ids rather than hash maps, wave structure is a
+//! CSR-flattened pair of reused buffers, the §5.2.3 re-tune solver
+//! reads history through a pooled scratch, and rack availability flows
+//! to the global scheduler as incremental dirty-rack deltas from the
+//! cluster hooks instead of an O(racks) sweep per admission. After
+//! warm-up, a steady-state invocation performs zero heap allocations
+//! (enforced by `rust/tests/alloc_free.rs` with a counting global
+//! allocator).
 
 use std::collections::HashMap;
 
@@ -155,6 +171,14 @@ pub struct Platform {
     /// allocations (capacity grows once, then steady-state is
     /// allocation-free).
     scratch: PlacementCtx,
+    /// Recycled [`OngoingInvocation`] shells: [`Self::begin_at`] pops
+    /// one and clears it in place, so the per-invocation tables reuse
+    /// capacity instead of allocating (pool size is bounded by the peak
+    /// number of concurrently in-flight invocations).
+    shell_pool: Vec<OngoingInvocation>,
+    /// Pooled history-values buffer for the periodic §5.2.3 re-tune
+    /// (`Profile::values_into`) — keeps the solver call allocation-free.
+    solver_scratch: std::cell::RefCell<Vec<f64>>,
 }
 
 /// Scratch buffers for the wave loop's placement decisions. Taken out
@@ -183,6 +207,12 @@ pub const RETUNE_EVERY: usize = 16;
 /// and the per-invocation accounting. The single-tenant
 /// [`Platform::invoke`] drives exactly one of these to completion; the
 /// multi-tenant [`super::driver`] holds many and interleaves them.
+///
+/// Component ids are dense per graph, so every per-component table is a
+/// dense `Vec` (index = component id) rather than a hash map, and the
+/// whole shell is recycled through [`Platform`]'s pool: capacity
+/// persists across invocations, steady-state admission allocates
+/// nothing.
 pub struct OngoingInvocation {
     pub(crate) scale: f64,
     pub(crate) inv_id: u64,
@@ -190,8 +220,10 @@ pub struct OngoingInvocation {
     pub(crate) consumed_before: Consumption,
     pub(crate) breakdown: Breakdown,
     pub(crate) mem: MemoryController,
-    pub(crate) data_home: HashMap<usize, ServerId>,
-    pub(crate) comp_server: HashMap<usize, ServerId>,
+    /// Dense by data index: the server holding the data's home region.
+    pub(crate) data_home: Vec<Option<ServerId>>,
+    /// Dense by compute index: where the component was placed.
+    pub(crate) comp_server: Vec<Option<ServerId>>,
     pub(crate) merge_pairs: Vec<(usize, usize)>,
     pub(crate) colocated_components: usize,
     pub(crate) total_components: usize,
@@ -207,23 +239,29 @@ pub struct OngoingInvocation {
     pub(crate) anchor: Option<ServerId>,
     pub(crate) estimate: Resources,
     pub(crate) rack_id: RackId,
-    pub(crate) waves: Vec<Vec<usize>>,
+    /// CSR-flattened wave structure (see `ResourceGraph::waves_into`):
+    /// wave `w` = `wave_comps[wave_offsets[w]..wave_offsets[w + 1]]`.
+    pub(crate) wave_offsets: Vec<usize>,
+    pub(crate) wave_comps: Vec<usize>,
     pub(crate) wave_idx: usize,
-    /// Growths that actually landed: comp -> (extra alloc MB, used MB
-    /// added, applied-at). `Finish` releases exactly these — a failed
-    /// `Grow` (saturated cluster) leaves nothing to subtract.
-    pub(crate) grown: HashMap<usize, (f64, f64, Millis)>,
-    /// Deferred allocation-timeline events of the wave in flight;
-    /// drained by the caller (sorted single-tenant, merged into the
-    /// driver's global heap multi-tenant).
-    pub(crate) pending: Vec<(Millis, ServerId, TimelineEv)>,
+    /// Growths that actually landed, dense by compute index:
+    /// (extra alloc MB, used MB added, applied-at). `Finish` releases
+    /// exactly these — a failed `Grow` (saturated cluster) leaves
+    /// nothing to subtract.
+    pub(crate) grown: Vec<Option<(f64, f64, Millis)>>,
+    /// Deferred allocation-timeline events of the wave in flight as
+    /// (time, push-sequence, server, event); drained by the caller
+    /// (sorted by (time, sequence) single-tenant — reproducing stable
+    /// push order without a stable sort's scratch allocation — or
+    /// merged into the driver's global heap multi-tenant).
+    pub(crate) pending: Vec<(Millis, u32, ServerId, TimelineEv)>,
     /// Attributed per-invocation consumption (compute allocations,
     /// landed growths and data-component regions integrated over their
     /// own lifetimes). The multi-tenant driver reports this — a
     /// cluster-wide before/after diff would include the other tenants.
     pub(crate) attrib: Consumption,
-    /// Live data components: data idx -> (last stamp, current MB).
-    pub(crate) data_track: HashMap<usize, (Millis, f64)>,
+    /// Live data components, dense by data index: (last stamp, MB).
+    pub(crate) data_track: Vec<Option<(Millis, f64)>>,
     /// Runtime growth events this invocation needed (sizing convergence
     /// signal: history sizing drives this toward zero).
     pub(crate) growth_count: usize,
@@ -232,6 +270,87 @@ pub struct OngoingInvocation {
 }
 
 impl OngoingInvocation {
+    /// A blank shell (no capacity); [`Platform::begin_at`] sizes it for
+    /// a concrete graph via [`Self::reset`].
+    fn empty() -> Self {
+        Self {
+            scale: 0.0,
+            inv_id: 0,
+            t0: 0.0,
+            consumed_before: Consumption::default(),
+            breakdown: Breakdown::default(),
+            mem: MemoryController::new(),
+            data_home: Vec::new(),
+            comp_server: Vec::new(),
+            merge_pairs: Vec::new(),
+            colocated_components: 0,
+            total_components: 0,
+            peak_cpu: 0.0,
+            peak_mem: 0.0,
+            wave_start: 0.0,
+            prev_wave_dur: 0.0,
+            wave_dur: 0.0,
+            crash_state: None,
+            anchor: None,
+            estimate: Resources::ZERO,
+            rack_id: RackId(0),
+            wave_offsets: Vec::new(),
+            wave_comps: Vec::new(),
+            wave_idx: 0,
+            grown: Vec::new(),
+            pending: Vec::new(),
+            attrib: Consumption::default(),
+            data_track: Vec::new(),
+            growth_count: 0,
+            first_wave_warm: None,
+        }
+    }
+
+    /// Clear the shell in place and size its dense tables for `graph`
+    /// — allocation-free once every buffer has seen a graph at least
+    /// this large.
+    fn reset(
+        &mut self,
+        graph: &ResourceGraph,
+        scale: f64,
+        inv_id: u64,
+        at: Millis,
+        crash: Option<(Crash, usize)>,
+    ) {
+        self.scale = scale;
+        self.inv_id = inv_id;
+        self.t0 = at;
+        self.consumed_before = Consumption::default();
+        self.breakdown = Breakdown::default();
+        self.mem.reset();
+        self.data_home.clear();
+        self.data_home.resize(graph.n_data(), None);
+        self.comp_server.clear();
+        self.comp_server.resize(graph.n_compute(), None);
+        self.grown.clear();
+        self.grown.resize(graph.n_compute(), None);
+        self.data_track.clear();
+        self.data_track.resize(graph.n_data(), None);
+        self.merge_pairs.clear();
+        self.colocated_components = 0;
+        self.total_components = 0;
+        self.peak_cpu = 0.0;
+        self.peak_mem = 0.0;
+        self.wave_start = at;
+        self.prev_wave_dur = 0.0;
+        self.wave_dur = 0.0;
+        self.crash_state = crash;
+        self.anchor = None;
+        self.estimate = Resources::ZERO;
+        self.rack_id = RackId(0);
+        graph.waves_into(&mut self.wave_offsets, &mut self.wave_comps);
+        self.wave_idx = 0;
+        self.pending.clear();
+        self.attrib = Consumption::default();
+        self.growth_count = 0;
+        self.first_wave_warm = None;
+    }
+
     /// Simulated time at which the wave in flight completes.
     pub fn wave_done_at(&self) -> Millis {
         self.wave_start + self.wave_dur
@@ -251,9 +370,21 @@ impl OngoingInvocation {
         self.first_wave_warm
     }
 
+    fn n_waves(&self) -> usize {
+        self.wave_offsets.len().saturating_sub(1)
+    }
+
+    fn wave_len(&self, w: usize) -> usize {
+        self.wave_offsets[w + 1] - self.wave_offsets[w]
+    }
+
+    fn wave_comp(&self, w: usize, k: usize) -> usize {
+        self.wave_comps[self.wave_offsets[w] + k]
+    }
+
     /// Integrate a live data component's footprint up to `now`.
     fn data_stamp(&mut self, d: usize, now: Millis) {
-        if let Some((last, mb)) = self.data_track.get_mut(&d) {
+        if let Some((last, mb)) = self.data_track[d].as_mut() {
             let dt_s = (now - *last).max(0.0) / 1000.0;
             self.attrib.alloc_mem_mb_s += *mb * dt_s;
             // data regions are fully resident: used == allocated
@@ -263,19 +394,19 @@ impl OngoingInvocation {
     }
 
     fn data_open(&mut self, d: usize, now: Millis, mb: f64) {
-        self.data_track.insert(d, (now, mb));
+        self.data_track[d] = Some((now, mb));
     }
 
     fn data_grow(&mut self, d: usize, now: Millis, extra_mb: f64) {
         self.data_stamp(d, now);
-        if let Some((_, mb)) = self.data_track.get_mut(&d) {
+        if let Some((_, mb)) = self.data_track[d].as_mut() {
             *mb += extra_mb;
         }
     }
 
     fn data_close(&mut self, d: usize, now: Millis) {
         self.data_stamp(d, now);
-        self.data_track.remove(&d);
+        self.data_track[d] = None;
     }
 }
 
@@ -307,6 +438,8 @@ impl Platform {
             static_profile: HashMap::new(),
             sizing_cache: std::cell::RefCell::new(HashMap::new()),
             scratch: PlacementCtx::default(),
+            shell_pool: Vec::new(),
+            solver_scratch: std::cell::RefCell::new(Vec::new()),
         }
     }
 
@@ -366,13 +499,19 @@ impl Platform {
         let mut st = self.begin_at(graph, inv, self.now, crash);
         st.consumed_before = consumed_before;
         loop {
-            self.start_wave(graph, &mut st)?;
+            if let Err(e) = self.start_wave(graph, &mut st) {
+                // already aborted/cleaned up; recycle the shell
+                self.shell_pool.push(st);
+                return Err(e);
+            }
             // Single-tenant: apply this wave's deferred events in time
-            // order right away (stable sort preserves push order on
-            // ties, like the driver's sequence-numbered heap).
+            // order right away. `total_cmp` + the push-sequence
+            // tiebreak reproduce a stable sort's tie order (like the
+            // driver's sequence-numbered heap) without the stable
+            // sort's scratch allocation, and cannot panic on NaN.
             let mut evs = std::mem::take(&mut st.pending);
-            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            for (at, server, ev) in evs.drain(..) {
+            evs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (at, _seq, server, ev) in evs.drain(..) {
                 self.apply_timeline(&mut st, server, ev, at);
             }
             st.pending = evs; // keep capacity
@@ -387,7 +526,8 @@ impl Platform {
 
     /// Open an invocation at simulated time `at`: route to a rack, mark
     /// the whole-app anchor, and return the paused per-invocation state
-    /// (wave 0 not yet started — call [`Self::start_wave`]).
+    /// (wave 0 not yet started — call [`Self::start_wave`]). The state
+    /// is a recycled pool shell; steady state allocates nothing.
     pub fn begin_at(
         &mut self,
         graph: &ResourceGraph,
@@ -399,16 +539,21 @@ impl Platform {
         let program = &graph.program;
         let inv_id = self.next_invocation;
         self.next_invocation += 1;
-        let mut breakdown = Breakdown::default();
+
+        let mut st = self.shell_pool.pop().unwrap_or_else(OngoingInvocation::empty);
+        st.reset(graph, scale, inv_id, at, crash);
 
         // ---- global scheduling: route to a rack -------------------------
+        // Rack availability reaches the global scheduler as incremental
+        // deltas: the cluster hooks record which racks changed and this
+        // drain refreshes exactly those — O(changed racks), not
+        // O(racks), per admission.
         let estimate = program.peak_estimate(scale);
-        for r in self.cluster.racks() {
-            let avail = self.cluster.rack_available(r);
-            self.global.update_rack(r, avail);
-        }
+        let global = &mut self.global;
+        self.cluster
+            .for_each_dirty_rack(|r, avail| global.update_rack(r, avail));
         let rack_id = self.global.route(estimate);
-        breakdown.sched_ms += 2.0 * self.control.sched_msg_ms; // request + dispatch
+        st.breakdown.sched_ms += 2.0 * self.control.sched_msg_ms; // request + dispatch
         let rack = &self.racks[rack_id.0];
 
         // ---- whole-app anchor (smallest fit) + low-priority mark --------
@@ -421,44 +566,13 @@ impl Platform {
             self.cluster.mark(a, estimate);
         }
 
-        let merge_pairs = if self.config.adaptive {
-            graph.merge_candidates(scale, 1.6)
-        } else {
-            Vec::new()
-        };
-
-        OngoingInvocation {
-            scale,
-            inv_id,
-            t0: at,
-            // filled in by invoke_inner for the diff-based report; the
-            // driver's attributed accounting never reads it
-            consumed_before: Consumption::default(),
-            breakdown,
-            mem: MemoryController::new(),
-            data_home: HashMap::new(),
-            comp_server: HashMap::new(),
-            merge_pairs,
-            colocated_components: 0,
-            total_components: 0,
-            peak_cpu: 0.0,
-            peak_mem: 0.0,
-            wave_start: at,
-            prev_wave_dur: 0.0,
-            wave_dur: 0.0,
-            crash_state: crash,
-            anchor,
-            estimate,
-            rack_id,
-            waves: graph.waves(),
-            wave_idx: 0,
-            grown: HashMap::new(),
-            pending: Vec::new(),
-            attrib: Consumption::default(),
-            data_track: HashMap::new(),
-            growth_count: 0,
-            first_wave_warm: None,
+        if self.config.adaptive {
+            graph.merge_candidates_into(scale, 1.6, &mut st.merge_pairs);
         }
+        st.anchor = anchor;
+        st.estimate = estimate;
+        st.rack_id = rack_id;
+        st
     }
 
     /// Execute the scheduling/placement of the next wave at
@@ -481,9 +595,9 @@ impl Platform {
         let mut wave_mem = 0.0f64;
         let mut ctx = std::mem::take(&mut self.scratch);
 
-        let n_comps = st.waves[st.wave_idx].len();
+        let n_comps = st.wave_len(st.wave_idx);
         for k in 0..n_comps {
-            let c = st.waves[st.wave_idx][k];
+            let c = st.wave_comp(st.wave_idx, k);
             let spec = &program.computes[c];
             st.total_components += 1;
 
@@ -504,11 +618,11 @@ impl Platform {
             // -- placement ------------------------------------------
             ctx.data_servers.clear();
             ctx.data_servers
-                .extend(spec.accesses.iter().filter_map(|d| st.data_home.get(d).copied()));
+                .extend(spec.accesses.iter().filter_map(|&d| st.data_home[d]));
             let demand = Resources::new(vcpus as f64, init_mb);
             let (server, colocated, granted) =
                 self.place(rack_id, anchor, demand, &ctx.data_servers, wave_start);
-            st.comp_server.insert(c, server);
+            st.comp_server[c] = Some(server);
             // run on what was actually granted (degraded when the
             // cluster is saturated)
             let vcpus_granted = granted.cpu.max(0.25);
@@ -554,7 +668,7 @@ impl Platform {
                         }
                     }
                     st.data_open(d, wave_start, launched);
-                    st.data_home.insert(d, target);
+                    st.data_home[d] = Some(target);
                 } else {
                     // growth if this invocation needs more
                     let cur = st.mem.get(d as u64).unwrap().total_mb();
@@ -563,12 +677,12 @@ impl Platform {
                         ctx.accessors.extend(
                             graph
                                 .accessors_of_iter(d)
-                                .filter_map(|a| st.comp_server.get(&a).copied()),
+                                .filter_map(|a| st.comp_server[a]),
                         );
                         let grow_to = super::placement::place_growth(
                             &self.cluster,
                             Resources::mem_only(dsize - cur),
-                            st.data_home[&d],
+                            st.data_home[d].expect("live data has a home server"),
                             &ctx.accessors,
                         );
                         if let Some(s) = grow_to {
@@ -691,8 +805,10 @@ impl Platform {
             self.cluster.add_used(server, base_used, wave_start);
             let mid = wave_start + (startup_ms + stage_ms) / 2.0;
             if alloc_now > init_mb {
+                let seq = st.pending.len() as u32;
                 st.pending.push((
                     mid,
+                    seq,
                     server,
                     TimelineEv::Grow {
                         comp: c,
@@ -704,8 +820,10 @@ impl Platform {
             // `used` carries exactly the base share added above —
             // `Finish` subtracts it plus whatever the (possibly
             // failed) `Grow` actually added, never more.
+            let seq = st.pending.len() as u32;
             st.pending.push((
                 end,
+                seq,
                 server,
                 TimelineEv::Finish {
                     comp: c,
@@ -766,14 +884,14 @@ impl Platform {
             TimelineEv::Grow { comp, extra_mb, used_mb } => {
                 if self.cluster.try_alloc(server, Resources::mem_only(extra_mb), at) {
                     self.cluster.add_used(server, Resources::mem_only(used_mb), at);
-                    st.grown.insert(comp, (extra_mb, used_mb, at));
+                    st.grown[comp] = Some((extra_mb, used_mb, at));
                 }
                 // else: cluster full — the growth never landed, so the
                 // Finish below must not release or un-use it.
             }
             TimelineEv::Finish { comp, started, base_alloc, used } => {
                 let (extra, grown_used, grown_at) =
-                    st.grown.remove(&comp).unwrap_or((0.0, 0.0, at));
+                    st.grown[comp].take().unwrap_or((0.0, 0.0, at));
                 self.cluster
                     .sub_used(server, used.plus(Resources::mem_only(grown_used)), at);
                 self.cluster
@@ -802,7 +920,7 @@ impl Platform {
                 if last == st.wave_idx && st.mem.get(d as u64).is_some() {
                     st.data_close(d, now);
                     let _ = st.mem.release(&mut self.cluster, d as u64, now);
-                    st.data_home.remove(&d);
+                    st.data_home[d] = None;
                 }
             }
         }
@@ -819,7 +937,7 @@ impl Platform {
                     if st.mem.get(d as u64).is_some() {
                         st.data_close(d, now);
                         let _ = st.mem.release(&mut self.cluster, d as u64, now);
-                        st.data_home.remove(&d);
+                        st.data_home[d] = None;
                     }
                 }
                 // re-execution: rewind to the earliest dirty wave; the
@@ -833,20 +951,15 @@ impl Platform {
             }
         }
         st.wave_idx += 1;
-        st.wave_idx >= st.waves.len()
+        st.wave_idx >= st.n_waves()
     }
 
-    /// Close a completed invocation: release surviving data, drop the
-    /// anchor mark, admit the app to the warm pool, and build the run
-    /// report. With `attributed` the consumption is the invocation's
-    /// own integral ([`OngoingInvocation::attrib`]); otherwise it is
-    /// the cluster-wide before/after diff (exact when single-tenant).
-    pub fn finish_invocation(
-        &mut self,
-        graph: &ResourceGraph,
-        mut st: OngoingInvocation,
-        attributed: bool,
-    ) -> RunReport {
+    /// Shared completion epilogue: release surviving data, drop the
+    /// anchor mark, admit the app to the warm pool, retire the
+    /// invocation's message-log entries (its recovery window is over —
+    /// keeps the log O(in-flight), not O(run)), and advance the clock.
+    /// Returns the invocation's end time.
+    fn close_invocation(&mut self, graph: &ResourceGraph, st: &mut OngoingInvocation) -> Millis {
         let wave_end = st.wave_start;
         // release any data still live (defensive; lifetimes should cover)
         for d in 0..graph.n_data() {
@@ -859,7 +972,24 @@ impl Platform {
             self.cluster.unmark(a, st.estimate);
         }
         self.warm_pool.insert(graph.program.name);
+        self.msglog.retire(st.inv_id);
         self.now = self.now.max(wave_end + 1.0);
+        wave_end
+    }
+
+    /// Close a completed invocation: release surviving data, drop the
+    /// anchor mark, admit the app to the warm pool, and build the run
+    /// report. With `attributed` the consumption is the invocation's
+    /// own integral ([`OngoingInvocation::attrib`]); otherwise it is
+    /// the cluster-wide before/after diff (exact when single-tenant).
+    /// The shell is recycled into the platform's pool.
+    pub fn finish_invocation(
+        &mut self,
+        graph: &ResourceGraph,
+        mut st: OngoingInvocation,
+        attributed: bool,
+    ) -> RunReport {
+        let wave_end = self.close_invocation(graph, &mut st);
         let consumption = if attributed {
             st.attrib
         } else {
@@ -867,7 +997,7 @@ impl Platform {
             sub_consumption(consumed_after, st.consumed_before)
         };
 
-        RunReport {
+        let report = RunReport {
             system: "zenix".into(),
             workload: graph.program.name.into(),
             exec_ms: wave_end - st.t0,
@@ -880,7 +1010,30 @@ impl Platform {
             },
             peak_cpu: st.peak_cpu,
             peak_mem_mb: st.peak_mem,
-        }
+        };
+        self.shell_pool.push(st);
+        report
+    }
+
+    /// Allocation-free completion for the multi-tenant driver: same
+    /// cleanup as [`Self::finish_invocation`] but returns only
+    /// (exec ms, attributed consumption) — no report labels, no heap
+    /// traffic. The shell is recycled into the platform's pool.
+    pub fn finish_invocation_attrib(
+        &mut self,
+        graph: &ResourceGraph,
+        mut st: OngoingInvocation,
+    ) -> (Millis, Consumption) {
+        let wave_end = self.close_invocation(graph, &mut st);
+        let out = (wave_end - st.t0, st.attrib);
+        self.shell_pool.push(st);
+        out
+    }
+
+    /// Return an abandoned invocation shell (e.g. after a failed
+    /// admission) to the pool so its capacity is reused.
+    pub fn recycle_shell(&mut self, st: OngoingInvocation) {
+        self.shell_pool.push(st);
     }
 
     // ---- helpers --------------------------------------------------------
@@ -892,7 +1045,7 @@ impl Platform {
     /// growths, release every live data component, drop the anchor's
     /// low-priority mark, and restore the scratch buffers.
     fn abort_invocation(&mut self, ctx: PlacementCtx, st: &mut OngoingInvocation, now: Millis) {
-        for (_, server, ev) in st.pending.drain(..) {
+        for (_, _, server, ev) in st.pending.drain(..) {
             // Grow events were never applied to the cluster; only the
             // base allocations behind Finish events are live.
             if let TimelineEv::Finish { base_alloc, used, .. } = ev {
@@ -902,26 +1055,28 @@ impl Platform {
         }
         // Landed growths from earlier waves whose Finish never ran
         // (defensive: normally empty by the time a new wave starts).
-        let mut grown: Vec<(usize, (f64, f64, Millis))> = st.grown.drain().collect();
-        grown.sort_by_key(|&(comp, _)| comp);
-        for (comp, (extra, grown_used, _)) in grown {
-            if let Some(&server) = st.comp_server.get(&comp) {
-                self.cluster.sub_used(server, Resources::mem_only(grown_used), now);
-                self.cluster.free(server, Resources::mem_only(extra), now);
+        // Dense table: index order == the old sorted order.
+        for comp in 0..st.grown.len() {
+            if let Some((extra, grown_used, _)) = st.grown[comp].take() {
+                if let Some(server) = st.comp_server[comp] {
+                    self.cluster.sub_used(server, Resources::mem_only(grown_used), now);
+                    self.cluster.free(server, Resources::mem_only(extra), now);
+                }
             }
         }
         // Release live data in index order (deterministic float
-        // accumulation; HashMap order must not leak into the integrals).
-        let mut tracked: Vec<usize> = st.data_track.keys().copied().collect();
-        tracked.sort_unstable();
-        for d in tracked {
-            st.data_close(d, now);
-            let _ = st.mem.release(&mut self.cluster, d as u64, now);
+        // accumulation).
+        for d in 0..st.data_track.len() {
+            if st.data_track[d].is_some() {
+                st.data_close(d, now);
+                let _ = st.mem.release(&mut self.cluster, d as u64, now);
+            }
         }
         st.mem.release_all(&mut self.cluster, now); // backstop: empty by now
         if let Some(a) = st.anchor {
             self.cluster.unmark(a, st.estimate);
         }
+        self.msglog.retire(st.inv_id);
         self.scratch = ctx;
     }
 
@@ -955,7 +1110,11 @@ impl Platform {
                             return (init, step);
                         }
                     }
-                    let s = adjust::solve(&p.values(), None, AdjustParams::default());
+                    // pooled scratch: the re-tune itself allocates
+                    // nothing in steady state
+                    let mut vals = self.solver_scratch.borrow_mut();
+                    p.values_into(&mut *vals);
+                    let s = adjust::solve(&vals[..], None, AdjustParams::default());
                     cache.insert(key, (s.init_mb, s.step_mb, recorded));
                     return (s.init_mb, s.step_mb);
                 }
@@ -1033,8 +1192,7 @@ impl Platform {
                             .max_by(|a, b| {
                                 a.available()
                                     .magnitude()
-                                    .partial_cmp(&b.available().magnitude())
-                                    .unwrap()
+                                    .total_cmp(&b.available().magnitude())
                             })
                             .map(|s| s.id)
                             .unwrap();
@@ -1084,12 +1242,7 @@ impl Platform {
                 self.cluster
                     .servers()
                     .iter()
-                    .max_by(|a, b| {
-                        a.available()
-                            .mem_mb
-                            .partial_cmp(&b.available().mem_mb)
-                            .unwrap()
-                    })
+                    .max_by(|a, b| a.available().mem_mb.total_cmp(&b.available().mem_mb))
                     .map(|s| s.id)
                     .unwrap_or(prefer)
             })
@@ -1196,6 +1349,24 @@ mod tests {
         let g = ResourceGraph::from_program(&lr::program()).unwrap();
         let mut p = Platform::testbed();
         p.invoke(&g, Invocation::new(1.0)).unwrap();
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO, "leak on {:?}", s.id);
+            assert_eq!(s.marked(), Resources::ZERO);
+        }
+    }
+
+    /// Pooled invocation shells must be invisible: interleaving graphs
+    /// of different shapes through the same platform (shells resized
+    /// per graph) leaves the cluster clean every time.
+    #[test]
+    fn pooled_shells_resize_across_different_graphs() {
+        let small = ResourceGraph::from_program(&lr::program()).unwrap();
+        let big = ResourceGraph::from_program(&tpcds::query(16)).unwrap();
+        let mut p = Platform::testbed();
+        for _ in 0..3 {
+            p.invoke(&small, Invocation::new(0.5)).unwrap();
+            p.invoke(&big, Invocation::new(0.2)).unwrap();
+        }
         for s in p.cluster.servers() {
             assert_eq!(s.allocated(), Resources::ZERO, "leak on {:?}", s.id);
             assert_eq!(s.marked(), Resources::ZERO);

@@ -35,6 +35,16 @@ pub struct ResourceGraph {
     pub accesses: Vec<(usize, usize)>,
     /// wave number per compute index (longest path from an entry).
     pub wave: Vec<usize>,
+    /// Precomputed per-data lifetime window (first, last accessor wave)
+    /// so [`Self::data_lifetime`] is an O(1) lookup — the executor asks
+    /// for every data component at the end of every wave.
+    data_life: Vec<Option<(usize, usize)>>,
+    /// Precomputed CSR wave structure (see [`Self::waves_into`]): wave
+    /// `w` = `wave_csr_comps[wave_csr_offsets[w]..wave_csr_offsets[w+1]]`.
+    /// Built once at graph construction; per-invocation shell resets
+    /// just memcpy it.
+    wave_csr_offsets: Vec<usize>,
+    wave_csr_comps: Vec<usize>,
 }
 
 impl ResourceGraph {
@@ -62,7 +72,43 @@ impl ResourceGraph {
                 wave[t] = wave[t].max(wave[i] + 1);
             }
         }
-        Ok(Self { program: program.clone(), n_compute, n_data, triggers, accesses, wave })
+        // Data lifetime windows (first/last accessor wave), precomputed
+        // once so the per-wave executor query is a lookup.
+        let mut data_life: Vec<Option<(usize, usize)>> = vec![None; n_data];
+        for &(c, d) in &accesses {
+            let w = wave[c];
+            data_life[d] = Some(match data_life[d] {
+                Some((lo, hi)) => (lo.min(w), hi.max(w)),
+                None => (w, w),
+            });
+        }
+        // CSR wave structure, single-pass counting sort (stable: within
+        // a wave, compute indices ascend — same order as `waves()`).
+        let n_waves = wave.iter().copied().max().unwrap_or(0) + 1;
+        let mut wave_csr_offsets = vec![0usize; n_waves + 1];
+        for &w in &wave {
+            wave_csr_offsets[w + 1] += 1;
+        }
+        for i in 0..n_waves {
+            wave_csr_offsets[i + 1] += wave_csr_offsets[i];
+        }
+        let mut cursor = wave_csr_offsets.clone();
+        let mut wave_csr_comps = vec![0usize; n_compute];
+        for (i, &w) in wave.iter().enumerate() {
+            wave_csr_comps[cursor[w]] = i;
+            cursor[w] += 1;
+        }
+        Ok(Self {
+            program: program.clone(),
+            n_compute,
+            n_data,
+            triggers,
+            accesses,
+            wave,
+            data_life,
+            wave_csr_offsets,
+            wave_csr_comps,
+        })
     }
 
     pub fn n_compute(&self) -> usize {
@@ -97,6 +143,19 @@ impl ResourceGraph {
             out[w].push(i);
         }
         out
+    }
+
+    /// CSR-flattened wave structure into caller-owned buffers
+    /// (allocation-free once the buffers have capacity): after the call
+    /// wave `w`'s compute indices are
+    /// `comps[offsets[w]..offsets[w + 1]]`, in the same order as
+    /// [`Self::waves`]. A plain memcpy of the CSR precomputed at graph
+    /// build — O(n_compute), no per-invocation rescan. The executor's
+    /// pooled invocation shells reuse these buffers across invocations
+    /// (`clone_from` keeps their capacity).
+    pub fn waves_into(&self, offsets: &mut Vec<usize>, comps: &mut Vec<usize>) {
+        offsets.clone_from(&self.wave_csr_offsets);
+        comps.clone_from(&self.wave_csr_comps);
     }
 
     /// Data indices accessed by compute `c`.
@@ -141,17 +200,9 @@ impl ResourceGraph {
 
     /// Data lifetime window in waves: (first accessor wave, last
     /// accessor wave). Data launches with its first accessor and dies
-    /// with its last (§5.1.2).
+    /// with its last (§5.1.2). O(1): precomputed at graph build.
     pub fn data_lifetime(&self, d: usize) -> Option<(usize, usize)> {
-        let waves: Vec<usize> = self.accessors_of(d).iter().map(|&c| self.wave[c]).collect();
-        if waves.is_empty() {
-            None
-        } else {
-            Some((
-                waves.iter().copied().min().unwrap(),
-                waves.iter().copied().max().unwrap(),
-            ))
-        }
+        self.data_life.get(d).copied().flatten()
     }
 
     /// Neighbour materialization candidates (§5.1.2): chains of
@@ -160,8 +211,22 @@ impl ResourceGraph {
     /// co-located.
     pub fn merge_candidates(&self, scale: f64, similarity: f64) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
+        self.merge_candidates_into(scale, similarity, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::merge_candidates`] for the
+    /// executor's pooled invocation shells: clears and refills `out`
+    /// (capacity persists across invocations).
+    pub fn merge_candidates_into(
+        &self,
+        scale: f64,
+        similarity: f64,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        out.clear();
         for &(a, b) in &self.triggers {
-            let only_trigger = self.successors(a).len() == 1;
+            let only_trigger = self.triggers.iter().filter(|&&(x, _)| x == a).count() == 1;
             let only_pred = self.triggers.iter().filter(|&&(_, t)| t == b).count() == 1;
             if !(only_trigger && only_pred) {
                 continue;
@@ -177,7 +242,6 @@ impl ResourceGraph {
                 out.push((a, b));
             }
         }
-        out
     }
 }
 
@@ -205,6 +269,21 @@ mod tests {
         // slice+audio, decodes, encodes, merge, mux, finalize
         assert!(waves[1].len() >= video::UNITS);
         assert!(waves[2].len() >= video::UNITS);
+    }
+
+    #[test]
+    fn waves_into_matches_waves() {
+        for prog in [lr::program(), tpcds::query(16), video::pipeline()] {
+            let g = ResourceGraph::from_program(&prog).unwrap();
+            let waves = g.waves();
+            let mut offsets = vec![99]; // stale content must be cleared
+            let mut comps = vec![7];
+            g.waves_into(&mut offsets, &mut comps);
+            assert_eq!(offsets.len(), waves.len() + 1);
+            for (w, wave) in waves.iter().enumerate() {
+                assert_eq!(&comps[offsets[w]..offsets[w + 1]], &wave[..], "wave {w}");
+            }
+        }
     }
 
     #[test]

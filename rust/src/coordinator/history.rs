@@ -119,7 +119,17 @@ impl Profile {
 
     /// Raw values (for the adjust solver).
     pub fn values(&self) -> Vec<f64> {
-        self.obs.iter().map(|(v, _)| *v).collect()
+        let mut out = Vec::new();
+        self.values_into(&mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::values`]: clears and refills
+    /// `out` (the executor's periodic §5.2.3 re-tune reuses one scratch
+    /// buffer so the steady-state hot path never allocates).
+    pub fn values_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.obs.iter().map(|&(v, _)| v));
     }
 }
 

@@ -59,6 +59,27 @@ impl MessageLog {
         self.entries.truncate(self.persisted);
     }
 
+    /// Compact away every entry of a completed invocation (its graph-cut
+    /// recovery window is over). Keeps the log's memory proportional to
+    /// the *in-flight* invocations instead of the whole run — at 100k+
+    /// driver arrivals an ever-growing log dominates heap otherwise.
+    /// O(live entries); preserves order and the persistence watermark of
+    /// the surviving entries. In-place: no allocation.
+    pub fn retire(&mut self, invocation: u64) {
+        let persisted = self.persisted;
+        let mut idx = 0usize;
+        let mut kept_below = 0usize;
+        self.entries.retain(|e| {
+            let keep = e.invocation != invocation;
+            if keep && idx < persisted {
+                kept_below += 1;
+            }
+            idx += 1;
+            keep
+        });
+        self.persisted = kept_below;
+    }
+
     /// Completed computes for `invocation` that are durably recorded.
     pub fn durable_computes(&self, invocation: u64) -> Vec<usize> {
         self.durable()
@@ -118,6 +139,24 @@ mod tests {
         log.flush_to(3);
         log.crash();
         assert_eq!(log.durable_computes(1), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn retire_drops_only_one_invocation_and_keeps_watermark() {
+        let mut log = MessageLog::new();
+        log.append(LogEntry { invocation: 1, compute: 0, result_mb: 1.0 });
+        log.append(LogEntry { invocation: 2, compute: 1, result_mb: 1.0 });
+        log.append(LogEntry { invocation: 1, compute: 2, result_mb: 1.0 });
+        log.flush();
+        log.append(LogEntry { invocation: 2, compute: 3, result_mb: 1.0 });
+        log.retire(1);
+        assert_eq!(log.len(), 2);
+        // invocation 2's durable prefix survives; its unflushed tail is
+        // still above the watermark
+        assert_eq!(log.durable_computes(2), vec![1]);
+        log.flush();
+        assert_eq!(log.durable_computes(2), vec![1, 3]);
+        assert!(log.durable_computes(1).is_empty());
     }
 
     #[test]

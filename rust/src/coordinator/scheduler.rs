@@ -16,7 +16,10 @@
 //! best-rack cache maintained by [`GlobalScheduler::update_rack`], so
 //! the common case routes without rescanning every rack; the O(racks)
 //! scan runs only when the cache is stale or the most-available rack
-//! cannot fit the estimate. See `rust/benches/scheduler.rs` for the
+//! cannot fit the estimate. The executor feeds `update_rack` from the
+//! cluster's dirty-rack deltas (`Cluster::for_each_dirty_rack`) — only
+//! racks whose availability actually changed are refreshed per
+//! admission, not all of them. See `rust/benches/scheduler.rs` for the
 //! measured throughputs.
 
 use std::collections::HashMap;
@@ -49,8 +52,12 @@ pub struct GlobalScheduler {
     best_racks: Vec<usize>,
     best_mag: f64,
     best_stale: bool,
-    /// Compilation DB: (app, variant) -> compiled (cache hit at runtime).
-    compilations: HashMap<(String, Compilation), bool>,
+    /// Compilation DB: (app, variant) -> compiled (cache hit at
+    /// runtime). Keyed by the program's interned (`&'static`) name like
+    /// the platform's sizing/warm-pool caches, so a lookup allocates
+    /// nothing (the old `(String, _)` key built an owned string per
+    /// query).
+    compilations: HashMap<(&'static str, Compilation), bool>,
     /// Round-robin cursor for tie-breaking equally-loaded racks.
     cursor: usize,
 }
@@ -163,8 +170,9 @@ impl GlobalScheduler {
     }
 
     /// Look up / install a compilation (returns true on cache hit).
-    pub fn compilation(&mut self, app: &str, variant: Compilation) -> bool {
-        let key = (app.to_string(), variant);
+    /// Allocation-free: the key borrows the interned app name.
+    pub fn compilation(&mut self, app: &'static str, variant: Compilation) -> bool {
+        let key = (app, variant);
         if self.compilations.contains_key(&key) {
             true
         } else {

@@ -6,8 +6,12 @@
 //! remote regions are reached over RDMA MRs or the TCP controller
 //! process (§9.1). Growth allocates additional regions, local-first
 //! (§5.1.1 scaling policy).
-
-use std::collections::HashMap;
+//!
+//! Component ids are dense per invocation (resource-graph data
+//! indices), so the controller keeps a `Vec`-indexed table instead of a
+//! hash map, and recycles released [`DataComponentState`] shells so the
+//! steady-state launch/grow/release cycle performs no heap allocation
+//! (mirroring the platform's pooled invocation shells).
 
 use crate::cluster::clock::Millis;
 use crate::cluster::{Cluster, Resources, ServerId};
@@ -64,9 +68,16 @@ impl DataComponentState {
 
 /// The memory controller: allocates/grows/releases data-component
 /// regions against cluster capacity.
+///
+/// Dense storage: slot `id` of `components` holds the live state of
+/// data component `id` (ids are per-invocation resource-graph indices).
+/// Released states go to `spare` with their buffers intact, so a later
+/// launch reuses capacity instead of allocating.
 #[derive(Debug, Default)]
 pub struct MemoryController {
-    components: HashMap<u64, DataComponentState>,
+    components: Vec<Option<DataComponentState>>,
+    /// Recycled state shells (empty, capacity preserved).
+    spare: Vec<DataComponentState>,
 }
 
 impl MemoryController {
@@ -75,7 +86,27 @@ impl MemoryController {
     }
 
     pub fn get(&self, id: u64) -> Option<&DataComponentState> {
-        self.components.get(&id)
+        self.components.get(id as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Recycle `state` after its regions were drained.
+    fn recycle(&mut self, mut state: DataComponentState) {
+        state.regions.clear();
+        state.accessors.clear();
+        state.next_region = 0;
+        state.next_mr_tag = 0;
+        self.spare.push(state);
+    }
+
+    /// Drop every live component back to the spare pool *without*
+    /// touching the cluster (pooled-shell reset; normally a no-op since
+    /// a finished invocation has released everything).
+    pub fn reset(&mut self) {
+        for i in 0..self.components.len() {
+            if let Some(state) = self.components[i].take() {
+                self.recycle(state);
+            }
+        }
     }
 
     /// Start a data component with an initial region on `server`
@@ -88,7 +119,11 @@ impl MemoryController {
         mb: f64,
         now: Millis,
     ) -> Result<RegionId> {
-        if self.components.contains_key(&id) {
+        let idx = id as usize;
+        if idx >= self.components.len() {
+            self.components.resize_with(idx + 1, || None);
+        }
+        if self.components[idx].is_some() {
             anyhow::bail!("data component {id} already launched");
         }
         // The Cluster hooks keep the placement index in sync (the
@@ -97,12 +132,12 @@ impl MemoryController {
             anyhow::bail!("server {server:?} cannot fit {mb} MB");
         }
         cluster.add_used(server, Resources::mem_only(mb), now);
-        let mut state = DataComponentState::default();
+        let mut state = self.spare.pop().unwrap_or_default();
         let rid = RegionId(0);
         state.regions.push(Region { id: rid, server, mb, mr_tag: 0 });
         state.next_region = 1;
         state.next_mr_tag = 1;
-        self.components.insert(id, state);
+        self.components[idx] = Some(state);
         Ok(rid)
     }
 
@@ -119,7 +154,8 @@ impl MemoryController {
     ) -> Result<RegionId> {
         let state = self
             .components
-            .get_mut(&id)
+            .get_mut(id as usize)
+            .and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
         // Probe existing region servers first, then the candidates, and
         // commit on the first fit — no candidate list is materialized.
@@ -152,7 +188,8 @@ impl MemoryController {
     pub fn attach(&mut self, id: u64, accessor: u64) -> Result<()> {
         let state = self
             .components
-            .get_mut(&id)
+            .get_mut(id as usize)
+            .and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
         state.accessors.push(accessor);
         Ok(())
@@ -167,7 +204,8 @@ impl MemoryController {
     ) -> Result<bool> {
         let state = self
             .components
-            .get_mut(&id)
+            .get_mut(id as usize)
+            .and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
         if let Some(pos) = state.accessors.iter().position(|&a| a == accessor) {
             state.accessors.swap_remove(pos);
@@ -180,29 +218,32 @@ impl MemoryController {
     }
 
     /// Release all regions of a component (end of life or failure
-    /// discard, §5.3.2).
+    /// discard, §5.3.2). The emptied state shell is recycled.
     pub fn release(&mut self, cluster: &mut Cluster, id: u64, now: Millis) -> Result<f64> {
-        let state = self
+        let mut state = self
             .components
-            .remove(&id)
+            .get_mut(id as usize)
+            .and_then(|s| s.take())
             .ok_or_else(|| anyhow::anyhow!("unknown data component {id}"))?;
         let mut freed = 0.0;
-        for r in state.regions {
+        for r in state.regions.drain(..) {
             cluster.sub_used(r.server, Resources::mem_only(r.mb), now);
             cluster.free(r.server, Resources::mem_only(r.mb), now);
             freed += r.mb;
         }
+        self.recycle(state);
         Ok(freed)
     }
 
     /// Release every live component (error-path cleanup); returns the
-    /// total MB freed.
+    /// total MB freed. Index order — deterministic.
     pub fn release_all(&mut self, cluster: &mut Cluster, now: Millis) -> f64 {
-        let ids: Vec<u64> = self.components.keys().copied().collect();
         let mut freed = 0.0;
-        for id in ids {
-            if let Ok(mb) = self.release(cluster, id, now) {
-                freed += mb;
+        for id in 0..self.components.len() {
+            if self.components[id].is_some() {
+                if let Ok(mb) = self.release(cluster, id as u64, now) {
+                    freed += mb;
+                }
             }
         }
         freed
@@ -298,6 +339,26 @@ mod tests {
         mc.grow(&mut cluster, 1, 1024.0, &[ServerId(1)], 1.0).unwrap();
         let err = mc.grow(&mut cluster, 1, 1.0, &[ServerId(1)], 2.0);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn released_state_shells_recycle_with_fresh_tags() {
+        let mut cluster = small_cluster();
+        let mut mc = MemoryController::new();
+        mc.launch(&mut cluster, 0, ServerId(0), 64.0, 0.0).unwrap();
+        mc.grow(&mut cluster, 0, 32.0, &[], 1.0).unwrap();
+        mc.release(&mut cluster, 0, 2.0).unwrap();
+        assert!(mc.get(0).is_none());
+        // relaunch under the same id: recycled shell, tag space restarts
+        mc.launch(&mut cluster, 0, ServerId(0), 32.0, 3.0).unwrap();
+        assert_eq!(mc.get(0).unwrap().regions[0].mr_tag, 0);
+        mc.grow(&mut cluster, 0, 16.0, &[], 4.0).unwrap();
+        assert_eq!(mc.get(0).unwrap().regions[1].mr_tag, 1);
+        let freed = mc.release(&mut cluster, 0, 5.0).unwrap();
+        assert_eq!(freed, 48.0);
+        assert_eq!(cluster.server(ServerId(0)).available().mem_mb, 1024.0);
+        mc.reset(); // no live components: pure no-op
+        assert!(mc.get(0).is_none());
     }
 
     #[test]

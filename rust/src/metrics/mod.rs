@@ -4,6 +4,14 @@
 //! end-to-end time, a latency breakdown, and time-integrated resource
 //! consumption split into used vs unused — the quantities on the y-axes
 //! of the paper's Figs 8-22.
+//!
+//! [`streaming`] holds the O(1)-memory aggregation primitives
+//! (streaming moments, P² quantiles) the multi-tenant driver uses so
+//! its report memory is O(apps), not O(invocations).
+
+pub mod streaming;
+
+use std::borrow::Cow;
 
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
@@ -40,10 +48,15 @@ impl Breakdown {
 }
 
 /// One system × workload run.
+///
+/// The labels are `Cow<'static, str>`: the hot paths (platform
+/// completions, FaaS replays) use borrowed literals / interned program
+/// names — building a report allocates nothing — while cold paths that
+/// relabel rows (figures, examples) may still assign owned strings.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
-    pub system: String,
-    pub workload: String,
+    pub system: Cow<'static, str>,
+    pub workload: Cow<'static, str>,
     /// End-to-end makespan (critical path), ms.
     pub exec_ms: Millis,
     /// Critical-path breakdown (may not sum to exec_ms when stages

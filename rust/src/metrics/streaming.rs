@@ -1,0 +1,326 @@
+//! Streaming (single-pass, O(1)-memory) summary statistics for the
+//! multi-tenant driver's report path.
+//!
+//! At 100k+ invocations the driver cannot afford to store every
+//! latency/growth sample per app (O(invocations) memory, unbounded
+//! with trace length). Instead it keeps:
+//!
+//! - [`StreamingMoments`] — count / sum / min / max / second moment,
+//!   updated in arrival order so the running mean is *bit-identical*
+//!   to summing the stored samples left-to-right (the driver digest
+//!   depends on this), and
+//! - [`P2Quantile`] — the Jain & Chlamtac P² algorithm: a five-marker
+//!   piecewise-parabolic estimate of one quantile, O(1) per
+//!   observation, no sample storage. Accuracy is within a few percent
+//!   of the exact quantile for the driver's workloads (pinned by a
+//!   property test against the exact-storage path).
+//!
+//! The exact-storage path remains available behind
+//! `DriverConfig::exact_stats` for the small CI traces.
+
+/// Running count/sum/min/max/M2 of a sample stream.
+///
+/// `mean()` is `sum / n` with `sum` accumulated in observation order —
+/// identical to `stats::mean` over the stored samples, so digests
+/// computed from streaming and exact aggregation agree.
+#[derive(Debug, Clone, Default)]
+pub struct StreamingMoments {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Sum of squared deviations (Welford), for a streaming stddev.
+    m2: f64,
+    mean_w: f64,
+}
+
+impl StreamingMoments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if self.n == 1 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        // Welford update for the variance (separate from `sum` so the
+        // digest-relevant mean stays a plain ordered sum).
+        let delta = x - self.mean_w;
+        self.mean_w += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean_w);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Ordered-sum mean; 0.0 when empty (matches `stats::mean`).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Population standard deviation; 0.0 for n < 2.
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+}
+
+/// P² streaming quantile estimator (Jain & Chlamtac, CACM 1985).
+///
+/// Five markers track (min, two intermediate points, the target
+/// quantile, max); marker heights move by piecewise-parabolic
+/// interpolation as observations arrive. O(1) memory and time per
+/// observation, deterministic (pure f64 arithmetic, no RNG).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Observations seen.
+    n: u64,
+    /// Marker heights (sorted ascending once initialized).
+    q: [f64; 5],
+    /// Marker positions, 1-based.
+    pos: [f64; 5],
+    /// First five observations, buffered until initialization.
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Track the `p`-quantile, `p` in (0, 1) — e.g. `0.95` for p95.
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1)");
+        Self { p, n: 0, q: [0.0; 5], pos: [1.0, 2.0, 3.0, 4.0, 5.0], init: [0.0; 5] }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.n < 5 {
+            self.init[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                let mut b = self.init;
+                b.sort_unstable_by(|a, c| a.total_cmp(c));
+                self.q = b;
+            }
+            return;
+        }
+        self.n += 1;
+
+        // cell k such that q[k] <= x < q[k+1]; extremes clamp
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut cell = 0;
+            for i in 0..4 {
+                if x >= self.q[i] && x < self.q[i + 1] {
+                    cell = i;
+                    break;
+                }
+            }
+            cell
+        };
+
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+
+        // desired positions for the current n
+        let nf = self.n as f64;
+        let desired = [
+            1.0,
+            1.0 + (nf - 1.0) * self.p / 2.0,
+            1.0 + (nf - 1.0) * self.p,
+            1.0 + (nf - 1.0) * (1.0 + self.p) / 2.0,
+            nf,
+        ];
+
+        for i in 1..4 {
+            let d = desired[i] - self.pos[i];
+            let step_up = self.pos[i + 1] - self.pos[i] > 1.0;
+            let step_down = self.pos[i - 1] - self.pos[i] < -1.0;
+            if (d >= 1.0 && step_up) || (d <= -1.0 && step_down) {
+                let s = if d >= 0.0 { 1.0 } else { -1.0 };
+                let parabolic = self.parabolic(i, s);
+                let new_q = if self.q[i - 1] < parabolic && parabolic < self.q[i + 1] {
+                    parabolic
+                } else {
+                    self.linear(i, s)
+                };
+                self.q[i] = new_q;
+                self.pos[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let q = &self.q;
+        let n = &self.pos;
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate; exact for n ≤ 5 (nearest-rank over the
+    /// buffered observations), 0.0 when empty.
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            let m = self.n as usize;
+            let mut b = [0.0f64; 5];
+            b[..m].copy_from_slice(&self.init[..m]);
+            b[..m].sort_unstable_by(|a, c| a.total_cmp(c));
+            let rank = ((self.p * (m as f64 - 1.0)).round() as usize).min(m - 1);
+            return b[rank];
+        }
+        self.q[2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn moments_match_exact_mean() {
+        let mut m = StreamingMoments::new();
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.2, 2.6];
+        for &x in &xs {
+            m.push(x);
+        }
+        // bit-identical to the ordered sum the exact path computes
+        assert_eq!(m.mean(), stats::mean(&xs));
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 9.2);
+        assert_eq!(m.count(), 6);
+        assert!((m.stddev() - stats::stddev(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_moments_are_zero() {
+        let m = StreamingMoments::new();
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.min(), 0.0);
+        assert_eq!(m.max(), 0.0);
+        assert_eq!(m.stddev(), 0.0);
+    }
+
+    #[test]
+    fn p2_small_samples_are_exact_rank() {
+        let mut p = P2Quantile::new(0.5);
+        p.push(5.0);
+        assert_eq!(p.value(), 5.0);
+        p.push(1.0);
+        p.push(3.0);
+        assert_eq!(p.value(), 3.0); // median of {1, 3, 5}
+    }
+
+    #[test]
+    fn p2_tracks_uniform_quantiles() {
+        for &(p, seed) in &[(0.5, 11u64), (0.95, 12), (0.9, 13)] {
+            let mut est = P2Quantile::new(p);
+            let mut rng = Rng::new(seed);
+            let mut xs = Vec::new();
+            for _ in 0..5000 {
+                let x = rng.uniform(0.0, 1000.0);
+                est.push(x);
+                xs.push(x);
+            }
+            let exact = stats::percentile(&xs, p * 100.0);
+            let got = est.value();
+            assert!(
+                (got - exact).abs() <= 0.05 * exact.abs() + 1.0,
+                "p={p}: P² {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2_tracks_lognormal_p95() {
+        let mut est = P2Quantile::new(0.95);
+        let mut rng = Rng::new(7);
+        let mut xs = Vec::new();
+        for _ in 0..4000 {
+            let x = rng.lognormal(6.0, 0.75);
+            est.push(x);
+            xs.push(x);
+        }
+        let exact = stats::percentile(&xs, 95.0);
+        let got = est.value();
+        assert!(
+            (got - exact).abs() <= 0.05 * exact,
+            "P² {got} vs exact {exact} (lognormal)"
+        );
+    }
+
+    #[test]
+    fn p2_is_deterministic() {
+        let feed = |seed: u64| {
+            let mut est = P2Quantile::new(0.95);
+            let mut rng = Rng::new(seed);
+            for _ in 0..1000 {
+                est.push(rng.uniform(0.0, 100.0));
+            }
+            est.value()
+        };
+        assert_eq!(feed(3).to_bits(), feed(3).to_bits());
+    }
+
+    #[test]
+    fn p2_monotone_stream_lands_near_top() {
+        let mut est = P2Quantile::new(0.95);
+        for i in 0..1000 {
+            est.push(i as f64);
+        }
+        let v = est.value();
+        assert!((850.0..=999.0).contains(&v), "{v}");
+    }
+}

@@ -42,6 +42,9 @@ impl Report {
 pub struct Bencher {
     filter: Option<String>,
     target: Duration,
+    /// `--quick` was passed (shrinks both the micro-bench target time
+    /// and [`Self::bench_macro`]'s sample count).
+    quick: bool,
     /// Explicit `--json <path>` destination (wins over the env var).
     json_path: Option<PathBuf>,
     pub reports: Vec<Report>,
@@ -58,12 +61,16 @@ impl Bencher {
     pub fn from_args(args: impl Iterator<Item = String>) -> Self {
         let mut filter = None;
         let mut target = Duration::from_millis(800);
+        let mut quick = false;
         let mut json_path = None;
         let mut args = args.peekable();
         while let Some(a) = args.next() {
             match a.as_str() {
                 "--filter" => filter = args.next(),
-                "--quick" => target = Duration::from_millis(100),
+                "--quick" => {
+                    quick = true;
+                    target = Duration::from_millis(100);
+                }
                 "--json" => json_path = args.next().map(PathBuf::from),
                 "--bench" => {} // cargo bench passes this through
                 other if !other.starts_with('-') && filter.is_none() => {
@@ -72,7 +79,7 @@ impl Bencher {
                 _ => {}
             }
         }
-        Self { filter, target, json_path, reports: Vec::new() }
+        Self { filter, target, quick, json_path, reports: Vec::new() }
     }
 
     fn selected(&self, name: &str) -> bool {
@@ -101,6 +108,41 @@ impl Bencher {
         let report = Report {
             name: name.to_string(),
             iters: per_sample * samples as u64,
+            mean_ns: stats::mean(&times),
+            p50_ns: stats::percentile(&times, 50.0),
+            p95_ns: stats::percentile(&times, 95.0),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}  ({} iters)",
+            report.name,
+            fmt_ns(report.mean_ns),
+            fmt_ns(report.p50_ns),
+            fmt_ns(report.p95_ns),
+            report.iters,
+        );
+        self.reports.push(report.clone());
+        Some(report)
+    }
+
+    /// Measure a *macro*-benchmark: `f` is seconds-scale, so the
+    /// auto-calibrating [`Self::bench`] (20 samples × tuned batches)
+    /// would blow the wall-clock budget. Runs exactly `samples`
+    /// single-iteration samples and reports the same statistics/JSON
+    /// row. `--quick` halves the sample count (min 2).
+    pub fn bench_macro(&mut self, name: &str, samples: usize, mut f: impl FnMut()) -> Option<Report> {
+        if !self.selected(name) {
+            return None;
+        }
+        let samples = if self.quick { (samples / 2).max(2) } else { samples.max(2) };
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_nanos() as f64);
+        }
+        let report = Report {
+            name: name.to_string(),
+            iters: samples as u64,
             mean_ns: stats::mean(&times),
             p50_ns: stats::percentile(&times, 50.0),
             p95_ns: stats::percentile(&times, 95.0),
@@ -200,6 +242,22 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters > 0);
         assert_eq!(b.reports.len(), 1);
+    }
+
+    #[test]
+    fn bench_macro_runs_fixed_single_iteration_samples() {
+        let mut b = Bencher::from_args(std::iter::empty());
+        let r = b
+            .bench_macro("macro_spin", 3, || {
+                std::hint::black_box(1 + 1);
+            })
+            .unwrap();
+        assert_eq!(r.iters, 3);
+        assert!(r.mean_ns > 0.0);
+        // --quick halves the sample count (min 2)
+        let mut bq = Bencher::from_args(["--quick".to_string()].into_iter());
+        let rq = bq.bench_macro("macro_spin_q", 3, || {}).unwrap();
+        assert_eq!(rq.iters, 2);
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn multi_tenant_driver_halves_faas_allocation_deterministically() {
         mean_iat_ms: 400.0,
         cluster: ClusterSpec::paper_testbed(),
         config: ZenixConfig::default(),
+        exact_stats: true,
     };
     let driver = MultiTenantDriver::new(&mix, cfg);
     let out = driver.run_comparison();
@@ -64,6 +65,65 @@ fn multi_tenant_driver_halves_faas_allocation_deterministically() {
     let schedule3 = driver3.schedule();
     let zenix3 = driver3.run_zenix(&schedule3);
     assert_ne!(out.zenix.digest, zenix3.digest, "seed must matter");
+}
+
+/// Digest-equivalence regression for the allocation-free refactor
+/// (ISSUE 3): the standard seeded driver comparison must produce the
+/// *identical* digest whether the report path stores every sample
+/// (exact, the pre-refactor aggregation) or streams moments + P²
+/// quantiles — proving the dense-table/pooling/slab/cursor rewrite
+/// preserves event order and accounting bit-for-bit. The digest is
+/// additionally pinned across builds by `scripts/ci.sh` (first
+/// toolchain-bearing run writes `DRIVER_DIGEST.lock`; later runs must
+/// reproduce it).
+#[test]
+fn driver_digest_identical_across_stats_modes() {
+    let mix = standard_mix(12, Archetype::Average);
+    let cfg = DriverConfig {
+        seed: 7,
+        invocations: 1600,
+        mean_iat_ms: 400.0,
+        cluster: ClusterSpec::paper_testbed(),
+        config: ZenixConfig::default(),
+        exact_stats: true,
+    };
+    let exact = MultiTenantDriver::new(&mix, cfg).run_comparison();
+    let streaming =
+        MultiTenantDriver::new(&mix, DriverConfig { exact_stats: false, ..cfg }).run_comparison();
+
+    assert_eq!(exact.zenix.digest, streaming.zenix.digest, "zenix digest must not depend on stats mode");
+    assert_eq!(exact.peak.digest, streaming.peak.digest);
+    assert_eq!(exact.faas.digest, streaming.faas.digest);
+    assert_eq!(exact.zenix.completed, streaming.zenix.completed);
+    assert_eq!(exact.zenix.failed, streaming.zenix.failed);
+    assert!(
+        (exact.gated_savings() - streaming.gated_savings()).abs() < 1e-12,
+        "savings gate must be mode-independent"
+    );
+
+    // Satellite: streaming P² p95 stays within 5% of the exact
+    // quantile for every app with a meaningful sample count on the
+    // standard mix (plus a small absolute floor for ms-scale rows).
+    for (a, b) in exact.zenix.apps.iter().zip(&streaming.zenix.apps) {
+        assert_eq!(a.completed, b.completed, "{}", a.name);
+        assert_eq!(
+            a.mean_exec_ms.to_bits(),
+            b.mean_exec_ms.to_bits(),
+            "{}: ordered-sum streaming mean must be bit-identical",
+            a.name
+        );
+        if a.completed >= 60 {
+            let tol = 0.05 * a.p95_exec_ms.abs() + 2.0;
+            assert!(
+                (b.p95_exec_ms - a.p95_exec_ms).abs() <= tol,
+                "{}: streaming p95 {:.2} vs exact {:.2} (n={})",
+                a.name,
+                b.p95_exec_ms,
+                a.p95_exec_ms,
+                a.completed
+            );
+        }
+    }
 }
 
 /// Locate the AOT artifacts or skip the test (they require `make

@@ -7,8 +7,10 @@ use zenix::coordinator::adjust::{self, AdjustParams};
 use zenix::coordinator::graph::ResourceGraph;
 use zenix::coordinator::msglog::{LogEntry, MessageLog};
 use zenix::coordinator::{failure, placement, Platform, ZenixConfig};
+use zenix::metrics::streaming::P2Quantile;
 use zenix::util::quickcheck::forall;
 use zenix::util::rng::Rng;
+use zenix::util::stats;
 
 /// Random alloc/free sequences never overcommit a server, and
 /// allocation bookkeeping stays conserved.
@@ -257,6 +259,49 @@ fn indexed_placement_matches_linear_reference() {
                 }
             }
             demands.iter().all(|&d| agrees(&c, d))
+        },
+    );
+}
+
+/// Streaming P² quantile estimates stay within 5% (plus a small
+/// absolute floor) of the exact nearest-rank quantile across random
+/// sample distributions shaped like the driver's latency streams
+/// (uniform, lognormal, and bimodal warm/cold mixtures).
+#[test]
+fn p2_quantiles_track_exact_within_five_percent() {
+    forall(
+        30,
+        |rng: &mut Rng| {
+            let kind = rng.range(0, 3);
+            let n = rng.range(800, 4000);
+            let q = if rng.chance(0.5) { 0.95 } else { 0.5 };
+            let xs: Vec<f64> = (0..n)
+                .map(|_| match kind {
+                    0 => rng.uniform(10.0, 5000.0),
+                    1 => rng.lognormal(6.0, 0.75),
+                    // bimodal: warm fast path vs cold starts
+                    _ => {
+                        if rng.chance(0.8) {
+                            rng.uniform(50.0, 200.0)
+                        } else {
+                            rng.uniform(1500.0, 2500.0)
+                        }
+                    }
+                })
+                .collect();
+            (xs, q)
+        },
+        |(xs, q)| {
+            let mut est = P2Quantile::new(*q);
+            for &x in xs {
+                est.push(x);
+            }
+            let exact = stats::percentile(xs, q * 100.0);
+            let got = est.value();
+            // 5% relative + small absolute slack for the discrete
+            // nearest-rank reference on bimodal gaps
+            let tol = 0.05 * exact.abs() + 0.02 * (exact.abs() + got.abs()) + 1.0;
+            (got - exact).abs() <= tol
         },
     );
 }

@@ -42,6 +42,48 @@ awk -v s="$savings" 'BEGIN { exit (s + 0 >= 50.0) ? 0 : 1 }' || {
 }
 echo "driver smoke passed: ${dig1}, ${savings}% allocated-memory savings vs faas-static"
 
+# Pin the seeded digest across builds: the first toolchain-bearing run
+# records it; every later run must reproduce it byte-identically (the
+# allocation-free refactor contract — event order and accounting are
+# load-bearing). Delete DRIVER_DIGEST.lock only with a PR that
+# intentionally changes simulation semantics.
+lock="DRIVER_DIGEST.lock"
+if [[ -f "$lock" ]]; then
+    if ! grep -qx "1k_seed7=${dig1}" "$lock"; then
+        echo "FAIL: driver digest drifted: got ${dig1}, pinned $(cat "$lock")" >&2
+        exit 1
+    fi
+    echo "driver digest matches pinned ${dig1}"
+else
+    echo "1k_seed7=${dig1}" > "$lock"
+    echo "NOTE: pinned driver digest written to $lock — commit it."
+fi
+
+echo "== driver smoke: 100k invocations, streaming stats, wall-clock budget"
+t0=$SECONDS
+drv100k=$(cargo run --release --example multi_tenant -- \
+    --apps 24 --invocations 100000 --seed 7 --streaming)
+elapsed=$((SECONDS - t0))
+dig100k=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$drv100k" | head -1)
+if [[ -z "$dig100k" ]]; then
+    echo "FAIL: 100k driver run produced no digest" >&2
+    exit 1
+fi
+# Budget: the allocation-free loop targets ~55 µs/invocation; 100k
+# invocations x 3 replayed systems plus build overhead must land well
+# under 120 s of wall clock.
+if (( elapsed > 120 )); then
+    echo "FAIL: 100k-invocation driver took ${elapsed}s (> 120 s budget)" >&2
+    exit 1
+fi
+sav100k=$(grep -oE 'alloc-savings vs faas-static: -?[0-9]+(\.[0-9]+)?' <<<"$drv100k" | grep -oE '\-?[0-9]+(\.[0-9]+)?$' | head -1)
+awk -v s="${sav100k:-0}" 'BEGIN { exit (s + 0 >= 50.0) ? 0 : 1 }' || {
+    echo "FAIL: 100k-invocation savings ${sav100k}% < 50% vs faas-static" >&2
+    exit 1
+}
+echo "100k driver smoke passed in ${elapsed}s: ${dig100k}, ${sav100k}% savings"
+echo "(zero-steady-state-alloc gate runs under tier-1: rust/tests/alloc_free.rs)"
+
 echo "== bench smoke: scheduler (quick budget, json to repo root)"
 out=$(mktemp)
 ZENIX_BENCH_JSON=. cargo bench --bench scheduler -- --quick | tee "$out"
@@ -57,6 +99,20 @@ awk -v x="$speedup" 'BEGIN { exit (x + 0 >= 5.0) ? 0 : 1 }' || {
     exit 1
 }
 echo "indexed placement speedup at 1024 servers: ${speedup}x (>= 5x required)"
+
+# ISSUE 3 acceptance: the 100k-invocation driver row must hold a ≥5x
+# per-invocation improvement over the PR 2 projection (~300 µs/inv),
+# i.e. ≤ 60 µs/invocation.
+us_per_inv=$(grep -E '100k-invocation driver' "$out" | grep -oE '[0-9]+(\.[0-9]+)? µs/invocation' | head -1 | tr -dc '0-9.')
+if [[ -z "$us_per_inv" ]]; then
+    echo "FAIL: could not find the 100k-invocation driver rate line" >&2
+    exit 1
+fi
+awk -v x="$us_per_inv" 'BEGIN { exit (x + 0 <= 60.0) ? 0 : 1 }' || {
+    echo "FAIL: driver at ${us_per_inv} µs/invocation > 60 µs (need ≥5x over the PR 2 ~300 µs/inv rate)" >&2
+    exit 1
+}
+echo "driver per-invocation rate: ${us_per_inv} µs (<= 60 µs required)"
 
 echo "== bench smoke: hotpath (quick budget, json to repo root)"
 ZENIX_BENCH_JSON=. cargo bench --bench hotpath -- --quick
