@@ -7,15 +7,27 @@
 //! statistics (moments + P² quantiles) — use it for 100k+ invocation
 //! traces; the digest is identical to the exact-storage default.
 //!
+//! Admission control & bursts:
+//!
+//! - `--admission reject|fifo|fair` picks the policy for arrivals the
+//!   saturated cluster cannot admit (default `reject`, the
+//!   digest-pinned behavior). `fifo`/`fair` park them in bounded
+//!   per-tenant deferred queues (`--max-wait-ms`, `--max-depth`) and
+//!   drain on capacity-freeing events.
+//! - `--burst MULT` switches the Poisson arrivals to a two-state MMPP
+//!   whose ON-state rate is MULT× the OFF rate (same offered load,
+//!   bursty), `--mean-iat MS` scales the offered load itself.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
-//! deterministic Poisson arrival schedule, and dispatches the
-//! overlapping invocations against one platform — then replays the
-//! *identical* schedule through the peak-provision ablation and a
-//! statically-sized FaaS baseline to reproduce the paper's Fig 22/26-
-//! style allocated-memory savings. The final `digest=` line is stable
-//! per seed (checked by `scripts/ci.sh`).
+//! deterministic arrival schedule, and dispatches the overlapping
+//! invocations against one platform — then replays the *identical*
+//! schedule through the peak-provision ablation and a statically-sized
+//! FaaS baseline to reproduce the paper's Fig 22/26-style
+//! allocated-memory savings. The final `digest=` line is stable per
+//! seed and the `admission:` line is parsed by `scripts/ci.sh`.
 
+use zenix::coordinator::admission::{AdmissionPolicy, ArrivalModel};
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
 use zenix::trace::Archetype;
 
@@ -34,6 +46,11 @@ fn main() {
     let mut seed = 7u64;
     let mut arch = Archetype::Average;
     let mut exact_stats = true;
+    let mut mean_iat_ms = 400.0f64;
+    let mut admission_name = "reject".to_string();
+    let mut max_wait_ms = 60_000.0f64;
+    let mut max_depth = 64usize;
+    let mut burst: Option<f64> = None;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -56,6 +73,27 @@ fn main() {
                 seed = arg_value(&args, i, "--seed").parse().expect("--seed N");
                 i += 2;
             }
+            "--mean-iat" => {
+                mean_iat_ms = arg_value(&args, i, "--mean-iat").parse().expect("--mean-iat MS");
+                i += 2;
+            }
+            "--admission" => {
+                admission_name = arg_value(&args, i, "--admission");
+                i += 2;
+            }
+            "--max-wait-ms" => {
+                max_wait_ms =
+                    arg_value(&args, i, "--max-wait-ms").parse().expect("--max-wait-ms MS");
+                i += 2;
+            }
+            "--max-depth" => {
+                max_depth = arg_value(&args, i, "--max-depth").parse().expect("--max-depth N");
+                i += 2;
+            }
+            "--burst" => {
+                burst = Some(arg_value(&args, i, "--burst").parse().expect("--burst MULT"));
+                i += 2;
+            }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
                 arch = *Archetype::ALL
@@ -74,29 +112,59 @@ fn main() {
         }
     }
 
+    let admission = match admission_name.as_str() {
+        "reject" => AdmissionPolicy::RejectImmediately,
+        "fifo" => AdmissionPolicy::FifoQueue { max_wait_ms, max_depth },
+        "fair" => AdmissionPolicy::FairShare { max_wait_ms, max_depth },
+        other => {
+            eprintln!("unknown admission policy {other} (reject|fifo|fair)");
+            std::process::exit(2);
+        }
+    };
+    let arrivals = match burst {
+        None => ArrivalModel::Poisson,
+        Some(on_mult) => ArrivalModel::Mmpp {
+            on_mult,
+            mean_on_ms: 5_000.0,
+            mean_off_ms: 15_000.0,
+        },
+    };
+
     println!(
         "multi-tenant driver: {apps} apps, {invocations} invocations, \
-         archetype={}, seed={seed}, stats={}",
+         archetype={}, seed={seed}, mean-iat={mean_iat_ms}ms, stats={}, \
+         admission={admission_name}, arrivals={}",
         arch.name(),
-        if exact_stats { "exact" } else { "streaming (O(apps) memory)" }
+        if exact_stats { "exact" } else { "streaming (O(apps) memory)" },
+        if burst.is_some() { "mmpp" } else { "poisson" },
     );
     let mix = standard_mix(apps, arch);
-    let cfg = DriverConfig { seed, invocations, exact_stats, ..DriverConfig::default() };
+    let cfg = DriverConfig {
+        seed,
+        invocations,
+        mean_iat_ms,
+        exact_stats,
+        admission,
+        arrivals,
+        ..DriverConfig::default()
+    };
     let driver = MultiTenantDriver::new(&mix, cfg);
     let out = driver.run_comparison();
 
     println!("\n### zenix per-app (overlapping on one cluster)");
     println!(
-        "{:<22} {:>5} {:>5} {:>10} {:>10} {:>12} {:>6} {:>12}",
-        "app", "done", "fail", "mean (s)", "p95 (s)", "mem GB·s", "warm%", "growths e→l"
+        "{:<22} {:>5} {:>5} {:>5} {:>5} {:>10} {:>10} {:>12} {:>6} {:>12}",
+        "app", "done", "rej", "abrt", "t/o", "mean (s)", "p95 (s)", "mem GB·s", "warm%", "growths e→l"
     );
     for a in &out.zenix.apps {
         let total = (a.warm_hits + a.cold_starts).max(1);
         println!(
-            "{:<22} {:>5} {:>5} {:>10.2} {:>10.2} {:>12.1} {:>5.0}% {:>6.2}→{:<5.2}",
+            "{:<22} {:>5} {:>5} {:>5} {:>5} {:>10.2} {:>10.2} {:>12.1} {:>5.0}% {:>6.2}→{:<5.2}",
             a.name,
             a.completed,
-            a.failed,
+            a.rejected,
+            a.aborted,
+            a.timed_out,
             a.mean_exec_ms / 1000.0,
             a.p95_exec_ms / 1000.0,
             a.consumption.alloc_gb_s(),
@@ -126,6 +194,18 @@ fn main() {
     println!(
         "\nwarm-pool: {} hits / {} cold starts; peak overlap {} invocations",
         out.zenix.warm_hits, out.zenix.cold_starts, out.zenix.max_in_flight
+    );
+    // parsed by scripts/ci.sh: rejected= timed_out= must stay greppable
+    println!(
+        "admission: policy={admission_name} queued={} rejected={} aborted={} timed_out={} \
+         depth-hwm={} mean-delay-ms={:.1} p95-delay-ms={:.1}",
+        out.zenix.queued,
+        out.zenix.rejected,
+        out.zenix.aborted,
+        out.zenix.timed_out,
+        out.zenix.apps.iter().map(|a| a.queue_depth_hwm).max().unwrap_or(0),
+        out.zenix.mean_queue_delay_ms,
+        out.zenix.p95_queue_delay_ms,
     );
     println!(
         "alloc-savings vs faas-static: {:.1}% (same completed work; paper reports up to 90%)",

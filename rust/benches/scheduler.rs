@@ -154,6 +154,43 @@ fn main() {
         }
     }
 
+    // ---- queued 100k: admission control under MMPP bursts ---------------
+    // ISSUE 4 row: the same allocation-free loop with the FIFO deferred
+    // queue engaged under a bursty (MMPP) saturating schedule — parking,
+    // retry drains and timeout expiry all on the hot path. Queue slots
+    // recycle through a free list, so the row's cost over
+    // driver_100k_invocations is the admission retries, not allocation.
+    {
+        use zenix::coordinator::admission::{AdmissionPolicy, ArrivalModel};
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::trace::Archetype;
+        let mix = standard_mix(16, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            mean_iat_ms: 150.0,
+            arrivals: ArrivalModel::Mmpp {
+                on_mult: 6.0,
+                mean_on_ms: 30_000.0,
+                mean_off_ms: 120_000.0,
+            },
+            admission: AdmissionPolicy::FifoQueue { max_wait_ms: 60_000.0, max_depth: 64 },
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_queued", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> 100k-invocation queued driver: {:.1} µs/invocation \
+                 (FIFO deferred queue + MMPP bursts, streaming stats)",
+                r.mean_ns / 1e3 / 100_000.0,
+            );
+        }
+    }
+
     // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
     b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
     for &n in &[32usize, 256, 1024] {

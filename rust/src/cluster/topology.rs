@@ -136,6 +136,15 @@ impl Cluster {
         }
     }
 
+    /// True when some rack's availability changed since the last
+    /// [`Self::for_each_dirty_rack`] drain. The multi-tenant driver
+    /// uses this as its admission-retry trigger: an empty feed means no
+    /// capacity was freed (or claimed) since the previous attempt, so
+    /// re-probing a deferred-queue head cannot succeed and is skipped.
+    pub fn has_dirty_racks(&self) -> bool {
+        !self.dirty_racks.is_empty()
+    }
+
     /// Visit every rack whose availability changed since the last
     /// drain, handing `(rack, current availability)` to `f` (in
     /// first-dirtied order — deterministic under a deterministic

@@ -1,0 +1,977 @@
+//! Admission control & burst-arrival queueing for the multi-tenant
+//! driver.
+//!
+//! The paper's resource-centric model only pays off under contention:
+//! the 90% allocated-memory savings come from admitting bulky
+//! invocations into *shared* capacity instead of statically
+//! provisioning for peaks — which forces a decision when
+//! [`Platform::start_wave`] cannot be satisfied at arrival time.
+//! Historically the driver simply counted such arrivals as failed.
+//! This module adds the missing policy layer:
+//!
+//! - [`AdmissionPolicy`] — what to do with an arrival the cluster
+//!   cannot admit: reject it (the default, bit-identical to the old
+//!   behavior), or park it in a bounded per-tenant deferred queue and
+//!   retry when capacity frees ([`AdmissionPolicy::FifoQueue`] drains
+//!   oldest-first across the fleet, [`AdmissionPolicy::FairShare`]
+//!   drains round-robin by tenant).
+//! - [`DeferredQueues`] — the deferred-arrival queues themselves:
+//!   per-tenant FIFO chains threaded through one slot pool with an
+//!   intrusive free list (the driver's slab pattern), so steady-state
+//!   parking/draining recycles slots instead of allocating, and total
+//!   memory is O(peak queue depth), not O(arrivals).
+//! - [`ArrivalModel`] — burst shaping for [`super::driver::Schedule`]
+//!   generation: the existing deterministic Poisson process, a
+//!   two-state MMPP (Markov-modulated Poisson: ON/OFF bursts at the
+//!   same long-run offered load), and a piecewise-constant rate-replay
+//!   hook for diurnal patterns. Queueing is only observable under
+//!   bursts that transiently exceed capacity; these models produce
+//!   them deterministically per seed.
+//! - [`AdmissionOutcome`] / [`TenantAdmission`] — the per-tenant and
+//!   fleet-wide accounting the driver folds into its report:
+//!   admission-time rejections vs mid-run aborts vs queue timeouts
+//!   (three *different* failure modes the old `failed` counter
+//!   conflated), queue-depth high-water marks, and queueing-delay
+//!   moments + P² p95 via [`crate::metrics::streaming`] — all O(apps)
+//!   memory regardless of trace length.
+//!
+//! Determinism: every queue operation is driven by the driver's event
+//! loop (arrivals and heap events in (time, sequence) order), queue
+//! ordering ties break by enqueue sequence, and the burst models draw
+//! from dedicated per-app RNG streams — so runs are bit-reproducible
+//! per seed, and with the default [`AdmissionPolicy::RejectImmediately`]
+//! the driver digest is unchanged from the pre-admission-control code.
+//!
+//! [`Platform::start_wave`]: super::Platform::start_wave
+
+use crate::cluster::clock::Millis;
+use crate::metrics::streaming::{P2Quantile, StreamingMoments};
+use crate::util::rng::Rng;
+
+/// Sentinel for "no slot" in the intrusive lists.
+const NIL: usize = usize::MAX;
+
+// ---- policy --------------------------------------------------------------
+
+/// What the driver does with an arrival that fails admission
+/// (`start_wave` error on wave 0: the cluster is saturated beyond
+/// degradation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Count the arrival as rejected and move on — the pre-queueing
+    /// behavior and the default (the seeded 1k driver digest pinned in
+    /// `DRIVER_DIGEST.lock` is unchanged under this policy).
+    RejectImmediately,
+    /// Park failed arrivals in bounded per-tenant FIFO queues and
+    /// drain them oldest-first *across the fleet* (global arrival
+    /// order) when capacity frees. Entries whose wait would exceed
+    /// `max_wait_ms` time out; a tenant whose queue is at `max_depth`
+    /// has further arrivals rejected.
+    FifoQueue {
+        /// Maximum time an entry may wait before it times out (ms).
+        max_wait_ms: f64,
+        /// Maximum parked entries per tenant; beyond it arrivals are
+        /// rejected (bounded memory under sustained overload).
+        max_depth: usize,
+    },
+    /// Like [`AdmissionPolicy::FifoQueue`], but drains round-robin
+    /// *by tenant* (each successful admission advances a tenant
+    /// cursor), so one backlogged tenant cannot starve the others.
+    FairShare {
+        /// Maximum time an entry may wait before it times out (ms).
+        max_wait_ms: f64,
+        /// Maximum parked entries per tenant.
+        max_depth: usize,
+    },
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::RejectImmediately
+    }
+}
+
+impl AdmissionPolicy {
+    /// Whether this policy parks failed arrivals (false only for
+    /// [`AdmissionPolicy::RejectImmediately`]).
+    pub fn queues(&self) -> bool {
+        !matches!(self, AdmissionPolicy::RejectImmediately)
+    }
+
+    /// The policy's queue-wait bound, if it queues.
+    pub fn max_wait_ms(&self) -> Option<f64> {
+        match *self {
+            AdmissionPolicy::RejectImmediately => None,
+            AdmissionPolicy::FifoQueue { max_wait_ms, .. }
+            | AdmissionPolicy::FairShare { max_wait_ms, .. } => Some(max_wait_ms),
+        }
+    }
+
+    /// The policy's per-tenant depth bound, if it queues.
+    pub fn max_depth(&self) -> Option<usize> {
+        match *self {
+            AdmissionPolicy::RejectImmediately => None,
+            AdmissionPolicy::FifoQueue { max_depth, .. }
+            | AdmissionPolicy::FairShare { max_depth, .. } => Some(max_depth),
+        }
+    }
+}
+
+// ---- burst arrival models ------------------------------------------------
+
+/// How a tenant's arrival instants are drawn when the driver
+/// materializes a [`super::driver::Schedule`].
+///
+/// All models are normalized to the *same long-run offered load* (the
+/// per-app rate derived from `DriverConfig::mean_iat_ms`), so switching
+/// models reshapes *when* arrivals cluster without changing how much
+/// work the run carries — the right control for admission experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// The original deterministic Poisson process (default). Schedule
+    /// generation is byte-identical to the pre-burst-model code: the
+    /// same RNG stream produces the same arrival instants.
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: the instantaneous
+    /// rate alternates between an ON (burst) and an OFF (background)
+    /// state with exponentially distributed holding times. The ON rate
+    /// is `on_mult ×` the OFF rate; both are scaled so the long-run
+    /// mean rate matches the configured offered load.
+    Mmpp {
+        /// Burst intensity: ON-state rate relative to OFF (> 1 bursts;
+        /// must be > 0).
+        on_mult: f64,
+        /// Mean ON-state holding time (ms).
+        mean_on_ms: f64,
+        /// Mean OFF-state holding time (ms).
+        mean_off_ms: f64,
+    },
+    /// Diurnal rate-replay hook: a piecewise-constant rate-multiplier
+    /// pattern, each entry held for `step_ms` and cycled for the whole
+    /// schedule (e.g. 24 hourly multipliers replayed from a production
+    /// trace). Entries may be zero (silent windows); the pattern mean
+    /// must be positive. Multipliers are normalized by the pattern
+    /// mean so the long-run offered load is preserved.
+    RateReplay {
+        /// Rate multipliers, one per step, cycled.
+        pattern: &'static [f64],
+        /// Duration each pattern entry is held (ms).
+        step_ms: f64,
+    },
+}
+
+impl Default for ArrivalModel {
+    fn default() -> Self {
+        ArrivalModel::Poisson
+    }
+}
+
+impl ArrivalModel {
+    /// True for the plain Poisson process (no modulation).
+    pub fn is_poisson(&self) -> bool {
+        matches!(self, ArrivalModel::Poisson)
+    }
+}
+
+/// Inversion-method sampler for a modulated Poisson process: feed it
+/// unit-rate exponential increments and it integrates them through the
+/// piecewise-constant rate function, returning absolute arrival times.
+///
+/// Exact (no thinning/rejection, so the draw count per arrival is
+/// fixed) and deterministic: state-holding times come from a dedicated
+/// RNG so the caller's arrival/scale streams are untouched.
+#[derive(Debug, Clone)]
+pub struct RateModulator {
+    model: ArrivalModel,
+    /// Current absolute simulated time (ms).
+    t: Millis,
+    /// Current segment's absolute rate (arrivals/ms).
+    rate: f64,
+    /// Absolute time the current segment ends.
+    seg_end: Millis,
+    /// MMPP: normalized ON/OFF rates; `on` is the current state.
+    rate_on: f64,
+    rate_off: f64,
+    on: bool,
+    state_rng: Rng,
+    /// RateReplay: normalized per-step rates and the replay cursor.
+    base_rate: f64,
+    pattern_norm: f64,
+    step: usize,
+}
+
+impl RateModulator {
+    /// Build a modulator for one tenant, or `None` for plain Poisson
+    /// (the caller keeps its original, digest-pinned draw sequence).
+    /// `base_rate` is the tenant's long-run rate in arrivals/ms; `seed`
+    /// must be unique per tenant so streams do not correlate.
+    pub fn new(model: ArrivalModel, base_rate: f64, seed: u64) -> Option<Self> {
+        let base_rate = base_rate.max(1e-12);
+        match model {
+            ArrivalModel::Poisson => None,
+            ArrivalModel::Mmpp { on_mult, mean_on_ms, mean_off_ms } => {
+                assert!(on_mult > 0.0, "MMPP on_mult must be > 0");
+                assert!(
+                    mean_on_ms > 0.0 && mean_off_ms > 0.0,
+                    "MMPP holding times must be > 0"
+                );
+                let p_on = mean_on_ms / (mean_on_ms + mean_off_ms);
+                // normalize so the long-run mean rate equals base_rate
+                let norm = p_on * on_mult + (1.0 - p_on);
+                let rate_on = base_rate * on_mult / norm;
+                let rate_off = base_rate / norm;
+                let mut state_rng = Rng::new(seed);
+                // start from the stationary distribution
+                let on = state_rng.chance(p_on);
+                let hold = if on {
+                    state_rng.exponential(1.0 / mean_on_ms)
+                } else {
+                    state_rng.exponential(1.0 / mean_off_ms)
+                };
+                Some(Self {
+                    model,
+                    t: 0.0,
+                    rate: if on { rate_on } else { rate_off },
+                    seg_end: hold,
+                    rate_on,
+                    rate_off,
+                    on,
+                    state_rng,
+                    base_rate,
+                    pattern_norm: 1.0,
+                    step: 0,
+                })
+            }
+            ArrivalModel::RateReplay { pattern, step_ms } => {
+                assert!(!pattern.is_empty(), "rate-replay pattern must be non-empty");
+                assert!(step_ms > 0.0, "rate-replay step must be > 0");
+                let mean: f64 = pattern.iter().sum::<f64>() / pattern.len() as f64;
+                assert!(mean > 0.0, "rate-replay pattern mean must be > 0");
+                assert!(
+                    pattern.iter().all(|&p| p >= 0.0),
+                    "rate-replay multipliers must be >= 0"
+                );
+                Some(Self {
+                    model,
+                    t: 0.0,
+                    rate: base_rate * pattern[0] / mean,
+                    seg_end: step_ms,
+                    rate_on: 0.0,
+                    rate_off: 0.0,
+                    on: false,
+                    state_rng: Rng::new(seed),
+                    base_rate,
+                    pattern_norm: mean,
+                    step: 0,
+                })
+            }
+        }
+    }
+
+    fn next_segment(&mut self) {
+        match self.model {
+            ArrivalModel::Poisson => unreachable!("Poisson never builds a modulator"),
+            ArrivalModel::Mmpp { mean_on_ms, mean_off_ms, .. } => {
+                self.on = !self.on;
+                let (rate, mean) = if self.on {
+                    (self.rate_on, mean_on_ms)
+                } else {
+                    (self.rate_off, mean_off_ms)
+                };
+                self.rate = rate;
+                self.seg_end += self.state_rng.exponential(1.0 / mean);
+            }
+            ArrivalModel::RateReplay { pattern, step_ms } => {
+                self.step += 1;
+                self.rate =
+                    self.base_rate * pattern[self.step % pattern.len()] / self.pattern_norm;
+                self.seg_end += step_ms;
+            }
+        }
+    }
+
+    /// Advance past one unit-exponential increment `w` (one arrival's
+    /// worth of integrated rate) and return the absolute arrival time.
+    pub fn advance(&mut self, mut w: f64) -> Millis {
+        loop {
+            let span = self.seg_end - self.t;
+            let cap = self.rate * span;
+            if self.rate > 0.0 && w <= cap {
+                self.t += w / self.rate;
+                return self.t;
+            }
+            // consume this segment's integrated rate and roll over
+            // (silent segments contribute nothing and are skipped)
+            w -= cap;
+            self.t = self.seg_end;
+            self.next_segment();
+        }
+    }
+}
+
+// ---- deferred queues -----------------------------------------------------
+
+/// One parked arrival, as handed out by [`DeferredQueues::pop_next`].
+/// If the admission retry fails, hand it back via
+/// [`DeferredQueues::unpop`] — queue order and the fair-share cursor
+/// are restored exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct Parked {
+    /// Tenant (app index) the arrival belongs to.
+    pub app: usize,
+    /// Index into the generating schedule's arrival vector.
+    pub sched: usize,
+    /// Simulated time the entry was parked (ms).
+    pub enqueued_at: Millis,
+    /// Absolute timeout deadline (`enqueued_at + max_wait_ms`).
+    pub deadline: Millis,
+    /// Global enqueue sequence (FIFO order and deterministic ties).
+    pub seq: u64,
+    /// Fair-share cursor before the pop (restored by `unpop`).
+    prev_cursor: usize,
+}
+
+/// Storage slot: either a parked entry linked into its tenant's FIFO,
+/// or a free-list link. Slots recycle through the free list, so the
+/// pool is O(peak parked entries) — the driver slab pattern.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    /// Next slot in the tenant FIFO, or next free slot.
+    next: usize,
+    sched: usize,
+    enqueued_at: Millis,
+    deadline: Millis,
+    seq: u64,
+}
+
+/// Per-tenant queueing statistics (O(1) memory each: streaming moments
+/// and a P² estimator, never stored samples).
+#[derive(Debug, Clone)]
+struct TenantQueueStats {
+    /// Entries ever parked.
+    enqueued: usize,
+    /// Entries that timed out (or were expired at end of trace).
+    timed_out: usize,
+    /// Peak queue depth.
+    depth_hwm: usize,
+    /// Queueing delay of entries admitted from the queue.
+    delay: StreamingMoments,
+    delay_p95: P2Quantile,
+}
+
+impl TenantQueueStats {
+    fn new() -> Self {
+        Self {
+            enqueued: 0,
+            timed_out: 0,
+            depth_hwm: 0,
+            delay: StreamingMoments::new(),
+            delay_p95: P2Quantile::new(0.95),
+        }
+    }
+}
+
+/// Bounded per-tenant deferred-arrival queues with slab-recycled slots.
+///
+/// Invariant relied on for exact head-only timeout expiry: within one
+/// tenant's FIFO, deadlines are non-decreasing (entries are parked at
+/// non-decreasing event times with a uniform `max_wait_ms`, and
+/// [`DeferredQueues::unpop`] restores an entry to the head it came
+/// from), so the earliest deadline of a tenant is always at its head.
+#[derive(Debug)]
+pub struct DeferredQueues {
+    policy: AdmissionPolicy,
+    slots: Vec<Slot>,
+    free_head: usize,
+    /// Per-tenant FIFO chain heads/tails (`NIL` when empty).
+    head: Vec<usize>,
+    tail: Vec<usize>,
+    depth: Vec<usize>,
+    total: usize,
+    /// Fair-share round-robin cursor (next tenant to drain).
+    cursor: usize,
+    next_seq: u64,
+    stats: Vec<TenantQueueStats>,
+    fleet_delay: StreamingMoments,
+    fleet_p95: P2Quantile,
+}
+
+impl DeferredQueues {
+    /// Empty queues for `tenants` apps under `policy`.
+    pub fn new(policy: AdmissionPolicy, tenants: usize) -> Self {
+        Self {
+            policy,
+            slots: Vec::new(),
+            free_head: NIL,
+            head: vec![NIL; tenants],
+            tail: vec![NIL; tenants],
+            depth: vec![0; tenants],
+            total: 0,
+            cursor: 0,
+            next_seq: 0,
+            stats: (0..tenants).map(|_| TenantQueueStats::new()).collect(),
+            fleet_delay: StreamingMoments::new(),
+            fleet_p95: P2Quantile::new(0.95),
+        }
+    }
+
+    /// The policy these queues enforce.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// Parked entries across all tenants.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    /// True when no entry is parked.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Current queue depth of one tenant.
+    pub fn depth(&self, app: usize) -> usize {
+        self.depth[app]
+    }
+
+    /// Slots ever allocated (capacity telemetry: stays at peak depth).
+    pub fn slot_high_water(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn alloc_slot(&mut self, slot: Slot) -> usize {
+        if self.free_head != NIL {
+            let i = self.free_head;
+            self.free_head = self.slots[i].next;
+            self.slots[i] = slot;
+            i
+        } else {
+            self.slots.push(slot);
+            self.slots.len() - 1
+        }
+    }
+
+    fn link_tail(&mut self, app: usize, i: usize) {
+        self.slots[i].next = NIL;
+        if self.tail[app] == NIL {
+            self.head[app] = i;
+        } else {
+            let t = self.tail[app];
+            self.slots[t].next = i;
+        }
+        self.tail[app] = i;
+        self.depth[app] += 1;
+        self.total += 1;
+    }
+
+    fn unlink_head(&mut self, app: usize) -> Slot {
+        let i = self.head[app];
+        debug_assert_ne!(i, NIL, "unlink from empty queue");
+        let slot = self.slots[i];
+        self.head[app] = slot.next;
+        if self.head[app] == NIL {
+            self.tail[app] = NIL;
+        }
+        self.slots[i].next = self.free_head;
+        self.free_head = i;
+        self.depth[app] -= 1;
+        self.total -= 1;
+        slot
+    }
+
+    /// Park one failed arrival. Returns `false` (caller counts a
+    /// rejection) when the policy does not queue or the tenant's queue
+    /// is at `max_depth`.
+    pub fn try_park(&mut self, app: usize, sched: usize, now: Millis) -> bool {
+        let (max_wait, max_depth) = match self.policy {
+            AdmissionPolicy::RejectImmediately => return false,
+            AdmissionPolicy::FifoQueue { max_wait_ms, max_depth }
+            | AdmissionPolicy::FairShare { max_wait_ms, max_depth } => (max_wait_ms, max_depth),
+        };
+        if self.depth[app] >= max_depth {
+            return false;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let i = self.alloc_slot(Slot {
+            next: NIL,
+            sched,
+            enqueued_at: now,
+            deadline: now + max_wait,
+            seq,
+        });
+        self.link_tail(app, i);
+        let st = &mut self.stats[app];
+        st.enqueued += 1;
+        st.depth_hwm = st.depth_hwm.max(self.depth[app]);
+        true
+    }
+
+    /// Expire the single stalest entry whose deadline has passed by
+    /// `now` (globally smallest `(deadline, seq)` — ties break by
+    /// enqueue sequence). Returns its `(app, sched)` or `None` when
+    /// nothing is overdue. Call in a loop before draining.
+    pub fn pop_expired(&mut self, now: Millis) -> Option<(usize, usize)> {
+        let mut best: Option<(f64, u64, usize)> = None; // (deadline, seq, app)
+        for app in 0..self.head.len() {
+            let h = self.head[app];
+            if h == NIL {
+                continue;
+            }
+            let s = &self.slots[h];
+            if s.deadline > now {
+                continue;
+            }
+            let key = (s.deadline, s.seq, app);
+            match best {
+                Some((d, q, _)) if (d, q) <= (key.0, key.1) => {}
+                _ => best = Some(key),
+            }
+        }
+        let (_, _, app) = best?;
+        let slot = self.unlink_head(app);
+        self.stats[app].timed_out += 1;
+        Some((app, slot.sched))
+    }
+
+    /// Expire *every* remaining entry (end of trace: no further
+    /// capacity-freeing events can admit them). Counted as timeouts.
+    pub fn expire_all(&mut self) {
+        while self.pop_expired(f64::INFINITY).is_some() {}
+    }
+
+    /// Hand out the next entry to retry, in policy order:
+    /// [`AdmissionPolicy::FifoQueue`] picks the globally oldest entry
+    /// (smallest enqueue sequence); [`AdmissionPolicy::FairShare`]
+    /// picks the first non-empty tenant at/after the round-robin
+    /// cursor and advances the cursor past it. If the admission retry
+    /// fails, return the entry with [`Self::unpop`] and stop draining.
+    pub fn pop_next(&mut self) -> Option<Parked> {
+        if self.total == 0 {
+            return None;
+        }
+        let n = self.head.len();
+        let prev_cursor = self.cursor;
+        let app = match self.policy {
+            AdmissionPolicy::RejectImmediately => return None,
+            AdmissionPolicy::FifoQueue { .. } => {
+                let mut best: Option<(u64, usize)> = None;
+                for a in 0..n {
+                    let h = self.head[a];
+                    if h == NIL {
+                        continue;
+                    }
+                    let seq = self.slots[h].seq;
+                    match best {
+                        Some((bs, _)) if bs <= seq => {}
+                        _ => best = Some((seq, a)),
+                    }
+                }
+                best?.1
+            }
+            AdmissionPolicy::FairShare { .. } => {
+                let mut chosen = None;
+                for off in 0..n {
+                    let a = (self.cursor + off) % n;
+                    if self.head[a] != NIL {
+                        chosen = Some(a);
+                        break;
+                    }
+                }
+                let a = chosen?;
+                self.cursor = (a + 1) % n;
+                a
+            }
+        };
+        let slot = self.unlink_head(app);
+        Some(Parked {
+            app,
+            sched: slot.sched,
+            enqueued_at: slot.enqueued_at,
+            deadline: slot.deadline,
+            seq: slot.seq,
+            prev_cursor,
+        })
+    }
+
+    /// Return an entry whose admission retry failed to the head of its
+    /// tenant's queue, restoring FIFO order and the fair-share cursor
+    /// (the next [`Self::pop_next`] hands the same entry out again).
+    pub fn unpop(&mut self, p: Parked) {
+        self.restore_head(&p);
+        self.cursor = p.prev_cursor;
+    }
+
+    /// Like [`Self::unpop`], but leave the fair-share cursor advanced
+    /// past the entry's tenant: the failed head returns to its queue,
+    /// and the next [`Self::pop_next`] moves on to the *next* non-empty
+    /// tenant instead of retrying the same head — so one tenant whose
+    /// head does not fit cannot starve the others within a drain pass.
+    pub fn unpop_skip_tenant(&mut self, p: Parked) {
+        self.restore_head(&p);
+    }
+
+    fn restore_head(&mut self, p: &Parked) {
+        let i = self.alloc_slot(Slot {
+            next: self.head[p.app],
+            sched: p.sched,
+            enqueued_at: p.enqueued_at,
+            deadline: p.deadline,
+            seq: p.seq,
+        });
+        if self.tail[p.app] == NIL {
+            self.tail[p.app] = i;
+        }
+        self.head[p.app] = i;
+        self.depth[p.app] += 1;
+        self.total += 1;
+    }
+
+    /// Number of tenants these queues track.
+    pub fn tenants(&self) -> usize {
+        self.head.len()
+    }
+
+    /// Number of tenants with at least one parked entry (O(tenants)).
+    /// Bounds a fair-share drain pass: capacity is monotone within a
+    /// pass (failed retries unwind fully), so one failed probe per
+    /// non-empty tenant proves no further progress is possible.
+    pub fn non_empty_tenants(&self) -> usize {
+        self.head.iter().filter(|&&h| h != NIL).count()
+    }
+
+    /// Record the queueing delay of an entry successfully admitted
+    /// from the queue.
+    pub fn record_admitted(&mut self, app: usize, wait_ms: f64) {
+        let st = &mut self.stats[app];
+        st.delay.push(wait_ms);
+        st.delay_p95.push(wait_ms);
+        self.fleet_delay.push(wait_ms);
+        self.fleet_p95.push(wait_ms);
+    }
+
+    /// Fold the queueing statistics together with the driver's
+    /// admission-time rejection and mid-run abort counts into the
+    /// per-tenant + fleet outcome the report consumes.
+    pub fn finish(&self, rejected: &[usize], aborted: &[usize]) -> AdmissionOutcome {
+        let per_tenant: Vec<TenantAdmission> = (0..self.stats.len())
+            .map(|a| {
+                let st = &self.stats[a];
+                TenantAdmission {
+                    rejected: rejected[a],
+                    aborted: aborted[a],
+                    timed_out: st.timed_out,
+                    queued: st.enqueued,
+                    drained: st.delay.count() as usize,
+                    queue_depth_hwm: st.depth_hwm,
+                    mean_queue_delay_ms: st.delay.mean(),
+                    p95_queue_delay_ms: st.delay_p95.value(),
+                }
+            })
+            .collect();
+        let mut fleet = TenantAdmission {
+            mean_queue_delay_ms: self.fleet_delay.mean(),
+            p95_queue_delay_ms: self.fleet_p95.value(),
+            ..TenantAdmission::default()
+        };
+        for t in &per_tenant {
+            fleet.rejected += t.rejected;
+            fleet.aborted += t.aborted;
+            fleet.timed_out += t.timed_out;
+            fleet.queued += t.queued;
+            fleet.drained += t.drained;
+            fleet.queue_depth_hwm = fleet.queue_depth_hwm.max(t.queue_depth_hwm);
+        }
+        AdmissionOutcome { per_tenant, fleet }
+    }
+}
+
+/// One tenant's (or the fleet's) admission/queueing outcome.
+#[derive(Debug, Clone, Default)]
+pub struct TenantAdmission {
+    /// Arrivals rejected at admission time (saturated cluster with
+    /// [`AdmissionPolicy::RejectImmediately`], or a full queue).
+    pub rejected: usize,
+    /// Invocations admitted but aborted mid-run (a later wave could
+    /// not allocate even degraded).
+    pub aborted: usize,
+    /// Parked entries that timed out before capacity freed (includes
+    /// entries expired when the trace ended).
+    pub timed_out: usize,
+    /// Entries parked in the deferred queue at least once.
+    pub queued: usize,
+    /// Parked entries later admitted successfully.
+    pub drained: usize,
+    /// Peak deferred-queue depth.
+    pub queue_depth_hwm: usize,
+    /// Mean queueing delay of drained entries (ms).
+    pub mean_queue_delay_ms: f64,
+    /// P² p95 queueing delay of drained entries (ms).
+    pub p95_queue_delay_ms: f64,
+}
+
+impl TenantAdmission {
+    /// Total arrivals that never completed for admission-side reasons.
+    pub fn failed(&self) -> usize {
+        self.rejected + self.aborted + self.timed_out
+    }
+}
+
+/// Per-tenant + fleet admission accounting for one driver run.
+#[derive(Debug, Clone)]
+pub struct AdmissionOutcome {
+    /// Indexed by app.
+    pub per_tenant: Vec<TenantAdmission>,
+    /// Fleet-wide sums (high-water mark is the max across tenants;
+    /// delay moments aggregate every drained entry).
+    pub fleet: TenantAdmission,
+}
+
+impl AdmissionOutcome {
+    /// All-zero outcome for paths that do not model admission (the
+    /// closed-form FaaS baseline).
+    pub fn zeros(tenants: usize) -> Self {
+        Self {
+            per_tenant: vec![TenantAdmission::default(); tenants],
+            fleet: TenantAdmission::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fifo(max_wait_ms: f64, max_depth: usize) -> AdmissionPolicy {
+        AdmissionPolicy::FifoQueue { max_wait_ms, max_depth }
+    }
+
+    fn fair(max_wait_ms: f64, max_depth: usize) -> AdmissionPolicy {
+        AdmissionPolicy::FairShare { max_wait_ms, max_depth }
+    }
+
+    #[test]
+    fn reject_policy_never_parks() {
+        let mut q = DeferredQueues::new(AdmissionPolicy::RejectImmediately, 2);
+        assert!(!q.try_park(0, 0, 0.0));
+        assert!(q.is_empty());
+        assert!(q.pop_next().is_none());
+    }
+
+    #[test]
+    fn fifo_drains_in_global_arrival_order() {
+        let mut q = DeferredQueues::new(fifo(1e9, 16), 3);
+        // interleave tenants; global FIFO must follow enqueue sequence
+        assert!(q.try_park(2, 100, 0.0));
+        assert!(q.try_park(0, 101, 1.0));
+        assert!(q.try_park(2, 102, 2.0));
+        assert!(q.try_park(1, 103, 3.0));
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop_next().map(|p| p.sched)).collect();
+        assert_eq!(order, vec![100, 101, 102, 103]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_share_round_robins_by_tenant() {
+        let mut q = DeferredQueues::new(fair(1e9, 16), 3);
+        for (app, sched) in [(0, 10), (0, 11), (0, 12), (1, 20), (2, 30)] {
+            assert!(q.try_park(app, sched, 0.0));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop_next().map(|p| p.sched)).collect();
+        // cursor starts at tenant 0: 0,1,2,0,0
+        assert_eq!(order, vec![10, 20, 30, 11, 12]);
+    }
+
+    #[test]
+    fn unpop_restores_order_and_cursor() {
+        let mut q = DeferredQueues::new(fair(1e9, 16), 2);
+        assert!(q.try_park(0, 1, 0.0));
+        assert!(q.try_park(1, 2, 1.0));
+        let p = q.pop_next().expect("entry");
+        assert_eq!(p.sched, 1);
+        q.unpop(p);
+        // cursor restored: the same entry comes out first again
+        let again = q.pop_next().expect("entry");
+        assert_eq!(again.sched, 1);
+        assert_eq!(q.pop_next().expect("entry").sched, 2);
+    }
+
+    #[test]
+    fn unpop_skip_tenant_advances_past_a_blocked_head() {
+        let mut q = DeferredQueues::new(fair(1e9, 16), 3);
+        assert!(q.try_park(0, 10, 0.0)); // pretend tenant 0's head is unadmittable
+        assert!(q.try_park(1, 20, 0.0));
+        assert!(q.try_park(2, 30, 0.0));
+        let blocked = q.pop_next().expect("tenant 0 first");
+        assert_eq!(blocked.app, 0);
+        q.unpop_skip_tenant(blocked);
+        // cursor stays advanced: the other tenants drain before 0 retries
+        assert_eq!(q.pop_next().expect("next tenant").sched, 20);
+        assert_eq!(q.pop_next().expect("next tenant").sched, 30);
+        assert_eq!(q.pop_next().expect("back to 0").sched, 10);
+        assert!(q.pop_next().is_none());
+    }
+
+    #[test]
+    fn timeouts_expire_in_deadline_then_seq_order() {
+        let mut q = DeferredQueues::new(fifo(10.0, 16), 2);
+        // same deadline (parked at the same instant): ties break by seq
+        assert!(q.try_park(1, 7, 0.0));
+        assert!(q.try_park(0, 8, 0.0));
+        assert!(q.try_park(0, 9, 5.0)); // deadline 15
+        assert!(q.pop_expired(9.0).is_none(), "nothing overdue yet");
+        assert_eq!(q.pop_expired(10.0), Some((1, 7)));
+        assert_eq!(q.pop_expired(10.0), Some((0, 8)));
+        assert!(q.pop_expired(10.0).is_none(), "deadline 15 still live");
+        assert_eq!(q.pop_expired(20.0), Some((0, 9)));
+        let out = q.finish(&[0, 0], &[0, 0]);
+        assert_eq!(out.per_tenant[0].timed_out, 2);
+        assert_eq!(out.per_tenant[1].timed_out, 1);
+        assert_eq!(out.fleet.timed_out, 3);
+    }
+
+    #[test]
+    fn depth_bound_rejects_and_tracks_high_water() {
+        let mut q = DeferredQueues::new(fifo(1e9, 2), 1);
+        assert!(q.try_park(0, 0, 0.0));
+        assert!(q.try_park(0, 1, 0.0));
+        assert!(!q.try_park(0, 2, 0.0), "queue full");
+        assert_eq!(q.depth(0), 2);
+        let out = q.finish(&[1], &[0]);
+        assert_eq!(out.per_tenant[0].queue_depth_hwm, 2);
+        assert_eq!(out.per_tenant[0].queued, 2);
+        assert_eq!(out.per_tenant[0].rejected, 1);
+    }
+
+    #[test]
+    fn slots_recycle_through_the_free_list() {
+        let mut q = DeferredQueues::new(fifo(1e9, 8), 1);
+        for round in 0..5 {
+            assert!(q.try_park(0, round * 2, round as f64));
+            assert!(q.try_park(0, round * 2 + 1, round as f64));
+            assert!(q.pop_next().is_some());
+            assert!(q.pop_next().is_some());
+        }
+        assert_eq!(q.slot_high_water(), 2, "pool stays at peak depth");
+    }
+
+    #[test]
+    fn delay_stats_flow_into_outcome() {
+        let mut q = DeferredQueues::new(fifo(1e9, 8), 2);
+        assert!(q.try_park(0, 0, 0.0));
+        let p = q.pop_next().expect("entry");
+        q.record_admitted(p.app, 40.0);
+        q.record_admitted(0, 60.0);
+        let out = q.finish(&[0, 0], &[0, 0]);
+        assert_eq!(out.per_tenant[0].drained, 2);
+        assert!((out.per_tenant[0].mean_queue_delay_ms - 50.0).abs() < 1e-9);
+        assert!(out.per_tenant[0].p95_queue_delay_ms >= 40.0);
+        assert!((out.fleet.mean_queue_delay_ms - 50.0).abs() < 1e-9);
+        assert_eq!(out.fleet.drained, 2);
+    }
+
+    #[test]
+    fn expire_all_drains_everything_as_timeouts() {
+        let mut q = DeferredQueues::new(fair(1e9, 8), 3);
+        for app in 0..3 {
+            assert!(q.try_park(app, app, 0.0));
+        }
+        q.expire_all();
+        assert!(q.is_empty());
+        let out = q.finish(&[0; 3], &[0; 3]);
+        assert_eq!(out.fleet.timed_out, 3);
+    }
+
+    // ---- burst models ---------------------------------------------------
+
+    #[test]
+    fn poisson_builds_no_modulator() {
+        assert!(RateModulator::new(ArrivalModel::Poisson, 0.01, 7).is_none());
+        assert!(ArrivalModel::default().is_poisson());
+    }
+
+    #[test]
+    fn mmpp_is_deterministic_and_monotone() {
+        let model =
+            ArrivalModel::Mmpp { on_mult: 8.0, mean_on_ms: 500.0, mean_off_ms: 2000.0 };
+        let run = |seed: u64| -> Vec<f64> {
+            let mut m = RateModulator::new(model, 1.0 / 200.0, seed).unwrap();
+            let mut rng = Rng::new(42);
+            (0..500).map(|_| m.advance(rng.exponential(1.0))).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "deterministic per seed");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrival times monotone");
+        let c = run(8);
+        assert_ne!(a, c, "state seed must matter");
+    }
+
+    #[test]
+    fn mmpp_preserves_offered_load_but_bursts() {
+        let rate = 1.0 / 100.0; // one arrival per 100 ms
+        let n = 20_000usize;
+        let gaps = |model: ArrivalModel| -> Vec<f64> {
+            let mut rng = Rng::new(3);
+            let mut prev = 0.0;
+            let mut out = Vec::with_capacity(n);
+            match RateModulator::new(model, rate, 11) {
+                Some(mut m) => {
+                    for _ in 0..n {
+                        let t = m.advance(rng.exponential(1.0));
+                        out.push(t - prev);
+                        prev = t;
+                    }
+                }
+                None => {
+                    for _ in 0..n {
+                        out.push(rng.exponential(rate));
+                    }
+                }
+            }
+            out
+        };
+        let poisson = gaps(ArrivalModel::Poisson);
+        let mmpp = gaps(ArrivalModel::Mmpp {
+            on_mult: 10.0,
+            mean_on_ms: 2_000.0,
+            mean_off_ms: 8_000.0,
+        });
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+        let cv = |xs: &[f64]| {
+            let m = mean(xs);
+            let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+            var.sqrt() / m
+        };
+        // long-run offered load within 10% of the Poisson baseline
+        assert!(
+            (mean(&mmpp) - mean(&poisson)).abs() < 0.10 * mean(&poisson),
+            "mmpp mean gap {} vs poisson {}",
+            mean(&mmpp),
+            mean(&poisson)
+        );
+        // but markedly burstier: inter-arrival CV well above exponential's 1
+        assert!(cv(&poisson) < 1.15, "poisson CV {}", cv(&poisson));
+        assert!(cv(&mmpp) > 1.3, "mmpp CV {} not bursty", cv(&mmpp));
+    }
+
+    #[test]
+    fn rate_replay_respects_silent_windows() {
+        // pattern [0, 1]: arrivals may only land in odd steps
+        static PATTERN: [f64; 2] = [0.0, 1.0];
+        let step = 1000.0;
+        let mut m = RateModulator::new(
+            ArrivalModel::RateReplay { pattern: &PATTERN, step_ms: step },
+            1.0 / 500.0,
+            5,
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..300 {
+            let t = m.advance(rng.exponential(1.0));
+            let step_idx = (t / step).floor() as u64;
+            assert_eq!(step_idx % 2, 1, "arrival at {t} fell in a silent window");
+        }
+    }
+}

@@ -76,8 +76,9 @@ pub struct ZenixConfig {
     pub history_sizing: bool,
     /// RDMA vs TCP stacks.
     pub rdma: bool,
-    /// Fixed sizing fallback (the paper's 256 MB / 64 MB defaults).
+    /// Fixed initial-size fallback (the paper's 256 MB default).
     pub fixed_init_mb: f64,
+    /// Fixed growth-step fallback (the paper's 64 MB default).
     pub fixed_step_mb: f64,
     /// Provision every component at its historical peak (Fig 22 "peak").
     pub peak_provision: bool,
@@ -139,14 +140,22 @@ impl ZenixConfig {
 
 /// The Zenix platform instance.
 pub struct Platform {
+    /// The shared cluster substrate every invocation allocates from.
     pub cluster: Cluster,
+    /// Feature switches (ablation axes).
     pub config: ZenixConfig,
+    /// Decaying-weight resource profiles (§5.2.3 sizing inputs).
     pub history: ProfileStore,
+    /// Startup-latency model (paper-calibrated).
     pub startup: StartupModel,
+    /// Network cost model (TCP vs RDMA).
     pub net: NetModel,
+    /// Control-plane latency model.
     pub control: ControlPlane,
+    /// The global (cluster-level) scheduler.
     pub global: GlobalScheduler,
     racks: Vec<RackScheduler>,
+    /// Reliable message log for graph-cut recovery.
     pub msglog: MessageLog,
     now: Millis,
     next_invocation: u64,
@@ -356,6 +365,7 @@ impl OngoingInvocation {
         self.wave_start + self.wave_dur
     }
 
+    /// Platform-assigned invocation id.
     pub fn inv_id(&self) -> u64 {
         self.inv_id
     }
@@ -411,6 +421,7 @@ impl OngoingInvocation {
 }
 
 impl Platform {
+    /// Fresh platform over a new cluster of the given shape.
     pub fn new(spec: ClusterSpec, config: ZenixConfig) -> Self {
         let cluster = Cluster::new(spec);
         let racks = cluster
@@ -448,6 +459,7 @@ impl Platform {
         Self::new(ClusterSpec::paper_testbed(), ZenixConfig::default())
     }
 
+    /// Current simulated time (single-tenant clock).
     pub fn now(&self) -> Millis {
         self.now
     }

@@ -15,18 +15,33 @@
 //! - [`driver`] — multi-tenant trace-driven workload driver: overlapping
 //!   invocations from N apps interleaved on one shared platform over
 //!   simulated time (the Fig 22/26/29 load scenario).
+//! - [`admission`] — admission control for the driver: deferred-arrival
+//!   queueing policies, burst arrival models (MMPP / rate replay), and
+//!   the rejected/aborted/timed-out accounting split.
 
+// Modules below that have not yet had their rustdoc sweep are shielded
+// from the crate-level `missing_docs` lint; drop the `allow` when
+// sweeping one.
+#[allow(missing_docs)]
 pub mod adjust;
+pub mod admission;
 pub mod driver;
 pub mod exec;
+#[allow(missing_docs)]
 pub mod failure;
+#[allow(missing_docs)]
 pub mod graph;
+#[allow(missing_docs)]
 pub mod history;
+#[allow(missing_docs)]
 pub mod msglog;
+#[allow(missing_docs)]
 pub mod placement;
 pub mod scheduler;
+#[allow(missing_docs)]
 pub mod sync;
 
+pub use admission::{AdmissionOutcome, AdmissionPolicy, ArrivalModel, DeferredQueues};
 pub use driver::{DriverConfig, DriverReport, MultiTenantDriver, Schedule, TenantApp};
 pub use exec::{OngoingInvocation, Platform, ZenixConfig};
 pub use graph::{NodeId, NodeKind, ResourceGraph};

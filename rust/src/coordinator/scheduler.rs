@@ -63,6 +63,8 @@ pub struct GlobalScheduler {
 }
 
 impl GlobalScheduler {
+    /// Scheduler over `racks` racks (availability seeded by the first
+    /// dirty-rack drain).
     pub fn new(racks: usize) -> Self {
         Self {
             rack_avail: vec![Resources::ZERO; racks],
@@ -185,6 +187,7 @@ impl GlobalScheduler {
 /// One rack's scheduler: exact server accounting within the rack.
 #[derive(Debug)]
 pub struct RackScheduler {
+    /// The rack this scheduler owns.
     pub rack: RackId,
     servers: Vec<ServerId>,
 }
@@ -199,10 +202,12 @@ pub enum Allocation {
 }
 
 impl RackScheduler {
+    /// Scheduler for one rack of `cluster`.
     pub fn new(cluster: &Cluster, rack: RackId) -> Self {
         Self { rack, servers: cluster.rack_servers(rack).collect() }
     }
 
+    /// Server ids this rack owns.
     pub fn servers(&self) -> &[ServerId] {
         &self.servers
     }

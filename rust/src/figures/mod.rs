@@ -10,6 +10,7 @@
 //! Used by `rust/benches/paper_figures.rs` (cargo bench) and
 //! `examples/reproduce_all.rs` (writes results/*.txt).
 
+pub mod admission_figs;
 pub mod lr_figs;
 pub mod platform_figs;
 pub mod tpcds_figs;

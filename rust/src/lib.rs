@@ -1,8 +1,9 @@
 //! # Zenix — resource-centric serverless for bulky applications
 //!
-//! Reproduction of the paper's platform (see `DESIGN.md`, which also
-//! records the Zenix/BulkX naming note). The crate is organised in the
-//! layers the paper describes:
+//! Reproduction of the paper's platform (see the top-level `README.md`
+//! and `docs/ARCHITECTURE.md` for the layer map, determinism contract
+//! and offline-toolchain story). The crate is organised in the layers
+//! the paper describes:
 //!
 //! - [`cluster`] — the cluster substrate: servers, racks, containers, a
 //!   discrete-event virtual clock and resource accounting.
@@ -17,23 +18,37 @@
 //! - [`coordinator`] — the paper's contribution: resource-graph IR,
 //!   two-level scheduler, locality placement, adaptive materialization,
 //!   autoscaling, history-based sizing, proactive startup, failure
-//!   recovery.
+//!   recovery, multi-tenant driving and admission control.
 //! - [`baselines`] — every system the paper compares against.
 //! - [`runtime`] — PJRT execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text; python never on request path).
 //! - [`metrics`] — GB·s / vCPU·s accounting and figure-row printers.
 //! - [`trace`] — Azure-archetype invocation/usage trace generators.
+//!
+//! Public items in the documented core modules must carry rustdoc
+//! (`missing_docs` warns at the crate level and `scripts/ci.sh` denies
+//! rustdoc warnings); modules still awaiting their sweep carry a local
+//! `#[allow(missing_docs)]` at their declaration.
+#![warn(missing_docs)]
 
+#[allow(missing_docs)]
 pub mod apps;
+#[allow(missing_docs)]
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod figures;
+#[allow(missing_docs)]
 pub mod memory;
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod net;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod trace;
+#[allow(missing_docs)]
 pub mod util;
 
 /// Convenient result alias used across the crate.

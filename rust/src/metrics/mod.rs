@@ -32,10 +32,12 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Sum of all components (work, not critical path).
     pub fn total(&self) -> Millis {
         self.compute_ms + self.startup_ms + self.io_ms + self.serialize_ms + self.sched_ms
     }
 
+    /// Component-wise `self + o`.
     pub fn plus(&self, o: &Breakdown) -> Breakdown {
         Breakdown {
             compute_ms: self.compute_ms + o.compute_ms,
@@ -55,7 +57,9 @@ impl Breakdown {
 /// relabel rows (figures, examples) may still assign owned strings.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
+    /// Label of the system under test.
     pub system: Cow<'static, str>,
+    /// Label of the workload/program that ran.
     pub workload: Cow<'static, str>,
     /// End-to-end makespan (critical path), ms.
     pub exec_ms: Millis,
@@ -66,8 +70,9 @@ pub struct RunReport {
     pub consumption: Consumption,
     /// Fraction of components co-located on their data's server.
     pub local_fraction: f64,
-    /// Peak concurrent resource footprint.
+    /// Peak concurrent vCPU footprint.
     pub peak_cpu: f64,
+    /// Peak concurrent memory footprint (MB).
     pub peak_mem_mb: f64,
 }
 

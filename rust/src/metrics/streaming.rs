@@ -35,10 +35,12 @@ pub struct StreamingMoments {
 }
 
 impl StreamingMoments {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation in (O(1)).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -56,10 +58,12 @@ impl StreamingMoments {
         self.m2 += delta * (x - self.mean_w);
     }
 
+    /// Observations seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Ordered sum of all observations.
     pub fn sum(&self) -> f64 {
         self.sum
     }
@@ -73,6 +77,7 @@ impl StreamingMoments {
         }
     }
 
+    /// Smallest observation; 0.0 when empty.
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -81,6 +86,7 @@ impl StreamingMoments {
         }
     }
 
+    /// Largest observation; 0.0 when empty.
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -125,10 +131,12 @@ impl P2Quantile {
         Self { p, n: 0, q: [0.0; 5], pos: [1.0, 2.0, 3.0, 4.0, 5.0], init: [0.0; 5] }
     }
 
+    /// Observations seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Fold one observation in (O(1), five-marker update).
     pub fn push(&mut self, x: f64) {
         if self.n < 5 {
             self.init[self.n as usize] = x;

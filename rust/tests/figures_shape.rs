@@ -3,7 +3,7 @@
 //! crossovers fall — asserted as tests (DESIGN.md §5).
 
 use zenix::apps::lr;
-use zenix::figures::{lr_figs, platform_figs, tpcds_figs, video_figs};
+use zenix::figures::{admission_figs, lr_figs, platform_figs, tpcds_figs, video_figs};
 
 // ---- §6.1.1 TPC-DS ------------------------------------------------------
 
@@ -279,4 +279,58 @@ fn fig30_zenix_higher_utilization_and_throughput() {
     let ow = rows.iter().find(|r| r.0 == "openwhisk").unwrap();
     assert!(zenix.2 > ow.2, "utilization {} vs {}", zenix.2, ow.2);
     assert!(zenix.1 < ow.1, "makespan {} vs {}", zenix.1, ow.1);
+}
+
+// ---- admission control / offered-load sweep -----------------------------
+
+#[test]
+fn admission_sweep_fifo_dominates_reject_under_saturation() {
+    // Two offered-load points (light and saturating) under MMPP bursts;
+    // both policies replay the identical schedule per point.
+    let rows = admission_figs::fig_admission_offered_load(10, 240, 7, &[240.0, 40.0]);
+    assert_eq!(rows.len(), 4);
+    let cell = |iat: f64, policy: &str| {
+        rows.iter()
+            .find(|r| r.mean_iat_ms == iat && r.policy == policy)
+            .unwrap_or_else(|| panic!("missing cell {iat}/{policy}"))
+            .clone()
+    };
+    for &iat in &[240.0, 40.0] {
+        let rej = cell(iat, "reject");
+        let fifo = cell(iat, "fifo");
+        // reject never queues and reports no queueing delay
+        assert_eq!(rej.queued, 0);
+        assert_eq!(rej.timed_out, 0);
+        assert_eq!(rej.mean_queue_delay_ms, 0.0);
+        // queueing never fails more arrivals than rejecting does
+        assert!(
+            fifo.rejected + fifo.timed_out <= rej.rejected,
+            "iat {iat}: fifo {}+{} vs reject {}",
+            fifo.rejected,
+            fifo.timed_out,
+            rej.rejected
+        );
+        assert!(fifo.completed + fifo.aborted >= rej.completed, "iat {iat}");
+    }
+    // the saturated point must actually exercise admission…
+    let rej_hot = cell(40.0, "reject");
+    let fifo_hot = cell(40.0, "fifo");
+    assert!(rej_hot.rejected > 0, "saturated sweep point must reject");
+    assert!(fifo_hot.queued > 0, "saturated sweep point must park arrivals");
+    // …and queueing pressure (delay experienced) grows with offered load
+    let fifo_cold = cell(240.0, "fifo");
+    assert!(
+        fifo_hot.queued >= fifo_cold.queued,
+        "parked entries should not shrink as load rises: {} vs {}",
+        fifo_hot.queued,
+        fifo_cold.queued
+    );
+    if fifo_hot.queued > fifo_hot.timed_out {
+        assert!(fifo_hot.p95_queue_delay_ms >= fifo_hot.mean_queue_delay_ms * 0.5);
+    }
+    // the renderer lists every cell (rows start the line with the
+    // policy name; the header's "rejected" column must not count)
+    let text = admission_figs::render_admission("sweep", &rows);
+    assert_eq!(text.matches("\nreject ").count(), 2, "render rows:\n{text}");
+    assert_eq!(text.matches("\nfifo ").count(), 2, "render rows:\n{text}");
 }

@@ -378,3 +378,66 @@ fn random_dag_waves_respect_triggers() {
         },
     );
 }
+
+/// Queueing is work-conserving: over random saturating mixes, the
+/// queued replay (unbounded wait/depth) completes every invocation the
+/// unqueued replay completes — the only tolerated shortfall is an
+/// invocation the queued run *admitted* but aborted mid-run (shifted
+/// admission times change mid-run contention). Queueing may only delay
+/// work or (at trace end) time it out, never silently lose it.
+#[test]
+fn deferred_queueing_never_loses_completed_work() {
+    use zenix::coordinator::admission::AdmissionPolicy;
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::trace::Archetype;
+
+    forall(
+        8,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(4, 8),          // apps
+                rng.range(80, 200),       // invocations
+                rng.uniform(40.0, 160.0), // fleet mean IAT (saturating band)
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms)| {
+            let mix = standard_mix(apps, Archetype::Average);
+            let reject_cfg = DriverConfig {
+                seed,
+                invocations,
+                mean_iat_ms,
+                ..DriverConfig::default()
+            };
+            let fifo_cfg = DriverConfig {
+                admission: AdmissionPolicy::FifoQueue {
+                    max_wait_ms: f64::INFINITY,
+                    max_depth: usize::MAX,
+                },
+                ..reject_cfg
+            };
+            let driver = MultiTenantDriver::new(&mix, reject_cfg);
+            let schedule = driver.schedule();
+            let reject = driver.run_zenix(&schedule);
+            let fifo = MultiTenantDriver::new(&mix, fifo_cfg).run_zenix(&schedule);
+
+            // conservation: every arrival ends in exactly one bucket
+            let n = invocations;
+            if reject.completed + reject.rejected + reject.aborted + reject.timed_out != n {
+                return false;
+            }
+            if fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out != n {
+                return false;
+            }
+            // unbounded queue: nothing is rejected for depth
+            if fifo.rejected != 0 {
+                return false;
+            }
+            // subset: reject-completed ⊆ fifo-completed ∪ fifo-aborted
+            let violations = (0..n)
+                .filter(|&i| reject.completed_mask.get(i) && !fifo.completed_mask.get(i))
+                .count();
+            violations <= fifo.aborted && fifo.completed + fifo.aborted >= reject.completed
+        },
+    );
+}
