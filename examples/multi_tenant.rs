@@ -9,14 +9,26 @@
 //!
 //! Admission control & bursts:
 //!
-//! - `--admission reject|fifo|fair` picks the policy for arrivals the
-//!   saturated cluster cannot admit (default `reject`, the
-//!   digest-pinned behavior). `fifo`/`fair` park them in bounded
-//!   per-tenant deferred queues (`--max-wait-ms`, `--max-depth`) and
-//!   drain on capacity-freeing events.
+//! - `--admission reject|fifo|fair|wfair|deadline` picks the policy for
+//!   arrivals the saturated cluster cannot admit (default `reject`,
+//!   the digest-pinned behavior). The queueing policies park them in
+//!   bounded per-tenant deferred queues (`--max-wait-ms`, `--max-depth`;
+//!   for `deadline` the wait bound is the per-tenant SLO and eviction
+//!   is earliest-deadline-first; `wfair` drains deficit-round-robin by
+//!   `TenantApp::weight`) and drain on capacity-freeing events.
 //! - `--burst MULT` switches the Poisson arrivals to a two-state MMPP
 //!   whose ON-state rate is MULT× the OFF rate (same offered load,
 //!   bursty), `--mean-iat MS` scales the offered load itself.
+//!
+//! Fairness & sharding:
+//!
+//! - `--skew MULT` multiplies tenant 0's arrival weight — the
+//!   asymmetric-overload knob behind the `jain:` line `scripts/ci.sh`
+//!   greps (Jain's index over per-tenant completions and
+//!   goodput/demand ratios).
+//! - `--racks R` reshards the cluster into R racks at fixed total
+//!   capacity (the multi-rack sharding axis; the `routing:` line shows
+//!   how the global scheduler's best-rack cache held up).
 //!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
@@ -51,6 +63,8 @@ fn main() {
     let mut max_wait_ms = 60_000.0f64;
     let mut max_depth = 64usize;
     let mut burst: Option<f64> = None;
+    let mut skew = 1.0f64;
+    let mut racks = 1usize;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -94,6 +108,14 @@ fn main() {
                 burst = Some(arg_value(&args, i, "--burst").parse().expect("--burst MULT"));
                 i += 2;
             }
+            "--skew" => {
+                skew = arg_value(&args, i, "--skew").parse().expect("--skew MULT");
+                i += 2;
+            }
+            "--racks" => {
+                racks = arg_value(&args, i, "--racks").parse().expect("--racks R");
+                i += 2;
+            }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
                 arch = *Archetype::ALL
@@ -116,8 +138,10 @@ fn main() {
         "reject" => AdmissionPolicy::RejectImmediately,
         "fifo" => AdmissionPolicy::FifoQueue { max_wait_ms, max_depth },
         "fair" => AdmissionPolicy::FairShare { max_wait_ms, max_depth },
+        "wfair" => AdmissionPolicy::WeightedFairShare { max_wait_ms, max_depth },
+        "deadline" => AdmissionPolicy::Deadline { deadline_ms: max_wait_ms, max_depth },
         other => {
-            eprintln!("unknown admission policy {other} (reject|fifo|fair)");
+            eprintln!("unknown admission policy {other} (reject|fifo|fair|wfair|deadline)");
             std::process::exit(2);
         }
     };
@@ -133,12 +157,15 @@ fn main() {
     println!(
         "multi-tenant driver: {apps} apps, {invocations} invocations, \
          archetype={}, seed={seed}, mean-iat={mean_iat_ms}ms, stats={}, \
-         admission={admission_name}, arrivals={}",
+         admission={admission_name}, arrivals={}, skew={skew}, racks={racks}",
         arch.name(),
         if exact_stats { "exact" } else { "streaming (O(apps) memory)" },
         if burst.is_some() { "mmpp" } else { "poisson" },
     );
-    let mix = standard_mix(apps, arch);
+    let mut mix = standard_mix(apps, arch);
+    if skew != 1.0 && !mix.is_empty() {
+        mix[0].weight *= skew;
+    }
     let cfg = DriverConfig {
         seed,
         invocations,
@@ -147,7 +174,8 @@ fn main() {
         admission,
         arrivals,
         ..DriverConfig::default()
-    };
+    }
+    .with_racks(racks);
     let driver = MultiTenantDriver::new(&mix, cfg);
     let out = driver.run_comparison();
 
@@ -206,6 +234,18 @@ fn main() {
         out.zenix.apps.iter().map(|a| a.queue_depth_hwm).max().unwrap_or(0),
         out.zenix.mean_queue_delay_ms,
         out.zenix.p95_queue_delay_ms,
+    );
+    // parsed by scripts/ci.sh: the fairness smoke compares completion=
+    // across admission policies under a skewed overload
+    println!(
+        "jain: completion={:.4} goodput={:.4} (1.0 = perfectly fair, {:.3} = one tenant monopolizes)",
+        out.zenix.jain_completion,
+        out.zenix.jain_goodput,
+        1.0 / apps.max(1) as f64,
+    );
+    println!(
+        "routing: racks={racks} fast-hits={} scans={} (global-scheduler best-rack cache)",
+        out.zenix.route_fast_hits, out.zenix.route_scans,
     );
     println!(
         "alloc-savings vs faas-static: {:.1}% (same completed work; paper reports up to 90%)",

@@ -191,6 +191,37 @@ fn main() {
         }
     }
 
+    // ---- multi-rack 100k: sharding at fixed total capacity ---------------
+    // ISSUE 5 row: the identical 100k replay with the paper testbed's 8
+    // servers resharded into 8 racks of 1. Exercises the two-level
+    // scheduler at real scale — global best-rack cache routing, the
+    // dirty-rack incremental feed fanning out across 8 racks, per-rack
+    // placement indexing and inter-rack spill. scripts/ci.sh gates the
+    // per-invocation cost at ≤1.5x the single-rack driver_100k row.
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::trace::Archetype;
+        let mix = standard_mix(16, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            ..DriverConfig::default()
+        }
+        .with_racks(8);
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_multirack", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> 100k-invocation 8-rack driver: {:.1} µs/invocation \
+                 (8 racks × 1 server, fixed total capacity; best-rack cache + dirty-rack feed)",
+                r.mean_ns / 1e3 / 100_000.0,
+            );
+        }
+    }
+
     // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
     b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
     for &n in &[32usize, 256, 1024] {

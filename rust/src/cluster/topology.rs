@@ -52,6 +52,27 @@ impl ClusterSpec {
     pub fn multi_rack(racks: usize, servers_per_rack: usize) -> Self {
         Self { racks, servers_per_rack, ..Self::default() }
     }
+
+    /// The same fleet resharded into `racks` racks at *fixed total
+    /// capacity*: the total server count and per-server resources are
+    /// unchanged, only the rack fan-out moves. The axis of the driver's
+    /// multi-rack sharding sweeps (`racks` must divide the current
+    /// total server count).
+    pub fn resharded(self, racks: usize) -> Self {
+        let total = self.racks * self.servers_per_rack;
+        assert!(racks > 0, "a cluster needs at least one rack");
+        assert_eq!(
+            total % racks,
+            0,
+            "resharding must preserve total capacity: {total} servers across {racks} racks"
+        );
+        Self { racks, servers_per_rack: total / racks, ..self }
+    }
+
+    /// Total servers across all racks.
+    pub fn total_servers(&self) -> usize {
+        self.racks * self.servers_per_rack
+    }
 }
 
 /// Racks of servers with aggregate accounting.
@@ -291,6 +312,24 @@ mod tests {
         assert_eq!(c.servers().len(), 8);
         assert_eq!(c.total_capacity(), Resources::new(256.0, 524288.0));
         assert_eq!(c.racks().count(), 1);
+    }
+
+    #[test]
+    fn resharding_preserves_total_capacity() {
+        let base = ClusterSpec::multi_rack(1, 8);
+        for racks in [1, 2, 4, 8] {
+            let spec = base.resharded(racks);
+            assert_eq!(spec.racks, racks);
+            assert_eq!(spec.total_servers(), 8);
+            let c = Cluster::new(spec);
+            assert_eq!(c.total_capacity(), Cluster::new(base).total_capacity());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "preserve total capacity")]
+    fn resharding_rejects_non_divisor_rack_counts() {
+        let _ = ClusterSpec::multi_rack(1, 8).resharded(3);
     }
 
     #[test]

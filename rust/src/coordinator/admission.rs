@@ -14,7 +14,11 @@
 //!   behavior), or park it in a bounded per-tenant deferred queue and
 //!   retry when capacity frees ([`AdmissionPolicy::FifoQueue`] drains
 //!   oldest-first across the fleet, [`AdmissionPolicy::FairShare`]
-//!   drains round-robin by tenant).
+//!   drains round-robin by tenant,
+//!   [`AdmissionPolicy::WeightedFairShare`] drains deficit-round-robin
+//!   with per-tenant quanta derived from `TenantApp::weight`, and
+//!   [`AdmissionPolicy::Deadline`] drains and evicts
+//!   earliest-deadline-first against per-tenant SLO deadlines).
 //! - [`DeferredQueues`] — the deferred-arrival queues themselves:
 //!   per-tenant FIFO chains threaded through one slot pool with an
 //!   intrusive free list (the driver's slab pattern), so steady-state
@@ -83,6 +87,36 @@ pub enum AdmissionPolicy {
         /// Maximum parked entries per tenant.
         max_depth: usize,
     },
+    /// [`AdmissionPolicy::FairShare`] with *weighted* drain order:
+    /// deficit round-robin (Shreedhar & Varghese) over per-tenant
+    /// quanta derived from `TenantApp::weight` via
+    /// [`DeferredQueues::set_weights`] — a tenant with twice the weight
+    /// drains up to two entries per round-robin visit. With all
+    /// weights equal every quantum is 1 and the drain sequence is
+    /// pick-for-pick identical to [`AdmissionPolicy::FairShare`] (the
+    /// differential contract `rust/tests/proptests.rs` pins).
+    WeightedFairShare {
+        /// Maximum time an entry may wait before it times out (ms).
+        max_wait_ms: f64,
+        /// Maximum parked entries per tenant.
+        max_depth: usize,
+    },
+    /// SLO-aware queueing: each parked arrival carries an absolute
+    /// deadline (`park time + its tenant's SLO`, per-tenant SLOs via
+    /// [`DeferredQueues::set_deadlines`], default `deadline_ms`), and
+    /// both *eviction* and *drain* run earliest-deadline-first over the
+    /// whole fleet — strictly by `(deadline, enqueue seq)`, even when
+    /// deadlines are non-monotone within one tenant's queue (per-entry
+    /// SLO classes via [`DeferredQueues::park_with_deadline`]), the
+    /// ordering a head-only FIFO timeout cannot represent.
+    Deadline {
+        /// Default per-tenant SLO: maximum queueing delay before an
+        /// entry is evicted (ms). Per-tenant overrides come from
+        /// `TenantApp::deadline_ms`.
+        deadline_ms: f64,
+        /// Maximum parked entries per tenant.
+        max_depth: usize,
+    },
 }
 
 impl Default for AdmissionPolicy {
@@ -98,12 +132,15 @@ impl AdmissionPolicy {
         !matches!(self, AdmissionPolicy::RejectImmediately)
     }
 
-    /// The policy's queue-wait bound, if it queues.
+    /// The policy's queue-wait bound, if it queues (for
+    /// [`AdmissionPolicy::Deadline`]: the default per-tenant SLO).
     pub fn max_wait_ms(&self) -> Option<f64> {
         match *self {
             AdmissionPolicy::RejectImmediately => None,
             AdmissionPolicy::FifoQueue { max_wait_ms, .. }
-            | AdmissionPolicy::FairShare { max_wait_ms, .. } => Some(max_wait_ms),
+            | AdmissionPolicy::FairShare { max_wait_ms, .. }
+            | AdmissionPolicy::WeightedFairShare { max_wait_ms, .. } => Some(max_wait_ms),
+            AdmissionPolicy::Deadline { deadline_ms, .. } => Some(deadline_ms),
         }
     }
 
@@ -112,8 +149,22 @@ impl AdmissionPolicy {
         match *self {
             AdmissionPolicy::RejectImmediately => None,
             AdmissionPolicy::FifoQueue { max_depth, .. }
-            | AdmissionPolicy::FairShare { max_depth, .. } => Some(max_depth),
+            | AdmissionPolicy::FairShare { max_depth, .. }
+            | AdmissionPolicy::WeightedFairShare { max_depth, .. }
+            | AdmissionPolicy::Deadline { max_depth, .. } => Some(max_depth),
         }
+    }
+
+    /// Whether a failed admission retry should return the entry but
+    /// move on to the next tenant within the same drain pass (the
+    /// fair-share disciplines), as opposed to ending the pass (FIFO's
+    /// global order and Deadline's strict EDF are head-of-line: if the
+    /// most entitled entry does not fit, the pass is over).
+    pub fn skips_blocked_tenant(&self) -> bool {
+        matches!(
+            self,
+            AdmissionPolicy::FairShare { .. } | AdmissionPolicy::WeightedFairShare { .. }
+        )
     }
 }
 
@@ -329,15 +380,23 @@ pub struct Parked {
     pub seq: u64,
     /// Fair-share cursor before the pop (restored by `unpop`).
     prev_cursor: usize,
+    /// Remaining deficit-round-robin credit before the pop (restored
+    /// by `unpop`; only meaningful for the fair-share disciplines).
+    prev_credit: usize,
 }
 
-/// Storage slot: either a parked entry linked into its tenant's FIFO,
-/// or a free-list link. Slots recycle through the free list, so the
-/// pool is O(peak parked entries) — the driver slab pattern.
+/// Storage slot: either a parked entry linked into its tenant's queue
+/// (doubly linked, so earliest-deadline-first eviction can unlink from
+/// the middle of a chain), or a free-list link. Slots recycle through
+/// the free list, so the pool is O(peak parked entries) — the driver
+/// slab pattern.
 #[derive(Debug, Clone, Copy)]
 struct Slot {
-    /// Next slot in the tenant FIFO, or next free slot.
+    /// Next slot in the tenant queue, or next free slot.
     next: usize,
+    /// Previous slot in the tenant queue (`NIL` at the head; unused
+    /// while the slot sits on the free list).
+    prev: usize,
     sched: usize,
     enqueued_at: Millis,
     deadline: Millis,
@@ -373,23 +432,44 @@ impl TenantQueueStats {
 
 /// Bounded per-tenant deferred-arrival queues with slab-recycled slots.
 ///
-/// Invariant relied on for exact head-only timeout expiry: within one
-/// tenant's FIFO, deadlines are non-decreasing (entries are parked at
-/// non-decreasing event times with a uniform `max_wait_ms`, and
-/// [`DeferredQueues::unpop`] restores an entry to the head it came
-/// from), so the earliest deadline of a tenant is always at its head.
+/// Invariant relied on for exact head-only timeout expiry under the
+/// FIFO/fair-share policies: within one tenant's queue, deadlines are
+/// non-decreasing (entries are parked at non-decreasing event times
+/// with a per-tenant-constant wait bound, and [`DeferredQueues::unpop`]
+/// restores an entry exactly where it came from), so the earliest
+/// deadline of a tenant is always at its head. The
+/// [`AdmissionPolicy::Deadline`] policy drops that assumption — entries
+/// may carry arbitrary per-entry deadlines
+/// ([`DeferredQueues::park_with_deadline`]) — and instead scans every
+/// parked entry (O(parked), bounded by `tenants × max_depth`) for the
+/// strict global `(deadline, seq)` minimum, unlinking mid-chain through
+/// the doubly-linked slots.
 #[derive(Debug)]
 pub struct DeferredQueues {
     policy: AdmissionPolicy,
     slots: Vec<Slot>,
     free_head: usize,
-    /// Per-tenant FIFO chain heads/tails (`NIL` when empty).
+    /// Per-tenant queue chain heads/tails (`NIL` when empty).
     head: Vec<usize>,
     tail: Vec<usize>,
     depth: Vec<usize>,
     total: usize,
-    /// Fair-share round-robin cursor (next tenant to drain).
+    /// Fair-share round-robin cursor. With zero remaining `credit` it
+    /// names the tenant the next scan starts from; with positive
+    /// credit it names the tenant currently being served its quantum.
     cursor: usize,
+    /// Remaining picks owed to `cursor`'s tenant in this deficit-
+    /// round-robin visit (always 0 under plain [`AdmissionPolicy::FairShare`],
+    /// whose quanta are all 1).
+    credit: usize,
+    /// Deficit-round-robin quantum per tenant (all 1 unless
+    /// [`Self::set_weights`] derives otherwise; only the
+    /// [`AdmissionPolicy::WeightedFairShare`] drain consults it).
+    quantum: Vec<usize>,
+    /// Per-tenant wait bound: `try_park` stamps `now + deadline_ms[t]`.
+    /// Uniform (the policy's `max_wait_ms`) unless
+    /// [`Self::set_deadlines`] installs per-tenant SLOs.
+    deadline_ms: Vec<f64>,
     next_seq: u64,
     stats: Vec<TenantQueueStats>,
     fleet_delay: StreamingMoments,
@@ -399,6 +479,7 @@ pub struct DeferredQueues {
 impl DeferredQueues {
     /// Empty queues for `tenants` apps under `policy`.
     pub fn new(policy: AdmissionPolicy, tenants: usize) -> Self {
+        let wait = policy.max_wait_ms().unwrap_or(f64::INFINITY);
         Self {
             policy,
             slots: Vec::new(),
@@ -408,11 +489,50 @@ impl DeferredQueues {
             depth: vec![0; tenants],
             total: 0,
             cursor: 0,
+            credit: 0,
+            quantum: vec![1; tenants],
+            deadline_ms: vec![wait; tenants],
             next_seq: 0,
             stats: (0..tenants).map(|_| TenantQueueStats::new()).collect(),
             fleet_delay: StreamingMoments::new(),
             fleet_p95: P2Quantile::new(0.95),
         }
+    }
+
+    /// Derive the deficit-round-robin quanta from per-tenant weights:
+    /// `quantum[t] = max(1, round(weight[t] / min positive weight))`,
+    /// so a tenant with twice the weight drains up to two entries per
+    /// round-robin visit. Uniform weights — whatever their absolute
+    /// scale — produce all-1 quanta, which makes the
+    /// [`AdmissionPolicy::WeightedFairShare`] drain pick-for-pick
+    /// identical to plain [`AdmissionPolicy::FairShare`]. Non-positive
+    /// weights get quantum 1. Only the weighted drain consults quanta;
+    /// calling this under any other policy is a no-op by construction.
+    pub fn set_weights(&mut self, weights: &[f64]) {
+        assert_eq!(weights.len(), self.quantum.len(), "one weight per tenant");
+        let min_w = weights
+            .iter()
+            .copied()
+            .filter(|&w| w > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        for (q, &w) in self.quantum.iter_mut().zip(weights) {
+            *q = if w > 0.0 && min_w.is_finite() {
+                (w / min_w).round().max(1.0) as usize
+            } else {
+                1
+            };
+        }
+    }
+
+    /// Install per-tenant SLO deadlines (ms of tolerated queueing
+    /// delay) for the [`AdmissionPolicy::Deadline`] policy; `try_park`
+    /// stamps each entry with `now + deadline_ms[tenant]`. Per-tenant
+    /// *constants* keep within-tenant deadlines monotone, so this is
+    /// also sound under the head-expiry policies, but the driver only
+    /// wires it for `Deadline`.
+    pub fn set_deadlines(&mut self, deadline_ms: &[f64]) {
+        assert_eq!(deadline_ms.len(), self.deadline_ms.len(), "one deadline per tenant");
+        self.deadline_ms.copy_from_slice(deadline_ms);
     }
 
     /// The policy these queues enforce.
@@ -454,6 +574,7 @@ impl DeferredQueues {
 
     fn link_tail(&mut self, app: usize, i: usize) {
         self.slots[i].next = NIL;
+        self.slots[i].prev = self.tail[app];
         if self.tail[app] == NIL {
             self.head[app] = i;
         } else {
@@ -465,13 +586,21 @@ impl DeferredQueues {
         self.total += 1;
     }
 
-    fn unlink_head(&mut self, app: usize) -> Slot {
-        let i = self.head[app];
-        debug_assert_ne!(i, NIL, "unlink from empty queue");
+    /// Unlink slot `i` from anywhere in `app`'s chain (head, middle or
+    /// tail — the doubly-linked slots make mid-chain eviction O(1))
+    /// and push it onto the free list.
+    fn detach(&mut self, app: usize, i: usize) -> Slot {
+        debug_assert_ne!(i, NIL, "detach from empty queue");
         let slot = self.slots[i];
-        self.head[app] = slot.next;
-        if self.head[app] == NIL {
-            self.tail[app] = NIL;
+        if slot.prev == NIL {
+            self.head[app] = slot.next;
+        } else {
+            self.slots[slot.prev].next = slot.next;
+        }
+        if slot.next == NIL {
+            self.tail[app] = slot.prev;
+        } else {
+            self.slots[slot.next].prev = slot.prev;
         }
         self.slots[i].next = self.free_head;
         self.free_head = i;
@@ -480,14 +609,44 @@ impl DeferredQueues {
         slot
     }
 
-    /// Park one failed arrival. Returns `false` (caller counts a
-    /// rejection) when the policy does not queue or the tenant's queue
-    /// is at `max_depth`.
+    fn unlink_head(&mut self, app: usize) -> Slot {
+        let i = self.head[app];
+        self.detach(app, i)
+    }
+
+    /// Park one failed arrival with the tenant's configured wait bound
+    /// (`now + deadline_ms[app]` — the policy's uniform `max_wait_ms`
+    /// unless [`Self::set_deadlines`] installed per-tenant SLOs).
+    /// Returns `false` (caller counts a rejection) when the policy does
+    /// not queue or the tenant's queue is at `max_depth`.
     pub fn try_park(&mut self, app: usize, sched: usize, now: Millis) -> bool {
-        let (max_wait, max_depth) = match self.policy {
-            AdmissionPolicy::RejectImmediately => return false,
-            AdmissionPolicy::FifoQueue { max_wait_ms, max_depth }
-            | AdmissionPolicy::FairShare { max_wait_ms, max_depth } => (max_wait_ms, max_depth),
+        let deadline = now + self.deadline_ms[app];
+        self.park_at(app, sched, now, deadline)
+    }
+
+    /// Park one failed arrival with an *explicit per-entry deadline*
+    /// (an SLO class attached to the arrival itself rather than its
+    /// tenant). Only exact under [`AdmissionPolicy::Deadline`]: the
+    /// head-expiry policies assume within-tenant monotone deadlines,
+    /// which arbitrary per-entry values break.
+    pub fn park_with_deadline(
+        &mut self,
+        app: usize,
+        sched: usize,
+        now: Millis,
+        deadline: Millis,
+    ) -> bool {
+        debug_assert!(
+            matches!(self.policy, AdmissionPolicy::Deadline { .. }),
+            "per-entry deadlines require the Deadline policy's full-scan expiry"
+        );
+        self.park_at(app, sched, now, deadline)
+    }
+
+    fn park_at(&mut self, app: usize, sched: usize, now: Millis, deadline: Millis) -> bool {
+        let max_depth = match self.policy.max_depth() {
+            None => return false,
+            Some(d) => d,
         };
         if self.depth[app] >= max_depth {
             return false;
@@ -496,9 +655,10 @@ impl DeferredQueues {
         self.next_seq += 1;
         let i = self.alloc_slot(Slot {
             next: NIL,
+            prev: NIL,
             sched,
             enqueued_at: now,
-            deadline: now + max_wait,
+            deadline,
             seq,
         });
         self.link_tail(app, i);
@@ -512,27 +672,59 @@ impl DeferredQueues {
     /// `now` (globally smallest `(deadline, seq)` — ties break by
     /// enqueue sequence). Returns its `(app, sched)` or `None` when
     /// nothing is overdue. Call in a loop before draining.
+    ///
+    /// Under the head-expiry policies this inspects only the tenant
+    /// heads (exact because within-tenant deadlines are monotone —
+    /// O(tenants)); under [`AdmissionPolicy::Deadline`] it scans every
+    /// parked entry (per-entry deadlines may be non-monotone within a
+    /// chain — O(parked)) and unlinks the winner mid-chain.
     pub fn pop_expired(&mut self, now: Millis) -> Option<(usize, usize)> {
-        let mut best: Option<(f64, u64, usize)> = None; // (deadline, seq, app)
-        for app in 0..self.head.len() {
-            let h = self.head[app];
-            if h == NIL {
-                continue;
+        let (app, i) = if matches!(self.policy, AdmissionPolicy::Deadline { .. }) {
+            self.earliest_deadline_at_most(now)?
+        } else {
+            let mut best: Option<(f64, u64, usize)> = None; // (deadline, seq, app)
+            for app in 0..self.head.len() {
+                let h = self.head[app];
+                if h == NIL {
+                    continue;
+                }
+                let s = &self.slots[h];
+                if s.deadline > now {
+                    continue;
+                }
+                let key = (s.deadline, s.seq, app);
+                match best {
+                    Some((d, q, _)) if (d, q) <= (key.0, key.1) => {}
+                    _ => best = Some(key),
+                }
             }
-            let s = &self.slots[h];
-            if s.deadline > now {
-                continue;
-            }
-            let key = (s.deadline, s.seq, app);
-            match best {
-                Some((d, q, _)) if (d, q) <= (key.0, key.1) => {}
-                _ => best = Some(key),
-            }
-        }
-        let (_, _, app) = best?;
-        let slot = self.unlink_head(app);
+            let (_, _, app) = best?;
+            (app, self.head[app])
+        };
+        let slot = self.detach(app, i);
         self.stats[app].timed_out += 1;
         Some((app, slot.sched))
+    }
+
+    /// Globally smallest `(deadline, seq)` entry whose deadline is
+    /// ≤ `bound`, scanning every parked entry (the Deadline policy's
+    /// EDF view). Returns `(app, slot index)`.
+    fn earliest_deadline_at_most(&self, bound: Millis) -> Option<(usize, usize)> {
+        let mut best: Option<(f64, u64, usize, usize)> = None; // (deadline, seq, app, slot)
+        for app in 0..self.head.len() {
+            let mut i = self.head[app];
+            while i != NIL {
+                let s = &self.slots[i];
+                if s.deadline <= bound {
+                    match best {
+                        Some((d, q, _, _)) if (d, q) <= (s.deadline, s.seq) => {}
+                        _ => best = Some((s.deadline, s.seq, app, i)),
+                    }
+                }
+                i = s.next;
+            }
+        }
+        best.map(|(_, _, app, i)| (app, i))
     }
 
     /// Expire *every* remaining entry (end of trace: no further
@@ -545,15 +737,24 @@ impl DeferredQueues {
     /// [`AdmissionPolicy::FifoQueue`] picks the globally oldest entry
     /// (smallest enqueue sequence); [`AdmissionPolicy::FairShare`]
     /// picks the first non-empty tenant at/after the round-robin
-    /// cursor and advances the cursor past it. If the admission retry
-    /// fails, return the entry with [`Self::unpop`] and stop draining.
+    /// cursor and advances the cursor past it;
+    /// [`AdmissionPolicy::WeightedFairShare`] is the same round-robin
+    /// but a tenant with quantum q drains up to q consecutive entries
+    /// per visit (deficit round-robin — with all quanta 1 the pick
+    /// sequence is identical to plain FairShare);
+    /// [`AdmissionPolicy::Deadline`] picks the globally most urgent
+    /// entry (smallest `(deadline, seq)`, anywhere in any chain). If
+    /// the admission retry fails, return the entry with
+    /// [`Self::unpop`] (or [`Self::unpop_skip_tenant`] for the
+    /// fair-share disciplines) and stop draining.
     pub fn pop_next(&mut self) -> Option<Parked> {
         if self.total == 0 {
             return None;
         }
         let n = self.head.len();
         let prev_cursor = self.cursor;
-        let app = match self.policy {
+        let prev_credit = self.credit;
+        let (app, slot) = match self.policy {
             AdmissionPolicy::RejectImmediately => return None,
             AdmissionPolicy::FifoQueue { .. } => {
                 let mut best: Option<(u64, usize)> = None;
@@ -568,23 +769,53 @@ impl DeferredQueues {
                         _ => best = Some((seq, a)),
                     }
                 }
-                best?.1
+                let a = best?.1;
+                (a, self.unlink_head(a))
             }
-            AdmissionPolicy::FairShare { .. } => {
-                let mut chosen = None;
-                for off in 0..n {
-                    let a = (self.cursor + off) % n;
-                    if self.head[a] != NIL {
-                        chosen = Some(a);
-                        break;
+            AdmissionPolicy::FairShare { .. } | AdmissionPolicy::WeightedFairShare { .. } => {
+                let weighted = matches!(self.policy, AdmissionPolicy::WeightedFairShare { .. });
+                // Serve out the current tenant's remaining quantum
+                // first; a tenant that emptied mid-visit forfeits it.
+                let mut serving = None;
+                if self.credit > 0 {
+                    if self.head[self.cursor] != NIL {
+                        let a = self.cursor;
+                        self.credit -= 1;
+                        if self.credit == 0 {
+                            self.cursor = (a + 1) % n;
+                        }
+                        serving = Some(a);
+                    } else {
+                        self.credit = 0;
+                        self.cursor = (self.cursor + 1) % n;
                     }
                 }
-                let a = chosen?;
-                self.cursor = (a + 1) % n;
-                a
+                let a = match serving {
+                    Some(a) => a,
+                    None => {
+                        let mut chosen = None;
+                        for off in 0..n {
+                            let a = (self.cursor + off) % n;
+                            if self.head[a] != NIL {
+                                chosen = Some(a);
+                                break;
+                            }
+                        }
+                        let a = chosen?;
+                        let quantum = if weighted { self.quantum[a] } else { 1 };
+                        self.credit = quantum - 1;
+                        self.cursor = if self.credit > 0 { a } else { (a + 1) % n };
+                        a
+                    }
+                };
+                (a, self.unlink_head(a))
+            }
+            AdmissionPolicy::Deadline { .. } => {
+                // EDF: the most urgent entry fleet-wide, mid-chain ok.
+                let (a, i) = self.earliest_deadline_at_most(f64::INFINITY)?;
+                (a, self.detach(a, i))
             }
         };
-        let slot = self.unlink_head(app);
         Some(Parked {
             app,
             sched: slot.sched,
@@ -592,38 +823,62 @@ impl DeferredQueues {
             deadline: slot.deadline,
             seq: slot.seq,
             prev_cursor,
+            prev_credit,
         })
     }
 
-    /// Return an entry whose admission retry failed to the head of its
-    /// tenant's queue, restoring FIFO order and the fair-share cursor
-    /// (the next [`Self::pop_next`] hands the same entry out again).
+    /// Return an entry whose admission retry failed to its exact prior
+    /// position in its tenant's queue (chains are seq-sorted, so the
+    /// sorted re-insert is position-exact even for the Deadline
+    /// policy's mid-chain pops), restoring the fair-share cursor and
+    /// credit — the next [`Self::pop_next`] hands the same entry out
+    /// again.
     pub fn unpop(&mut self, p: Parked) {
-        self.restore_head(&p);
+        self.restore_entry(&p);
         self.cursor = p.prev_cursor;
+        self.credit = p.prev_credit;
     }
 
-    /// Like [`Self::unpop`], but leave the fair-share cursor advanced
-    /// past the entry's tenant: the failed head returns to its queue,
-    /// and the next [`Self::pop_next`] moves on to the *next* non-empty
-    /// tenant instead of retrying the same head — so one tenant whose
-    /// head does not fit cannot starve the others within a drain pass.
+    /// Like [`Self::unpop`], but move the fair-share round-robin past
+    /// the entry's tenant (forfeiting any remaining weighted quantum):
+    /// the failed head returns to its queue, and the next
+    /// [`Self::pop_next`] moves on to the *next* non-empty tenant
+    /// instead of retrying the same head — so one tenant whose head
+    /// does not fit cannot starve the others within a drain pass.
     pub fn unpop_skip_tenant(&mut self, p: Parked) {
-        self.restore_head(&p);
+        let n = self.head.len();
+        self.restore_entry(&p);
+        self.credit = 0;
+        self.cursor = (p.app + 1) % n;
     }
 
-    fn restore_head(&mut self, p: &Parked) {
+    /// Re-insert a popped entry at its seq-sorted position in its
+    /// tenant's chain (head for head-pops; the exact middle slot for
+    /// the Deadline policy's EDF pops).
+    fn restore_entry(&mut self, p: &Parked) {
+        let mut j = self.head[p.app];
+        while j != NIL && self.slots[j].seq < p.seq {
+            j = self.slots[j].next;
+        }
+        let prev = if j == NIL { self.tail[p.app] } else { self.slots[j].prev };
         let i = self.alloc_slot(Slot {
-            next: self.head[p.app],
+            next: j,
+            prev,
             sched: p.sched,
             enqueued_at: p.enqueued_at,
             deadline: p.deadline,
             seq: p.seq,
         });
-        if self.tail[p.app] == NIL {
-            self.tail[p.app] = i;
+        if prev == NIL {
+            self.head[p.app] = i;
+        } else {
+            self.slots[prev].next = i;
         }
-        self.head[p.app] = i;
+        if j == NIL {
+            self.tail[p.app] = i;
+        } else {
+            self.slots[j].prev = i;
+        }
         self.depth[p.app] += 1;
         self.total += 1;
     }
@@ -749,6 +1004,14 @@ mod tests {
 
     fn fair(max_wait_ms: f64, max_depth: usize) -> AdmissionPolicy {
         AdmissionPolicy::FairShare { max_wait_ms, max_depth }
+    }
+
+    fn wfair(max_wait_ms: f64, max_depth: usize) -> AdmissionPolicy {
+        AdmissionPolicy::WeightedFairShare { max_wait_ms, max_depth }
+    }
+
+    fn edf(deadline_ms: f64, max_depth: usize) -> AdmissionPolicy {
+        AdmissionPolicy::Deadline { deadline_ms, max_depth }
     }
 
     #[test]
@@ -881,6 +1144,162 @@ mod tests {
         assert!(q.is_empty());
         let out = q.finish(&[0; 3], &[0; 3]);
         assert_eq!(out.fleet.timed_out, 3);
+    }
+
+    // ---- SLO-aware (Deadline) policy ------------------------------------
+
+    /// Satellite regression (ISSUE 5): under `AdmissionPolicy::Deadline`
+    /// entries expire strictly by `(deadline, enqueue seq)` even when
+    /// deadlines are *non-monotone within one tenant's queue* — a later
+    /// arrival with a tighter SLO class must evict before an earlier
+    /// arrival with a loose one, which a head-only FIFO expiry cannot
+    /// represent (the head hides the urgent entry behind it).
+    #[test]
+    fn deadline_eviction_is_strict_deadline_seq_order_even_non_monotone() {
+        let mut q = DeferredQueues::new(edf(1e9, 16), 2);
+        // tenant 0: loose head (deadline 50, seq 0), tight second entry
+        // (deadline 10, seq 1) — non-monotone within the chain
+        assert!(q.park_with_deadline(0, 100, 0.0, 50.0));
+        assert!(q.park_with_deadline(0, 101, 0.0, 10.0));
+        // tenant 1: same tight deadline, later seq (tie → seq order)
+        assert!(q.park_with_deadline(1, 102, 0.0, 10.0));
+        assert!(q.pop_expired(9.0).is_none(), "nothing overdue yet");
+        // strict (deadline, seq): the mid-chain entry goes first
+        assert_eq!(q.pop_expired(10.0), Some((0, 101)));
+        assert_eq!(q.pop_expired(10.0), Some((1, 102)));
+        assert!(q.pop_expired(10.0).is_none(), "deadline 50 still live");
+        assert_eq!(q.pop_expired(50.0), Some((0, 100)));
+        assert!(q.is_empty());
+        let out = q.finish(&[0, 0], &[0, 0]);
+        assert_eq!(out.per_tenant[0].timed_out, 2);
+        assert_eq!(out.per_tenant[1].timed_out, 1);
+    }
+
+    #[test]
+    fn deadline_drains_earliest_deadline_first() {
+        let mut q = DeferredQueues::new(edf(1e9, 16), 3);
+        assert!(q.park_with_deadline(0, 10, 0.0, 300.0));
+        assert!(q.park_with_deadline(1, 20, 0.0, 100.0));
+        assert!(q.park_with_deadline(2, 30, 0.0, 200.0));
+        assert!(q.park_with_deadline(1, 21, 0.0, 100.0)); // tie with 20 → seq
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop_next().map(|p| p.sched)).collect();
+        assert_eq!(order, vec![20, 21, 30, 10]);
+    }
+
+    #[test]
+    fn deadline_unpop_restores_exact_mid_chain_position() {
+        let mut q = DeferredQueues::new(edf(1e9, 16), 1);
+        // one tenant, three entries; the urgent one sits mid-chain
+        assert!(q.park_with_deadline(0, 1, 0.0, 500.0));
+        assert!(q.park_with_deadline(0, 2, 1.0, 50.0));
+        assert!(q.park_with_deadline(0, 3, 2.0, 900.0));
+        let p = q.pop_next().expect("most urgent");
+        assert_eq!(p.sched, 2);
+        q.unpop(p);
+        assert_eq!(q.depth(0), 3);
+        // order unchanged: the same entry comes out first again, and
+        // eviction at its deadline still finds it (mid-chain restore)
+        assert_eq!(q.pop_next().expect("same entry").sched, 2);
+        assert_eq!(q.pop_next().expect("next").sched, 1);
+        assert_eq!(q.pop_next().expect("last").sched, 3);
+    }
+
+    #[test]
+    fn per_tenant_slo_deadlines_apply_at_park_time() {
+        let mut q = DeferredQueues::new(edf(1_000.0, 16), 2);
+        q.set_deadlines(&[10.0, 100.0]);
+        assert!(q.try_park(0, 0, 0.0));
+        assert!(q.try_park(1, 1, 0.0));
+        // tenant 0's tight SLO expires first despite identical parking
+        assert_eq!(q.pop_expired(10.0), Some((0, 0)));
+        assert!(q.pop_expired(10.0).is_none());
+        assert_eq!(q.pop_expired(100.0), Some((1, 1)));
+    }
+
+    #[test]
+    fn deadline_slots_recycle_through_the_free_list() {
+        let mut q = DeferredQueues::new(edf(1e9, 8), 2);
+        for round in 0..5 {
+            let t = round as f64;
+            assert!(q.park_with_deadline(0, round * 2, t, t + 100.0));
+            assert!(q.park_with_deadline(1, round * 2 + 1, t, t + 50.0));
+            assert!(q.pop_next().is_some());
+            assert!(q.pop_next().is_some());
+        }
+        assert_eq!(q.slot_high_water(), 2, "pool stays at peak depth");
+    }
+
+    // ---- weighted fair share --------------------------------------------
+
+    #[test]
+    fn weighted_fair_share_serves_quanta_per_visit() {
+        let mut q = DeferredQueues::new(wfair(1e9, 16), 2);
+        q.set_weights(&[2.0, 1.0]);
+        for (app, sched) in [(0, 10), (0, 11), (0, 12), (0, 13), (1, 20), (1, 21)] {
+            assert!(q.try_park(app, sched, 0.0));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop_next().map(|p| p.sched)).collect();
+        // DRR: tenant 0 drains two per visit, tenant 1 one
+        assert_eq!(order, vec![10, 11, 20, 12, 13, 21]);
+    }
+
+    #[test]
+    fn weighted_quanta_normalize_by_min_positive_weight() {
+        let mut q = DeferredQueues::new(wfair(1e9, 16), 3);
+        // uniform at any scale → all quanta 1 (the FairShare contract)
+        q.set_weights(&[2.5, 2.5, 2.5]);
+        assert_eq!(q.quantum, vec![1, 1, 1]);
+        q.set_weights(&[6.0, 2.0, 0.0]);
+        assert_eq!(q.quantum, vec![3, 1, 1], "non-positive weight gets quantum 1");
+    }
+
+    /// Differential: with all weights equal, the weighted drain must be
+    /// pick-for-pick identical to plain FairShare — including across a
+    /// blocked-tenant skip (the driver-level digest differential in
+    /// `rust/tests/proptests.rs` extends this end to end).
+    #[test]
+    fn equal_weight_weighted_fair_share_matches_fair_share_pick_for_pick() {
+        let parks = [(0usize, 10usize), (1, 20), (2, 30), (0, 11), (2, 31), (1, 21)];
+        let run = |policy: AdmissionPolicy, weighted: bool| -> Vec<usize> {
+            let mut q = DeferredQueues::new(policy, 3);
+            if weighted {
+                q.set_weights(&[4.0, 4.0, 4.0]);
+            }
+            for &(app, sched) in &parks {
+                assert!(q.try_park(app, sched, 0.0));
+            }
+            let mut order = Vec::new();
+            let mut skipped = false;
+            while let Some(p) = q.pop_next() {
+                // fail tenant 1's first head once, as a blocked retry
+                if p.app == 1 && !skipped {
+                    skipped = true;
+                    q.unpop_skip_tenant(p);
+                    continue;
+                }
+                order.push(p.sched);
+            }
+            order
+        };
+        let plain = run(fair(1e9, 16), false);
+        let weighted = run(wfair(1e9, 16), true);
+        assert_eq!(plain, weighted, "equal weights must reduce to plain FairShare");
+    }
+
+    #[test]
+    fn weighted_skip_forfeits_the_remaining_quantum() {
+        let mut q = DeferredQueues::new(wfair(1e9, 16), 2);
+        q.set_weights(&[3.0, 1.0]);
+        for (app, sched) in [(0, 10), (0, 11), (0, 12), (1, 20)] {
+            assert!(q.try_park(app, sched, 0.0));
+        }
+        let p = q.pop_next().expect("tenant 0 first");
+        assert_eq!(p.sched, 10);
+        // tenant 0's head is blocked: skip forfeits its two remaining
+        // quantum picks — tenant 1 drains before tenant 0 returns
+        q.unpop_skip_tenant(p);
+        assert_eq!(q.pop_next().expect("tenant 1").sched, 20);
+        assert_eq!(q.pop_next().expect("back to 0").sched, 10);
     }
 
     // ---- burst models ---------------------------------------------------

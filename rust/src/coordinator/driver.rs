@@ -76,6 +76,23 @@
 //! and carries per-tenant queue-depth high-water marks plus
 //! queueing-delay moments and P² p95 — O(apps) memory, slot-recycled
 //! queues, still allocation-free in steady state.
+//!
+//! ## Fairness, SLOs & multi-rack sharding
+//!
+//! Beyond FIFO/round-robin queueing, [`AdmissionPolicy::WeightedFairShare`]
+//! drains deficit-round-robin with quanta from [`TenantApp::weight`]
+//! and [`AdmissionPolicy::Deadline`] evicts and drains earliest-
+//! deadline-first against per-tenant SLOs ([`TenantApp::deadline_ms`]).
+//! Every report carries Jain's fairness index over per-tenant
+//! completions and goodput/demand ratios
+//! ([`crate::metrics::fairness`], O(apps) streaming), so asymmetric-
+//! overload replays quantify *who* the admission policy served.
+//! [`DriverConfig::with_racks`] reshards the cluster at fixed total
+//! capacity (the multi-rack sweep axis of
+//! [`crate::figures::sharding_figs`]); the report's
+//! `route_fast_hits`/`route_scans` expose how often the global
+//! scheduler's incremental best-rack cache answered a routing decision
+//! without an O(racks) scan.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -86,6 +103,7 @@ use crate::baselines::faas;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
 use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel};
+use crate::metrics::fairness;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 use crate::trace::{Archetype, UsageTrace};
 use crate::util::rng::Rng;
@@ -115,10 +133,18 @@ pub enum ScaleModel {
 pub struct TenantApp {
     /// The app's compiled resource graph.
     pub graph: ResourceGraph,
-    /// Share of the fleet-wide arrival stream this app receives.
+    /// Share of the fleet-wide arrival stream this app receives. Also
+    /// the tenant's drain weight under
+    /// [`AdmissionPolicy::WeightedFairShare`] (deficit-round-robin
+    /// quanta are derived from the weight ratios).
     pub weight: f64,
     /// How per-invocation input scales are drawn.
     pub scales: ScaleModel,
+    /// Per-tenant SLO for [`AdmissionPolicy::Deadline`]: the maximum
+    /// queueing delay (ms) this tenant tolerates before a parked
+    /// arrival is evicted. `None` uses the policy's default
+    /// `deadline_ms`. Ignored by the other policies.
+    pub deadline_ms: Option<f64>,
 }
 
 /// Driver parameters. The same config (and therefore the same
@@ -166,6 +192,20 @@ impl Default for DriverConfig {
             admission: AdmissionPolicy::RejectImmediately,
             arrivals: ArrivalModel::Poisson,
         }
+    }
+}
+
+impl DriverConfig {
+    /// The rack-topology axis of the multi-rack sharding sweeps: the
+    /// same config with the cluster resharded into `racks` racks at
+    /// *fixed total capacity* (server count and per-server resources
+    /// unchanged — see [`ClusterSpec::resharded`]). The arrival
+    /// schedule is cluster-independent, so replays across this axis
+    /// see the identical workload and differences are attributable to
+    /// sharding alone (two-level scheduling, dirty-rack feed fan-out,
+    /// per-rack placement indexing).
+    pub fn with_racks(self, racks: usize) -> Self {
+        Self { cluster: self.cluster.resharded(racks), ..self }
     }
 }
 
@@ -265,6 +305,8 @@ impl Schedule {
 pub struct AppStats {
     /// Program name (interned).
     pub name: &'static str,
+    /// Arrivals the schedule carried for this app (its demand).
+    pub scheduled: usize,
     /// Invocations that ran to completion.
     pub completed: usize,
     /// Arrivals rejected at admission time (saturated cluster under
@@ -312,6 +354,13 @@ impl AppStats {
     pub fn failed(&self) -> usize {
         self.rejected + self.aborted + self.timed_out
     }
+
+    /// This tenant's goodput/demand ratio: completed over scheduled
+    /// (1.0 when nothing was scheduled) — the demand-normalized input
+    /// to [`DriverReport::jain_goodput`].
+    pub fn goodput_ratio(&self) -> f64 {
+        fairness::goodput_ratio(self.completed, self.scheduled)
+    }
 }
 
 /// Fleet-wide result of one driver run.
@@ -344,6 +393,22 @@ pub struct DriverReport {
     pub mean_queue_delay_ms: f64,
     /// P² p95 queueing delay across every queue-admitted invocation.
     pub p95_queue_delay_ms: f64,
+    /// Jain's fairness index over per-tenant completion counts (equal
+    /// to the index over completion *rates* — Jain is scale-invariant).
+    /// 1.0 = every tenant completed the same amount; 1/apps = one
+    /// tenant monopolized the fleet. Not folded into the digest.
+    pub jain_completion: f64,
+    /// Jain's fairness index over per-tenant goodput/demand ratios
+    /// (completed/scheduled) — the demand-normalized view for mixes
+    /// whose tenants *ask* for asymmetric shares on purpose.
+    pub jain_goodput: f64,
+    /// Global-scheduler routing decisions served by the incremental
+    /// best-rack cache (multi-rack telemetry; 0 for the closed-form
+    /// FaaS baseline, which routes nothing).
+    pub route_fast_hits: u64,
+    /// Global-scheduler routing decisions that fell back to the
+    /// O(racks) scan (stale cache or best rack could not fit).
+    pub route_scans: u64,
     /// Fleet-wide warm-pool hits.
     pub warm_hits: usize,
     /// Fleet-wide cold starts.
@@ -632,6 +697,9 @@ struct Aggregator<'a> {
     apps: &'a [TenantApp],
     exact: bool,
     per_app: Vec<AppAgg>,
+    /// Arrivals the schedule carried per app (its demand vector; the
+    /// denominator of the goodput fairness index).
+    sched_counts: Vec<usize>,
     completed: usize,
 }
 
@@ -662,7 +730,7 @@ impl<'a> Aggregator<'a> {
                 }
             })
             .collect();
-        Self { apps, exact, per_app, completed: 0 }
+        Self { apps, exact, per_app, sched_counts: sched_counts.to_vec(), completed: 0 }
     }
 
     fn record(&mut self, app: usize, exec_ms: f64, growths: usize, warm: bool, c: Consumption) {
@@ -741,6 +809,7 @@ impl<'a> Aggregator<'a> {
                 let t = &adm.per_tenant[i];
                 AppStats {
                     name: self.apps[i].graph.program.name,
+                    scheduled: self.sched_counts[i],
                     completed,
                     rejected: t.rejected,
                     aborted: t.aborted,
@@ -768,6 +837,13 @@ impl<'a> Aggregator<'a> {
         let failed = adm.fleet.failed();
         let warm_hits: usize = self.per_app.iter().map(|a| a.warm).sum();
         let cold_starts: usize = self.per_app.iter().map(|a| a.cold).sum();
+
+        // Fairness indices, streaming over the O(apps) aggregates.
+        // Scale invariance makes the completion-count index identical
+        // to the completion-*rate* index (counts / makespan). Not
+        // folded into the digest: the pinned digest predates them.
+        let jain_completion = fairness::jains_index(apps.iter().map(|a| a.completed as f64));
+        let jain_goodput = fairness::jains_index(apps.iter().map(|a| a.goodput_ratio()));
 
         // order-stable FNV-style digest over quantized results
         let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -800,6 +876,10 @@ impl<'a> Aggregator<'a> {
             queued: adm.fleet.queued,
             mean_queue_delay_ms: adm.fleet.mean_queue_delay_ms,
             p95_queue_delay_ms: adm.fleet.p95_queue_delay_ms,
+            jain_completion,
+            jain_goodput,
+            route_fast_hits: 0,
+            route_scans: 0,
             warm_hits,
             cold_starts,
             max_in_flight,
@@ -890,6 +970,22 @@ impl<'a> MultiTenantDriver<'a> {
         let mut aborted_per_app = vec![0usize; self.apps.len()];
         let mut queues = DeferredQueues::new(self.cfg.admission, self.apps.len());
         let queueing = queues.policy().queues();
+        if queueing {
+            // One-time (not per-invocation) wiring of the per-tenant
+            // drain weights and SLO deadlines into the queues.
+            if matches!(self.cfg.admission, AdmissionPolicy::WeightedFairShare { .. }) {
+                let weights: Vec<f64> = self.apps.iter().map(|a| a.weight).collect();
+                queues.set_weights(&weights);
+            }
+            if let AdmissionPolicy::Deadline { deadline_ms, .. } = self.cfg.admission {
+                let slos: Vec<f64> = self
+                    .apps
+                    .iter()
+                    .map(|a| a.deadline_ms.unwrap_or(deadline_ms))
+                    .collect();
+                queues.set_deadlines(&slos);
+            }
+        }
         let mut in_flight = 0usize;
         let mut max_in_flight = 0usize;
         let mut end_time = 0.0f64;
@@ -1067,7 +1163,11 @@ impl<'a> MultiTenantDriver<'a> {
         debug_assert_eq!(in_flight, 0, "events drained with invocations still in flight");
         let fleet = platform.cluster.total_consumption(end_time);
         let adm = queues.finish(&rejected_per_app, &aborted_per_app);
-        agg.finish(label, adm, fleet, end_time, max_in_flight, completed_mask)
+        let route = platform.global.route_stats();
+        let mut report = agg.finish(label, adm, fleet, end_time, max_in_flight, completed_mask);
+        report.route_fast_hits = route.fast_hits;
+        report.route_scans = route.scans;
+        report
     }
 
     /// The statically-sized FaaS baseline over the identical schedule.
@@ -1211,15 +1311,17 @@ fn try_admit(
 }
 
 /// One deferred-queue service pass at simulated time `now`: expire
-/// every overdue entry (oldest deadline first, ties by enqueue
-/// sequence), then re-attempt admission in policy order. FIFO is
-/// head-of-line: the first failed retry returns to its queue head and
-/// ends the pass (global arrival order is the contract). FairShare
-/// instead *skips* a tenant whose head fails — the entry returns to
-/// its queue but the round-robin cursor stays advanced — and the pass
-/// ends only after a full cycle of consecutive failures, so one
-/// unadmittable head cannot starve the other tenants. Queueing delays
-/// of admitted entries are recorded as they drain.
+/// every overdue entry (earliest deadline first, ties by enqueue
+/// sequence), then re-attempt admission in policy order. FIFO and
+/// Deadline are head-of-line: the first failed retry returns to its
+/// exact queue position and ends the pass (global arrival order /
+/// strict EDF is the contract). The fair-share disciplines instead
+/// *skip* a tenant whose head fails — the entry returns to its queue
+/// but the round-robin moves past the tenant (forfeiting any remaining
+/// weighted quantum) — and the pass ends only after a full cycle of
+/// consecutive failures, so one unadmittable head cannot starve the
+/// other tenants. Queueing delays of admitted entries are recorded as
+/// they drain.
 #[allow(clippy::too_many_arguments)]
 fn drain_deferred(
     platform: &mut Platform,
@@ -1234,7 +1336,7 @@ fn drain_deferred(
     max_in_flight: &mut usize,
 ) {
     while queues.pop_expired(now).is_some() {}
-    let fair = matches!(queues.policy(), AdmissionPolicy::FairShare { .. });
+    let fair = queues.policy().skips_blocked_tenant();
     let mut consecutive_failures = 0usize;
     while let Some(p) = queues.pop_next() {
         let arr = schedule.arrivals[p.sched];
@@ -1344,6 +1446,7 @@ pub fn standard_mix(n_apps: usize, arch: Archetype) -> Vec<TenantApp> {
             graph: ResourceGraph::from_program(&program).expect("evaluation program"),
             weight: 1.0,
             scales: ScaleModel::Fixed(scale),
+            deadline_ms: None,
         });
     }
     let mut i = 0usize;
@@ -1354,6 +1457,7 @@ pub fn standard_mix(n_apps: usize, arch: Archetype) -> Vec<TenantApp> {
             graph: ResourceGraph::from_program(&program).expect("synthetic program"),
             weight: 1.0,
             scales: ScaleModel::AzureTrace(arch),
+            deadline_ms: None,
         });
         i += 1;
     }
@@ -1669,6 +1773,89 @@ mod tests {
         }
         let r2 = driver.run_zenix(&schedule);
         assert_eq!(r.digest, r2.digest, "fair-share replay deterministic");
+    }
+
+    /// The Deadline policy on a saturating schedule: conservation
+    /// holds, per-tenant SLOs actually evict (timeouts register), and
+    /// the replay is deterministic per seed.
+    #[test]
+    fn deadline_policy_conserves_and_times_out_deterministically() {
+        let apps = standard_mix(6, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 17,
+            invocations: 240,
+            mean_iat_ms: 40.0,
+            admission: AdmissionPolicy::Deadline { deadline_ms: 2_000.0, max_depth: 64 },
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        assert_eq!(r.completed + r.rejected + r.aborted + r.timed_out, 240);
+        assert!(r.queued > 0, "saturated run must park arrivals");
+        assert!(
+            r.timed_out > 0,
+            "a 2 s SLO under this overload must evict something"
+        );
+        let r2 = driver.run_zenix(&schedule);
+        assert_eq!(r.digest, r2.digest, "deadline replay deterministic");
+        // the fairness indices ride along on every report
+        let n = apps.len() as f64;
+        assert!(r.jain_completion >= 1.0 / n - 1e-9 && r.jain_completion <= 1.0 + 1e-9);
+        assert!(r.jain_goodput >= 1.0 / n - 1e-9 && r.jain_goodput <= 1.0 + 1e-9);
+    }
+
+    /// `TenantApp::deadline_ms` overrides the policy default: a tenant
+    /// with an (effectively) infinite SLO never times out while the
+    /// default-SLO tenants do.
+    #[test]
+    fn per_tenant_slo_override_shields_a_tenant_from_eviction() {
+        let mut apps = standard_mix(6, Archetype::Average);
+        apps[0].deadline_ms = Some(f64::INFINITY);
+        let cfg = DriverConfig {
+            seed: 17,
+            invocations: 240,
+            mean_iat_ms: 40.0,
+            admission: AdmissionPolicy::Deadline { deadline_ms: 2_000.0, max_depth: 64 },
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        assert_eq!(r.apps[0].timed_out, 0, "infinite SLO must never evict");
+        assert!(
+            r.apps.iter().skip(1).map(|a| a.timed_out).sum::<usize>() > 0,
+            "default-SLO tenants must still time out under this overload"
+        );
+    }
+
+    #[test]
+    fn with_racks_reshards_without_changing_the_schedule() {
+        let apps = standard_mix(5, Archetype::Average);
+        let base = small_cfg(3, 80);
+        let sharded = base.with_racks(4);
+        assert_eq!(sharded.cluster.racks, 4);
+        assert_eq!(sharded.cluster.total_servers(), base.cluster.total_servers());
+        // the schedule is cluster-independent: both configs draw the
+        // identical workload
+        let a = Schedule::generate(&apps, &base);
+        let b = Schedule::generate(&apps, &sharded);
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.scale, y.scale);
+        }
+        // and the sharded replay runs to completion deterministically
+        let r1 = MultiTenantDriver::new(&apps, sharded).run_zenix(&a);
+        let r2 = MultiTenantDriver::new(&apps, sharded).run_zenix(&a);
+        assert_eq!(r1.digest, r2.digest);
+        assert_eq!(r1.completed + r1.failed, 80);
+        assert!(
+            r1.route_fast_hits + r1.route_scans >= 80,
+            "every admission attempt routes through the global scheduler: {} + {}",
+            r1.route_fast_hits,
+            r1.route_scans
+        );
     }
 
     #[test]

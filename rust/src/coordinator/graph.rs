@@ -17,13 +17,16 @@ pub struct NodeId(pub usize);
 /// What a node stands for (index into the program's spec tables).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeKind {
+    /// A `@compute` site: index into `program.computes`.
     Compute(usize),
+    /// A `@data` site: index into `program.data`.
     Data(usize),
 }
 
 /// The resource graph of one application.
 #[derive(Debug, Clone)]
 pub struct ResourceGraph {
+    /// The annotated program this graph was derived from.
     pub program: Program,
     /// node ids: computes first (same order as program.computes), then
     /// data nodes (same order as program.data).
@@ -111,22 +114,27 @@ impl ResourceGraph {
         })
     }
 
+    /// Number of compute nodes (the first `n_compute` node ids).
     pub fn n_compute(&self) -> usize {
         self.n_compute
     }
 
+    /// Number of data nodes (node ids after the computes).
     pub fn n_data(&self) -> usize {
         self.n_data
     }
 
+    /// Node id of compute index `i`.
     pub fn compute_node(&self, i: usize) -> NodeId {
         NodeId(i)
     }
 
+    /// Node id of data index `d`.
     pub fn data_node(&self, d: usize) -> NodeId {
         NodeId(self.n_compute + d)
     }
 
+    /// Resolve a node id back to its compute/data index.
     pub fn kind(&self, id: NodeId) -> NodeKind {
         if id.0 < self.n_compute {
             NodeKind::Compute(id.0)

@@ -36,6 +36,9 @@ impl Default for Profile {
 }
 
 impl Profile {
+    /// Profile with the given per-observation `decay` factor and
+    /// retention window `cap` (oldest observations are dropped past
+    /// it; their residual weight is ≤ `decay^cap`).
     pub fn new(decay: f64, cap: usize) -> Self {
         Self {
             obs: std::collections::VecDeque::new(),
@@ -66,6 +69,7 @@ impl Profile {
         self.decay.powi((self.seq - 1 - seq) as i32)
     }
 
+    /// Observations currently retained (saturates at the window cap).
     pub fn len(&self) -> usize {
         self.obs.len()
     }
@@ -78,6 +82,7 @@ impl Profile {
         self.seq
     }
 
+    /// True when nothing has been recorded (or everything aged out).
     pub fn is_empty(&self) -> bool {
         self.obs.is_empty()
     }
@@ -158,10 +163,15 @@ pub struct ProfileStore {
 }
 
 impl ProfileStore {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one observation for `(app, node, metric)`, creating the
+    /// profile on first sight. Allocates the owned app key only the
+    /// first time an app is seen — steady-state recording is
+    /// allocation-free.
     pub fn record(&mut self, app: &str, node: usize, metric: Metric, value: f64) {
         // allocate the owned app key only on first sight of the app
         if !self.profiles.contains_key(app) {
@@ -175,10 +185,14 @@ impl ProfileStore {
             .record(value);
     }
 
+    /// The profile recorded for `(app, node, metric)`, if any. Borrows
+    /// the `&str` key directly — no per-lookup allocation.
     pub fn profile(&self, app: &str, node: usize, metric: Metric) -> Option<&Profile> {
         self.profiles.get(app)?.get(&(node, metric))
     }
 
+    /// Weighted quantile of one profile (`None` when nothing is
+    /// recorded); see [`Profile::quantile`].
     pub fn quantile(&self, app: &str, node: usize, metric: Metric, q: f64) -> Option<f64> {
         self.profile(app, node, metric)?.quantile(q)
     }

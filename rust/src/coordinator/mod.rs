@@ -16,7 +16,8 @@
 //!   invocations from N apps interleaved on one shared platform over
 //!   simulated time (the Fig 22/26/29 load scenario).
 //! - [`admission`] — admission control for the driver: deferred-arrival
-//!   queueing policies, burst arrival models (MMPP / rate replay), and
+//!   queueing policies (FIFO, fair-share, weighted fair-share,
+//!   SLO-deadline EDF), burst arrival models (MMPP / rate replay), and
 //!   the rejected/aborted/timed-out accounting split.
 
 // Modules below that have not yet had their rustdoc sweep are shielded
@@ -29,13 +30,10 @@ pub mod driver;
 pub mod exec;
 #[allow(missing_docs)]
 pub mod failure;
-#[allow(missing_docs)]
 pub mod graph;
-#[allow(missing_docs)]
 pub mod history;
 #[allow(missing_docs)]
 pub mod msglog;
-#[allow(missing_docs)]
 pub mod placement;
 pub mod scheduler;
 #[allow(missing_docs)]
@@ -43,6 +41,7 @@ pub mod sync;
 
 pub use admission::{AdmissionOutcome, AdmissionPolicy, ArrivalModel, DeferredQueues};
 pub use driver::{DriverConfig, DriverReport, MultiTenantDriver, Schedule, TenantApp};
+pub use scheduler::RouteStats;
 pub use exec::{OngoingInvocation, Platform, ZenixConfig};
 pub use graph::{NodeId, NodeKind, ResourceGraph};
 pub use history::ProfileStore;

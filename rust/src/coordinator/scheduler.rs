@@ -60,6 +60,24 @@ pub struct GlobalScheduler {
     compilations: HashMap<(&'static str, Compilation), bool>,
     /// Round-robin cursor for tie-breaking equally-loaded racks.
     cursor: usize,
+    /// Routing decisions answered by the best-rack cache fast path /
+    /// by the O(racks) fallback scan (multi-rack sharding telemetry;
+    /// the driver surfaces both per run).
+    fast_hits: u64,
+    scans: u64,
+}
+
+/// How the global scheduler answered its routing decisions: via the
+/// incremental best-rack cache (`fast_hits`, O(best set)) or the
+/// O(racks) fallback scan (`scans` — stale cache, or no best-magnitude
+/// rack fit the estimate). The multi-rack sharding sweep reads this to
+/// show the cache holds up as rack count grows.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouteStats {
+    /// Decisions served by the best-rack cache fast path.
+    pub fast_hits: u64,
+    /// Decisions that fell back to the full rack scan.
+    pub scans: u64,
 }
 
 impl GlobalScheduler {
@@ -73,7 +91,15 @@ impl GlobalScheduler {
             best_stale: true,
             compilations: HashMap::new(),
             cursor: 0,
+            fast_hits: 0,
+            scans: 0,
         }
+    }
+
+    /// Routing-path telemetry: fast-path vs full-scan decision counts
+    /// since construction.
+    pub fn route_stats(&self) -> RouteStats {
+        RouteStats { fast_hits: self.fast_hits, scans: self.scans }
     }
 
     /// Refresh the rough view for one rack (rack schedulers push this).
@@ -144,8 +170,10 @@ impl GlobalScheduler {
             }
         }
         let chosen = if let Some((_, r)) = fast {
+            self.fast_hits += 1;
             r
         } else {
+            self.scans += 1;
             // Slow path: no best-magnitude rack fits (or none exists):
             // full scan, carrying the incumbent's fit in the fold state.
             let mut best: Option<(usize, f64, bool)> = None; // (rack, mag, fits)
@@ -349,6 +377,25 @@ mod tests {
         g.update_rack(RackId(1), Resources::new(8.0, 32000.0));
         let got = g.route(Resources::new(4.0, 16000.0));
         assert_eq!(got, RackId(1));
+    }
+
+    #[test]
+    fn route_stats_split_fast_path_from_scans() {
+        let mut g = GlobalScheduler::new(2);
+        g.update_rack(RackId(0), Resources::new(100.0, 100000.0));
+        g.update_rack(RackId(1), Resources::new(100.0, 100000.0));
+        assert_eq!(g.route_stats(), RouteStats::default());
+        // equal fitting racks ride the cache fast path (the lazy
+        // rebuild of a stale cache does not count as a scan)
+        let _ = g.route(Resources::new(1.0, 1.0));
+        let _ = g.route(Resources::new(1.0, 1.0));
+        let _ = g.route(Resources::new(1.0, 1.0));
+        let s = g.route_stats();
+        assert_eq!(s.fast_hits + s.scans, 3);
+        assert!(s.fast_hits >= 2, "equal racks must ride the cache: {s:?}");
+        // an unfittable estimate forces the fallback scan
+        let _ = g.route(Resources::new(1e6, 1e9));
+        assert_eq!(g.route_stats().scans, s.scans + 1);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 pub mod admission_figs;
 pub mod lr_figs;
 pub mod platform_figs;
+pub mod sharding_figs;
 pub mod tpcds_figs;
 pub mod video_figs;
 

@@ -1,0 +1,113 @@
+//! Multi-rack sharding sweep: the identical multi-tenant replay across
+//! rack fan-outs at fixed total capacity.
+//!
+//! The paper's scalability story (§5.3.1, §6.2) is that two-level
+//! scheduling keeps sub-server allocation cheap as the fleet shards
+//! into racks: the global scheduler routes on a rough per-rack view
+//! (here backed by the incremental best-rack cache) while rack
+//! schedulers keep the exact per-server state (here the per-rack
+//! placement index), and the dirty-rack feed keeps the rough view
+//! fresh in O(changed racks). This sweep holds the workload and the
+//! total capacity fixed — [`DriverConfig::with_racks`] reshards the
+//! same servers into r ∈ {1, 2, 4, 8} racks — so every difference
+//! between rows is attributable to sharding alone: placement spill
+//! between racks, routing cache behavior
+//! ([`crate::coordinator::RouteStats`]), and any fairness drift
+//! (Jain's index over per-tenant completions).
+//!
+//! The r = 1 row is definitionally the unsharded cluster: its digest
+//! must equal the plain single-rack replay bit-for-bit
+//! (`rust/tests/integration.rs` pins that, plus per-seed digest
+//! stability of the sharded rows).
+
+use crate::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use crate::trace::Archetype;
+
+/// One rack-count cell of the sharding sweep.
+#[derive(Debug, Clone)]
+pub struct ShardingSweepRow {
+    /// Rack fan-out of this cell.
+    pub racks: usize,
+    /// Servers per rack (total capacity is fixed across the sweep).
+    pub servers_per_rack: usize,
+    /// Invocations that ran to completion.
+    pub completed: usize,
+    /// Arrivals that never completed (rejected + aborted + timed out).
+    pub failed: usize,
+    /// End of the last event (simulated ms).
+    pub makespan_ms: f64,
+    /// Fleet allocated memory over the run (GB·s).
+    pub alloc_gb_s: f64,
+    /// Jain's fairness index over per-tenant completions.
+    pub jain_completion: f64,
+    /// Global-scheduler routing decisions served by the best-rack
+    /// cache.
+    pub route_fast_hits: u64,
+    /// Routing decisions that fell back to the O(racks) scan.
+    pub route_scans: u64,
+    /// The replay's order-stable digest (per-seed determinism pin).
+    pub digest: u64,
+}
+
+/// Replay the identical `standard_mix` schedule across rack fan-outs
+/// at fixed total capacity (the schedule is cluster-independent, so
+/// one generation serves every row). `rack_counts` entries must divide
+/// the base cluster's server count — the canonical sweep is
+/// `&[1, 2, 4, 8]` over the 8-server paper testbed.
+pub fn fig_sharding_racks(
+    apps: usize,
+    invocations: usize,
+    seed: u64,
+    rack_counts: &[usize],
+) -> Vec<ShardingSweepRow> {
+    let mix = standard_mix(apps, Archetype::Average);
+    let base = DriverConfig { seed, invocations, ..DriverConfig::default() };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let mut rows = Vec::with_capacity(rack_counts.len());
+    for &racks in rack_counts {
+        let cfg = base.with_racks(racks);
+        let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+        rows.push(ShardingSweepRow {
+            racks,
+            servers_per_rack: cfg.cluster.servers_per_rack,
+            completed: r.completed,
+            failed: r.failed,
+            makespan_ms: r.makespan_ms,
+            alloc_gb_s: r.alloc_gb_s(),
+            jain_completion: r.jain_completion,
+            route_fast_hits: r.route_fast_hits,
+            route_scans: r.route_scans,
+            digest: r.digest,
+        });
+    }
+    rows
+}
+
+/// Render the sweep as a figure-row text block.
+pub fn render_sharding(title: &str, rows: &[ShardingSweepRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<6} {:>8} {:>10} {:>7} {:>12} {:>10} {:>6} {:>11} {:>7}",
+        "racks", "srv/rack", "completed", "failed", "makespan s", "mem GB·s", "jain", "route-fast", "scans"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<6} {:>8} {:>10} {:>7} {:>12.1} {:>10.1} {:>6.3} {:>11} {:>7}",
+            r.racks,
+            r.servers_per_rack,
+            r.completed,
+            r.failed,
+            r.makespan_ms / 1000.0,
+            r.alloc_gb_s,
+            r.jain_completion,
+            r.route_fast_hits,
+            r.route_scans,
+        );
+    }
+    out
+}

@@ -1,0 +1,149 @@
+//! Multi-tenant fairness indices for the driver's per-tenant outcomes.
+//!
+//! The paper's resource-centric pitch is not only that sub-server
+//! allocation is *efficient* at scale but that the shared capacity is
+//! multiplexed *fairly* when tenants contend (PAPER.md §5–§7; the
+//! Berkeley serverless agenda names multiplexing fairness a defining
+//! platform obligation). This module provides the measurement side:
+//!
+//! - [`jains_index`] / [`JainAccumulator`] — Jain's fairness index
+//!   J(x) = (Σxᵢ)² / (n·Σxᵢ²) over per-tenant allocation metrics
+//!   (completion rates, goodput/demand ratios). J is scale-invariant
+//!   (J(c·x) = J(x), so counts and rates give the same index),
+//!   permutation-invariant, 1 when every tenant receives the same
+//!   share, and 1/n when one tenant receives everything — the
+//!   properties `rust/tests/proptests.rs` pins.
+//! - [`goodput_ratio`] — the per-tenant completed/demand ratio the
+//!   driver feeds into the demand-normalized index (the right view
+//!   when tenants *ask* for asymmetric shares on purpose).
+//!
+//! Everything here is streaming and O(1) per tenant: the accumulator
+//! keeps three scalars, so folding a fleet of any size costs O(apps)
+//! with no sample storage — the same budget discipline as
+//! [`super::streaming`].
+
+/// Streaming accumulator for Jain's fairness index: fold one value per
+/// tenant, read the index at the end. O(1) memory (count, Σx, Σx²).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JainAccumulator {
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl JainAccumulator {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one tenant's allocation metric in. Negative inputs are
+    /// clamped to 0 (an allocation metric cannot be negative; clamping
+    /// keeps the index's [1/n, 1] range intact under float noise).
+    pub fn push(&mut self, x: f64) {
+        let x = x.max(0.0);
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+    }
+
+    /// Tenants folded so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Jain's index over the folded values: (Σx)²/(n·Σx²), in
+    /// [1/n, 1]. By convention the index of an empty set or an all-zero
+    /// allocation is 1.0 — every tenant holds the identical (empty)
+    /// share, which is perfectly fair, and it keeps the metric
+    /// well-defined for idle replays.
+    pub fn value(&self) -> f64 {
+        if self.n == 0 || self.sum_sq <= 0.0 {
+            return 1.0;
+        }
+        (self.sum * self.sum) / (self.n as f64 * self.sum_sq)
+    }
+}
+
+/// Jain's fairness index of one allocation vector (see
+/// [`JainAccumulator::value`] for the conventions).
+pub fn jains_index(values: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = JainAccumulator::new();
+    for v in values {
+        acc.push(v);
+    }
+    acc.value()
+}
+
+/// A tenant's goodput/demand ratio: the fraction of its *scheduled*
+/// work it actually completed. Tenants with zero demand are vacuously
+/// fully served (ratio 1.0), so they do not drag the demand-normalized
+/// index of the tenants that did contend.
+pub fn goodput_ratio(completed: usize, scheduled: usize) -> f64 {
+    if scheduled == 0 {
+        1.0
+    } else {
+        completed as f64 / scheduled as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_shares_are_perfectly_fair() {
+        assert_eq!(jains_index([5.0, 5.0, 5.0, 5.0]), 1.0);
+        assert_eq!(jains_index([0.0, 0.0]), 1.0, "all-zero convention");
+        assert_eq!(jains_index(std::iter::empty()), 1.0, "empty convention");
+    }
+
+    #[test]
+    fn monopoly_hits_the_lower_bound() {
+        let n = 8usize;
+        let mut xs = vec![0.0; n];
+        xs[3] = 42.0;
+        let j = jains_index(xs);
+        assert!((j - 1.0 / n as f64).abs() < 1e-12, "monopoly J = {j}");
+    }
+
+    #[test]
+    fn index_is_scale_invariant() {
+        let a = jains_index([1.0, 2.0, 3.0]);
+        let b = jains_index([10.0, 20.0, 30.0]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_to_one_skew_matches_closed_form() {
+        // J(2, 1) = 9 / (2 * 5) = 0.9
+        assert!((jains_index([2.0, 1.0]) - 0.9).abs() < 1e-12);
+        // J(6, 1) = 49 / (2 * 37) ≈ 0.662 — the FIFO-under-skew shape
+        assert!((jains_index([6.0, 1.0]) - 49.0 / 74.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_matches_batch_fn() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.2];
+        let mut acc = JainAccumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert_eq!(acc.count(), 5);
+        assert_eq!(acc.value(), jains_index(xs));
+    }
+
+    #[test]
+    fn negative_inputs_clamp_to_zero() {
+        let j = jains_index([-1.0, 2.0]);
+        assert_eq!(j, jains_index([0.0, 2.0]));
+        assert!(j >= 0.5 - 1e-12 && j <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn goodput_ratio_conventions() {
+        assert_eq!(goodput_ratio(0, 0), 1.0, "no demand: vacuously served");
+        assert_eq!(goodput_ratio(3, 4), 0.75);
+        assert_eq!(goodput_ratio(0, 10), 0.0);
+    }
+}

@@ -7,8 +7,12 @@
 //!
 //! [`streaming`] holds the O(1)-memory aggregation primitives
 //! (streaming moments, P² quantiles) the multi-tenant driver uses so
-//! its report memory is O(apps), not O(invocations).
+//! its report memory is O(apps), not O(invocations); [`fairness`]
+//! holds the multi-tenant fairness indices (Jain's index over
+//! per-tenant completion rates and goodput/demand ratios) the driver
+//! surfaces per run.
 
+pub mod fairness;
 pub mod streaming;
 
 use std::borrow::Cow;

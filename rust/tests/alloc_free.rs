@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use zenix::apps::{lr, Invocation};
 use zenix::cluster::ClusterSpec;
+use zenix::coordinator::admission::AdmissionPolicy;
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
 use zenix::coordinator::graph::ResourceGraph;
 use zenix::coordinator::{Platform, ZenixConfig};
@@ -113,4 +114,50 @@ fn steady_state_arrivals_allocate_nothing() {
         "driver loop marginal allocations per invocation too high: \
          {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
     );
+
+    // ---- phase 3: queued-admission steady state ---------------------
+    // ISSUE 5 satellite: with the deferred queues engaged under a
+    // saturating schedule, a steady-state invocation still allocates
+    // nothing once the slot pool is warm — parking, drains, timeout
+    // expiry (head-scan FIFO and full-scan Deadline EDF alike) and the
+    // DRR bookkeeping all recycle through the intrusive free lists, so
+    // the marginal allocation count per extra scheduled invocation
+    // stays below one.
+    for (label, admission) in [
+        (
+            "fifo",
+            AdmissionPolicy::FifoQueue { max_wait_ms: 30_000.0, max_depth: 64 },
+        ),
+        (
+            "deadline",
+            AdmissionPolicy::Deadline { deadline_ms: 20_000.0, max_depth: 64 },
+        ),
+    ] {
+        let cfg_small = DriverConfig {
+            seed: 5,
+            invocations: 2000,
+            mean_iat_ms: 120.0, // saturating: the queues must engage
+            exact_stats: false,
+            admission,
+            ..DriverConfig::default()
+        };
+        let cfg_big = DriverConfig { invocations: 4000, ..cfg_small };
+        let d_small = MultiTenantDriver::new(&apps, cfg_small);
+        let d_big = MultiTenantDriver::new(&apps, cfg_big);
+        let s_small = d_small.schedule();
+        let s_big = d_big.schedule();
+        let (rep_small, a_small) = counted(|| d_small.run_zenix(&s_small));
+        let (rep_big, a_big) = counted(|| d_big.run_zenix(&s_big));
+        assert!(
+            rep_small.queued > 0 && rep_big.queued > 0,
+            "{label}: the schedule must engage the deferred queue for this gate to bind"
+        );
+        std::hint::black_box(&rep_big);
+        let marginal = a_big.saturating_sub(a_small) as f64 / 2000.0;
+        assert!(
+            marginal < 1.0,
+            "{label}: queued-admission marginal allocations per invocation too high: \
+             {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
+        );
+    }
 }

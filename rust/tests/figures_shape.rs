@@ -3,7 +3,9 @@
 //! crossovers fall — asserted as tests (DESIGN.md §5).
 
 use zenix::apps::lr;
-use zenix::figures::{admission_figs, lr_figs, platform_figs, tpcds_figs, video_figs};
+use zenix::figures::{
+    admission_figs, lr_figs, platform_figs, sharding_figs, tpcds_figs, video_figs,
+};
 
 // ---- §6.1.1 TPC-DS ------------------------------------------------------
 
@@ -279,6 +281,52 @@ fn fig30_zenix_higher_utilization_and_throughput() {
     let ow = rows.iter().find(|r| r.0 == "openwhisk").unwrap();
     assert!(zenix.2 > ow.2, "utilization {} vs {}", zenix.2, ow.2);
     assert!(zenix.1 < ow.1, "makespan {} vs {}", zenix.1, ow.1);
+}
+
+// ---- multi-rack sharding sweep ------------------------------------------
+
+#[test]
+fn sharding_sweep_fixed_capacity_deterministic_and_rendered() {
+    let rack_counts = [1usize, 2, 4, 8];
+    let rows = sharding_figs::fig_sharding_racks(6, 160, 7, &rack_counts);
+    assert_eq!(rows.len(), 4);
+    let single = &rows[0];
+    assert_eq!(single.racks, 1);
+    for (r, &racks) in rows.iter().zip(&rack_counts) {
+        assert_eq!(r.racks, racks);
+        // fixed total capacity: the paper testbed's 8 servers resharded
+        assert_eq!(r.racks * r.servers_per_rack, 8, "racks={racks}");
+        assert_eq!(r.completed + r.failed, 160, "racks={racks}: conservation");
+        // Jain rides along and stays in range
+        assert!(
+            r.jain_completion >= 1.0 / 6.0 - 1e-9 && r.jain_completion <= 1.0 + 1e-9,
+            "racks={racks}: jain {}",
+            r.jain_completion
+        );
+        // every arrival routes through the global scheduler at least once
+        assert!(
+            r.route_fast_hits + r.route_scans >= 160,
+            "racks={racks}: {} + {} routing decisions",
+            r.route_fast_hits,
+            r.route_scans
+        );
+        // sharding at fixed capacity must not collapse the fleet
+        // (inter-rack spill keeps stranded capacity reachable)
+        assert!(
+            r.completed * 2 >= single.completed,
+            "racks={racks}: completions collapsed ({} vs {})",
+            r.completed,
+            single.completed
+        );
+    }
+    // per-seed digest stability of every sharded cell
+    let again = sharding_figs::fig_sharding_racks(6, 160, 7, &rack_counts);
+    for (a, b) in rows.iter().zip(&again) {
+        assert_eq!(a.digest, b.digest, "racks={}: sweep must be digest-stable", a.racks);
+    }
+    // the renderer lists every cell (header + one line per row)
+    let text = sharding_figs::render_sharding("sharding", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
 }
 
 // ---- admission control / offered-load sweep -----------------------------

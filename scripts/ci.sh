@@ -85,6 +85,32 @@ if (( frej + fto >= rej )); then
 fi
 echo "admission smoke passed: reject=${rej} vs fifo rejected=${frej}+timed_out=${fto}"
 
+echo "== driver smoke: fairness (fair-share Jain index must strictly beat FIFO under skewed overload)"
+# Weighted asymmetric overload: tenant 0 carries 8x the arrival weight
+# of everyone else on a saturating bursty schedule. Global-oldest-first
+# FIFO mirrors the arrival monopoly in its completions; the fair-share
+# round-robin drain must report a strictly higher Jain index over
+# per-tenant completions (ISSUE 5 acceptance).
+fair_args="--apps 4 --invocations 2000 --seed 7 --mean-iat 30 --burst 8 --skew 8 --max-wait-ms 8000 --max-depth 256"
+fifo_fair_out=$(cargo run --release --example multi_tenant -- $fair_args --admission fifo)
+fair_out=$(cargo run --release --example multi_tenant -- $fair_args --admission fair)
+fifo_q=$(grep -oE 'queued=[0-9]+' <<<"$fifo_fair_out" | head -1 | tr -dc '0-9' || true)
+fifo_jain=$(grep -oE 'completion=[0-9.]+' <<<"$fifo_fair_out" | head -1 | cut -d= -f2 || true)
+fair_jain=$(grep -oE 'completion=[0-9.]+' <<<"$fair_out" | head -1 | cut -d= -f2 || true)
+if [[ -z "$fifo_jain" || -z "$fair_jain" || -z "$fifo_q" ]]; then
+    echo "FAIL: could not parse the jain:/admission: lines from the driver output" >&2
+    exit 1
+fi
+if (( fifo_q == 0 )); then
+    echo "FAIL: fairness smoke never engaged the queue — the load no longer saturates; retune fair_args" >&2
+    exit 1
+fi
+awk -v f="$fair_jain" -v q="$fifo_jain" 'BEGIN { exit (f + 0 > q + 0) ? 0 : 1 }' || {
+    echo "FAIL: fair-share Jain index ${fair_jain} must strictly beat FIFO ${fifo_jain} under skewed overload" >&2
+    exit 1
+}
+echo "fairness smoke passed: jain(fair)=${fair_jain} > jain(fifo)=${fifo_jain} under 8x skew"
+
 echo "== driver smoke: 100k invocations, streaming stats, wall-clock budget"
 t0=$SECONDS
 drv100k=$(cargo run --release --example multi_tenant -- \
@@ -148,6 +174,21 @@ if [[ -z "$queued_rate" ]]; then
     exit 1
 fi
 echo "queued driver per-invocation rate: ${queued_rate} µs (admission retries included)"
+
+# ISSUE 5: the multi-rack 100k row (8 racks × 1 server, fixed total
+# capacity) must be present, and sharding must stay within 1.5x of the
+# single-rack per-invocation cost — the two-level scheduler's
+# incremental feeds, not O(racks) rescans, carry the fan-out.
+multirack_rate=$(grep -E '100k-invocation 8-rack driver' "$out" | grep -oE '[0-9]+(\.[0-9]+)? µs/invocation' | head -1 | tr -dc '0-9.' || true)
+if [[ -z "$multirack_rate" ]]; then
+    echo "FAIL: could not find the 100k-invocation 8-rack (driver_100k_multirack) row" >&2
+    exit 1
+fi
+awk -v m="$multirack_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 1.5 * (s + 0)) ? 0 : 1 }' || {
+    echo "FAIL: 8-rack driver at ${multirack_rate} µs/invocation > 1.5x the single-rack ${us_per_inv} µs (sharding regression)" >&2
+    exit 1
+}
+echo "multirack driver per-invocation rate: ${multirack_rate} µs (<= 1.5x single-rack ${us_per_inv} µs)"
 
 echo "== bench smoke: hotpath (quick budget, json to repo root)"
 ZENIX_BENCH_JSON=. cargo bench --bench hotpath -- --quick
