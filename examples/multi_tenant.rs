@@ -30,6 +30,17 @@
 //!   capacity (the multi-rack sharding axis; the `routing:` line shows
 //!   how the global scheduler's best-rack cache held up).
 //!
+//! Fault injection & churn:
+//!
+//! - `--fault-rate R` injects R seeded capacity faults per simulated
+//!   minute (server crashes / transient compute crashes; add
+//!   `--rack-outage` to make the capacity faults whole-rack outages).
+//!   Struck invocations reroute through graph-cut recovery off the
+//!   reliable message log; `--repair-ms MS` sets the churn repair
+//!   delay. The `chaos:` line `scripts/ci.sh` greps reports the
+//!   faulted/recovered split and recovery latency. `--fault-rate 0`
+//!   (the default) is digest-identical to a build without the flags.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
 //! deterministic arrival schedule, and dispatches the overlapping
@@ -41,6 +52,7 @@
 
 use zenix::coordinator::admission::{AdmissionPolicy, ArrivalModel};
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use zenix::coordinator::faults::FaultConfig;
 use zenix::trace::Archetype;
 
 fn arg_value(args: &[String], i: usize, flag: &str) -> String {
@@ -65,6 +77,9 @@ fn main() {
     let mut burst: Option<f64> = None;
     let mut skew = 1.0f64;
     let mut racks = 1usize;
+    let mut fault_rate = 0.0f64;
+    let mut repair_ms = 30_000.0f64;
+    let mut rack_outage = false;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -115,6 +130,19 @@ fn main() {
             "--racks" => {
                 racks = arg_value(&args, i, "--racks").parse().expect("--racks R");
                 i += 2;
+            }
+            "--fault-rate" => {
+                fault_rate =
+                    arg_value(&args, i, "--fault-rate").parse().expect("--fault-rate R");
+                i += 2;
+            }
+            "--repair-ms" => {
+                repair_ms = arg_value(&args, i, "--repair-ms").parse().expect("--repair-ms MS");
+                i += 2;
+            }
+            "--rack-outage" => {
+                rack_outage = true;
+                i += 1;
             }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
@@ -173,6 +201,7 @@ fn main() {
         exact_stats,
         admission,
         arrivals,
+        faults: FaultConfig { rate_per_min: fault_rate, repair_ms, rack_outage },
         ..DriverConfig::default()
     }
     .with_racks(racks);
@@ -246,6 +275,16 @@ fn main() {
     println!(
         "routing: racks={racks} fast-hits={} scans={} (global-scheduler best-rack cache)",
         out.zenix.route_fast_hits, out.zenix.route_scans,
+    );
+    // parsed by scripts/ci.sh: the chaos smoke greps faulted= recovered=
+    println!(
+        "chaos: fault-rate={fault_rate} faulted={} recovered={} unrecovered={} \
+         mean-recovery-ms={:.1} p95-recovery-ms={:.1}",
+        out.zenix.faulted,
+        out.zenix.recovered,
+        out.zenix.faulted_unrecovered,
+        out.zenix.mean_recovery_ms,
+        out.zenix.p95_recovery_ms,
     );
     println!(
         "alloc-savings vs faas-static: {:.1}% (same completed work; paper reports up to 90%)",

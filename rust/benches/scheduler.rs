@@ -222,6 +222,38 @@ fn main() {
         }
     }
 
+    // ---- faulted 100k: fault injection + graph-cut recovery --------------
+    // ISSUE 6 row: the identical 100k replay under seeded chaos — 6
+    // capacity faults per simulated minute with 5 s repairs. Exercises
+    // the crash scan over the slab, graph-cut recovery rewinds off the
+    // message log, and churn-driven index rebuilds + deferred-queue
+    // retries, all on the hot path. scripts/ci.sh gates the
+    // per-invocation cost at ≤2x the fault-free driver_100k row.
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::coordinator::faults::FaultConfig;
+        use zenix::trace::Archetype;
+        let mix = standard_mix(16, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            faults: FaultConfig { rate_per_min: 6.0, repair_ms: 5_000.0, rack_outage: false },
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_faulted", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> 100k-invocation faulted driver: {:.1} µs/invocation \
+                 (6 faults/min, 5 s repairs; crash scans + graph-cut recovery on the hot path)",
+                r.mean_ns / 1e3 / 100_000.0,
+            );
+        }
+    }
+
     // ---- placement_indexed_vs_linear at 32/256/1024 servers -------------
     b.header("placement_indexed_vs_linear (availability index vs O(n) reference)");
     for &n in &[32usize, 256, 1024] {

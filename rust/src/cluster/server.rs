@@ -83,6 +83,10 @@ pub struct Server {
     /// block allocations, they only demote the server in placement
     /// decisions for other applications.
     marked: Resources,
+    /// Liveness flag for churn experiments: a downed server reports
+    /// zero availability (so placement never lands on it) while its
+    /// allocation bookkeeping stays intact for the recovery unwind.
+    up: bool,
     last_change: Millis,
     consumption: Consumption,
 }
@@ -96,19 +100,50 @@ impl Server {
             allocated: Resources::ZERO,
             used: Resources::ZERO,
             marked: Resources::ZERO,
+            up: true,
             last_change: 0.0,
             consumption: Consumption::default(),
         }
     }
 
-    /// Free resources (capacity - allocated).
+    /// Free resources (capacity - allocated). Zero while the server is
+    /// down: a crashed server never attracts placement.
     pub fn available(&self) -> Resources {
+        if !self.up {
+            return Resources::ZERO;
+        }
         self.capacity.minus(self.allocated)
     }
 
     /// Free resources after honoring low-priority marks from other apps.
     pub fn available_unmarked(&self) -> Resources {
+        if !self.up {
+            return Resources::ZERO;
+        }
         self.capacity.minus(self.allocated).minus(self.marked)
+    }
+
+    /// Liveness readout for the churn path.
+    pub fn is_up(&self) -> bool {
+        self.up
+    }
+
+    /// Take the server down at `now` (fault injection). Integrates
+    /// consumption up to the crash instant first so billing integrals
+    /// stay exact; allocations are NOT force-freed — the recovery path
+    /// unwinds in-flight invocations through their normal abort/crash
+    /// machinery so every mark, region, and used-integral is returned
+    /// through the same bookkeeping that created it.
+    pub fn fail(&mut self, now: Millis) {
+        self.integrate(now);
+        self.up = false;
+    }
+
+    /// Bring the server back up at `now` (repair). Capacity becomes
+    /// placeable again on the next index rebuild.
+    pub fn repair(&mut self, now: Millis) {
+        self.integrate(now);
+        self.up = true;
     }
 
     pub fn allocated(&self) -> Resources {
@@ -246,6 +281,27 @@ mod tests {
         assert_eq!(s.used(), Resources::new(2.0, 100.0));
         s.free(Resources::new(1.0, 50.0), 1.0);
         assert_eq!(s.used(), Resources::new(1.0, 50.0));
+    }
+
+    #[test]
+    fn downed_server_reports_zero_availability_and_keeps_integrals() {
+        let mut s = server();
+        assert!(s.try_alloc(Resources::new(8.0, 8192.0), 0.0));
+        s.fail(1000.0);
+        assert!(!s.is_up());
+        assert_eq!(s.available(), Resources::ZERO);
+        assert_eq!(s.available_unmarked(), Resources::ZERO);
+        assert!(!s.try_alloc(Resources::new(1.0, 1.0), 1500.0));
+        // the allocation survives the crash until the recovery unwind
+        assert_eq!(s.allocated(), Resources::new(8.0, 8192.0));
+        s.free(Resources::new(8.0, 8192.0), 2000.0);
+        s.repair(3000.0);
+        assert!(s.is_up());
+        assert_eq!(s.available(), s.capacity);
+        // integrals cover the downtime: 2 s at 8 cpu / 8 GB allocated
+        let c = s.consumption(3000.0);
+        assert!((c.alloc_cpu_s - 16.0).abs() < 1e-9);
+        assert!((c.alloc_mem_mb_s - 16384.0).abs() < 1e-9);
     }
 
     #[test]

@@ -245,6 +245,38 @@ impl Cluster {
         self.servers[id.0].sub_used(delta, now);
     }
 
+    // ---- churn (fault injection / repair) ------------------------------
+
+    /// Take one server down at `now` (fault injection). The index sees
+    /// zero availability for it after the rebuild this triggers, and
+    /// every rack is marked dirty so the admission-retry feed and the
+    /// global scheduler observe the capacity loss. Returns false if the
+    /// server was already down (repeat faults are idempotent).
+    pub fn fail_server(&mut self, id: ServerId, now: Millis) -> bool {
+        if !self.servers[id.0].is_up() {
+            return false;
+        }
+        self.servers[id.0].fail(now);
+        // Availability collapsed to zero: rebuild lazily via the epoch
+        // (churn is rare; O(servers) on the next query is fine) and
+        // ping the dirty-rack feed so deferred admissions re-probe.
+        self.epoch.set(self.epoch.get() + 1);
+        self.mark_all_racks_dirty();
+        true
+    }
+
+    /// Bring one server back up at `now` (repair after the configured
+    /// delay). Returns false if the server was already up.
+    pub fn repair_server(&mut self, id: ServerId, now: Millis) -> bool {
+        if self.servers[id.0].is_up() {
+            return false;
+        }
+        self.servers[id.0].repair(now);
+        self.epoch.set(self.epoch.get() + 1);
+        self.mark_all_racks_dirty();
+        true
+    }
+
     /// Run `f` against the availability index, rebuilding it first if a
     /// raw mutation made it stale.
     pub fn with_index<R>(&self, f: impl FnOnce(&PlacementIndex) -> R) -> R {
@@ -394,6 +426,23 @@ mod tests {
         let _ = c.server_mut(ServerId(0));
         c.for_each_dirty_rack(|r, _| seen.push(r.0));
         assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn failed_server_disappears_from_index_until_repair() {
+        let mut c = Cluster::new(ClusterSpec::multi_rack(2, 2));
+        // drain construction dirtiness so churn dirtiness is observable
+        c.for_each_dirty_rack(|_, _| {});
+        assert!(c.fail_server(ServerId(0), 0.0));
+        assert!(!c.fail_server(ServerId(0), 1.0), "repeat fault is a no-op");
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(32.0, 65536.0));
+        assert_eq!(c.rack_available(RackId(1)), Resources::new(64.0, 131072.0));
+        let mut seen: Vec<usize> = Vec::new();
+        c.for_each_dirty_rack(|r, _| seen.push(r.0));
+        assert_eq!(seen, vec![0, 1], "churn pings the admission-retry feed");
+        assert!(c.repair_server(ServerId(0), 10.0));
+        assert!(!c.repair_server(ServerId(0), 11.0), "repeat repair is a no-op");
+        assert_eq!(c.rack_available(RackId(0)), Resources::new(64.0, 131072.0));
     }
 
     #[test]

@@ -113,6 +113,7 @@ use super::admission::{
     AdmissionOutcome, AdmissionPolicy, ArrivalModel, DeferredQueues, RateModulator,
 };
 use super::exec::{OngoingInvocation, TimelineEv};
+use super::faults::{FaultConfig, FaultKind, FaultPlan};
 use super::graph::ResourceGraph;
 use super::{Platform, ZenixConfig};
 
@@ -178,6 +179,10 @@ pub struct DriverConfig {
     /// the digest-pinned generator; MMPP/rate-replay add bursts at the
     /// same offered load).
     pub arrivals: ArrivalModel,
+    /// Deterministic fault injection (default: chaos-free — zero
+    /// events, zero RNG draws, digest byte-identical to a build
+    /// without fault injection). See [`super::faults`].
+    pub faults: FaultConfig,
 }
 
 impl Default for DriverConfig {
@@ -191,6 +196,7 @@ impl Default for DriverConfig {
             exact_stats: true,
             admission: AdmissionPolicy::RejectImmediately,
             arrivals: ArrivalModel::Poisson,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -345,14 +351,27 @@ pub struct AppStats {
     pub early_growths_per_inv: f64,
     /// See [`AppStats::early_growths_per_inv`].
     pub late_growths_per_inv: f64,
+    /// Invocations hit by an injected fault mid-run (crashed compute
+    /// or lost data region; see [`super::faults`]).
+    pub faulted: usize,
+    /// Faulted invocations that recovered through the graph-cut replay
+    /// and ran to completion.
+    pub recovered: usize,
+    /// Faulted invocations that could not recover (re-admission after
+    /// the recovery rewind failed on the shrunken cluster). Counted
+    /// here *instead of* `aborted`, so the failure split stays a
+    /// partition of arrivals.
+    pub faulted_unrecovered: usize,
 }
 
 impl AppStats {
     /// Arrivals that never completed: admission-time rejections plus
-    /// mid-run aborts plus queue timeouts (the three distinct failure
-    /// modes the old conflated `failed` counter merged).
+    /// mid-run aborts plus queue timeouts plus unrecovered faults (the
+    /// distinct failure modes the old conflated `failed` counter
+    /// merged). Together with `completed` this partitions the app's
+    /// arrivals: `completed + failed() == scheduled`.
     pub fn failed(&self) -> usize {
-        self.rejected + self.aborted + self.timed_out
+        self.rejected + self.aborted + self.timed_out + self.faulted_unrecovered
     }
 
     /// This tenant's goodput/demand ratio: completed over scheduled
@@ -379,7 +398,11 @@ pub struct DriverReport {
     pub completed: usize,
     /// Total failed arrivals: `rejected + aborted + timed_out` (kept as
     /// one number because the digest folds it; the split fields below
-    /// are the meaningful breakdown).
+    /// are the meaningful breakdown). Unrecovered faults are *not*
+    /// folded in — they live in [`DriverReport::faulted_unrecovered`]
+    /// so the digest-folded quantity keeps its pre-chaos meaning; the
+    /// full conservation identity is `completed + rejected + aborted +
+    /// timed_out + faulted_unrecovered == arrivals`.
     pub failed: usize,
     /// Admission-time rejections across the fleet.
     pub rejected: usize,
@@ -387,6 +410,23 @@ pub struct DriverReport {
     pub aborted: usize,
     /// Deferred-queue timeouts across the fleet.
     pub timed_out: usize,
+    /// Invocations hit by an injected fault mid-run (fleet-wide;
+    /// `faulted == recovered + faulted_unrecovered`).
+    pub faulted: usize,
+    /// Faulted invocations that recovered and completed.
+    pub recovered: usize,
+    /// Faulted invocations that never completed (the recovery rewind
+    /// could not be re-placed). Disjoint from `aborted`.
+    pub faulted_unrecovered: usize,
+    /// Mean fault-to-completion latency over recovered invocations
+    /// (ms; 0 when nothing recovered).
+    pub mean_recovery_ms: f64,
+    /// P² p95 fault-to-completion latency over recovered invocations.
+    pub p95_recovery_ms: f64,
+    /// Fleet-wide P² p99 execution latency of completions (the chaos
+    /// sweep's tail-latency axis; exact-mode runs use the same
+    /// streaming estimator so the value is mode-independent).
+    pub p99_exec_ms: f64,
     /// Arrivals parked in a deferred queue at least once.
     pub queued: usize,
     /// Mean queueing delay across every queue-admitted invocation (ms).
@@ -526,6 +566,10 @@ enum EvKind {
     Timeline { slot: usize, server: ServerId, ev: TimelineEv },
     /// The in-flight wave of `slot` completes.
     WaveDone { slot: usize },
+    /// Scheduled fault/repair event `idx` of the run's [`FaultPlan`]
+    /// fires (server crash, rack outage, transient compute crash, or
+    /// a repair bringing capacity back).
+    Fault { idx: usize },
 }
 
 struct HeapEv {
@@ -701,6 +745,9 @@ struct Aggregator<'a> {
     /// denominator of the goodput fairness index).
     sched_counts: Vec<usize>,
     completed: usize,
+    /// Fleet-wide p99 execution latency (always streaming — O(1)
+    /// memory either mode, and the chaos sweep reads it per cell).
+    p99: P2Quantile,
 }
 
 impl<'a> Aggregator<'a> {
@@ -730,11 +777,19 @@ impl<'a> Aggregator<'a> {
                 }
             })
             .collect();
-        Self { apps, exact, per_app, sched_counts: sched_counts.to_vec(), completed: 0 }
+        Self {
+            apps,
+            exact,
+            per_app,
+            sched_counts: sched_counts.to_vec(),
+            completed: 0,
+            p99: P2Quantile::new(0.99),
+        }
     }
 
     fn record(&mut self, app: usize, exec_ms: f64, growths: usize, warm: bool, c: Consumption) {
         self.completed += 1;
+        self.p99.push(exec_ms);
         let a = &mut self.per_app[app];
         if self.exact {
             a.exec.push(exec_ms);
@@ -825,11 +880,17 @@ impl<'a> Aggregator<'a> {
                     cold_starts: a.cold,
                     early_growths_per_inv: early,
                     late_growths_per_inv: late,
+                    // overwritten by the driver when fault injection
+                    // is live; the closed-form baselines see no faults
+                    faulted: 0,
+                    recovered: 0,
+                    faulted_unrecovered: 0,
                 }
             })
             .collect();
 
         let completed = self.completed;
+        let p99_exec_ms = self.p99.value();
         // rejected + aborted + timed_out: identical to the old conflated
         // sum under RejectImmediately (timeouts only exist with
         // queueing), so the digest below is unchanged for the pinned
@@ -873,6 +934,13 @@ impl<'a> Aggregator<'a> {
             rejected: adm.fleet.rejected,
             aborted: adm.fleet.aborted,
             timed_out: adm.fleet.timed_out,
+            // overwritten by the driver when fault injection is live
+            faulted: 0,
+            recovered: 0,
+            faulted_unrecovered: 0,
+            mean_recovery_ms: 0.0,
+            p95_recovery_ms: 0.0,
+            p99_exec_ms,
             queued: adm.fleet.queued,
             mean_queue_delay_ms: adm.fleet.mean_queue_delay_ms,
             p95_queue_delay_ms: adm.fleet.p95_queue_delay_ms,
@@ -991,6 +1059,25 @@ impl<'a> MultiTenantDriver<'a> {
         let mut end_time = 0.0f64;
         let mut next_arrival = 0usize;
 
+        // Deterministic fault schedule: generated from its own RNG
+        // stream over the arrival horizon, pushed as ordinary heap
+        // events up front. The zero-fault default pushes nothing, so
+        // `seq` starts at 0 for the first invocation's events exactly
+        // as before — the pinned digest is byte-identical.
+        let horizon = schedule.arrivals.last().map_or(0.0, |a| a.at);
+        let fault_plan =
+            FaultPlan::generate(&self.cfg.faults, self.cfg.seed, &self.cfg.cluster, horizon);
+        for idx in 0..fault_plan.events.len() {
+            heap.push(HeapEv { at: fault_plan.events[idx].at, seq, kind: EvKind::Fault { idx } });
+            seq += 1;
+        }
+        let spr = self.cfg.cluster.servers_per_rack;
+        let mut faulted_per_app = vec![0usize; self.apps.len()];
+        let mut recovered_per_app = vec![0usize; self.apps.len()];
+        let mut faulted_unrec_per_app = vec![0usize; self.apps.len()];
+        let mut recovery_moments = StreamingMoments::new();
+        let mut recovery_p95 = P2Quantile::new(0.95);
+
         loop {
             let take_arrival = match (schedule.arrivals.get(next_arrival), heap.peek()) {
                 (Some(a), Some(h)) => a.at <= h.at,
@@ -1087,6 +1174,37 @@ impl<'a> MultiTenantDriver<'a> {
                         platform.apply_timeline(st, server, ev, at);
                     }
                 }
+                EvKind::Fault { idx } => match fault_plan.events[idx].kind {
+                    FaultKind::ServerCrash(s) => {
+                        if platform.cluster.fail_server(s, at) {
+                            crash_scan(&mut slab, &mut faulted_per_app, s, at);
+                        }
+                    }
+                    FaultKind::RackOutage(r) => {
+                        for i in r.0 * spr..(r.0 + 1) * spr {
+                            let s = ServerId(i);
+                            if platform.cluster.fail_server(s, at) {
+                                crash_scan(&mut slab, &mut faulted_per_app, s, at);
+                            }
+                        }
+                    }
+                    FaultKind::TransientCompute(s) => {
+                        // software fault: in-flight work crashes but
+                        // the server's capacity stays up
+                        crash_scan(&mut slab, &mut faulted_per_app, s, at);
+                    }
+                    FaultKind::ServerRepair(s) => {
+                        platform.cluster.repair_server(s, at);
+                    }
+                    FaultKind::RackRepair(r) => {
+                        for i in r.0 * spr..(r.0 + 1) * spr {
+                            platform.cluster.repair_server(ServerId(i), at);
+                        }
+                    }
+                    // repairs mark every rack dirty, so the deferred-
+                    // queue drain below retries parked arrivals against
+                    // the restored capacity
+                },
                 EvKind::WaveDone { slot } => {
                     let (app_idx, _sched_idx) = match slab.meta(slot) {
                         Some(m) => m,
@@ -1103,6 +1221,11 @@ impl<'a> MultiTenantDriver<'a> {
                         in_flight -= 1;
                         let warm = st.first_wave_warm().unwrap_or(false);
                         let growths = st.growths();
+                        if let Some(t_fault) = st.fault_at {
+                            recovered_per_app[app_idx] += 1;
+                            recovery_moments.push(at - t_fault);
+                            recovery_p95.push(at - t_fault);
+                        }
                         let (exec_ms, consumption) =
                             platform.finish_invocation_attrib(graph, st);
                         completed_mask.set(sched_idx);
@@ -1124,11 +1247,21 @@ impl<'a> MultiTenantDriver<'a> {
                                 seq += 1;
                             }
                             Err(_) => {
-                                // mid-run abort (already cleaned up)
+                                // mid-run abort (already cleaned up).
+                                // A fault-struck invocation that dies
+                                // here counts as an unrecovered fault,
+                                // not an abort — the failure split
+                                // stays a partition of arrivals.
                                 in_flight -= 1;
-                                aborted_per_app[app_idx] += 1;
                                 if let Some((_, _, st)) = slab.take(slot) {
+                                    if st.fault_at.is_some() {
+                                        faulted_unrec_per_app[app_idx] += 1;
+                                    } else {
+                                        aborted_per_app[app_idx] += 1;
+                                    }
                                     platform.recycle_shell(st);
+                                } else {
+                                    aborted_per_app[app_idx] += 1;
                                 }
                             }
                         }
@@ -1161,12 +1294,43 @@ impl<'a> MultiTenantDriver<'a> {
         debug_assert!(slab.high_water() <= schedule.arrivals.len());
         debug_assert_eq!(slab.live(), in_flight, "slab/in-flight accounting out of sync");
         debug_assert_eq!(in_flight, 0, "events drained with invocations still in flight");
+        #[cfg(debug_assertions)]
+        for s in platform.cluster.servers() {
+            // The cluster drains to empty: every completion, abort and
+            // fault-recovery unwind returned its allocations and marks
+            // through the hooks that created them (small float residue
+            // from out-of-order add/subtract is tolerated).
+            debug_assert!(
+                s.allocated().cpu < 1e-3 && s.allocated().mem_mb < 1e-3,
+                "server {:?} leaked allocations: {:?}",
+                s.id,
+                s.allocated()
+            );
+            debug_assert!(
+                s.marked().cpu < 1e-3 && s.marked().mem_mb < 1e-3,
+                "server {:?} leaked marks: {:?}",
+                s.id,
+                s.marked()
+            );
+        }
         let fleet = platform.cluster.total_consumption(end_time);
         let adm = queues.finish(&rejected_per_app, &aborted_per_app);
         let route = platform.global.route_stats();
         let mut report = agg.finish(label, adm, fleet, end_time, max_in_flight, completed_mask);
         report.route_fast_hits = route.fast_hits;
         report.route_scans = route.scans;
+        report.faulted = faulted_per_app.iter().sum();
+        report.recovered = recovered_per_app.iter().sum();
+        report.faulted_unrecovered = faulted_unrec_per_app.iter().sum();
+        if recovery_moments.count() > 0 {
+            report.mean_recovery_ms = recovery_moments.mean();
+            report.p95_recovery_ms = recovery_p95.value();
+        }
+        for (i, a) in report.apps.iter_mut().enumerate() {
+            a.faulted = faulted_per_app[i];
+            a.recovered = recovered_per_app[i];
+            a.faulted_unrecovered = faulted_unrec_per_app[i];
+        }
         report
     }
 
@@ -1384,6 +1548,28 @@ fn drain_pending(
     for (at, _wave_seq, server, ev) in st.pending.drain(..) {
         heap.push(HeapEv { at, seq: *seq, kind: EvKind::Timeline { slot, server, ev } });
         *seq += 1;
+    }
+}
+
+/// Mark every in-flight invocation with state on `server` as crashed:
+/// the engine's `wave_done` then routes it through `failure::plan` +
+/// the message log and rewinds to the recovery cut. `fault_at` is set
+/// at most once per invocation (a rack outage hitting two of its
+/// servers is still one fault), and an already-pending crash is not
+/// overwritten — the first recovery's rewind re-runs the wave anyway.
+fn crash_scan(slab: &mut Slab, faulted_per_app: &mut [usize], server: ServerId, at: Millis) {
+    for i in 0..slab.slots.len() {
+        if let Slot::Busy { app, st, .. } = &mut slab.slots[i] {
+            if let Some(crash) = st.crash_for_server(server) {
+                if st.fault_at.is_none() {
+                    st.fault_at = Some(at);
+                    faulted_per_app[*app] += 1;
+                }
+                if st.crash_state.is_none() {
+                    st.crash_state = Some((crash, st.wave_idx));
+                }
+            }
+        }
     }
 }
 
@@ -1920,5 +2106,110 @@ mod tests {
             let step = (arr.at / 5_000.0).floor() as u64;
             assert_eq!(step % 2, 1, "arrival at {} fell in a silent window", arr.at);
         }
+    }
+
+    // ---- fault injection & crash recovery --------------------------------
+
+    /// The fault RNG stream must not perturb anything at rate zero: a
+    /// config with fault injection *configured* but disabled
+    /// (`rate_per_min == 0.0`) is digest-identical to the default — the
+    /// zero-fault replay pushes no events and draws nothing.
+    #[test]
+    fn zero_fault_rate_is_digest_identical_to_default() {
+        let apps = standard_mix(6, Archetype::Average);
+        let base = small_cfg(7, 120);
+        let chaos_off = DriverConfig {
+            faults: FaultConfig { rate_per_min: 0.0, repair_ms: 999.0, rack_outage: true },
+            ..base
+        };
+        let driver = MultiTenantDriver::new(&apps, base);
+        let schedule = driver.schedule();
+        let a = driver.run_zenix(&schedule);
+        let b = MultiTenantDriver::new(&apps, chaos_off).run_zenix(&schedule);
+        assert_eq!(a.digest, b.digest, "zero-rate faults must not perturb the replay");
+        assert_eq!(b.faulted, 0);
+        assert_eq!(b.recovered, 0);
+        assert_eq!(b.faulted_unrecovered, 0);
+    }
+
+    /// Under live fault injection the failure split stays a partition
+    /// of arrivals (`completed + rejected + aborted + timed_out +
+    /// faulted_unrecovered == n`), faults split exactly into recovered
+    /// vs unrecovered, and the faulted replay is digest-stable per
+    /// seed.
+    #[test]
+    fn fault_injection_conserves_arrivals_and_is_digest_stable() {
+        let apps = standard_mix(6, Archetype::Average);
+        let cfg = DriverConfig {
+            faults: FaultConfig { rate_per_min: 10.0, repair_ms: 5_000.0, rack_outage: false },
+            ..small_cfg(7, 200)
+        };
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        assert!(r.faulted > 0, "10 faults/min over this horizon must hit something");
+        assert_eq!(r.faulted, r.recovered + r.faulted_unrecovered);
+        assert_eq!(
+            r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered,
+            200,
+            "fault accounting must partition arrivals"
+        );
+        assert!(r.recovered > 0, "graph-cut recovery must complete some faulted work");
+        if r.recovered > 0 {
+            assert!(r.mean_recovery_ms > 0.0);
+            assert!(r.p95_recovery_ms > 0.0);
+        }
+        // per-app sums equal the fleet counters
+        let sum = |f: fn(&AppStats) -> usize| r.apps.iter().map(f).sum::<usize>();
+        assert_eq!(sum(|a| a.faulted), r.faulted);
+        assert_eq!(sum(|a| a.recovered), r.recovered);
+        assert_eq!(sum(|a| a.faulted_unrecovered), r.faulted_unrecovered);
+        for a in &r.apps {
+            assert_eq!(a.completed + a.failed(), a.scheduled, "{}", a.name);
+            assert_eq!(a.faulted, a.recovered + a.faulted_unrecovered, "{}", a.name);
+        }
+        let r2 = driver.run_zenix(&schedule);
+        assert_eq!(r.digest, r2.digest, "faulted replay must be digest-stable");
+        assert_eq!(r.faulted, r2.faulted);
+        assert_eq!(r.recovered, r2.recovered);
+    }
+
+    /// A rack outage is a *correlated* failure: one fault event fans
+    /// out over every server in the rack and can strike several
+    /// in-flight invocations at once. Scan a few seeds until one run
+    /// shows a multi-invocation fan-out; conservation must hold in
+    /// every scanned run.
+    #[test]
+    fn rack_outage_fans_out_over_multiple_invocations() {
+        let apps = standard_mix(6, Archetype::Average);
+        let mut saw_fanout = false;
+        for seed in 0..12u64 {
+            let cfg = DriverConfig {
+                faults: FaultConfig {
+                    rate_per_min: 12.0,
+                    repair_ms: 4_000.0,
+                    rack_outage: true,
+                },
+                ..small_cfg(seed, 150)
+            }
+            .with_racks(2);
+            let driver = MultiTenantDriver::new(&apps, cfg);
+            let schedule = driver.schedule();
+            let r = driver.run_zenix(&schedule);
+            assert_eq!(
+                r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered,
+                150,
+                "seed {seed}: conservation under rack outages"
+            );
+            assert_eq!(r.faulted, r.recovered + r.faulted_unrecovered, "seed {seed}");
+            if r.faulted >= 2 {
+                saw_fanout = true;
+                break;
+            }
+        }
+        assert!(
+            saw_fanout,
+            "no scanned seed produced a multi-invocation rack-outage fan-out"
+        );
     }
 }

@@ -276,6 +276,11 @@ pub struct OngoingInvocation {
     pub(crate) growth_count: usize,
     /// Whether wave 0 hit the warm pool (None before wave 0 ran).
     pub(crate) first_wave_warm: Option<bool>,
+    /// Simulated instant the driver's fault injector marked this
+    /// invocation as hit (None when unaffected). Set at most once;
+    /// completion then counts as a recovery and the delta to the
+    /// completion instant is the recovery latency.
+    pub(crate) fault_at: Option<Millis>,
 }
 
 impl OngoingInvocation {
@@ -312,6 +317,7 @@ impl OngoingInvocation {
             data_track: Vec::new(),
             growth_count: 0,
             first_wave_warm: None,
+            fault_at: None,
         }
     }
 
@@ -358,6 +364,7 @@ impl OngoingInvocation {
         self.attrib = Consumption::default();
         self.growth_count = 0;
         self.first_wave_warm = None;
+        self.fault_at = None;
     }
 
     /// Simulated time at which the wave in flight completes.
@@ -378,6 +385,29 @@ impl OngoingInvocation {
     /// Whether the first environment hit the warm pool.
     pub fn first_wave_warm(&self) -> Option<bool> {
         self.first_wave_warm
+    }
+
+    /// Map a crashed `server` onto this invocation's execution state:
+    /// a current-wave compute placed there crashes as
+    /// [`Crash::Compute`]; else a data region homed there crashes as
+    /// [`Crash::DataRegion`]; `None` when the invocation has no state
+    /// on the server (regions elsewhere are treated as durable /
+    /// disaggregated, per the faults module's modeling note).
+    pub(crate) fn crash_for_server(&self, server: ServerId) -> Option<Crash> {
+        if self.wave_idx < self.n_waves() {
+            for k in 0..self.wave_len(self.wave_idx) {
+                let c = self.wave_comp(self.wave_idx, k);
+                if self.comp_server[c] == Some(server) {
+                    return Some(Crash::Compute(c));
+                }
+            }
+        }
+        for (d, home) in self.data_home.iter().enumerate() {
+            if *home == Some(server) {
+                return Some(Crash::DataRegion(d));
+            }
+        }
+        None
     }
 
     fn n_waves(&self) -> usize {

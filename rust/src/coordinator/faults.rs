@@ -1,0 +1,224 @@
+//! Deterministic fault injection: the seeded chaos schedule the
+//! multi-tenant driver replays alongside its arrival schedule.
+//!
+//! A [`FaultPlan`] is generated once per run from `DriverConfig::seed`
+//! and the cluster shape, then consumed by the driver event loop as
+//! ordinary heap events. Three fault kinds exist:
+//!
+//! - **Server crash** — the server goes down (`Cluster::fail_server`),
+//!   every in-flight invocation with a compute running or a data
+//!   region homed there takes a [`Crash`] and recovers through
+//!   `failure::plan` + the message log; a paired repair event restores
+//!   the capacity after `FaultConfig::repair_ms`.
+//! - **Rack outage** — the same, fanned out over every server in one
+//!   rack (correlated failure), with a paired rack repair.
+//! - **Transient compute crash** — a software fault: one server's
+//!   in-flight work crashes and recovers, but the server itself stays
+//!   up (no capacity change, no repair event).
+//!
+//! # Determinism
+//!
+//! The plan draws from a *dedicated* RNG stream
+//! (`seed ^ 0xFA17_7E57_D15A_57E5`), so enabling faults never perturbs
+//! the arrival/scale streams. At `rate_per_min == 0.0` the generator
+//! returns an empty plan **without constructing an RNG or drawing at
+//! all**, and the driver pushes no heap events — the zero-fault replay
+//! is byte-identical (same event sequence, same digest) to a build
+//! that predates fault injection.
+//!
+//! # Modeling note
+//!
+//! A downed server maps onto an affected invocation as
+//! `Crash::Compute` of a current-wave component placed there, else
+//! `Crash::DataRegion` of a region homed there. Regions the plan does
+//! not name are treated as durable (disaggregated or already logged),
+//! matching the paper's §5.3.2 recovery-cut semantics.
+
+use crate::cluster::clock::Millis;
+use crate::cluster::{ClusterSpec, RackId, ServerId};
+use crate::util::rng::Rng;
+
+/// XOR'd into `DriverConfig::seed` to derive the fault RNG stream.
+const FAULT_STREAM: u64 = 0xFA17_7E57_D15A_57E5;
+
+/// Fault-schedule axis on `DriverConfig`. The default is chaos-free
+/// and draws nothing from any RNG, preserving the pinned digest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Mean fault events per simulated minute (Poisson process over
+    /// the arrival horizon). `0.0` disables fault injection entirely.
+    pub rate_per_min: f64,
+    /// Delay before a crashed server (or rack) comes back up.
+    pub repair_ms: f64,
+    /// When true, capacity faults take out a whole rack (correlated
+    /// failure) instead of a single server.
+    pub rack_outage: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { rate_per_min: 0.0, repair_ms: 30_000.0, rack_outage: false }
+    }
+}
+
+/// One scheduled fault (or repair) event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Take one server down; in-flight work there crashes.
+    ServerCrash(ServerId),
+    /// Take every server in the rack down (correlated outage).
+    RackOutage(RackId),
+    /// Crash in-flight work on one server without downing it.
+    TransientCompute(ServerId),
+    /// Bring a crashed server back up.
+    ServerRepair(ServerId),
+    /// Bring a crashed rack back up.
+    RackRepair(RackId),
+}
+
+/// A fault event pinned to a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time of the event.
+    pub at: Millis,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// The full, time-sorted fault schedule for one driver run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Events in non-decreasing time order (generation-order
+    /// tiebreak, so crashes precede their own repairs at equal time).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Generate the seeded fault schedule over `[0, horizon_ms)`.
+    ///
+    /// Returns an empty plan — with zero RNG draws — when the rate is
+    /// zero or the horizon is empty, so the zero-fault digest contract
+    /// holds structurally, not just statistically.
+    pub fn generate(
+        cfg: &FaultConfig,
+        seed: u64,
+        spec: &ClusterSpec,
+        horizon_ms: Millis,
+    ) -> FaultPlan {
+        if cfg.rate_per_min <= 0.0 || horizon_ms <= 0.0 {
+            return FaultPlan { events: Vec::new() };
+        }
+        let mut rng = Rng::new(seed ^ FAULT_STREAM);
+        let rate = cfg.rate_per_min / 60_000.0; // events per ms
+        let mut events = Vec::new();
+        let mut t = rng.exponential(rate);
+        while t < horizon_ms {
+            if rng.chance(0.25) {
+                let s = ServerId(rng.range(0, spec.total_servers()));
+                events.push(FaultEvent { at: t, kind: FaultKind::TransientCompute(s) });
+            } else if cfg.rack_outage {
+                let r = RackId(rng.range(0, spec.racks));
+                events.push(FaultEvent { at: t, kind: FaultKind::RackOutage(r) });
+                events.push(FaultEvent {
+                    at: t + cfg.repair_ms,
+                    kind: FaultKind::RackRepair(r),
+                });
+            } else {
+                let s = ServerId(rng.range(0, spec.total_servers()));
+                events.push(FaultEvent { at: t, kind: FaultKind::ServerCrash(s) });
+                events.push(FaultEvent {
+                    at: t + cfg.repair_ms,
+                    kind: FaultKind::ServerRepair(s),
+                });
+            }
+            t += rng.exponential(rate);
+        }
+        // Stable time sort with generation-index tiebreak: repairs
+        // scheduled at the same instant as a later crash keep their
+        // relative generation order, deterministically.
+        let mut keyed: Vec<(usize, FaultEvent)> = events.into_iter().enumerate().collect();
+        keyed.sort_by(|a, b| a.1.at.total_cmp(&b.1.at).then(a.0.cmp(&b.0)));
+        FaultPlan { events: keyed.into_iter().map(|(_, e)| e).collect() }
+    }
+
+    /// Number of scheduled events (crashes and repairs).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when the plan schedules nothing (the zero-fault case).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::multi_rack(4, 2)
+    }
+
+    #[test]
+    fn zero_rate_plan_is_empty() {
+        let cfg = FaultConfig::default();
+        let plan = FaultPlan::generate(&cfg, 7, &spec(), 1_000_000.0);
+        assert!(plan.is_empty());
+        let cfg = FaultConfig { rate_per_min: 5.0, ..FaultConfig::default() };
+        let plan = FaultPlan::generate(&cfg, 7, &spec(), 0.0);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        let cfg = FaultConfig { rate_per_min: 8.0, repair_ms: 4_000.0, rack_outage: false };
+        let a = FaultPlan::generate(&cfg, 42, &spec(), 600_000.0);
+        let b = FaultPlan::generate(&cfg, 42, &spec(), 600_000.0);
+        assert!(!a.is_empty(), "8 faults/min over 10 min should schedule events");
+        assert_eq!(a.events, b.events);
+        let c = FaultPlan::generate(&cfg, 43, &spec(), 600_000.0);
+        assert_ne!(a.events, c.events, "different seeds should differ");
+    }
+
+    #[test]
+    fn events_are_time_sorted_and_repairs_trail_crashes() {
+        let cfg = FaultConfig { rate_per_min: 10.0, repair_ms: 2_500.0, rack_outage: false };
+        let plan = FaultPlan::generate(&cfg, 9, &spec(), 600_000.0);
+        assert!(!plan.is_empty());
+        for w in plan.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events out of order");
+        }
+        // every ServerCrash has a matching ServerRepair repair_ms later
+        for ev in &plan.events {
+            if let FaultKind::ServerCrash(s) = ev.kind {
+                let repaired = plan.events.iter().any(|r| {
+                    r.kind == FaultKind::ServerRepair(s)
+                        && (r.at - ev.at - cfg.repair_ms).abs() < 1e-9
+                });
+                assert!(repaired, "crash of {s:?} at {} has no paired repair", ev.at);
+            }
+        }
+    }
+
+    #[test]
+    fn rack_outage_flag_switches_capacity_fault_kind() {
+        let cfg = FaultConfig { rate_per_min: 10.0, repair_ms: 2_000.0, rack_outage: true };
+        let plan = FaultPlan::generate(&cfg, 11, &spec(), 600_000.0);
+        assert!(!plan.is_empty());
+        let mut saw_rack = false;
+        for ev in &plan.events {
+            match ev.kind {
+                FaultKind::ServerCrash(_) | FaultKind::ServerRepair(_) => {
+                    panic!("rack_outage plans must not contain single-server capacity faults")
+                }
+                FaultKind::RackOutage(r) => {
+                    saw_rack = true;
+                    assert!(r.0 < spec().racks);
+                }
+                _ => {}
+            }
+        }
+        assert!(saw_rack, "expected at least one rack outage at 10/min over 10 min");
+    }
+}

@@ -9,6 +9,9 @@
 //! - [`scheduler`] — two-level global/rack scheduler (§5.3.1).
 //! - [`msglog`] — reliable message log (Kafka substitute, §5.3.2).
 //! - [`failure`] — resource-graph-cut recovery (§5.3.2).
+//! - [`faults`] — deterministic fault injection: the seeded chaos
+//!   schedule (server crash / rack outage / transient compute crash)
+//!   the driver replays to exercise [`failure`] at scale.
 //! - [`sync`] — distributed lock/barrier primitives (§5.3.3).
 //! - [`exec`] — the adaptive execution engine + [`exec::Platform`]:
 //!   sizing, materialization, autoscaling, proactive startup (§5.1-5.2).
@@ -28,18 +31,17 @@ pub mod adjust;
 pub mod admission;
 pub mod driver;
 pub mod exec;
-#[allow(missing_docs)]
 pub mod failure;
+pub mod faults;
 pub mod graph;
 pub mod history;
-#[allow(missing_docs)]
 pub mod msglog;
 pub mod placement;
 pub mod scheduler;
-#[allow(missing_docs)]
 pub mod sync;
 
 pub use admission::{AdmissionOutcome, AdmissionPolicy, ArrivalModel, DeferredQueues};
+pub use faults::{FaultConfig, FaultPlan};
 pub use driver::{DriverConfig, DriverReport, MultiTenantDriver, Schedule, TenantApp};
 pub use scheduler::RouteStats;
 pub use exec::{OngoingInvocation, Platform, ZenixConfig};

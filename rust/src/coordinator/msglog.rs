@@ -27,6 +27,7 @@ pub struct MessageLog {
 }
 
 impl MessageLog {
+    /// Fresh empty log.
     pub fn new() -> Self {
         Self::default()
     }
@@ -89,10 +90,12 @@ impl MessageLog {
             .collect()
     }
 
+    /// Total entries (durable prefix + unflushed tail).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the log holds no entries at all.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

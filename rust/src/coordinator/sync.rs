@@ -16,6 +16,7 @@ pub struct DistLock {
 }
 
 impl DistLock {
+    /// Fresh unheld lock with an empty waiter queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -44,10 +45,12 @@ impl DistLock {
         self.holder
     }
 
+    /// Current holder, if the lock is held.
     pub fn holder(&self) -> Option<u64> {
         self.holder
     }
 
+    /// Number of queued waiters.
     pub fn queue_len(&self) -> usize {
         self.waiters.len()
     }
@@ -62,6 +65,7 @@ pub struct Barrier {
 }
 
 impl Barrier {
+    /// Barrier over `n > 0` participants (panics on `n == 0`).
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         Self { n, arrived: Vec::new(), generation: 0 }
@@ -82,6 +86,7 @@ impl Barrier {
         }
     }
 
+    /// Distinct arrivals in the current generation.
     pub fn waiting(&self) -> usize {
         self.arrived.len()
     }

@@ -1,0 +1,131 @@
+//! Availability-vs-overhead sweep: the identical multi-tenant replay
+//! under increasing fault pressure, per admission policy.
+//!
+//! The robustness story (§5.3.2) is that graph-cut recovery turns
+//! server crashes, rack outages, and transient compute crashes into
+//! bounded re-execution instead of lost invocations: the reliable
+//! message log pins a durable cut, `failure::plan` computes the
+//! minimal redo set, and the engine rewinds to the cut's wave. This
+//! sweep holds the workload and the arrival schedule fixed — the
+//! schedule is cluster- and fault-independent, so one generation
+//! serves every row — and varies only the seeded fault rate
+//! ([`FaultConfig::rate_per_min`]) per admission policy. Every
+//! difference between rows at the same rate is attributable to how
+//! the policy absorbs the capacity churn (reject sheds, the queues
+//! park and retry off the dirty-rack feed); every difference down a
+//! policy's column is attributable to fault pressure alone.
+//!
+//! The rate = 0 rows are definitionally the chaos-free replay: their
+//! digests must equal the plain run bit-for-bit (the zero-rate plan
+//! draws nothing from the fault RNG stream), and
+//! `rust/tests/figures_shape.rs` pins that along with per-seed digest
+//! stability of the faulted rows.
+
+use crate::coordinator::admission::AdmissionPolicy;
+use crate::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use crate::coordinator::faults::FaultConfig;
+use crate::trace::Archetype;
+
+/// One (policy × fault-rate) cell of the chaos sweep.
+#[derive(Debug, Clone)]
+pub struct ChaosSweepRow {
+    /// Policy label: `"reject"`, `"fifo"`, or `"fair"`.
+    pub policy: &'static str,
+    /// Injected capacity-fault rate (events per simulated minute).
+    pub fault_rate_per_min: f64,
+    /// Invocations that ran to completion.
+    pub completed: usize,
+    /// In-flight invocations struck by at least one fault.
+    pub faulted: usize,
+    /// Faulted invocations that still completed via graph-cut recovery.
+    pub recovered: usize,
+    /// Faulted invocations lost despite recovery attempts.
+    pub faulted_unrecovered: usize,
+    /// Goodput: completed fraction of all arrivals.
+    pub goodput: f64,
+    /// Jain's fairness index over per-tenant completions — does churn
+    /// concentrate its damage on a few tenants?
+    pub jain_goodput: f64,
+    /// P² p99 end-to-end execution latency (ms) — the recovery-tail
+    /// view.
+    pub p99_exec_ms: f64,
+    /// The replay's order-stable digest (per-seed determinism pin).
+    pub digest: u64,
+}
+
+/// Replay the identical `standard_mix` schedule under each admission
+/// policy at each fault rate. Canonical sweep:
+/// `&[0.0, 10.0, 30.0]` faults/min with a 5 s repair delay. The
+/// rate = 0 cells double as the chaos-free baseline for each policy.
+pub fn fig_chaos_fault_rate(
+    apps: usize,
+    invocations: usize,
+    seed: u64,
+    rates_per_min: &[f64],
+) -> Vec<ChaosSweepRow> {
+    let mix = standard_mix(apps, Archetype::Average);
+    let base = DriverConfig { seed, invocations, ..DriverConfig::default() };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let policies = [
+        ("reject", AdmissionPolicy::RejectImmediately),
+        ("fifo", AdmissionPolicy::FifoQueue { max_wait_ms: 60_000.0, max_depth: 64 }),
+        ("fair", AdmissionPolicy::FairShare { max_wait_ms: 60_000.0, max_depth: 64 }),
+    ];
+    let mut rows = Vec::with_capacity(policies.len() * rates_per_min.len());
+    for (label, admission) in policies {
+        for &rate in rates_per_min {
+            let cfg = DriverConfig {
+                admission,
+                faults: FaultConfig {
+                    rate_per_min: rate,
+                    repair_ms: 5_000.0,
+                    rack_outage: false,
+                },
+                ..base
+            };
+            let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+            rows.push(ChaosSweepRow {
+                policy: label,
+                fault_rate_per_min: rate,
+                completed: r.completed,
+                faulted: r.faulted,
+                recovered: r.recovered,
+                faulted_unrecovered: r.faulted_unrecovered,
+                goodput: r.completed as f64 / invocations as f64,
+                jain_goodput: r.jain_completion,
+                p99_exec_ms: r.p99_exec_ms,
+                digest: r.digest,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the sweep as a figure-row text block.
+pub fn render_chaos(title: &str, rows: &[ChaosSweepRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<8} {:>10} {:>10} {:>8} {:>10} {:>6} {:>8} {:>6} {:>12}",
+        "policy", "faults/min", "completed", "faulted", "recovered", "lost", "goodput", "jain", "p99 exec ms"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>10.1} {:>10} {:>8} {:>10} {:>6} {:>7.1}% {:>6.3} {:>12.1}",
+            r.policy,
+            r.fault_rate_per_min,
+            r.completed,
+            r.faulted,
+            r.recovered,
+            r.faulted_unrecovered,
+            r.goodput * 100.0,
+            r.jain_goodput,
+            r.p99_exec_ms,
+        );
+    }
+    out
+}

@@ -11,6 +11,7 @@
 //! `examples/reproduce_all.rs` (writes results/*.txt).
 
 pub mod admission_figs;
+pub mod chaos_figs;
 pub mod lr_figs;
 pub mod platform_figs;
 pub mod sharding_figs;

@@ -16,6 +16,7 @@ use zenix::apps::{lr, Invocation};
 use zenix::cluster::ClusterSpec;
 use zenix::coordinator::admission::AdmissionPolicy;
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use zenix::coordinator::faults::FaultConfig;
 use zenix::coordinator::graph::ResourceGraph;
 use zenix::coordinator::{Platform, ZenixConfig};
 use zenix::trace::Archetype;
@@ -157,6 +158,43 @@ fn steady_state_arrivals_allocate_nothing() {
         assert!(
             marginal < 1.0,
             "{label}: queued-admission marginal allocations per invocation too high: \
+             {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
+        );
+    }
+
+    // ---- phase 4: fault handling steady state -----------------------
+    // ISSUE 6 satellite: with fault injection live, the marginal
+    // allocation count per extra invocation stays below one — the
+    // fault plan is generated once up front (its events ride the
+    // pre-sized heap), crash scans walk the slab in place, recovery
+    // rewinds reuse the shell's existing tables, and repairs only flip
+    // server flags plus the dirty-rack feed. Only the plan vector
+    // itself and the heap's capacity doublings remain, amortized.
+    {
+        let cfg_small = DriverConfig {
+            seed: 5,
+            invocations: 2000,
+            mean_iat_ms: 300.0,
+            exact_stats: false,
+            faults: FaultConfig { rate_per_min: 4.0, repair_ms: 2_000.0, rack_outage: false },
+            ..DriverConfig::default()
+        };
+        let cfg_big = DriverConfig { invocations: 4000, ..cfg_small };
+        let d_small = MultiTenantDriver::new(&apps, cfg_small);
+        let d_big = MultiTenantDriver::new(&apps, cfg_big);
+        let s_small = d_small.schedule();
+        let s_big = d_big.schedule();
+        let (rep_small, a_small) = counted(|| d_small.run_zenix(&s_small));
+        let (rep_big, a_big) = counted(|| d_big.run_zenix(&s_big));
+        assert!(
+            rep_big.faulted > 0,
+            "the fault schedule must strike in-flight work for this gate to bind"
+        );
+        std::hint::black_box((&rep_small, &rep_big));
+        let marginal = a_big.saturating_sub(a_small) as f64 / 2000.0;
+        assert!(
+            marginal < 1.0,
+            "faulted driver loop marginal allocations per invocation too high: \
              {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
         );
     }

@@ -4,7 +4,7 @@
 
 use zenix::apps::lr;
 use zenix::figures::{
-    admission_figs, lr_figs, platform_figs, sharding_figs, tpcds_figs, video_figs,
+    admission_figs, chaos_figs, lr_figs, platform_figs, sharding_figs, tpcds_figs, video_figs,
 };
 
 // ---- §6.1.1 TPC-DS ------------------------------------------------------
@@ -381,4 +381,46 @@ fn admission_sweep_fifo_dominates_reject_under_saturation() {
     let text = admission_figs::render_admission("sweep", &rows);
     assert_eq!(text.matches("\nreject ").count(), 2, "render rows:\n{text}");
     assert_eq!(text.matches("\nfifo ").count(), 2, "render rows:\n{text}");
+}
+
+// ---- chaos sweep: availability vs fault pressure ------------------------
+
+#[test]
+fn chaos_sweep_goodput_and_recovery_vs_fault_rate() {
+    let rates = [0.0, 10.0, 30.0];
+    let rows = chaos_figs::fig_chaos_fault_rate(6, 160, 7, &rates);
+    assert_eq!(rows.len(), 9, "3 policies x 3 rates");
+    let mut total_faulted = 0usize;
+    for r in &rows {
+        if r.fault_rate_per_min == 0.0 {
+            assert_eq!(r.faulted, 0, "{}: chaos-free row faulted", r.policy);
+            assert_eq!(r.recovered, 0, "{}", r.policy);
+        } else {
+            total_faulted += r.faulted;
+        }
+        // faults split exactly into recovered vs lost in every cell
+        assert_eq!(r.faulted, r.recovered + r.faulted_unrecovered, "{}", r.policy);
+        assert!(
+            r.goodput >= 0.0 && r.goodput <= 1.0,
+            "{}: goodput {}",
+            r.policy,
+            r.goodput
+        );
+        // Jain's index over 6 tenants lives in [1/6, 1]
+        assert!(
+            r.jain_goodput >= 1.0 / 6.0 - 1e-9 && r.jain_goodput <= 1.0 + 1e-9,
+            "{}: jain {}",
+            r.policy,
+            r.jain_goodput
+        );
+    }
+    assert!(total_faulted > 0, "positive-rate rows must fault something");
+    // per-seed determinism: the whole sweep replays digest-identically
+    let again = chaos_figs::fig_chaos_fault_rate(6, 160, 7, &rates);
+    for (a, b) in rows.iter().zip(&again) {
+        assert_eq!(a.digest, b.digest, "{} @ {}", a.policy, a.fault_rate_per_min);
+    }
+    // the renderer lists header + one line per cell
+    let text = chaos_figs::render_chaos("chaos", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
 }

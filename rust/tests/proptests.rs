@@ -549,3 +549,172 @@ fn deferred_queueing_never_loses_completed_work() {
         },
     );
 }
+
+/// Recovery plans are *closed* under the engine's actual durability
+/// regime (ISSUE 6 satellite). The engine flushes the message log
+/// synchronously as each wave's computes finish, so at any crash the
+/// durable set is a wave prefix. Under such a cut, every trigger edge
+/// into the redo set is satisfiable: its source is either durably
+/// logged (replayable input) or itself at/past the first redo wave
+/// (re-runs this pass). Arbitrary durable sets (the naive closure
+/// statement) are *not* closed — disjoint branches below the cut can
+/// dangle — which is exactly why the engine logs per wave. A crash
+/// can only strike a compute the engine has reached, so the crashed
+/// compute's wave is at most `cut + 1` (the wave executing when the
+/// prefix `0..=cut` was durable).
+#[test]
+fn recovery_plan_is_closed_under_wave_prefix_durability() {
+    let graph = ResourceGraph::from_program(&video::pipeline()).unwrap();
+    let max_wave = *graph.wave.iter().max().unwrap();
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let cut = rng.range(0, max_wave + 1); // durable waves: 0..=cut
+            let crash_data = rng.chance(0.4);
+            let pick = rng.range(0, graph.n_compute().max(graph.n_data()));
+            (cut, crash_data, pick)
+        },
+        |&(cut, crash_data, pick)| {
+            let durable: Vec<usize> =
+                (0..graph.n_compute()).filter(|&c| graph.wave[c] <= cut).collect();
+            let mut log = MessageLog::new();
+            for &c in &durable {
+                log.append(LogEntry { invocation: 1, compute: c, result_mb: 1.0 });
+            }
+            log.flush();
+            let crash = if crash_data && graph.n_data() > 0 {
+                failure::Crash::DataRegion(pick % graph.n_data())
+            } else {
+                // the engine only reaches waves <= cut + 1
+                let reachable: Vec<usize> =
+                    (0..graph.n_compute()).filter(|&c| graph.wave[c] <= cut + 1).collect();
+                failure::Crash::Compute(reachable[pick % reachable.len()])
+            };
+            let plan = failure::plan(&graph, &log, 1, crash);
+            if let failure::Crash::Compute(c) = crash {
+                if !plan.reexecute.contains(&c) {
+                    return false;
+                }
+            }
+            if plan.reexecute.is_empty() {
+                // a data crash no one accesses discards nothing to redo
+                return plan.discard_data.is_empty() || crash_data;
+            }
+            let redo_wave = graph.wave[plan.reexecute[0]];
+            // closure: every trigger edge into the redo set has a
+            // durable source or a source that itself re-runs this pass
+            graph.triggers.iter().all(|&(a, b)| {
+                !plan.reexecute.contains(&b)
+                    || durable.contains(&a)
+                    || graph.wave[a] >= redo_wave
+            })
+        },
+    );
+}
+
+/// Under *full* durability the recovery plan is exact, not just safe
+/// (ISSUE 6 satellite): a compute crash re-runs only itself and
+/// discards only its own accessed regions; a data-region crash re-runs
+/// exactly the region's accessors; and every discarded region keeps at
+/// least one accessor in the redo set (no orphaned discards).
+#[test]
+fn recovery_plan_is_exact_under_full_durability() {
+    let programs = [lr::program(), video::pipeline()];
+    forall(
+        60,
+        |rng: &mut Rng| {
+            let pi = rng.range(0, 2);
+            let crash_data = rng.chance(0.5);
+            let pick = rng.range(0, 64);
+            (pi, crash_data, pick)
+        },
+        |&(pi, crash_data, pick)| {
+            let graph = ResourceGraph::from_program(&programs[pi]).unwrap();
+            let mut log = MessageLog::new();
+            for c in 0..graph.n_compute() {
+                log.append(LogEntry { invocation: 1, compute: c, result_mb: 1.0 });
+            }
+            log.flush();
+            if crash_data && graph.n_data() > 0 {
+                let d = pick % graph.n_data();
+                let plan = failure::plan(&graph, &log, 1, failure::Crash::DataRegion(d));
+                let mut want = graph.accessors_of(d);
+                want.sort_unstable_by_key(|&c| (graph.wave[c], c));
+                plan.reexecute == want
+                    && plan.discard_data.iter().all(|&dd| {
+                        let acc = graph.accessors_of(dd);
+                        acc.is_empty() || acc.iter().any(|c| plan.reexecute.contains(c))
+                    })
+            } else {
+                let c = pick % graph.n_compute();
+                let plan = failure::plan(&graph, &log, 1, failure::Crash::Compute(c));
+                let want: std::collections::BTreeSet<usize> =
+                    graph.accessed_data(c).into_iter().collect();
+                plan.reexecute == vec![c] && plan.discard_data == want
+            }
+        },
+    );
+}
+
+/// Fault injection partitions arrivals with nothing leaked (ISSUE 6
+/// acceptance): over random seeds, loads, fault rates, repair delays,
+/// outage modes, and admission policies, `completed + rejected +
+/// aborted + timed_out + faulted_unrecovered == arrivals`, faults
+/// split exactly into recovered vs unrecovered (fleet and per app),
+/// and consumption stays bounded. The driver's own debug asserts
+/// (active here) additionally pin that the cluster drains to empty —
+/// no allocation or mark survives the churn.
+#[test]
+fn fault_injection_partitions_arrivals_and_leaks_nothing() {
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::coordinator::{AdmissionPolicy, FaultConfig};
+    use zenix::trace::Archetype;
+
+    forall(
+        8,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(4, 8),             // apps
+                rng.range(80, 200),          // invocations
+                rng.uniform(40.0, 160.0),    // fleet mean IAT (saturating band)
+                rng.uniform(0.0, 12.0),      // fault rate per minute
+                rng.uniform(1000.0, 8000.0), // repair delay ms
+                rng.chance(0.4),             // whole-rack outages
+                rng.range(0, 3),             // admission policy
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms, rate, repair_ms, rack_outage, policy)| {
+            let mix = standard_mix(apps, Archetype::Average);
+            let admission = match policy {
+                0 => AdmissionPolicy::RejectImmediately,
+                1 => AdmissionPolicy::FifoQueue { max_wait_ms: 60_000.0, max_depth: 64 },
+                _ => AdmissionPolicy::FairShare { max_wait_ms: 60_000.0, max_depth: 64 },
+            };
+            let cfg = DriverConfig {
+                seed,
+                invocations,
+                mean_iat_ms,
+                admission,
+                faults: FaultConfig { rate_per_min: rate, repair_ms, rack_outage },
+                ..DriverConfig::default()
+            };
+            let driver = MultiTenantDriver::new(&mix, cfg);
+            let r = driver.run_zenix(&driver.schedule());
+            if r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered
+                != invocations
+            {
+                return false;
+            }
+            if r.faulted != r.recovered + r.faulted_unrecovered {
+                return false;
+            }
+            let sums = r.apps.iter().fold((0, 0, 0), |acc, a| {
+                (acc.0 + a.faulted, acc.1 + a.recovered, acc.2 + a.faulted_unrecovered)
+            });
+            sums == (r.faulted, r.recovered, r.faulted_unrecovered)
+                && r.apps.iter().all(|a| a.completed + a.failed() == a.scheduled)
+                && r.fleet.used_mem_mb_s <= r.fleet.alloc_mem_mb_s + 1e-6
+        },
+    );
+}

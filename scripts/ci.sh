@@ -111,6 +111,43 @@ awk -v f="$fair_jain" -v q="$fifo_jain" 'BEGIN { exit (f + 0 > q + 0) ? 0 : 1 }'
 }
 echo "fairness smoke passed: jain(fair)=${fair_jain} > jain(fifo)=${fifo_jain} under 8x skew"
 
+echo "== driver smoke: chaos (seeded fault injection, digest-stable, >=90% recovery)"
+# ISSUE 6: a faulted replay must be deterministic per seed, the
+# zero-fault replay must be byte-identical to the chaos-free pinned
+# digest (the fault RNG stream draws nothing at rate 0), and graph-cut
+# recovery must complete >= 90% of the invocations faults strike.
+chaos_args="--apps 20 --invocations 1000 --seed 7 --fault-rate 6 --repair-ms 5000"
+chaos1=$(cargo run --release --example multi_tenant -- $chaos_args)
+chaos2=$(cargo run --release --example multi_tenant -- $chaos_args)
+cdig1=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$chaos1" | head -1)
+cdig2=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$chaos2" | head -1)
+if [[ -z "$cdig1" || "$cdig1" != "$cdig2" ]]; then
+    echo "FAIL: faulted driver not deterministic per seed ('$cdig1' vs '$cdig2')" >&2
+    exit 1
+fi
+nochaos=$(cargo run --release --example multi_tenant -- \
+    --apps 20 --invocations 1000 --seed 7 --fault-rate 0 --repair-ms 5000)
+ndig=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$nochaos" | head -1)
+if [[ -z "$ndig" || "$ndig" != "$dig1" ]]; then
+    echo "FAIL: zero-fault digest ${ndig} must be byte-identical to the chaos-free ${dig1}" >&2
+    exit 1
+fi
+faulted=$(grep -oE 'faulted=[0-9]+' <<<"$chaos1" | head -1 | tr -dc '0-9' || true)
+recovered=$(grep -oE ' recovered=[0-9]+' <<<"$chaos1" | head -1 | tr -dc '0-9' || true)
+if [[ -z "$faulted" || -z "$recovered" ]]; then
+    echo "FAIL: could not parse the chaos: line from the driver output" >&2
+    exit 1
+fi
+if (( faulted == 0 )); then
+    echo "FAIL: chaos smoke struck 0 in-flight invocations — the fault rate no longer bites; retune chaos_args" >&2
+    exit 1
+fi
+awk -v f="$faulted" -v r="$recovered" 'BEGIN { exit (r + 0 >= 0.9 * (f + 0)) ? 0 : 1 }' || {
+    echo "FAIL: graph-cut recovery completed only ${recovered}/${faulted} faulted invocations (< 90%)" >&2
+    exit 1
+}
+echo "chaos smoke passed: ${cdig1} stable, zero-fault == pinned, recovered ${recovered}/${faulted}"
+
 echo "== driver smoke: 100k invocations, streaming stats, wall-clock budget"
 t0=$SECONDS
 drv100k=$(cargo run --release --example multi_tenant -- \
@@ -189,6 +226,21 @@ awk -v m="$multirack_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 1.5 * (s +
     exit 1
 }
 echo "multirack driver per-invocation rate: ${multirack_rate} µs (<= 1.5x single-rack ${us_per_inv} µs)"
+
+# ISSUE 6: the faulted 100k row (6 faults/min, 5 s repairs) must be
+# present and stay within 2x of the fault-free per-invocation cost —
+# crash scans, recovery re-execution, and churn-driven index rebuilds
+# ride the same allocation-free loop.
+faulted_rate=$(grep -E '100k-invocation faulted driver' "$out" | grep -oE '[0-9]+(\.[0-9]+)? µs/invocation' | head -1 | tr -dc '0-9.' || true)
+if [[ -z "$faulted_rate" ]]; then
+    echo "FAIL: could not find the 100k-invocation faulted (driver_100k_faulted) row" >&2
+    exit 1
+fi
+awk -v m="$faulted_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 2.0 * (s + 0)) ? 0 : 1 }' || {
+    echo "FAIL: faulted driver at ${faulted_rate} µs/invocation > 2x the fault-free ${us_per_inv} µs (recovery overhead regression)" >&2
+    exit 1
+}
+echo "faulted driver per-invocation rate: ${faulted_rate} µs (<= 2x fault-free ${us_per_inv} µs)"
 
 echo "== bench smoke: hotpath (quick budget, json to repo root)"
 ZENIX_BENCH_JSON=. cargo bench --bench hotpath -- --quick
