@@ -1,0 +1,179 @@
+//! Plain-text allowlist for `zenix_lint` (`analysis/allowlist.toml`).
+//!
+//! A deliberately tiny TOML subset, hand-parsed so the lint stays
+//! dependency-free: `[[allow]]` / `[[conservation]]` table headers
+//! followed by `key = "value"` lines. Every `[[allow]]` entry carries a
+//! **mandatory reason** — an allowlisted hazard without a justification
+//! is a parse error, and an entry that matches nothing in the tree is a
+//! *stale-entry* violation, so the list can only shrink as hazards are
+//! fixed (the D5 contract).
+
+use crate::Result;
+
+/// One justified suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// Rule id the entry applies to (`"D1"` … `"D6"`, `"C1"`).
+    pub rule: String,
+    /// File the hazard lives in — matched as a suffix of the scanned
+    /// path, so `util/rng.rs` matches `rust/src/util/rng.rs`.
+    pub file: String,
+    /// The flagged token (hazard identifier, module name, …).
+    pub token: String,
+    /// Mandatory justification.
+    pub reason: String,
+}
+
+/// One term of the D4 arrival-conservation inventory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConservationTerm {
+    /// Field name summed by `AppStats::failed()`.
+    pub term: String,
+    /// What the counter means (documentation, also mandatory).
+    pub meaning: String,
+}
+
+/// Parsed allowlist file.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    /// Justified suppressions.
+    pub allows: Vec<AllowEntry>,
+    /// The checked failure-counter inventory (rule D4).
+    pub conservation: Vec<ConservationTerm>,
+}
+
+impl Allowlist {
+    /// Find an entry matching `(rule, file, token)`; returns its index
+    /// so the engine can track per-entry use (stale detection).
+    pub fn find(&self, rule: &str, file: &str, token: &str) -> Option<usize> {
+        self.allows
+            .iter()
+            .position(|e| e.rule == rule && file.ends_with(&e.file) && e.token == token)
+    }
+}
+
+/// Parse the allowlist text. Errors on unknown keys, missing mandatory
+/// fields, or `key = value` lines outside an entry.
+pub fn parse(text: &str) -> Result<Allowlist> {
+    #[derive(PartialEq)]
+    enum Section {
+        None,
+        Allow,
+        Conservation,
+    }
+    let mut out = Allowlist::default();
+    let mut section = Section::None;
+    // pending key-value pairs of the current entry
+    let mut kv: Vec<(String, String)> = Vec::new();
+
+    let flush = |section: &Section, kv: &mut Vec<(String, String)>, out: &mut Allowlist| -> Result<()> {
+        let take = |kv: &[(String, String)], key: &str| -> Option<String> {
+            kv.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+        };
+        match section {
+            Section::None => {}
+            Section::Allow => {
+                let entry = AllowEntry {
+                    rule: take(kv, "rule").unwrap_or_default(),
+                    file: take(kv, "file").unwrap_or_default(),
+                    token: take(kv, "token").unwrap_or_default(),
+                    reason: take(kv, "reason").unwrap_or_default(),
+                };
+                if entry.rule.is_empty() || entry.file.is_empty() || entry.token.is_empty() {
+                    anyhow::bail!("[[allow]] entry needs rule/file/token: {kv:?}");
+                }
+                if entry.reason.trim().is_empty() {
+                    anyhow::bail!(
+                        "[[allow]] {} {} {}: reason is mandatory",
+                        entry.rule,
+                        entry.file,
+                        entry.token
+                    );
+                }
+                out.allows.push(entry);
+            }
+            Section::Conservation => {
+                let term = ConservationTerm {
+                    term: take(kv, "term").unwrap_or_default(),
+                    meaning: take(kv, "meaning").unwrap_or_default(),
+                };
+                if term.term.is_empty() || term.meaning.trim().is_empty() {
+                    anyhow::bail!("[[conservation]] entry needs term + meaning: {kv:?}");
+                }
+                out.conservation.push(term);
+            }
+        }
+        kv.clear();
+        Ok(())
+    };
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            flush(&section, &mut kv, &mut out)?;
+            section = Section::Allow;
+            continue;
+        }
+        if line == "[[conservation]]" {
+            flush(&section, &mut kv, &mut out)?;
+            section = Section::Conservation;
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            if section == Section::None {
+                anyhow::bail!("line {}: key outside an entry: {line}", ln + 1);
+            }
+            let key = k.trim().to_string();
+            let val = v.trim();
+            let val = val
+                .strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("line {}: value must be double-quoted: {line}", ln + 1))?;
+            if !matches!(key.as_str(), "rule" | "file" | "token" | "reason" | "term" | "meaning") {
+                anyhow::bail!("line {}: unknown key {key:?}", ln + 1);
+            }
+            kv.push((key, val.to_string()));
+            continue;
+        }
+        anyhow::bail!("line {}: unparseable allowlist line: {line}", ln + 1);
+    }
+    flush(&section, &mut kv, &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entries_and_sections() {
+        let a = parse(
+            "# comment\n\n[[allow]]\nrule = \"D2\"\nfile = \"util/rng.rs\"\ntoken = \"SystemTime\"\nreason = \"opt-in\"\n\n[[conservation]]\nterm = \"rejected\"\nmeaning = \"admission-time rejections\"\n",
+        )
+        .unwrap();
+        assert_eq!(a.allows.len(), 1);
+        assert_eq!(a.conservation.len(), 1);
+        assert_eq!(a.allows[0].token, "SystemTime");
+        assert!(a.find("D2", "rust/src/util/rng.rs", "SystemTime").is_some());
+        assert!(a.find("D2", "rust/src/util/other.rs", "SystemTime").is_none());
+        assert!(a.find("D5", "rust/src/util/rng.rs", "SystemTime").is_none());
+    }
+
+    #[test]
+    fn reason_is_mandatory() {
+        let err = parse("[[allow]]\nrule = \"D2\"\nfile = \"a.rs\"\ntoken = \"Instant\"\nreason = \"  \"\n");
+        assert!(err.is_err());
+        let err = parse("[[allow]]\nrule = \"D2\"\nfile = \"a.rs\"\ntoken = \"Instant\"\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_loose_lines() {
+        assert!(parse("[[allow]]\nrule = \"D2\"\nbogus = \"x\"\n").is_err());
+        assert!(parse("rule = \"D2\"\n").is_err());
+        assert!(parse("[[allow]]\nrule = unquoted\n").is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Minimal hand-rolled Rust tokenizer for the `zenix_lint` pass.
+//!
+//! Produces a flat token stream with line numbers — identifiers,
+//! punctuation, literals, lifetimes and comments. Deliberately *not* a
+//! parser: the rule engine ([`super::rules`]) pattern-matches token
+//! sequences, which is exactly the granularity the determinism and
+//! accounting rules need. Crucially, hazard names inside string
+//! literals or comments lex as [`TokKind::Str`] / [`TokKind::Comment`]
+//! tokens, so the lint can mention `"SystemTime"` in its own source
+//! (and in fixture strings) without flagging itself.
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any hash depth), byte
+//! strings, char literals vs lifetimes, numeric literals with
+//! underscores and type suffixes (`0xcbf2_9ce4u64` is one token).
+
+/// Token category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `HashMap`, `as`, …).
+    Ident,
+    /// Single punctuation character (`.`, `:`, `{`, `<`, …).
+    Punct,
+    /// String literal (normal, raw or byte), quotes included.
+    Str,
+    /// Char literal, quotes included.
+    Char,
+    /// Numeric literal, underscores and suffix included.
+    Num,
+    /// Lifetime (`'a`, `'static`), leading quote included.
+    Lifetime,
+    /// Line or block comment, delimiters included.
+    Comment,
+}
+
+/// One lexed token.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Category.
+    pub kind: TokKind,
+    /// Verbatim source text of the token.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Token {
+    fn new(kind: TokKind, text: String, line: u32) -> Self {
+        Token { kind, text, line }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream. Never fails: unterminated constructs
+/// simply run to end-of-file (the lint scans code that `cargo build`
+/// already accepted, so this is a non-issue in practice).
+pub fn lex(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            let start_line = line;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Token::new(TokKind::Comment, b[start..i].iter().collect(), start_line));
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token::new(TokKind::Comment, b[start..i].iter().collect(), start_line));
+            continue;
+        }
+        // raw / byte strings: r"…", r#"…"#, b"…", br#"…"#
+        if c == 'r' || c == 'b' {
+            if let Some((tok, next)) = try_raw_or_byte_string(&b, i, line) {
+                line += u32::try_from(tok.text.matches('\n').count()).unwrap_or(0);
+                toks.push(tok);
+                i = next;
+                continue;
+            }
+        }
+        // normal string
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token::new(TokKind::Str, b[start..i].iter().collect(), start_line));
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let start = i;
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\u{…}'
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                toks.push(Token::new(TokKind::Char, b[start..i].iter().collect(), line));
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // plain one-char literal: 'x'
+                i += 3;
+                toks.push(Token::new(TokKind::Char, b[start..i].iter().collect(), line));
+            } else {
+                // lifetime: 'a, 'static, '_
+                i += 1;
+                while i < n && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                toks.push(Token::new(TokKind::Lifetime, b[start..i].iter().collect(), line));
+            }
+            continue;
+        }
+        // number: digits, underscores, suffixes, hex/oct/bin, one '.'
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            let mut seen_dot = false;
+            while i < n {
+                if is_ident_continue(b[i]) {
+                    i += 1;
+                } else if b[i] == '.'
+                    && !seen_dot
+                    && i + 1 < n
+                    && b[i + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token::new(TokKind::Num, b[start..i].iter().collect(), line));
+            continue;
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let start = i;
+            i += 1;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            toks.push(Token::new(TokKind::Ident, b[start..i].iter().collect(), line));
+            continue;
+        }
+        // single-char punctuation
+        toks.push(Token::new(TokKind::Punct, c.to_string(), line));
+        i += 1;
+    }
+    toks
+}
+
+/// Try to lex a raw or byte string starting at `i`; returns the token
+/// and the index just past it, or `None` if this isn't one.
+fn try_raw_or_byte_string(b: &[char], i: usize, line: u32) -> Option<(Token, usize)> {
+    let n = b.len();
+    let mut j = i;
+    if j < n && b[j] == 'b' {
+        j += 1;
+    }
+    let raw = j < n && b[j] == 'r';
+    if raw {
+        j += 1;
+        let mut hashes = 0usize;
+        while j < n && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || b[j] != '"' {
+            return None; // `r` / `br` was just an identifier prefix
+        }
+        j += 1;
+        // scan for closing `"` followed by `hashes` hashes
+        loop {
+            if j >= n {
+                break;
+            }
+            if b[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    j += 1 + hashes;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        return Some((Token::new(TokKind::Str, b[i..j].iter().collect(), line), j));
+    }
+    // byte string b"…" (no raw)
+    if j > i && j < n && b[j] == '"' {
+        j += 1;
+        while j < n {
+            if b[j] == '\\' && j + 1 < n {
+                j += 2;
+            } else if b[j] == '"' {
+                j += 1;
+                break;
+            } else {
+                j += 1;
+            }
+        }
+        return Some((Token::new(TokKind::Str, b[i..j].iter().collect(), line), j));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let t = kinds("let x = 0xcbf2_9ce4_8422_2325u64;");
+        assert_eq!(
+            t,
+            vec![
+                (TokKind::Ident, "let".to_string()),
+                (TokKind::Ident, "x".to_string()),
+                (TokKind::Punct, "=".to_string()),
+                (TokKind::Num, "0xcbf2_9ce4_8422_2325u64".to_string()),
+                (TokKind::Punct, ";".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn hazards_in_strings_are_not_idents() {
+        let t = lex(r#"let s = "SystemTime::now()";"#);
+        assert!(t.iter().all(|t| !(t.kind == TokKind::Ident && t.text == "SystemTime")));
+        assert!(t.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn comments_capture_text_and_nesting() {
+        let t = lex("a /* outer /* inner */ still */ b // tail\nc");
+        let comments: Vec<&str> =
+            t.iter().filter(|t| t.kind == TokKind::Comment).map(|t| t.text.as_str()).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].contains("inner"));
+        assert!(comments[1].starts_with("// tail"));
+        let idents: Vec<&str> =
+            t.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+        assert_eq!(idents, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes() {
+        let t = kinds(r##"x(r#"has "quotes" and // not a comment"#)"##);
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Str).count(), 1);
+        assert_eq!(t.iter().filter(|(k, _)| *k == TokKind::Comment).count(), 0);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let t = kinds("fn f<'a>(x: &'a str) { let c = 'y'; let nl = '\\n'; }");
+        let lifetimes = t.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        let chars = t.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn line_numbers_advance() {
+        let t = lex("a\nb\n\nc");
+        let lines: Vec<u32> = t.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let t = kinds("for i in 0..5 {}");
+        assert!(t.contains(&(TokKind::Num, "0".to_string())));
+        assert!(t.contains(&(TokKind::Num, "5".to_string())));
+    }
+}

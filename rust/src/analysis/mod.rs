@@ -1,0 +1,188 @@
+//! `zenix_lint`: a dependency-free static determinism & accounting pass.
+//!
+//! Everything this reproduction guarantees — byte-identical digests per
+//! seed (`DRIVER_DIGEST.lock`), the arrival-conservation identity, the
+//! allocation-free steady state — is otherwise enforced only
+//! *dynamically*, by tests that must happen to execute the offending
+//! path. This module rejects the known hazard classes *statically*, at
+//! CI time, before the planned sharded-event-loop (parallel replay)
+//! refactor would turn any latent one into a silent digest-breaker.
+//!
+//! Layout:
+//!
+//! - [`lexer`] — a minimal hand-rolled Rust tokenizer (no parser, no
+//!   dependencies; hazard names in strings/comments don't lex as
+//!   identifiers, so the lint never flags its own rule tables).
+//! - [`rules`] — the D1–D6 + C1 rule engine over token streams.
+//! - [`allowlist`] — the tiny hand-parsed TOML-subset allowlist with
+//!   mandatory reason strings and stale-entry detection.
+//! - [`report`] — `file:line` diagnostics, text and `--json` rendering.
+//!
+//! The committed allowlist lives at `rust/src/analysis/allowlist.toml`;
+//! the CLI entry point is the `zenix_lint` bin target. See
+//! `docs/ANALYSIS.md` for the full rule contract.
+
+pub mod allowlist;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+use report::{Diagnostic, ScanResult};
+use rules::{Ctx, LexedFile, ALL_RULES};
+
+/// Repo-relative location of the committed allowlist.
+pub const ALLOWLIST_PATH: &str = "rust/src/analysis/allowlist.toml";
+
+/// Recursively collect `.rs` paths under `dir`, sorted for a
+/// deterministic scan (and report) order.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Load and lex every `.rs` file under `dir`; `prefix` is prepended to
+/// the dir-relative path (`""` for `rust/src/`, `"tests/"` for aux).
+fn load_dir(dir: &Path, prefix: &str) -> Result<Vec<LexedFile>> {
+    let mut paths = Vec::new();
+    collect_rs(dir, &mut paths)?;
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(dir)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(&p)?;
+        files.push(LexedFile::from_source(&format!("{prefix}{rel}"), &text));
+    }
+    Ok(files)
+}
+
+/// Run every rule over pre-lexed sources and filter through the
+/// allowlist. Pure (no filesystem) — the unit/fixture seam.
+pub fn scan_sources(
+    files: &[LexedFile],
+    aux: &[LexedFile],
+    allow: &allowlist::Allowlist,
+) -> ScanResult {
+    let ctx = Ctx { files, aux };
+    let inventory: Vec<String> = allow.conservation.iter().map(|c| c.term.clone()).collect();
+    let raw = rules::run_all(&ctx, &inventory);
+
+    let mut hits = vec![0usize; allow.allows.len()];
+    let mut suppressed = 0usize;
+    let mut diagnostics = Vec::new();
+    for d in raw {
+        if let Some(i) = allow.find(d.rule, &d.file, &d.allow_token) {
+            hits[i] += 1;
+            suppressed += 1;
+        } else {
+            diagnostics.push(d);
+        }
+    }
+    // an entry that suppresses nothing is itself a violation: the
+    // allowlist may only shrink as hazards are fixed
+    for (i, e) in allow.allows.iter().enumerate() {
+        if hits[i] == 0 {
+            diagnostics.push(Diagnostic::new(
+                "ALLOW",
+                &e.file,
+                0,
+                &e.token,
+                format!(
+                    "stale allowlist entry [{} {} {:?}]: it suppresses nothing — remove it (the allowlist only shrinks)",
+                    e.rule, e.file, e.token
+                ),
+            ));
+        }
+    }
+    diagnostics.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    ScanResult {
+        diagnostics,
+        files_scanned: files.len(),
+        suppressed,
+        rules_run: ALL_RULES.to_vec(),
+    }
+}
+
+/// Scan a repo checkout rooted at `root` (the directory holding
+/// `Cargo.toml`): lints `rust/src/**/*.rs` with `rust/tests/` as
+/// auxiliary context, against the committed allowlist.
+pub fn scan_repo(root: &Path) -> Result<ScanResult> {
+    let src = root.join("rust").join("src");
+    let tests = root.join("rust").join("tests");
+    let allow_path = root.join(ALLOWLIST_PATH);
+    let allow_text = fs::read_to_string(&allow_path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", allow_path.display()))?;
+    let allow = allowlist::parse(&allow_text)?;
+    let files = load_dir(&src, "")?;
+    let aux = if tests.is_dir() { load_dir(&tests, "tests/")? } else { Vec::new() };
+    Ok(scan_sources(&files, &aux, &allow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stale_allowlist_entries_are_violations() {
+        let allow = allowlist::parse(
+            "[[allow]]\nrule = \"D2\"\nfile = \"nowhere.rs\"\ntoken = \"Instant\"\nreason = \"left over\"\n",
+        )
+        .unwrap();
+        let files =
+            vec![LexedFile::from_source("util/clean.rs", "pub fn f() -> u32 { 7 }\n")];
+        let r = scan_sources(&files, &[], &allow);
+        assert_eq!(r.diagnostics.len(), 1, "{:?}", r.diagnostics);
+        assert_eq!(r.diagnostics[0].rule, "ALLOW");
+        assert!(!r.clean());
+    }
+
+    #[test]
+    fn allowlisted_hazards_are_suppressed_and_counted() {
+        let allow = allowlist::parse(
+            "[[allow]]\nrule = \"D2\"\nfile = \"util/timed.rs\"\ntoken = \"Instant\"\nreason = \"bench harness, non-sim\"\n",
+        )
+        .unwrap();
+        let files = vec![LexedFile::from_source(
+            "util/timed.rs",
+            "use std::time::Instant;\npub fn f() { let _ = Instant::now(); }\n",
+        )];
+        let r = scan_sources(&files, &[], &allow);
+        assert!(r.clean(), "{:?}", r.diagnostics);
+        assert_eq!(r.suppressed, 2); // the use + the call site
+    }
+
+    #[test]
+    fn diagnostics_sort_by_file_then_line() {
+        let allow = allowlist::Allowlist::default();
+        let files = vec![
+            LexedFile::from_source("util/b.rs", "pub fn f() { let _ = Instant::now(); }\n"),
+            LexedFile::from_source(
+                "util/a.rs",
+                "pub fn g() { let _ = Instant::now(); }\npub fn h() { let _ = SystemTime::now(); }\n",
+            ),
+        ];
+        let r = scan_sources(&files, &[], &allow);
+        let keys: Vec<(&str, u32)> =
+            r.diagnostics.iter().map(|d| (d.file.as_str(), d.line)).collect();
+        assert_eq!(keys, vec![("util/a.rs", 1), ("util/a.rs", 2), ("util/b.rs", 1)]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Diagnostics and human/machine-readable rendering for `zenix_lint`.
+
+use std::fmt::Write as _;
+
+/// One lint violation with a stable `file:line` anchor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule id (`"D1"` … `"D6"`, `"C1"`, or `"ALLOW"` for stale
+    /// allowlist entries).
+    pub rule: &'static str,
+    /// Path relative to `rust/src/` (or `rust/tests/` for aux files).
+    pub file: String,
+    /// 1-based line of the offending token (0 when file-scoped).
+    pub line: u32,
+    /// Human-readable description of the violation.
+    pub msg: String,
+    /// The token an allowlist entry must name to suppress this
+    /// diagnostic (hazard identifier, module name, …).
+    pub allow_token: String,
+}
+
+impl Diagnostic {
+    /// Construct a diagnostic.
+    pub fn new(
+        rule: &'static str,
+        file: &str,
+        line: u32,
+        allow_token: &str,
+        msg: String,
+    ) -> Self {
+        Diagnostic { rule, file: file.to_string(), line, msg, allow_token: allow_token.to_string() }
+    }
+}
+
+/// Result of one full scan, after allowlist filtering.
+#[derive(Debug)]
+pub struct ScanResult {
+    /// Violations that survived the allowlist (non-empty ⇒ exit 1).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `rust/src/` files scanned.
+    pub files_scanned: usize,
+    /// Diagnostics suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// Rules that ran (for the summary line).
+    pub rules_run: Vec<&'static str>,
+}
+
+impl ScanResult {
+    /// True when the tree is clean.
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Plain-text report: one `file:line: [rule] message` per finding
+    /// plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            let _ = writeln!(out, "{}:{}: [{}] {}", d.file, d.line, d.rule, d.msg);
+        }
+        let _ = writeln!(
+            out,
+            "zenix_lint: {} file(s), rules {}, {} violation(s), {} allowlisted",
+            self.files_scanned,
+            self.rules_run.join("+"),
+            self.diagnostics.len(),
+            self.suppressed
+        );
+        out
+    }
+
+    /// Machine-readable JSON report (`--json`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"violations\": [");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"token\": \"{}\", \"message\": \"{}\"}}",
+                escape(d.rule),
+                escape(&d.file),
+                d.line,
+                escape(&d.allow_token),
+                escape(&d.msg)
+            );
+        }
+        if !self.diagnostics.is_empty() {
+            out.push('\n');
+            out.push_str("  ");
+        }
+        let _ = write!(
+            out,
+            "],\n  \"files_scanned\": {},\n  \"suppressed\": {},\n  \"clean\": {}\n}}",
+            self.files_scanned,
+            self.suppressed,
+            self.clean()
+        );
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScanResult {
+        ScanResult {
+            diagnostics: vec![Diagnostic::new(
+                "D2",
+                "util/example.rs",
+                7,
+                "SystemTime",
+                "wall-clock read: `SystemTime`".to_string(),
+            )],
+            files_scanned: 3,
+            suppressed: 2,
+            rules_run: vec!["D1", "D2"],
+        }
+    }
+
+    #[test]
+    fn text_has_file_line_rule() {
+        let r = sample().render_text();
+        assert!(r.contains("util/example.rs:7: [D2]"));
+        assert!(r.contains("1 violation(s), 2 allowlisted"));
+    }
+
+    #[test]
+    fn json_parses_with_the_vendored_parser() {
+        let r = sample();
+        let v = crate::util::json::parse(&r.render_json()).expect("valid json");
+        let obj = v.as_object().unwrap();
+        assert_eq!(obj["files_scanned"], crate::util::json::Value::Number(3.0));
+        let viol = obj["violations"].as_array().unwrap();
+        assert_eq!(viol.len(), 1);
+        assert_eq!(
+            viol[0].as_object().unwrap()["rule"],
+            crate::util::json::Value::String("D2".to_string())
+        );
+    }
+
+    #[test]
+    fn json_escapes_quotes() {
+        let mut r = sample();
+        r.diagnostics[0].msg = "has \"quotes\" and \\slash".to_string();
+        let v = crate::util::json::parse(&r.render_json()).expect("valid json");
+        assert!(format!("{v:?}").contains("quotes"));
+    }
+}

@@ -1,0 +1,1009 @@
+//! The `zenix_lint` rule engine: D1–D6 + C1 over lexed token streams.
+//!
+//! Each rule is a standalone function from a [`Ctx`] to diagnostics;
+//! [`run_all`] composes them. Rules are *syntactic* — a hand-rolled
+//! tokenizer cannot do type inference — so they track identifiers bound
+//! to hazardous types within a file and pattern-match token sequences.
+//! The residual false-positive/negative band is covered by the
+//! allowlist (with mandatory reasons) and by code review; the point is
+//! that every *known* hazard class is mechanically enumerated and can
+//! only shrink.
+//!
+//! Rule inventory (see `docs/ANALYSIS.md` for the full contract):
+//!
+//! - **D1** — no iteration-order-dependent traversal of `HashMap` /
+//!   `HashSet` in the digest-affecting layers (`coordinator/`,
+//!   `cluster/`, `metrics/`). Keyed lookups stay legal.
+//! - **D2** — no wall-clock or ambient-entropy APIs anywhere in `src/`.
+//! - **D3** — every `DriverReport` field is either folded into the
+//!   run digest or carries `// digest: excluded(reason)`.
+//! - **D4** — the failure counters summed by `AppStats::failed()`
+//!   match the committed conservation inventory exactly, and each term
+//!   is exercised by the conservation property tests.
+//! - **D5** — shared-mutable-state audit of `coordinator/` against a
+//!   shrink-only allowlist (what the sharded event loop must confront).
+//! - **D6** — the `#[allow(missing_docs)]` remainder matches the
+//!   committed docs-sweep allowlist exactly.
+//! - **C1** — no unchecked narrowing `as` casts on the hot path
+//!   (`coordinator/`, `metrics/`) without a `// cast: safe(reason)`
+//!   annotation; use the `util::cast` checked helpers instead.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, TokKind, Token};
+use super::report::Diagnostic;
+
+/// Hash containers whose iteration order is seed-dependent.
+const HASH_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+/// Methods whose results depend on hash iteration order.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+/// Wall-clock / ambient-entropy identifiers banned by D2.
+const D2_HAZARDS: [&str; 5] =
+    ["SystemTime", "Instant", "thread_rng", "from_entropy", "RandomState"];
+/// Shared-mutable-state type identifiers audited by D5.
+const D5_HAZARDS: [&str; 7] =
+    ["Rc", "RefCell", "Cell", "UnsafeCell", "Mutex", "RwLock", "OnceLock"];
+/// Integer destination types of a narrowing-suspect `as` cast (C1).
+const INT_TYPES: [&str; 12] = [
+    "usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+];
+/// Layers whose event/accounting order feeds the run digest (D1 scope).
+const DIGEST_LAYERS: [&str; 3] = ["coordinator/", "cluster/", "metrics/"];
+/// Hot-path layers swept for unchecked casts (C1 scope).
+const CAST_LAYERS: [&str; 2] = ["coordinator/", "metrics/"];
+
+/// A lexed source file, rule-ready.
+#[derive(Debug)]
+pub struct LexedFile {
+    /// Path relative to the scan root (`coordinator/driver.rs`, …).
+    pub rel: String,
+    /// Full token stream, comments included.
+    pub toks: Vec<Token>,
+    /// Indices into `toks` of the non-comment tokens.
+    pub code: Vec<usize>,
+    /// Concatenated comment text per line (annotation lookups).
+    pub comments: BTreeMap<u32, String>,
+}
+
+impl LexedFile {
+    /// Lex `text` as the file `rel`.
+    pub fn from_source(rel: &str, text: &str) -> Self {
+        let toks = lex(text);
+        let mut code = Vec::with_capacity(toks.len());
+        let mut comments: BTreeMap<u32, String> = BTreeMap::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Comment {
+                let slot = comments.entry(t.line).or_default();
+                slot.push(' ');
+                slot.push_str(&t.text);
+            } else {
+                code.push(i);
+            }
+        }
+        LexedFile { rel: rel.to_string(), toks, code, comments }
+    }
+
+    /// Number of code (non-comment) tokens.
+    fn clen(&self) -> usize {
+        self.code.len()
+    }
+
+    /// The `k`-th code token.
+    fn ctok(&self, k: usize) -> &Token {
+        &self.toks[self.code[k]]
+    }
+
+    /// Text of the `k`-th code token ("" out of range).
+    fn ctext(&self, k: usize) -> &str {
+        if k < self.code.len() {
+            &self.ctok(k).text
+        } else {
+            ""
+        }
+    }
+
+    /// Is code token `k` the identifier `s`?
+    fn is_ident(&self, k: usize, s: &str) -> bool {
+        k < self.code.len() && self.ctok(k).kind == TokKind::Ident && self.ctok(k).text == s
+    }
+
+    /// Is code token `k` the punctuation `c`?
+    fn is_punct(&self, k: usize, c: char) -> bool {
+        k < self.code.len()
+            && self.ctok(k).kind == TokKind::Punct
+            && self.ctok(k).text.chars().next() == Some(c)
+    }
+
+    /// True when a `marker(reason)` annotation with a non-empty reason
+    /// sits in a comment on `line` or the line directly above.
+    pub fn has_annotation(&self, line: u32, marker: &str) -> bool {
+        for l in [line, line.saturating_sub(1)] {
+            if let Some(text) = self.comments.get(&l) {
+                if let Some(pos) = text.find(marker) {
+                    let rest = &text[pos + marker.len()..];
+                    if let Some(body) = rest.strip_prefix('(') {
+                        if let Some(end) = body.find(')') {
+                            if !body[..end].trim().is_empty() {
+                                return true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Line ranges of `#[cfg(test)] mod … { … }` blocks.
+    pub fn test_spans(&self) -> Vec<(u32, u32)> {
+        let mut spans = Vec::new();
+        let n = self.clen();
+        for k in 0..n {
+            if self.is_punct(k, '#')
+                && self.is_punct(k + 1, '[')
+                && self.is_ident(k + 2, "cfg")
+                && self.is_punct(k + 3, '(')
+                && self.is_ident(k + 4, "test")
+                && self.is_punct(k + 5, ')')
+                && self.is_punct(k + 6, ']')
+            {
+                // require a `mod` between the attribute and the brace
+                let mut j = k + 7;
+                let mut saw_mod = false;
+                while j < n && j < k + 16 && !self.is_punct(j, '{') {
+                    if self.is_ident(j, "mod") {
+                        saw_mod = true;
+                    }
+                    if self.is_punct(j, ';') {
+                        break;
+                    }
+                    j += 1;
+                }
+                if saw_mod && self.is_punct(j, '{') {
+                    if let Some(close) = self.match_brace(j) {
+                        spans.push((self.ctok(j).line, self.ctok(close).line));
+                    }
+                }
+            }
+        }
+        spans
+    }
+
+    /// Index of the `}` matching the `{` at code index `open`.
+    fn match_brace(&self, open: usize) -> Option<usize> {
+        let mut depth = 0usize;
+        for k in open..self.clen() {
+            if self.is_punct(k, '{') {
+                depth += 1;
+            } else if self.is_punct(k, '}') {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+        }
+        None
+    }
+}
+
+fn in_spans(spans: &[(u32, u32)], line: u32) -> bool {
+    spans.iter().any(|&(lo, hi)| line >= lo && line <= hi)
+}
+
+/// Rule input: the scanned tree plus auxiliary files (`rust/tests/`,
+/// readable by cross-file rules like D4 but not themselves scanned).
+pub struct Ctx<'a> {
+    /// Files under `rust/src/`.
+    pub files: &'a [LexedFile],
+    /// Files under `rust/tests/`.
+    pub aux: &'a [LexedFile],
+}
+
+/// All rule ids, in report order.
+pub const ALL_RULES: [&str; 7] = ["D1", "D2", "D3", "D4", "D5", "D6", "C1"];
+
+/// Run every rule and return the raw (pre-allowlist) diagnostics.
+/// `inventory` is the `[[conservation]]` term list from the allowlist
+/// (rule D4 checks it against the code).
+pub fn run_all(ctx: &Ctx, inventory: &[String]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    out.extend(d1_hash_iteration(ctx));
+    out.extend(d2_wall_clock_entropy(ctx));
+    out.extend(d3_digest_fold(ctx));
+    out.extend(d4_conservation_terms(ctx, inventory));
+    out.extend(d5_shared_state(ctx));
+    out.extend(d6_missing_docs(ctx));
+    out.extend(c1_narrowing_casts(ctx));
+    out
+}
+
+// ---- D1: hash-iteration in digest-affecting layers ----------------------
+
+/// Identifiers bound to a `HashMap`/`HashSet` within one file, found by
+/// type ascription (`name: …HashMap<…>`, fields, params, struct-literal
+/// initializers) or `let name = …HashMap::new()`.
+fn collect_hash_idents(f: &LexedFile) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let n = f.clen();
+    let scan_for_hash = |from: usize, terminators: &[char]| -> bool {
+        let mut depth = 0i32;
+        for j in from..n.min(from + 96) {
+            let t = f.ctok(j);
+            if t.kind == TokKind::Ident && HASH_TYPES.contains(&t.text.as_str()) {
+                return true;
+            }
+            if t.kind == TokKind::Punct {
+                let c = t.text.chars().next().unwrap_or(' ');
+                match c {
+                    '<' | '(' | '[' => depth += 1,
+                    '>' | ']' => depth -= 1,
+                    ')' => {
+                        if depth == 0 {
+                            return false;
+                        }
+                        depth -= 1;
+                    }
+                    c if depth <= 0 && terminators.contains(&c) => return false,
+                    _ => {}
+                }
+            }
+        }
+        false
+    };
+    for k in 0..n {
+        // `name : Type…` (not a `::` path segment on either side)
+        if f.ctok(k).kind == TokKind::Ident
+            && f.is_punct(k + 1, ':')
+            && !f.is_punct(k + 2, ':')
+            && (k == 0 || !f.is_punct(k - 1, ':'))
+            && scan_for_hash(k + 2, &[',', ';', '=', '{', '}'])
+        {
+            out.insert(f.ctext(k).to_string());
+        }
+        // `let [mut] name = … HashMap/HashSet …;`
+        if f.is_ident(k, "let") {
+            let mut j = k + 1;
+            if f.is_ident(j, "mut") {
+                j += 1;
+            }
+            if f.ctok(j.min(n - 1)).kind == TokKind::Ident
+                && f.is_punct(j + 1, '=')
+                && scan_for_hash(j + 2, &[';'])
+            {
+                out.insert(f.ctext(j).to_string());
+            }
+        }
+    }
+    out
+}
+
+fn d1_hash_iteration(ctx: &Ctx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        if !DIGEST_LAYERS.iter().any(|p| f.rel.starts_with(p)) {
+            continue;
+        }
+        let maps = collect_hash_idents(f);
+        if maps.is_empty() {
+            continue;
+        }
+        let spans = f.test_spans();
+        let n = f.clen();
+        for k in 0..n {
+            let t = f.ctok(k);
+            if t.kind != TokKind::Ident || in_spans(&spans, t.line) {
+                continue;
+            }
+            // `map.iter()` and friends
+            if maps.contains(&t.text)
+                && f.is_punct(k + 1, '.')
+                && k + 2 < n
+                && ITER_METHODS.contains(&f.ctext(k + 2))
+                && f.is_punct(k + 3, '(')
+            {
+                out.push(Diagnostic::new(
+                    "D1",
+                    &f.rel,
+                    t.line,
+                    &t.text,
+                    format!(
+                        "iteration-order-dependent traversal `{}.{}()` of a hash container in a digest-affecting layer; use BTreeMap, a dense Vec table, or sort the keys first",
+                        t.text,
+                        f.ctext(k + 2)
+                    ),
+                ));
+            }
+            // `for … in [&][mut][self.]map {`
+            if t.text == "for" {
+                if let Some(d) = d1_check_for_loop(f, k, &maps) {
+                    out.push(d);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Check one `for` loop for direct iteration over a tracked container.
+fn d1_check_for_loop(f: &LexedFile, k: usize, maps: &BTreeSet<String>) -> Option<Diagnostic> {
+    let n = f.clen();
+    // find `in` at pattern depth 0
+    let mut depth = 0i32;
+    let mut j = k + 1;
+    let mut found_in = None;
+    while j < n && j < k + 32 {
+        if f.is_punct(j, '(') || f.is_punct(j, '[') {
+            depth += 1;
+        } else if f.is_punct(j, ')') || f.is_punct(j, ']') {
+            depth -= 1;
+        } else if depth == 0 && f.is_ident(j, "in") {
+            found_in = Some(j);
+            break;
+        }
+        j += 1;
+    }
+    let start = found_in? + 1;
+    // collect the iterated expression up to the loop body brace
+    let mut idents: Vec<(String, u32)> = Vec::new();
+    let mut has_call = false;
+    let mut m = start;
+    while m < n && m < start + 32 && !f.is_punct(m, '{') {
+        let t = f.ctok(m);
+        match t.kind {
+            TokKind::Ident if t.text != "self" && t.text != "mut" => {
+                idents.push((t.text.clone(), t.line));
+            }
+            TokKind::Punct if t.text == "(" => has_call = true,
+            _ => {}
+        }
+        m += 1;
+    }
+    if has_call || idents.len() != 1 {
+        return None;
+    }
+    let (name, line) = &idents[0];
+    if !maps.contains(name) {
+        return None;
+    }
+    Some(Diagnostic::new(
+        "D1",
+        &f.rel,
+        *line,
+        name,
+        format!(
+            "iteration-order-dependent `for … in {name}` over a hash container in a digest-affecting layer; use BTreeMap, a dense Vec table, or sort the keys first"
+        ),
+    ))
+}
+
+// ---- D2: wall clock / ambient entropy -----------------------------------
+
+fn d2_wall_clock_entropy(ctx: &Ctx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        for &i in &f.code {
+            let t = &f.toks[i];
+            if t.kind == TokKind::Ident && D2_HAZARDS.contains(&t.text.as_str()) {
+                out.push(Diagnostic::new(
+                    "D2",
+                    &f.rel,
+                    t.line,
+                    &t.text,
+                    format!(
+                        "wall-clock/entropy API `{}`: nondeterministic input; simulated time comes from cluster::Clock, randomness from seeded util::rng::Rng",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---- struct-field extraction shared by D3/D4 ----------------------------
+
+/// `(name, line)` of each field of `struct name { … }` in `f`.
+fn struct_fields(f: &LexedFile, name: &str) -> Vec<(String, u32)> {
+    let n = f.clen();
+    let mut fields = Vec::new();
+    for k in 0..n {
+        if !(f.is_ident(k, "struct") && f.is_ident(k + 1, name) && f.is_punct(k + 2, '{')) {
+            continue;
+        }
+        let open = k + 2;
+        let close = match f.match_brace(open) {
+            Some(c) => c,
+            None => return fields,
+        };
+        let mut j = open + 1;
+        while j < close {
+            // skip attributes
+            if f.is_punct(j, '#') && f.is_punct(j + 1, '[') {
+                let mut depth = 0i32;
+                j += 1;
+                while j < close {
+                    if f.is_punct(j, '[') {
+                        depth += 1;
+                    } else if f.is_punct(j, ']') {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                continue;
+            }
+            if f.is_ident(j, "pub") {
+                j += 1;
+                continue;
+            }
+            if f.ctok(j).kind == TokKind::Ident && f.is_punct(j + 1, ':') && !f.is_punct(j + 2, ':')
+            {
+                fields.push((f.ctext(j).to_string(), f.ctok(j).line));
+                // skip the type up to the field-separating comma
+                let mut depth = 0i32;
+                j += 2;
+                while j < close {
+                    if f.is_punct(j, '<') || f.is_punct(j, '(') || f.is_punct(j, '[')
+                        || f.is_punct(j, '{')
+                    {
+                        depth += 1;
+                    } else if f.is_punct(j, '>') || f.is_punct(j, ')') || f.is_punct(j, ']')
+                        || f.is_punct(j, '}')
+                    {
+                        depth -= 1;
+                    } else if depth == 0 && f.is_punct(j, ',') {
+                        j += 1;
+                        break;
+                    }
+                    j += 1;
+                }
+                continue;
+            }
+            j += 1;
+        }
+        break;
+    }
+    fields
+}
+
+// ---- D3: digest-fold completeness ---------------------------------------
+
+/// FNV-1a offset basis used by the driver's digest fold — the anchor
+/// for the digest-region token scan.
+const FNV_OFFSET_PREFIX: &str = "0xcbf29ce484222325";
+
+fn d3_digest_fold(ctx: &Ctx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let f = match ctx.files.iter().find(|f| f.rel.ends_with("coordinator/driver.rs")) {
+        Some(f) => f,
+        None => return out,
+    };
+    let fields = struct_fields(f, "DriverReport");
+    if fields.is_empty() {
+        out.push(Diagnostic::new(
+            "D3",
+            &f.rel,
+            0,
+            "DriverReport",
+            "struct DriverReport not found — the D3 digest-fold contract has no anchor".to_string(),
+        ));
+        return out;
+    }
+    // the digest region: from the FNV offset-basis literal to the
+    // `DriverReport {` construction that stores the fold
+    let n = f.clen();
+    let start = (0..n).find(|&k| {
+        let t = f.ctok(k);
+        t.kind == TokKind::Num
+            && t.text.to_lowercase().replace('_', "").starts_with(FNV_OFFSET_PREFIX)
+    });
+    let region: BTreeSet<String> = match start {
+        Some(s) => {
+            let end = (s..n)
+                .find(|&k| f.is_ident(k, "DriverReport") && f.is_punct(k + 1, '{'))
+                .unwrap_or(n);
+            (s..end)
+                .filter(|&k| f.ctok(k).kind == TokKind::Ident)
+                .map(|k| f.ctext(k).to_string())
+                .collect()
+        }
+        None => {
+            out.push(Diagnostic::new(
+                "D3",
+                &f.rel,
+                0,
+                "digest",
+                "digest fold site (FNV offset-basis literal) not found in driver.rs".to_string(),
+            ));
+            return out;
+        }
+    };
+    // struct brace line: comments between fields bound the annotations
+    let struct_open_line = (0..n)
+        .find(|&k| f.is_ident(k, "struct") && f.is_ident(k + 1, "DriverReport"))
+        .map(|k| f.ctok(k).line)
+        .unwrap_or(0);
+    let mut prev_line = struct_open_line;
+    for (name, line) in &fields {
+        let mut text = String::new();
+        for (_, c) in f.comments.range(prev_line..=*line) {
+            text.push_str(c);
+            text.push(' ');
+        }
+        prev_line = *line;
+        let folded = text.contains("digest: folded");
+        let excluded = text
+            .find("digest: excluded(")
+            .map(|p| {
+                let body = &text[p + "digest: excluded(".len()..];
+                body.find(')').map(|e| !body[..e].trim().is_empty()).unwrap_or(false)
+            })
+            .unwrap_or(false);
+        match (folded, excluded) {
+            (true, true) => out.push(Diagnostic::new(
+                "D3",
+                &f.rel,
+                *line,
+                name,
+                format!("DriverReport.{name}: carries both `digest: folded` and `digest: excluded(…)`"),
+            )),
+            (false, false) => out.push(Diagnostic::new(
+                "D3",
+                &f.rel,
+                *line,
+                name,
+                format!(
+                    "DriverReport.{name}: new report fields must declare digest intent — annotate `// digest: folded` or `// digest: excluded(reason)`"
+                ),
+            )),
+            (true, false) => {
+                if !region.contains(name) {
+                    out.push(Diagnostic::new(
+                        "D3",
+                        &f.rel,
+                        *line,
+                        name,
+                        format!(
+                            "DriverReport.{name}: annotated `digest: folded` but never referenced in the digest fold region"
+                        ),
+                    ));
+                }
+            }
+            (false, true) => {}
+        }
+    }
+    out
+}
+
+// ---- D4: conservation-term completeness ---------------------------------
+
+/// Check the committed `[[conservation]]` inventory against the
+/// counters actually summed by `AppStats::failed()` (exact set
+/// equality), the `AppStats` field list, and the property tests.
+pub fn d4_conservation_terms(ctx: &Ctx, inventory: &[String]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let f = match ctx.files.iter().find(|f| f.rel.ends_with("coordinator/driver.rs")) {
+        Some(f) => f,
+        None => return out,
+    };
+    // terms summed by AppStats::failed(): idents behind `self.` in the body
+    let n = f.clen();
+    let fail_at = (0..n).find(|&k| f.is_ident(k, "fn") && f.is_ident(k + 1, "failed"));
+    let mut summed: BTreeSet<String> = BTreeSet::new();
+    let mut fail_line = 0u32;
+    if let Some(k) = fail_at {
+        fail_line = f.ctok(k).line;
+        if let Some(open) = (k..n.min(k + 32)).find(|&j| f.is_punct(j, '{')) {
+            if let Some(close) = f.match_brace(open) {
+                for j in open..close {
+                    if f.is_ident(j, "self") && f.is_punct(j + 1, '.') && j + 2 < close {
+                        summed.insert(f.ctext(j + 2).to_string());
+                    }
+                }
+            }
+        }
+    } else {
+        out.push(Diagnostic::new(
+            "D4",
+            &f.rel,
+            0,
+            "failed",
+            "AppStats::failed() not found — the conservation inventory has no anchor".to_string(),
+        ));
+        return out;
+    }
+    let inv: BTreeSet<String> = inventory.iter().cloned().collect();
+    for t in summed.difference(&inv) {
+        out.push(Diagnostic::new(
+            "D4",
+            &f.rel,
+            fail_line,
+            t,
+            format!(
+                "failure counter `{t}` is summed by AppStats::failed() but missing from the [[conservation]] inventory — add it with its meaning (and extend the conservation tests)"
+            ),
+        ));
+    }
+    for t in inv.difference(&summed) {
+        out.push(Diagnostic::new(
+            "D4",
+            &f.rel,
+            fail_line,
+            t,
+            format!(
+                "[[conservation]] term `{t}` is no longer summed by AppStats::failed() — stale inventory entry"
+            ),
+        ));
+    }
+    // every inventory term must be an AppStats field…
+    let app_fields: BTreeSet<String> =
+        struct_fields(f, "AppStats").into_iter().map(|(n, _)| n).collect();
+    for t in &inv {
+        if !app_fields.contains(t) {
+            out.push(Diagnostic::new(
+                "D4",
+                &f.rel,
+                fail_line,
+                t,
+                format!("[[conservation]] term `{t}` is not a field of AppStats"),
+            ));
+        }
+    }
+    // …and must be exercised by the conservation property tests
+    if let Some(pt) = ctx.aux.iter().find(|f| f.rel.ends_with("proptests.rs")) {
+        for t in &inv {
+            let used = pt
+                .code
+                .iter()
+                .any(|&i| pt.toks[i].kind == TokKind::Ident && pt.toks[i].text == *t);
+            if !used {
+                out.push(Diagnostic::new(
+                    "D4",
+                    &pt.rel,
+                    0,
+                    t,
+                    format!(
+                        "[[conservation]] term `{t}` never appears in the conservation property tests (proptests.rs)"
+                    ),
+                ));
+            }
+        }
+    } else if !inv.is_empty() {
+        out.push(Diagnostic::new(
+            "D4",
+            "rust/tests/proptests.rs",
+            0,
+            "proptests",
+            "conservation property-test file proptests.rs not found".to_string(),
+        ));
+    }
+    out
+}
+
+// ---- D5: shared-mutable-state audit -------------------------------------
+
+fn d5_shared_state(ctx: &Ctx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        if !f.rel.starts_with("coordinator/") {
+            continue;
+        }
+        let spans = f.test_spans();
+        let mut seen: BTreeSet<(u32, String)> = BTreeSet::new();
+        let n = f.clen();
+        for k in 0..n {
+            let t = f.ctok(k);
+            if t.kind != TokKind::Ident || in_spans(&spans, t.line) {
+                continue;
+            }
+            let token = if D5_HAZARDS.contains(&t.text.as_str()) {
+                Some(t.text.clone())
+            } else if t.text == "static" && f.is_ident(k + 1, "mut") {
+                Some("static mut".to_string())
+            } else if t.text == "thread_local" && f.is_punct(k + 1, '!') {
+                Some("thread_local!".to_string())
+            } else {
+                None
+            };
+            if let Some(token) = token {
+                if seen.insert((t.line, token.clone())) {
+                    out.push(Diagnostic::new(
+                        "D5",
+                        &f.rel,
+                        t.line,
+                        &token,
+                        format!(
+                            "shared-mutable-state construct `{token}` in the coordinator — the sharded event loop must confront this; inventory it in the allowlist with a migration note"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---- D6: #[allow(missing_docs)] inventory -------------------------------
+
+fn d6_missing_docs(ctx: &Ctx) -> Vec<Diagnostic> {
+    const ITEM_KEYWORDS: [&str; 12] = [
+        "pub", "mod", "fn", "struct", "enum", "trait", "type", "const", "static", "crate",
+        "unsafe", "impl",
+    ];
+    let mut out = Vec::new();
+    for f in ctx.files {
+        let n = f.clen();
+        for k in 0..n {
+            if f.is_punct(k, '#')
+                && f.is_punct(k + 1, '[')
+                && f.is_ident(k + 2, "allow")
+                && f.is_punct(k + 3, '(')
+                && f.is_ident(k + 4, "missing_docs")
+                && f.is_punct(k + 5, ')')
+                && f.is_punct(k + 6, ']')
+            {
+                let mut name = String::from("?");
+                for j in k + 7..n.min(k + 16) {
+                    let t = f.ctok(j);
+                    if t.kind == TokKind::Ident && !ITEM_KEYWORDS.contains(&t.text.as_str()) {
+                        name = t.text.clone();
+                        break;
+                    }
+                }
+                out.push(Diagnostic::new(
+                    "D6",
+                    &f.rel,
+                    f.ctok(k).line,
+                    &name,
+                    format!(
+                        "#[allow(missing_docs)] on `{name}`: the docs-sweep remainder must match the committed allowlist (drop the allow when sweeping)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---- C1: unchecked narrowing casts --------------------------------------
+
+fn c1_narrowing_casts(ctx: &Ctx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        if !CAST_LAYERS.iter().any(|p| f.rel.starts_with(p)) {
+            continue;
+        }
+        let spans = f.test_spans();
+        let n = f.clen();
+        for k in 0..n {
+            if !f.is_ident(k, "as") {
+                continue;
+            }
+            let ty = f.ctext(k + 1).to_string();
+            if !INT_TYPES.contains(&ty.as_str()) {
+                continue;
+            }
+            let line = f.ctok(k).line;
+            if in_spans(&spans, line) {
+                continue;
+            }
+            if f.has_annotation(line, "cast: safe") {
+                continue;
+            }
+            out.push(Diagnostic::new(
+                "C1",
+                &f.rel,
+                line,
+                &format!("as {ty}"),
+                format!(
+                    "unchecked `as {ty}` cast on the hot path: use a util::cast checked helper or annotate `// cast: safe(reason)`"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> LexedFile {
+        LexedFile::from_source(rel, src)
+    }
+
+    fn run<F: Fn(&Ctx) -> Vec<Diagnostic>>(rule: F, files: Vec<LexedFile>) -> Vec<Diagnostic> {
+        let ctx = Ctx { files: &files, aux: &[] };
+        rule(&ctx)
+    }
+
+    // ---- D1 ----
+
+    #[test]
+    fn d1_flags_hash_iteration_in_digest_layers() {
+        let src = "use std::collections::HashMap;\nfn f() {\n  let mut m: HashMap<u32, u32> = HashMap::new();\n  for (k, v) in &m { drop((k, v)); }\n  let s: Vec<u32> = m.keys().copied().collect();\n}\n";
+        let d = run(d1_hash_iteration, vec![file("coordinator/x.rs", src)]);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|d| d.rule == "D1"));
+        assert_eq!(d[0].line, 4); // for … in &m (token order)
+        assert_eq!(d[1].line, 5); // m.keys()
+    }
+
+    #[test]
+    fn d1_keyed_lookups_and_out_of_scope_files_are_clean() {
+        let keyed = "use std::collections::HashMap;\nfn f(m: &mut HashMap<u32, u32>) {\n  m.insert(1, 2);\n  let _ = m.get(&1);\n  let _ = m.contains_key(&1);\n  m.entry(3).or_insert(4);\n}\n";
+        assert!(run(d1_hash_iteration, vec![file("coordinator/x.rs", keyed)]).is_empty());
+        let iterating = "use std::collections::HashMap;\nfn f(m: &HashMap<u32,u32>) { for x in m.values() { drop(x); } }\n";
+        assert!(run(d1_hash_iteration, vec![file("util/x.rs", iterating)]).is_empty());
+        // Vec iteration in scope is fine
+        let vecs = "fn f(v: &Vec<u32>) { for x in v { drop(x); } for y in v.iter() { drop(y); } }\n";
+        assert!(run(d1_hash_iteration, vec![file("coordinator/x.rs", vecs)]).is_empty());
+    }
+
+    #[test]
+    fn d1_tracks_struct_fields_and_set_drain() {
+        let src = "use std::collections::HashSet;\nstruct S { warm: HashSet<u32> }\nimpl S { fn f(&mut self) { for x in self.warm.drain() { drop(x); } } }\n";
+        let d = run(d1_hash_iteration, vec![file("metrics/x.rs", src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].allow_token, "warm");
+    }
+
+    // ---- D2 ----
+
+    #[test]
+    fn d2_flags_wall_clock_and_entropy_idents() {
+        let src = "fn f() { let t = std::time::SystemTime::now(); let i = Instant::now(); }\n";
+        let d = run(d2_wall_clock_entropy, vec![file("net/x.rs", src)]);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert_eq!(d[0].allow_token, "SystemTime");
+        assert_eq!(d[1].allow_token, "Instant");
+    }
+
+    #[test]
+    fn d2_ignores_strings_and_comments() {
+        let src = "// SystemTime is banned\nfn f() { let s = \"Instant::now\"; drop(s); }\n";
+        assert!(run(d2_wall_clock_entropy, vec![file("net/x.rs", src)]).is_empty());
+    }
+
+    // ---- D3 ----
+
+    const D3_TAIL: &str = "fn fold(completed: u64) -> u64 {\n  let mut h = 0xcbf2_9ce4_8422_2325u64;\n  h = h ^ completed;\n  let r = DriverReport { completed: 0, digest: h };\n  r.digest\n}\n";
+
+    #[test]
+    fn d3_requires_annotation_on_every_field() {
+        let src = format!(
+            "pub struct DriverReport {{\n  // digest: folded\n  pub completed: usize,\n  pub digest: u64,\n}}\n{D3_TAIL}"
+        );
+        let d = run(d3_digest_fold, vec![file("coordinator/driver.rs", &src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("declare digest intent"), "{}", d[0].msg);
+        assert_eq!(d[0].allow_token, "digest");
+    }
+
+    #[test]
+    fn d3_clean_when_folded_and_excluded_cover_all() {
+        let src = format!(
+            "pub struct DriverReport {{\n  // digest: folded\n  pub completed: usize,\n  // digest: excluded(the digest itself)\n  pub digest: u64,\n}}\n{D3_TAIL}"
+        );
+        assert!(run(d3_digest_fold, vec![file("coordinator/driver.rs", &src)]).is_empty());
+    }
+
+    #[test]
+    fn d3_folded_field_must_appear_in_fold_region() {
+        let src = format!(
+            "pub struct DriverReport {{\n  // digest: folded\n  pub queued: usize,\n  // digest: excluded(self)\n  pub digest: u64,\n}}\n{D3_TAIL}"
+        );
+        let d = run(d3_digest_fold, vec![file("coordinator/driver.rs", &src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("never referenced"), "{}", d[0].msg);
+    }
+
+    // ---- D4 ----
+
+    const D4_SRC: &str = "pub struct AppStats { pub rejected: usize, pub aborted: usize }\nimpl AppStats {\n  pub fn failed(&self) -> usize { self.rejected + self.aborted }\n}\n";
+
+    #[test]
+    fn d4_flags_missing_and_stale_inventory_terms() {
+        let files = vec![file("coordinator/driver.rs", D4_SRC)];
+        let aux = vec![file("proptests.rs", "fn t(r: R) { assert_eq!(r.rejected + r.aborted, 0); }\n")];
+        let ctx = Ctx { files: &files, aux: &aux };
+        // missing: aborted not in inventory
+        let d = d4_conservation_terms(&ctx, &["rejected".to_string()]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("missing from the [[conservation]]"), "{}", d[0].msg);
+        // stale: timed_out not summed
+        let d = d4_conservation_terms(
+            &ctx,
+            &["rejected".to_string(), "aborted".to_string(), "timed_out".to_string()],
+        );
+        assert!(d.iter().any(|d| d.msg.contains("stale inventory")), "{d:?}");
+        // clean when the inventory matches and the tests use both terms
+        let d = d4_conservation_terms(&ctx, &["rejected".to_string(), "aborted".to_string()]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn d4_requires_terms_in_the_property_tests() {
+        let files = vec![file("coordinator/driver.rs", D4_SRC)];
+        let aux = vec![file("proptests.rs", "fn t(r: R) { assert_eq!(r.rejected, 0); }\n")];
+        let ctx = Ctx { files: &files, aux: &aux };
+        let d = d4_conservation_terms(&ctx, &["rejected".to_string(), "aborted".to_string()]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("never appears in the conservation property tests"));
+    }
+
+    // ---- D5 ----
+
+    #[test]
+    fn d5_inventories_shared_state_outside_tests() {
+        let src = "use std::cell::RefCell;\nstruct S { c: RefCell<u32> }\nstatic mut G: u32 = 0;\n#[cfg(test)]\nmod tests {\n  use std::sync::Mutex;\n  static M: Mutex<u32> = Mutex::new(0);\n}\n";
+        let d = run(d5_shared_state, vec![file("coordinator/x.rs", src)]);
+        let tokens: Vec<&str> = d.iter().map(|d| d.allow_token.as_str()).collect();
+        assert_eq!(tokens, vec!["RefCell", "RefCell", "static mut"], "{d:?}");
+    }
+
+    #[test]
+    fn d5_ignores_other_layers() {
+        let src = "use std::sync::Mutex;\nstatic M: Mutex<u32> = Mutex::new(0);\n";
+        assert!(run(d5_shared_state, vec![file("runtime/x.rs", src)]).is_empty());
+    }
+
+    // ---- D6 ----
+
+    #[test]
+    fn d6_reports_module_names() {
+        let src = "#[allow(missing_docs)]\npub mod foo;\npub mod bar;\n";
+        let d = run(d6_missing_docs, vec![file("lib.rs", src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].allow_token, "foo");
+    }
+
+    #[test]
+    fn d6_other_allows_are_not_flagged() {
+        let src = "#[allow(dead_code)]\npub mod foo;\n";
+        assert!(run(d6_missing_docs, vec![file("lib.rs", src)]).is_empty());
+    }
+
+    // ---- C1 ----
+
+    #[test]
+    fn c1_flags_unannotated_integer_casts() {
+        let src = "fn f(x: f64) -> usize { x as usize }\n";
+        let d = run(c1_narrowing_casts, vec![file("coordinator/x.rs", src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].allow_token, "as usize");
+    }
+
+    #[test]
+    fn c1_accepts_annotations_and_skips_tests_and_float_casts() {
+        let annotated = "fn f(x: f64) -> usize {\n  // cast: safe(x is a small non-negative count)\n  x as usize\n}\nfn g(x: u32) -> u64 { x as u64 // cast: safe(widening)\n}\n";
+        assert!(run(c1_narrowing_casts, vec![file("coordinator/x.rs", annotated)]).is_empty());
+        let test_only = "#[cfg(test)]\nmod tests {\n  fn f(x: f64) -> usize { x as usize }\n}\n";
+        assert!(run(c1_narrowing_casts, vec![file("coordinator/x.rs", test_only)]).is_empty());
+        let float = "fn f(x: usize) -> f64 { x as f64 }\n";
+        assert!(run(c1_narrowing_casts, vec![file("coordinator/x.rs", float)]).is_empty());
+        let out_of_scope = "fn f(x: f64) -> usize { x as usize }\n";
+        assert!(run(c1_narrowing_casts, vec![file("util/x.rs", out_of_scope)]).is_empty());
+    }
+
+    #[test]
+    fn c1_annotation_requires_a_reason() {
+        let src = "fn f(x: f64) -> usize {\n  // cast: safe()\n  x as usize\n}\n";
+        let d = run(c1_narrowing_casts, vec![file("coordinator/x.rs", src)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+    }
+}

@@ -1,0 +1,57 @@
+//! CLI for the dependency-free determinism & accounting lint.
+//!
+//! ```text
+//! cargo run --release --bin zenix_lint            # human-readable
+//! cargo run --release --bin zenix_lint -- --json  # machine-readable
+//! ```
+//!
+//! Scans `rust/src/**/*.rs` (with `rust/tests/` as auxiliary context)
+//! against the committed allowlist and exits nonzero on any violation —
+//! the CI gate in `scripts/ci.sh`. Exit codes: 0 clean, 1 violations,
+//! 2 usage/scan error.
+
+use std::path::PathBuf;
+
+const USAGE: &str = "usage: zenix_lint [--json] [--root <repo-root>]
+  --json    emit the machine-readable JSON report instead of text
+  --root    repo root to scan (default: this crate's manifest dir)";
+
+fn main() {
+    let mut json = false;
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("zenix_lint: --root needs a path\n{USAGE}");
+                    std::process::exit(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return;
+            }
+            other => {
+                eprintln!("zenix_lint: unknown argument {other:?}\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
+    match zenix::analysis::scan_repo(&root) {
+        Ok(r) => {
+            if json {
+                println!("{}", r.render_json());
+            } else {
+                print!("{}", r.render_text());
+            }
+            std::process::exit(if r.clean() { 0 } else { 1 });
+        }
+        Err(e) => {
+            eprintln!("zenix_lint: scan failed: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -58,6 +58,7 @@ impl<E> Default for Clock<E> {
 }
 
 impl<E> Clock<E> {
+    /// Empty queue at simulated time 0.
     pub fn new() -> Self {
         Self { now: 0.0, seq: 0, heap: BinaryHeap::new() }
     }
@@ -92,10 +93,12 @@ impl<E> Clock<E> {
         self.heap.peek().map(|e| e.at)
     }
 
+    /// True when no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Number of pending events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }

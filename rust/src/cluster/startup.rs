@@ -28,12 +28,15 @@ pub struct StartupModel {
     pub qp_setup: Millis,
     /// TCP connection establishment (3-way handshake + registration).
     pub tcp_setup: Millis,
-    /// Warm-start dispatch: OpenWhisk / AWS / Zenix.
+    /// Warm-start dispatch on OpenWhisk (environment reuse).
     pub warm_ow: Millis,
+    /// Warm-start dispatch on AWS Lambda / Step Functions.
     pub warm_aws: Millis,
+    /// Warm-start dispatch on Zenix.
     pub warm_zenix: Millis,
-    /// AWS Lambda / Step Functions cold invoke (public-cloud baselines).
+    /// AWS Lambda cold invoke (public-cloud baseline).
     pub cold_lambda: Millis,
+    /// AWS Step Functions cold invoke (public-cloud baseline).
     pub cold_step_functions: Millis,
 }
 
@@ -67,15 +70,21 @@ impl Default for StartupModel {
 /// Which platform's startup path to model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StartupPath {
+    /// Stock OpenWhisk container + runtime bring-up.
     OpenWhisk,
+    /// OpenWhisk with the overlay-network attach the paper measured.
     OpenWhiskOverlay,
+    /// Zenix's leaner container launch, still paying the overlay attach.
     ZenixOverlay,
+    /// Full Zenix cold path: lean launch + network-virtualization init.
     Zenix,
     /// Zenix with a pre-warmed environment (§5.2.1): container + runtime
     /// already up; only user code loads, with connection setup hidden
     /// behind it.
     ZenixPrewarmed,
+    /// AWS Lambda cold invoke (public-cloud baseline).
     Lambda,
+    /// AWS Step Functions cold invoke (public-cloud baseline).
     StepFunctions,
 }
 

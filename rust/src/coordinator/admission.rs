@@ -50,6 +50,7 @@
 
 use crate::cluster::clock::Millis;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
+use crate::util::cast;
 use crate::util::rng::Rng;
 
 /// Sentinel for "no slot" in the intrusive lists.
@@ -517,6 +518,7 @@ impl DeferredQueues {
             .fold(f64::INFINITY, f64::min);
         for (q, &w) in self.quantum.iter_mut().zip(weights) {
             *q = if w > 0.0 && min_w.is_finite() {
+                // cast: safe(ratio of positive finite weights, >= 1.0 after max)
                 (w / min_w).round().max(1.0) as usize
             } else {
                 1
@@ -918,7 +920,7 @@ impl DeferredQueues {
                     aborted: aborted[a],
                     timed_out: st.timed_out,
                     queued: st.enqueued,
-                    drained: st.delay.count() as usize,
+                    drained: cast::usize_of(st.delay.count()),
                     queue_depth_hwm: st.depth_hwm,
                     mean_queue_delay_ms: st.delay.mean(),
                     p95_queue_delay_ms: st.delay_p95.value(),

@@ -106,6 +106,7 @@ use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel};
 use crate::metrics::fairness;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 use crate::trace::{Archetype, UsageTrace};
+use crate::util::cast;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -248,6 +249,7 @@ impl Schedule {
         // Invocation counts proportional to weight; remainder round-robin.
         let mut counts: Vec<usize> = apps
             .iter()
+            // cast: safe(weight/total_w in [0,1], so the floor is in 0..=n)
             .map(|a| ((a.weight.max(0.0) / total_w) * n as f64).floor() as usize)
             .collect();
         let mut assigned: usize = counts.iter().sum();
@@ -264,13 +266,14 @@ impl Schedule {
             if ni == 0 {
                 continue;
             }
-            let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(a as u64 + 1)));
+            let mut rng =
+                Rng::new(cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(cast::u64_of(a) + 1)));
             // per-app mean IAT so the fleet-wide mean is cfg.mean_iat_ms
             let iat = cfg.mean_iat_ms * n as f64 / ni as f64;
             let rate = 1.0 / iat.max(1e-9);
             let peaks: Option<Vec<f64>> = match app.scales {
                 ScaleModel::AzureTrace(arch) => Some(
-                    UsageTrace::generate(arch, ni, cfg.seed ^ (0xA5A5 + a as u64)).peaks(),
+                    UsageTrace::generate(arch, ni, cfg.seed ^ (0xA5A5 + cast::u64_of(a))).peaks(),
                 ),
                 ScaleModel::Fixed(_) => None,
             };
@@ -281,7 +284,7 @@ impl Schedule {
             let mut modulator = RateModulator::new(
                 cfg.arrivals,
                 rate,
-                cfg.seed ^ 0xB157_0000 ^ (0xD1B5_4A32_D192_ED03u64.wrapping_mul(a as u64 + 1)),
+                cfg.seed ^ 0xB157_0000 ^ (0xD1B5_4A32_D192_ED03u64.wrapping_mul(cast::u64_of(a) + 1)),
             );
             let mut t = 0.0f64;
             for k in 0..ni {
@@ -386,15 +389,20 @@ impl AppStats {
 #[derive(Debug, Clone)]
 pub struct DriverReport {
     /// Label of the system that produced this run.
+    // digest: excluded(presentation label; folding it would make renames a digest break)
     pub system: String,
     /// Per-app aggregates, index-aligned with the registered mix.
+    // digest: folded
     pub apps: Vec<AppStats>,
     /// Cluster-integrated consumption over the whole run (for the
     /// closed-form FaaS baseline: the sum over invocations).
+    // digest: folded
     pub fleet: Consumption,
     /// End of the last event (simulated ms).
+    // digest: folded
     pub makespan_ms: f64,
     /// Invocations that ran to completion.
+    // digest: folded
     pub completed: usize,
     /// Total failed arrivals: `rejected + aborted + timed_out` (kept as
     /// one number because the digest folds it; the split fields below
@@ -403,66 +411,88 @@ pub struct DriverReport {
     /// so the digest-folded quantity keeps its pre-chaos meaning; the
     /// full conservation identity is `completed + rejected + aborted +
     /// timed_out + faulted_unrecovered == arrivals`.
+    // digest: folded
     pub failed: usize,
     /// Admission-time rejections across the fleet.
+    // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
     pub rejected: usize,
     /// Mid-run aborts across the fleet.
+    // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
     pub aborted: usize,
     /// Deferred-queue timeouts across the fleet.
+    // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
     pub timed_out: usize,
     /// Invocations hit by an injected fault mid-run (fleet-wide;
     /// `faulted == recovered + faulted_unrecovered`).
+    // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
     pub faulted: usize,
     /// Faulted invocations that recovered and completed.
+    // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
     pub recovered: usize,
     /// Faulted invocations that never completed (the recovery rewind
     /// could not be re-placed). Disjoint from `aborted`.
+    // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
     pub faulted_unrecovered: usize,
     /// Mean fault-to-completion latency over recovered invocations
     /// (ms; 0 when nothing recovered).
+    // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
     pub mean_recovery_ms: f64,
     /// P² p95 fault-to-completion latency over recovered invocations.
+    // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
     pub p95_recovery_ms: f64,
     /// Fleet-wide P² p99 execution latency of completions (the chaos
     /// sweep's tail-latency axis; exact-mode runs use the same
     /// streaming estimator so the value is mode-independent).
+    // digest: excluded(tail-latency estimate; derived from folded per-app exec latencies)
     pub p99_exec_ms: f64,
     /// Arrivals parked in a deferred queue at least once.
+    // digest: excluded(admission telemetry added after the digest was pinned)
     pub queued: usize,
     /// Mean queueing delay across every queue-admitted invocation (ms).
+    // digest: excluded(admission telemetry added after the digest was pinned)
     pub mean_queue_delay_ms: f64,
     /// P² p95 queueing delay across every queue-admitted invocation.
+    // digest: excluded(admission telemetry added after the digest was pinned)
     pub p95_queue_delay_ms: f64,
     /// Jain's fairness index over per-tenant completion counts (equal
     /// to the index over completion *rates* — Jain is scale-invariant).
     /// 1.0 = every tenant completed the same amount; 1/apps = one
     /// tenant monopolized the fleet. Not folded into the digest.
+    // digest: excluded(derived index over folded per-app completion counts)
     pub jain_completion: f64,
     /// Jain's fairness index over per-tenant goodput/demand ratios
     /// (completed/scheduled) — the demand-normalized view for mixes
     /// whose tenants *ask* for asymmetric shares on purpose.
+    // digest: excluded(derived index over folded per-app completion counts)
     pub jain_goodput: f64,
     /// Global-scheduler routing decisions served by the incremental
     /// best-rack cache (multi-rack telemetry; 0 for the closed-form
     /// FaaS baseline, which routes nothing).
+    // digest: excluded(scheduler cache telemetry; an optimization counter, not a result)
     pub route_fast_hits: u64,
     /// Global-scheduler routing decisions that fell back to the
     /// O(racks) scan (stale cache or best rack could not fit).
+    // digest: excluded(scheduler cache telemetry; an optimization counter, not a result)
     pub route_scans: u64,
     /// Fleet-wide warm-pool hits.
+    // digest: folded
     pub warm_hits: usize,
     /// Fleet-wide cold starts.
+    // digest: excluded(complement of folded warm_hits over the same invocation set)
     pub cold_starts: usize,
     /// Peak number of simultaneously in-flight invocations — > 1 means
     /// the run genuinely overlapped tenants on the cluster.
+    // digest: excluded(concurrency telemetry added after the digest was pinned)
     pub max_in_flight: usize,
     /// Index-aligned with the schedule: which arrivals this system
     /// completed (all-true for the closed-form FaaS baseline). A
     /// bitset — one bit per arrival, the only per-invocation structure
     /// the report retains (needed for the apples-to-apples FaaS
     /// replay over exactly the completed work).
+    // digest: excluded(per-invocation replay bookkeeping; its content is already summarized by the folded counters)
     pub completed_mask: BitMask,
     /// Order-stable digest of the quantized results (determinism gate).
+    // digest: excluded(the digest itself cannot fold itself)
     pub digest: u64,
 }
 
@@ -513,6 +543,7 @@ impl BitMask {
 
     /// Number of set bits.
     pub fn count_ones(&self) -> usize {
+        // cast: safe(u32 popcount of a u64 word, <= 64)
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 }
@@ -850,7 +881,7 @@ impl<'a> Aggregator<'a> {
                     )
                 } else {
                     (
-                        a.moments.count() as usize,
+                        cast::usize_of(a.moments.count()),
                         a.moments.mean(),
                         a.p95.value(),
                         if a.early_n == 0 {
@@ -911,15 +942,16 @@ impl<'a> Aggregator<'a> {
         let mut mix = |v: u64| {
             h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
         };
+        // cast: safe(pinned digest semantics: i64 wrap of round(x*1024) reinterpreted as u64 is what DRIVER_DIGEST.lock records)
         let q = |x: f64| (x * 1024.0).round() as i64 as u64;
-        mix(completed as u64);
-        mix(failed as u64);
-        mix(warm_hits as u64);
+        mix(cast::u64_of(completed));
+        mix(cast::u64_of(failed));
+        mix(cast::u64_of(warm_hits));
         mix(q(fleet.alloc_mem_mb_s));
         mix(q(fleet.used_mem_mb_s));
         mix(q(makespan_ms));
         for a in &apps {
-            mix(a.completed as u64);
+            mix(cast::u64_of(a.completed));
             mix(q(a.mean_exec_ms));
             mix(q(a.consumption.alloc_mem_mb_s));
         }

@@ -57,6 +57,7 @@ use crate::cluster::{Cluster, ClusterSpec, RackId, Resources, ServerId, StartupM
 use crate::memory::MemoryController;
 use crate::metrics::{Breakdown, RunReport};
 use crate::net::{ControlPath, ControlPlane, NetKind, NetModel};
+use crate::util::cast;
 
 use super::adjust::{self, AdjustParams};
 use super::failure::{self, Crash};
@@ -646,6 +647,7 @@ impl Platform {
             // -- sizing ---------------------------------------------
             let workers = spec
                 .parallelism_at(scale)
+                // cast: safe(app_limit.cpu is a small positive vCPU count)
                 .min(program.app_limit.cpu.max(1.0) as usize)
                 .max(1);
             let need_mb_worker = spec.mem_at(scale);
@@ -676,7 +678,7 @@ impl Platform {
             for &d in &spec.accesses {
                 let dspec = &program.data[d];
                 let dsize = dspec.size_at(scale);
-                if st.mem.get(d as u64).is_none() {
+                if st.mem.get(cast::u64_of(d)).is_none() {
                     let prefer = if self.config.force_remote_data {
                         // disaggregation mode: data lives away from compute
                         self.other_server(rack_id, server)
@@ -687,7 +689,7 @@ impl Platform {
                     let mut launched = dsize;
                     if st
                         .mem
-                        .launch(&mut self.cluster, d as u64, target, dsize, wave_start)
+                        .launch(&mut self.cluster, cast::u64_of(d), target, dsize, wave_start)
                         .is_err()
                     {
                         // overloaded cluster: take what fits and leave
@@ -697,7 +699,7 @@ impl Platform {
                         launched = avail.min(dsize);
                         if let Err(e) = st.mem.launch(
                             &mut self.cluster,
-                            d as u64,
+                            cast::u64_of(d),
                             target,
                             launched,
                             wave_start,
@@ -713,7 +715,7 @@ impl Platform {
                     st.data_home[d] = Some(target);
                 } else {
                     // growth if this invocation needs more
-                    let cur = st.mem.get(d as u64).unwrap().total_mb();
+                    let cur = st.mem.get(cast::u64_of(d)).unwrap().total_mb();
                     if dsize > cur {
                         ctx.accessors.clear();
                         ctx.accessors.extend(
@@ -730,7 +732,7 @@ impl Platform {
                         if let Some(s) = grow_to {
                             if st
                                 .mem
-                                .grow(&mut self.cluster, d as u64, dsize - cur, &[s], wave_start)
+                                .grow(&mut self.cluster, cast::u64_of(d), dsize - cur, &[s], wave_start)
                                 .is_ok()
                             {
                                 st.data_grow(d, wave_start, dsize - cur);
@@ -738,14 +740,14 @@ impl Platform {
                         }
                     }
                 }
-                if let Err(e) = st.mem.attach(d as u64, c as u64) {
+                if let Err(e) = st.mem.attach(cast::u64_of(d), cast::u64_of(c)) {
                     // current component's placement has no Finish
                     // event yet: release it directly
                     self.cluster.free(server, granted, wave_start);
                     self.abort_invocation(ctx, st, wave_start);
                     return Err(e);
                 }
-                if let Some(state) = st.mem.get(d as u64) {
+                if let Some(state) = st.mem.get(cast::u64_of(d)) {
                     remote_frac += state.remote_fraction(server);
                     n_accessed += 1;
                 }
@@ -779,7 +781,7 @@ impl Platform {
             let path = self.config.control_path();
             ctx.conn_seen.clear();
             for &d in &spec.accesses {
-                for s in st.mem.region_server_iter(d as u64) {
+                for s in st.mem.region_server_iter(cast::u64_of(d)) {
                     if s != server {
                         let reuse = ctx.conn_seen.contains(&s);
                         conn_ms += self.control.conn_setup(path, kind, reuse);
@@ -809,6 +811,7 @@ impl Platform {
             let mut alloc_now = init_mb;
             if need_mb > init_mb {
                 let growths = adjust::growths(init_mb, step_mb, need_mb);
+                // cast: safe(growths is a small non-negative whole f64 count)
                 st.growth_count += growths as usize;
                 // each growth: scheduler round-trip + brief stall
                 let growth_overhead = growths * (2.0 * self.control.sched_msg_ms + 2.0);
@@ -847,7 +850,7 @@ impl Platform {
             self.cluster.add_used(server, base_used, wave_start);
             let mid = wave_start + (startup_ms + stage_ms) / 2.0;
             if alloc_now > init_mb {
-                let seq = st.pending.len() as u32;
+                let seq = cast::u32_of(st.pending.len());
                 st.pending.push((
                     mid,
                     seq,
@@ -862,7 +865,7 @@ impl Platform {
             // `used` carries exactly the base share added above —
             // `Finish` subtracts it plus whatever the (possibly
             // failed) `Grow` actually added, never more.
-            let seq = st.pending.len() as u32;
+            let seq = cast::u32_of(st.pending.len());
             st.pending.push((
                 end,
                 seq,
@@ -959,9 +962,9 @@ impl Platform {
         // -- data lifetime: release components whose last accessor ran
         for d in 0..graph.n_data() {
             if let Some((_, last)) = graph.data_lifetime(d) {
-                if last == st.wave_idx && st.mem.get(d as u64).is_some() {
+                if last == st.wave_idx && st.mem.get(cast::u64_of(d)).is_some() {
                     st.data_close(d, now);
-                    let _ = st.mem.release(&mut self.cluster, d as u64, now);
+                    let _ = st.mem.release(&mut self.cluster, cast::u64_of(d), now);
                     st.data_home[d] = None;
                 }
             }
@@ -976,9 +979,9 @@ impl Platform {
                 let plan = failure::plan(graph, &self.msglog, st.inv_id, cr);
                 // discard data components named by the plan
                 for &d in &plan.discard_data {
-                    if st.mem.get(d as u64).is_some() {
+                    if st.mem.get(cast::u64_of(d)).is_some() {
                         st.data_close(d, now);
-                        let _ = st.mem.release(&mut self.cluster, d as u64, now);
+                        let _ = st.mem.release(&mut self.cluster, cast::u64_of(d), now);
                         st.data_home[d] = None;
                     }
                 }
@@ -1005,9 +1008,9 @@ impl Platform {
         let wave_end = st.wave_start;
         // release any data still live (defensive; lifetimes should cover)
         for d in 0..graph.n_data() {
-            if st.mem.get(d as u64).is_some() {
+            if st.mem.get(cast::u64_of(d)).is_some() {
                 st.data_close(d, wave_end);
-                let _ = st.mem.release(&mut self.cluster, d as u64, wave_end);
+                let _ = st.mem.release(&mut self.cluster, cast::u64_of(d), wave_end);
             }
         }
         if let Some(a) = st.anchor {
@@ -1111,7 +1114,7 @@ impl Platform {
         for d in 0..st.data_track.len() {
             if st.data_track[d].is_some() {
                 st.data_close(d, now);
-                let _ = st.mem.release(&mut self.cluster, d as u64, now);
+                let _ = st.mem.release(&mut self.cluster, cast::u64_of(d), now);
             }
         }
         st.mem.release_all(&mut self.cluster, now); // backstop: empty by now
@@ -1144,7 +1147,7 @@ impl Platform {
                     // the *cumulative* observation count: the retention
                     // window saturates at its cap, which would stop
                     // re-tuning forever on long-running apps.
-                    let recorded = p.total_recorded() as usize;
+                    let recorded = cast::usize_of(p.total_recorded());
                     let key = (app, node);
                     let mut cache = self.sizing_cache.borrow_mut();
                     if let Some(&(init, step, at)) = cache.get(&key) {
@@ -1187,6 +1190,7 @@ impl Platform {
             .profile(app, node, Metric::CpuUtil)
             .and_then(|p| p.mean())
             .unwrap_or(1.0);
+        // cast: safe(ceil of workers * util in [0,1], bounded by workers)
         ((workers as f64 * util).ceil() as usize).max(1)
     }
 

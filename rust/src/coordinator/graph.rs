@@ -6,8 +6,6 @@
 //! (longest-path depth over trigger edges): components in the same wave
 //! can run concurrently, which is what the adaptive scheduler exploits.
 
-use std::collections::HashMap;
-
 use crate::apps::Program;
 
 /// Node identifier within one resource graph.
@@ -196,14 +194,13 @@ impl ResourceGraph {
     /// objects shared across compute components): data nodes with more
     /// than one accessor.
     pub fn shared_data(&self) -> Vec<usize> {
-        let mut count: HashMap<usize, usize> = HashMap::new();
+        // dense per-data accessor counts: data indices are compact, so a
+        // Vec table gives ascending output with no hash-order hazard
+        let mut count = vec![0usize; self.n_data];
         for &(_, d) in &self.accesses {
-            *count.entry(d).or_insert(0) += 1;
+            count[d] += 1;
         }
-        let mut v: Vec<usize> =
-            count.into_iter().filter(|&(_, n)| n > 1).map(|(d, _)| d).collect();
-        v.sort();
-        v
+        count.iter().enumerate().filter(|&(_, &n)| n > 1).map(|(d, _)| d).collect()
     }
 
     /// Data lifetime window in waves: (first accessor wave, last
@@ -320,6 +317,23 @@ mod tests {
         assert!(!merges.iter().any(|&(a, b)| {
             g.program.computes[a].name == "decode" && g.program.computes[b].name == "encode"
         }));
+    }
+
+    #[test]
+    fn shared_data_is_sorted_and_matches_accessor_recount() {
+        // Regression for the D1 fix (dense Vec table instead of a
+        // HashMap recount): output must stay exactly what the old
+        // sorted-HashMap path produced — every data index with > 1
+        // accessor, ascending — so downstream placement decisions (and
+        // with them the pinned driver digest) are byte-identical.
+        for prog in [lr::program(), tpcds::query(16), video::pipeline()] {
+            let g = ResourceGraph::from_program(&prog).unwrap();
+            let expect: Vec<usize> =
+                (0..g.n_data()).filter(|&d| g.accessors_of(d).len() > 1).collect();
+            let got = g.shared_data();
+            assert_eq!(got, expect, "{}", prog.name);
+            assert!(got.windows(2).all(|w| w[0] < w[1]), "ascending: {got:?}");
+        }
     }
 
     #[test]

@@ -9,6 +9,8 @@
 
 use std::collections::HashMap;
 
+use crate::util::cast;
+
 /// One node's decaying-weight usage record.
 ///
 /// Weights are *implicit*: observation `i` carries sequence number
@@ -66,7 +68,7 @@ impl Profile {
     /// Materialized weight of one stored observation.
     #[inline]
     fn weight(&self, seq: u64) -> f64 {
-        self.decay.powi((self.seq - 1 - seq) as i32)
+        self.decay.powi(cast::i32_of(self.seq - 1 - seq))
     }
 
     /// Observations currently retained (saturates at the window cap).

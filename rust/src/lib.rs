@@ -24,6 +24,8 @@
 //!   `python/compile/aot.py` (HLO text; python never on request path).
 //! - [`metrics`] — GB·s / vCPU·s accounting and figure-row printers.
 //! - [`trace`] — Azure-archetype invocation/usage trace generators.
+//! - [`analysis`] — `zenix_lint`, the dependency-free static
+//!   determinism & accounting pass gating CI (see `docs/ANALYSIS.md`).
 //!
 //! Public items in the documented core modules must carry rustdoc
 //! (`missing_docs` warns at the crate level and `scripts/ci.sh` denies
@@ -31,6 +33,7 @@
 //! `#[allow(missing_docs)]` at their declaration.
 #![warn(missing_docs)]
 
+pub mod analysis;
 #[allow(missing_docs)]
 pub mod apps;
 #[allow(missing_docs)]

@@ -18,6 +18,8 @@
 //! The exact-storage path remains available behind
 //! `DriverConfig::exact_stats` for the small CI traces.
 
+use crate::util::cast;
+
 /// Running count/sum/min/max/M2 of a sample stream.
 ///
 /// `mean()` is `sum / n` with `sum` accumulated in observation order —
@@ -139,7 +141,7 @@ impl P2Quantile {
     /// Fold one observation in (O(1), five-marker update).
     pub fn push(&mut self, x: f64) {
         if self.n < 5 {
-            self.init[self.n as usize] = x;
+            self.init[cast::usize_of(self.n)] = x;
             self.n += 1;
             if self.n == 5 {
                 let mut b = self.init;
@@ -220,10 +222,11 @@ impl P2Quantile {
             return 0.0;
         }
         if self.n < 5 {
-            let m = self.n as usize;
+            let m = cast::usize_of(self.n);
             let mut b = [0.0f64; 5];
             b[..m].copy_from_slice(&self.init[..m]);
             b[..m].sort_unstable_by(|a, c| a.total_cmp(c));
+            // cast: safe(p in (0,1) and m <= 5, so the rounded rank is in 0..=4)
             let rank = ((self.p * (m as f64 - 1.0)).round() as usize).min(m - 1);
             return b[rank];
         }

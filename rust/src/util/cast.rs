@@ -1,0 +1,63 @@
+//! Checked integer-narrowing helpers for the hot path.
+//!
+//! The C1 lint rule (`zenix_lint`, see `docs/ANALYSIS.md`) bans bare
+//! narrowing `as` casts in `coordinator/` and `metrics/`: a silently
+//! wrapping cast is an accounting bug waiting for a bigger workload.
+//! These helpers make the intended conversion explicit and
+//! `debug_assert` that no value is ever truncated — zero release-mode
+//! cost on the allocation-free loop, loud failure under `cargo test`.
+//!
+//! This module is the one place allowed to perform the raw casts
+//! (`util/` is outside the C1 scope by construction).
+
+/// Widen a `usize` count to the `u64` accounting domain (digest folds,
+/// counters). Lossless on every supported target.
+#[inline]
+pub fn u64_of(v: usize) -> u64 {
+    v as u64
+}
+
+/// Narrow a `u64` counter back to a `usize` index/count.
+#[inline]
+pub fn usize_of(v: u64) -> usize {
+    debug_assert!(
+        v <= usize::MAX as u64,
+        "usize_of: {v} exceeds the platform usize range"
+    );
+    v as usize
+}
+
+/// Narrow a `usize` count to `u32` (compact per-wave counters).
+#[inline]
+pub fn u32_of(v: usize) -> u32 {
+    debug_assert!(v <= u32::MAX as usize, "u32_of: {v} exceeds u32::MAX");
+    v as u32
+}
+
+/// Narrow a `u64` sequence distance to `i32` (decay exponents).
+#[inline]
+pub fn i32_of(v: u64) -> i32 {
+    debug_assert!(v <= i32::MAX as u64, "i32_of: {v} exceeds i32::MAX");
+    v as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_preserve_values() {
+        assert_eq!(u64_of(7usize), 7u64);
+        assert_eq!(usize_of(7u64), 7usize);
+        assert_eq!(u32_of(40_000usize), 40_000u32);
+        assert_eq!(i32_of(12u64), 12i32);
+        assert_eq!(usize_of(u64_of(usize::MAX)), usize::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "u32_of")]
+    #[cfg(debug_assertions)]
+    fn truncation_panics_in_debug() {
+        let _ = u32_of(usize::MAX);
+    }
+}

@@ -13,8 +13,11 @@
 //!   `proptest`) used by `rust/tests/proptests.rs`.
 //! - [`stats`] — mean/percentile/histogram helpers shared by metrics,
 //!   profiling and the benches.
+//! - [`cast`] — checked integer-narrowing helpers backing the C1 lint
+//!   rule on the coordinator/metrics hot path.
 
 pub mod bench;
+pub mod cast;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

@@ -20,6 +20,22 @@ cargo test -q
 echo "== docs: cargo doc --no-deps (rustdoc warnings denied, incl. missing_docs in swept modules)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+# Static determinism & accounting pass (docs/ANALYSIS.md): D1-D6 + C1
+# over rust/src/ against the committed allowlist. Nonzero exit on any
+# violation or stale allowlist entry — same tier as cargo test.
+echo "== tier-1: zenix_lint (static determinism & accounting pass)"
+cargo run --release --bin zenix_lint
+
+# Clippy rides along where the component is installed (the offline
+# image ships rustc/cargo only). Lint policy is committed: [lints]
+# in Cargo.toml + clippy.toml thresholds.
+if command -v cargo-clippy >/dev/null 2>&1; then
+    echo "== tier-1: cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== tier-1: clippy not installed; skipping (zenix_lint gate above still ran)"
+fi
+
 if [[ "${1:-}" == "--no-bench" ]]; then
     echo "CI gate passed (benches skipped)."
     exit 0
