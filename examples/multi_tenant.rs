@@ -41,6 +41,18 @@
 //!   faulted/recovered split and recovery latency. `--fault-rate 0`
 //!   (the default) is digest-identical to a build without the flags.
 //!
+//! Parallel replay:
+//!
+//! - `--workers N` replays the trace on the sharded epoch-barrier
+//!   event loop with N worker threads (shards = racks, so pair it with
+//!   `--racks`; N clamps to the rack count). The digest is identical
+//!   to `--workers 1` by construction — the `parallel:` line
+//!   `scripts/ci.sh` greps reports workers, epoch width, wall-clock
+//!   and digest so CI can pin that equality. `--epoch-ms MS` bounds
+//!   the epoch window (batching knob only; never affects the digest).
+//!   With N > 1 the three system replays (zenix / peak-provision /
+//!   faas) also run concurrently.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
 //! deterministic arrival schedule, and dispatches the overlapping
@@ -80,6 +92,8 @@ fn main() {
     let mut fault_rate = 0.0f64;
     let mut repair_ms = 30_000.0f64;
     let mut rack_outage = false;
+    let mut workers = 1usize;
+    let mut epoch_ms = 250.0f64;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -144,6 +158,14 @@ fn main() {
                 rack_outage = true;
                 i += 1;
             }
+            "--workers" => {
+                workers = arg_value(&args, i, "--workers").parse().expect("--workers N");
+                i += 2;
+            }
+            "--epoch-ms" => {
+                epoch_ms = arg_value(&args, i, "--epoch-ms").parse().expect("--epoch-ms MS");
+                i += 2;
+            }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
                 arch = *Archetype::ALL
@@ -202,11 +224,21 @@ fn main() {
         admission,
         arrivals,
         faults: FaultConfig { rate_per_min: fault_rate, repair_ms, rack_outage },
+        workers,
+        epoch_ms,
         ..DriverConfig::default()
     }
     .with_racks(racks);
     let driver = MultiTenantDriver::new(&mix, cfg);
-    let out = driver.run_comparison();
+    let wall = std::time::Instant::now();
+    let out = if workers > 1 {
+        // parallel mode also fans the three system replays out across
+        // threads — digest-identical to the sequential comparison
+        driver.run_comparison_with_workers(3)
+    } else {
+        driver.run_comparison()
+    };
+    let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
 
     println!("\n### zenix per-app (overlapping on one cluster)");
     println!(
@@ -285,6 +317,13 @@ fn main() {
         out.zenix.faulted_unrecovered,
         out.zenix.mean_recovery_ms,
         out.zenix.p95_recovery_ms,
+    );
+    // parsed by scripts/ci.sh: the parallel smoke pins digest= equality
+    // across --workers values (and against DRIVER_DIGEST.lock)
+    println!(
+        "parallel: workers={} epoch-ms={epoch_ms} epochs={} batches={} wall-ms={wall_ms:.1} \
+         digest=0x{:016x}",
+        out.zenix.workers, out.zenix.epochs, out.zenix.parallel_batches, out.zenix.digest,
     );
     println!(
         "alloc-savings vs faas-static: {:.1}% (same completed work; paper reports up to 90%)",

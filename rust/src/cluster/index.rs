@@ -207,14 +207,43 @@ impl PlacementIndex {
     /// Re-index one server after an availability-changing mutation
     /// (the `Cluster` alloc/free/mark/unmark hooks call this).
     pub fn update(&mut self, s: &Server) {
-        let rack = s.rack.0;
-        let old = Self::remove_from(&mut self.global, &mut self.slots, 0, s.id);
-        Self::remove_from(&mut self.racks[rack], &mut self.slots, 1, s.id);
-        let e = Entry::of(s);
+        self.update_snapshot(
+            s.id,
+            s.rack,
+            s.available(),
+            s.available_unmarked(),
+            s.marked() != Resources::ZERO,
+        );
+    }
+
+    /// Re-index one server from an availability *snapshot* taken at
+    /// mutation time, rather than from the live `Server`.
+    ///
+    /// This is [`Self::update`]'s whole body (`update` delegates here);
+    /// the split exists for the sharded replay's epoch barrier: shard
+    /// workers mutate rack-local servers directly and snapshot
+    /// `available()` / `available_unmarked()` / `marked()` immediately
+    /// after each mutation, and the coordinator replays those snapshots
+    /// through this method in canonical `(time, seq)` order. Feeding
+    /// the *snapshot* (not the server's final state) keeps the signed
+    /// `rack_avail` float deltas accumulating in exactly the sequential
+    /// hook order — bit-identical sums, and therefore bit-identical
+    /// routing decisions and digests.
+    pub(crate) fn update_snapshot(
+        &mut self,
+        id: ServerId,
+        rack: RackId,
+        avail: Resources,
+        unmarked: Resources,
+        marked: bool,
+    ) {
+        let rack = rack.0;
+        let old = Self::remove_from(&mut self.global, &mut self.slots, 0, id);
+        Self::remove_from(&mut self.racks[rack], &mut self.slots, 1, id);
+        let e = Entry { id, avail, unmarked, mag: avail.magnitude() };
         self.rack_avail[rack].0 += e.avail.cpu - old.avail.cpu;
         self.rack_avail[rack].1 += e.avail.mem_mb - old.avail.mem_mb;
         let level = self.bucket_of(e.mag);
-        let marked = s.marked() != Resources::ZERO;
         Self::insert_into(&mut self.global, &mut self.slots, 0, e, level, marked);
         Self::insert_into(&mut self.racks[rack], &mut self.slots, 1, e, level, marked);
     }

@@ -245,6 +245,44 @@ impl Cluster {
         self.servers[id.0].sub_used(delta, now);
     }
 
+    // ---- sharded-replay raw access + note replay -----------------------
+
+    /// Raw mutable server access for the sharded replay's phase-A
+    /// workers, *without* invalidating the index or dirtying racks.
+    ///
+    /// Contract (enforced by `coordinator/epoch.rs`, the only caller):
+    /// every index-relevant mutation performed through this slice is
+    /// snapshotted as a note at mutation time and replayed through
+    /// [`Self::replay_index_update`] before the next index query or
+    /// dirty-rack drain, in canonical `(time, seq)` order. The pair of
+    /// calls is therefore observationally identical to the same
+    /// mutation sequence through the [`Self::try_alloc`] /
+    /// [`Self::free`] hooks — which is why it must not bump the
+    /// mutation epoch the way [`Self::servers_mut`] does (an epoch bump
+    /// would force a rebuild and discard the carefully ordered
+    /// incremental float deltas the digest depends on).
+    pub(crate) fn servers_for_replay(&mut self) -> &mut [Server] {
+        &mut self.servers
+    }
+
+    /// Replay one snapshotted availability mutation into the index and
+    /// the dirty-rack feed: exactly the tail of [`Self::try_alloc`] /
+    /// [`Self::free`] after the server mutation itself, fed from the
+    /// snapshot a shard worker recorded. See
+    /// [`PlacementIndex::update_snapshot`] for why the snapshot (and
+    /// not the server's final state) is replayed.
+    pub(crate) fn replay_index_update(
+        &mut self,
+        id: ServerId,
+        avail: Resources,
+        unmarked: Resources,
+        marked: bool,
+    ) {
+        let rack = self.servers[id.0].rack;
+        self.index.get_mut().update_snapshot(id, rack, avail, unmarked, marked);
+        self.mark_rack_dirty(rack.0);
+    }
+
     // ---- churn (fault injection / repair) ------------------------------
 
     /// Take one server down at `now` (fault injection). The index sees
@@ -443,6 +481,64 @@ mod tests {
         assert!(c.repair_server(ServerId(0), 10.0));
         assert!(!c.repair_server(ServerId(0), 11.0), "repeat repair is a no-op");
         assert_eq!(c.rack_available(RackId(0)), Resources::new(64.0, 131072.0));
+    }
+
+    #[test]
+    fn replay_path_matches_hook_path_bit_for_bit() {
+        // Same mutation sequence through (a) the index-maintaining
+        // hooks and (b) raw server access + snapshot replay — the
+        // sharded replay's contract. Availability sums must be
+        // *bit*-identical (the float deltas accumulate in the same
+        // order), and the dirty feed must drain the same racks in the
+        // same order.
+        let spec = ClusterSpec::multi_rack(2, 2);
+        let mut hooked = Cluster::new(spec);
+        let mut replayed = Cluster::new(spec);
+        hooked.for_each_dirty_rack(|_, _| {});
+        replayed.for_each_dirty_rack(|_, _| {});
+
+        let seq: [(usize, f64, f64, bool); 4] = [
+            (0, 10.0, 10000.0, true),
+            (2, 4.0, 512.0, true),
+            (0, 10.0, 10000.0, false),
+            (3, 1.0, 64.0, true),
+        ];
+        for &(id, cpu, mem, alloc) in &seq {
+            let amt = Resources::new(cpu, mem);
+            if alloc {
+                assert!(hooked.try_alloc(ServerId(id), amt, 1.0));
+            } else {
+                hooked.free(ServerId(id), amt, 1.0);
+            }
+            let (avail, unmarked, marked) = {
+                let s = &mut replayed.servers_for_replay()[id];
+                if alloc {
+                    assert!(s.try_alloc(amt, 1.0));
+                } else {
+                    s.free(amt, 1.0);
+                }
+                (s.available(), s.available_unmarked(), s.marked() != Resources::ZERO)
+            };
+            replayed.replay_index_update(ServerId(id), avail, unmarked, marked);
+        }
+
+        for r in 0..spec.racks {
+            let a = hooked.rack_available(RackId(r));
+            let b = replayed.rack_available(RackId(r));
+            assert!(a.cpu.to_bits() == b.cpu.to_bits(), "rack {r} cpu sums diverge");
+            assert!(a.mem_mb.to_bits() == b.mem_mb.to_bits(), "rack {r} mem sums diverge");
+        }
+        let mut da = Vec::new();
+        let mut db = Vec::new();
+        hooked.for_each_dirty_rack(|r, _| da.push(r.0));
+        replayed.for_each_dirty_rack(|r, _| db.push(r.0));
+        assert_eq!(da, db, "dirty-rack drain order diverges");
+        for demand in [Resources::new(8.0, 8192.0), Resources::new(30.0, 62000.0)] {
+            assert_eq!(
+                hooked.with_index(|ix| ix.smallest_fit(demand)),
+                replayed.with_index(|ix| ix.smallest_fit(demand)),
+            );
+        }
     }
 
     #[test]

@@ -184,6 +184,20 @@ pub struct DriverConfig {
     /// events, zero RNG draws, digest byte-identical to a build
     /// without fault injection). See [`super::faults`].
     pub faults: FaultConfig,
+    /// Replay worker threads. `1` (the default) runs the sequential
+    /// event loop, byte-identical to every pinned digest. `> 1`
+    /// switches to the sharded epoch-barrier loop
+    /// ([`super::epoch`]): per-rack shard workers advance their local
+    /// event heaps inside bounded epochs and the coordinator exchanges
+    /// cross-shard effects at a deterministic barrier — the digest is
+    /// identical for every worker count (pinned by tests and CI).
+    /// Values above the rack count are clamped to it.
+    pub workers: usize,
+    /// Maximum epoch width (simulated ms) of the sharded loop: a shard
+    /// batch never spans more than this much simulated time, bounding
+    /// how much work one barrier exchange covers. Ignored when
+    /// `workers == 1`. Clamped below to 1 ms.
+    pub epoch_ms: f64,
 }
 
 impl Default for DriverConfig {
@@ -198,6 +212,8 @@ impl Default for DriverConfig {
             admission: AdmissionPolicy::RejectImmediately,
             arrivals: ArrivalModel::Poisson,
             faults: FaultConfig::default(),
+            workers: 1,
+            epoch_ms: 250.0,
         }
     }
 }
@@ -484,6 +500,34 @@ pub struct DriverReport {
     /// the run genuinely overlapped tenants on the cluster.
     // digest: excluded(concurrency telemetry added after the digest was pinned)
     pub max_in_flight: usize,
+    /// Replay worker threads this run was configured with (clamped to
+    /// the rack count; 1 = the sequential loop).
+    // digest: excluded(execution-strategy telemetry; every worker count produces the identical digest by construction)
+    pub workers: usize,
+    /// Epoch windows the sharded loop executed (0 for the sequential
+    /// loop).
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub epochs: u64,
+    /// Epoch windows whose shard batches engaged the worker pool (the
+    /// rest ran inline — too little work to amortize a dispatch).
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub parallel_batches: u64,
+    /// Timeline events applied inside shard batches (rack-local work
+    /// that never crossed the epoch barrier).
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub parallel_local_events: u64,
+    /// Mean shard-batch size (events per shard per epoch, idle shards
+    /// included — the barrier-overhead axis).
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub epoch_batch_mean: f64,
+    /// P² p95 shard-batch size.
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub epoch_batch_p95: f64,
+    /// Jain's fairness index over per-shard local-event totals: 1.0 =
+    /// perfectly balanced shards, 1/shards = one shard did everything
+    /// (then the parallel loop degenerates to sequential + barriers).
+    // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
+    pub epoch_shard_jain: f64,
     /// Index-aligned with the schedule: which arrivals this system
     /// completed (all-true for the closed-form FaaS baseline). A
     /// bitset — one bit per arrival, the only per-invocation structure
@@ -646,19 +690,20 @@ enum Slot {
 /// Slab of in-flight invocations: O(peak overlap) slots, reused through
 /// an intrusive free list (the old `Vec<Option<_>>` grew one slot per
 /// arrival — O(invocations) memory and a pointless linear footprint at
-/// 100k+ traces).
-struct Slab {
+/// 100k+ traces). `pub(crate)`: the sharded epoch loop
+/// ([`super::epoch`]) keeps one slab per shard plus a global one.
+pub(crate) struct Slab {
     slots: Vec<Slot>,
     free_head: usize,
     live: usize,
 }
 
 impl Slab {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { slots: Vec::with_capacity(64), free_head: NIL, live: 0 }
     }
 
-    fn insert(&mut self, app: usize, sched: usize, st: OngoingInvocation) -> usize {
+    pub(crate) fn insert(&mut self, app: usize, sched: usize, st: OngoingInvocation) -> usize {
         self.live += 1;
         if self.free_head != NIL {
             let i = self.free_head;
@@ -675,14 +720,14 @@ impl Slab {
     }
 
     /// (app, schedule index) of a busy slot.
-    fn meta(&self, i: usize) -> Option<(usize, usize)> {
+    pub(crate) fn meta(&self, i: usize) -> Option<(usize, usize)> {
         match self.slots.get(i) {
             Some(&Slot::Busy { app, sched, .. }) => Some((app, sched)),
             _ => None,
         }
     }
 
-    fn state_mut(&mut self, i: usize) -> Option<&mut OngoingInvocation> {
+    pub(crate) fn state_mut(&mut self, i: usize) -> Option<&mut OngoingInvocation> {
         match self.slots.get_mut(i) {
             Some(Slot::Busy { st, .. }) => Some(st),
             _ => None,
@@ -690,7 +735,7 @@ impl Slab {
     }
 
     /// Remove a busy slot, linking it into the free list.
-    fn take(&mut self, i: usize) -> Option<(usize, usize, OngoingInvocation)> {
+    pub(crate) fn take(&mut self, i: usize) -> Option<(usize, usize, OngoingInvocation)> {
         match self.slots.get(i) {
             Some(Slot::Busy { .. }) => {}
             _ => return None,
@@ -705,12 +750,12 @@ impl Slab {
     }
 
     /// Currently busy slots.
-    fn live(&self) -> usize {
+    pub(crate) fn live(&self) -> usize {
         self.live
     }
 
     /// Total slots ever needed at once (capacity telemetry).
-    fn high_water(&self) -> usize {
+    pub(crate) fn high_water(&self) -> usize {
         self.slots.len()
     }
 }
@@ -767,8 +812,11 @@ struct AppAgg {
 /// Streams completion records into per-app aggregates and folds the
 /// order-stable digest exactly like the old stored-sample path (counts,
 /// ordered-sum means and consumption integrals are identical in both
-/// modes, so the digest is too).
-struct Aggregator<'a> {
+/// modes, so the digest is too). `pub(crate)`: the sharded epoch loop
+/// ([`super::epoch`]) records completions in the identical canonical
+/// `WaveDone` order, so both loops share one aggregator (and one
+/// digest fold).
+pub(crate) struct Aggregator<'a> {
     apps: &'a [TenantApp],
     exact: bool,
     per_app: Vec<AppAgg>,
@@ -785,7 +833,7 @@ impl<'a> Aggregator<'a> {
     /// `sched_counts[a]` = arrivals scheduled for app `a` (sizes the
     /// streaming early/late quarter windows; completions aren't known
     /// up front in streaming mode).
-    fn new(apps: &'a [TenantApp], sched_counts: &[usize], exact: bool) -> Self {
+    pub(crate) fn new(apps: &'a [TenantApp], sched_counts: &[usize], exact: bool) -> Self {
         // Bounded window: quarter of the scheduled arrivals, capped so
         // report memory stays O(apps) for arbitrarily long traces.
         const WINDOW_CAP: usize = 512;
@@ -818,7 +866,7 @@ impl<'a> Aggregator<'a> {
         }
     }
 
-    fn record(&mut self, app: usize, exec_ms: f64, growths: usize, warm: bool, c: Consumption) {
+    pub(crate) fn record(&mut self, app: usize, exec_ms: f64, growths: usize, warm: bool, c: Consumption) {
         self.completed += 1;
         self.p99.push(exec_ms);
         let a = &mut self.per_app[app];
@@ -843,7 +891,7 @@ impl<'a> Aggregator<'a> {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn finish(
+    pub(crate) fn finish(
         self,
         label: &str,
         adm: AdmissionOutcome,
@@ -983,6 +1031,15 @@ impl<'a> Aggregator<'a> {
             warm_hits,
             cold_starts,
             max_in_flight,
+            // overwritten by the sharded loop; the sequential loop and
+            // the closed-form baselines report the idle defaults
+            workers: 1,
+            epochs: 0,
+            parallel_batches: 0,
+            parallel_local_events: 0,
+            epoch_batch_mean: 0.0,
+            epoch_batch_p95: 0.0,
+            epoch_shard_jain: 1.0,
             completed_mask,
             digest: h,
         }
@@ -994,8 +1051,8 @@ impl<'a> Aggregator<'a> {
 /// Drives a registered multi-tenant mix against the systems under
 /// comparison over one deterministic arrival schedule.
 pub struct MultiTenantDriver<'a> {
-    apps: &'a [TenantApp],
-    cfg: DriverConfig,
+    pub(crate) apps: &'a [TenantApp],
+    pub(crate) cfg: DriverConfig,
 }
 
 impl<'a> MultiTenantDriver<'a> {
@@ -1036,6 +1093,42 @@ impl<'a> MultiTenantDriver<'a> {
         MultiTenantOutcome { zenix, peak, faas, faas_on_completed }
     }
 
+    /// [`Self::run_comparison`] with the independent system replays
+    /// fanned out across OS threads: the Zenix and peak-provision runs
+    /// each get a thread while the closed-form FaaS baseline runs on
+    /// the calling thread. Every replay consumes the identical
+    /// pre-generated schedule and is deterministic in isolation, so
+    /// the outcome is byte-identical to the sequential comparison —
+    /// only the wall clock changes. `fanout <= 1` falls back to
+    /// [`Self::run_comparison`] exactly.
+    ///
+    /// Composes with [`DriverConfig::workers`]: the fan-out
+    /// parallelizes *across* systems, the sharded epoch loop *within*
+    /// one replay.
+    pub fn run_comparison_with_workers(&self, fanout: usize) -> MultiTenantOutcome {
+        if fanout <= 1 {
+            return self.run_comparison();
+        }
+        let schedule = self.schedule();
+        let sched = &schedule;
+        let (zenix, peak, faas) = std::thread::scope(|scope| {
+            let z = scope.spawn(move || self.run_zenix(sched));
+            let p = scope.spawn(move || self.run_peak_provision(sched));
+            let f = self.run_faas_static(sched);
+            (
+                z.join().expect("zenix replay thread panicked"),
+                p.join().expect("peak-provision replay thread panicked"),
+                f,
+            )
+        });
+        let faas_on_completed = if zenix.failed == 0 {
+            faas.clone()
+        } else {
+            self.run_faas_static_on(&schedule, Some(&zenix.completed_mask))
+        };
+        MultiTenantOutcome { zenix, peak, faas, faas_on_completed }
+    }
+
     /// The discrete-event loop: one shared [`Platform`], overlapping
     /// invocations interleaved in global time order.
     ///
@@ -1056,6 +1149,12 @@ impl<'a> MultiTenantDriver<'a> {
     /// runs out. Stale entries expire at every such point regardless
     /// of capacity, oldest deadline first, ties by enqueue sequence.
     fn run_platform(&self, schedule: &Schedule, config: ZenixConfig, label: &str) -> DriverReport {
+        if self.cfg.workers > 1 {
+            // The sharded epoch-barrier loop: digest-identical to this
+            // sequential loop for every worker count (pinned by the
+            // epoch module's tests, the proptests and CI).
+            return super::epoch::run_platform_sharded(self, schedule, config, label);
+        }
         let mut platform = Platform::new(self.cfg.cluster, config);
         let mut heap: BinaryHeap<HeapEv> = BinaryHeap::with_capacity(256);
         let mut seq = 0u64;
@@ -1589,7 +1688,12 @@ fn drain_pending(
 /// at most once per invocation (a rack outage hitting two of its
 /// servers is still one fault), and an already-pending crash is not
 /// overwritten — the first recovery's rewind re-runs the wave anyway.
-fn crash_scan(slab: &mut Slab, faulted_per_app: &mut [usize], server: ServerId, at: Millis) {
+pub(crate) fn crash_scan(
+    slab: &mut Slab,
+    faulted_per_app: &mut [usize],
+    server: ServerId,
+    at: Millis,
+) {
     for i in 0..slab.slots.len() {
         if let Slot::Busy { app, st, .. } = &mut slab.slots[i] {
             if let Some(crash) = st.crash_for_server(server) {

@@ -1,0 +1,1218 @@
+//! Sharded epoch-barrier event loop: deterministic parallel replay.
+//!
+//! The sequential driver loop ([`super::driver`]) replays 1M+
+//! invocation traces one event at a time. Most of those events are
+//! *rack-local*: a wave placed entirely inside one rack only ever
+//! touches that rack's servers through its allocation timeline. This
+//! module exploits that structure to replay rack-local timelines in
+//! parallel — without giving up a single bit of the pinned digest:
+//!
+//! - **Shards are racks, not threads.** The trace is partitioned into
+//!   one logical shard per rack plus a *global* residue (waves whose
+//!   placement spans racks, which are never split). The partition —
+//!   and therefore every intermediate float and the final digest — is
+//!   a function of the workload alone, so `workers = n` is
+//!   digest-identical to `workers = 1` for every `n` by construction;
+//!   the thread count only decides how many shard batches run
+//!   concurrently.
+//! - **Bounded epochs.** The coordinator computes a *fence*: the
+//!   `(time, seq)` of the next cross-shard item (arrival, global
+//!   event) clipped to at most [`super::driver::DriverConfig::epoch_ms`]
+//!   of simulated time. Every shard independently drains its local
+//!   event heap strictly up to the fence (phase A), mutating only its
+//!   own rack's servers — disjoint state, no locks on the hot path.
+//! - **Deterministic barrier.** Shard workers snapshot every
+//!   availability mutation as an [`AllocNote`] keyed by the event's
+//!   global `(time, seq)`. At the barrier the coordinator k-way-merges
+//!   the per-shard note runs in canonical `(time, seq)` order and
+//!   replays them through
+//!   [`crate::cluster::Cluster::replay_index_update`] — the placement
+//!   index and the dirty-rack feed observe the *exact* mutation
+//!   sequence the sequential loop would have produced, signed float
+//!   deltas and all. Then the fence item itself (admission routing,
+//!   wave completion, fault/repair, cross-rack timeline) runs on the
+//!   coordinator with the full cluster hooks (phase C).
+//! - **Serialized admission.** While a deferred queue is occupied the
+//!   sequential loop probes admission after *every* event, so batching
+//!   would reorder decisions. The loop detects this and falls back to
+//!   exact one-event-at-a-time replay (still across the sharded
+//!   heaps, still in global `(time, seq)` order) until the queues
+//!   drain — legacy semantics by literal re-execution, not by
+//!   argument.
+//!
+//! Worker threads are engaged per batch through a [`std::thread::scope`]
+//! over a shrinking [`Mutex`]-guarded job queue, and only when at
+//! least two shards have enough pending work to amortize the dispatch;
+//! small batches run inline on the coordinator thread. In steady state
+//! the shard contexts (heaps, slabs, note buffers) recycle their
+//! capacity, so the parallel loop stays allocation-free per event just
+//! like the sequential one (`rust/tests/alloc_free.rs` phase 5 pins
+//! it); the only engaged-batch allocation is the job vector of `S`
+//! fat pointers.
+//!
+//! Ordering argument, in one place: every event carries the globally
+//! unique `seq` it would have carried in the sequential loop (the
+//! routing only chooses *which heap* holds it). A wave's timeline
+//! events all land on one shard (or all on the coordinator), so
+//! per-server mutations replay in exactly the sequential `(time,
+//! seq)` order; its `WaveDone` is always a global event whose `(time,
+//! seq)` sorts after them, so slots are never freed with shard events
+//! outstanding; and the barrier replays index updates in the same
+//! total order before any coordinator-side decision reads the index.
+//! Completions reach the [`super::driver::Aggregator`] in canonical
+//! `WaveDone` order, so the per-app ordered sums — and the digest
+//! folded from them — are bit-identical.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use crate::apps::Invocation;
+use crate::cluster::clock::Millis;
+use crate::cluster::server::Server;
+use crate::cluster::{Resources, ServerId};
+use crate::metrics::fairness::JainAccumulator;
+use crate::metrics::streaming::{P2Quantile, StreamingMoments};
+
+use super::admission::{AdmissionPolicy, DeferredQueues};
+use super::driver::{
+    crash_scan, Aggregator, Arrival, BitMask, DriverReport, MultiTenantDriver, Schedule, Slab,
+    TenantApp,
+};
+use super::exec::{apply_timeline_on, AllocSink, OngoingInvocation, TimelineEv};
+use super::faults::{FaultKind, FaultPlan};
+use super::{Platform, ZenixConfig};
+
+/// Sentinel shard index for the global (cross-rack) slab.
+const GLOBAL: usize = usize::MAX;
+
+/// Minimum pending shard events before a batch engages the worker
+/// pool; below it the dispatch overhead dwarfs the work and the batch
+/// runs inline on the coordinator thread.
+const PAR_THRESHOLD: usize = 64;
+
+/// Which slab an in-flight invocation lives in: one of the per-shard
+/// slabs (`shard < shards`) or the global slab (`shard == GLOBAL`).
+/// Fixed at admission for the invocation's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SlabRef {
+    shard: usize,
+    idx: usize,
+}
+
+/// Coordinator-side event: cross-shard effects, wave completions and
+/// the fault schedule. Ordered exactly like the sequential loop's
+/// heap: earliest time first, then insertion sequence.
+enum GKind {
+    /// Timeline event of a cross-rack (or global-slab) wave, applied
+    /// with the full cluster hooks at the fence.
+    Timeline { slot: SlabRef, server: ServerId, ev: TimelineEv },
+    /// The in-flight wave of `slot` completes (always coordinator-side:
+    /// wave transitions route, spill and re-place across racks).
+    WaveDone { slot: SlabRef },
+    /// Scheduled fault/repair event `idx` of the run's [`FaultPlan`].
+    Fault { idx: usize },
+}
+
+struct GEv {
+    at: Millis,
+    seq: u64,
+    kind: GKind,
+}
+
+impl PartialEq for GEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.total_cmp(&other.at) == Ordering::Equal && self.seq == other.seq
+    }
+}
+impl Eq for GEv {}
+impl PartialOrd for GEv {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for GEv {
+    /// Reversed (min-heap), mirroring the sequential loop's ordering.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Shard-local event: one timeline step of a rack-resident wave. The
+/// `seq` is the *global* sequence the event would have carried in the
+/// sequential loop — sharding never renumbers.
+struct SEv {
+    at: Millis,
+    seq: u64,
+    idx: usize,
+    server: ServerId,
+    ev: TimelineEv,
+}
+
+impl PartialEq for SEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.total_cmp(&other.at) == Ordering::Equal && self.seq == other.seq
+    }
+}
+impl Eq for SEv {}
+impl PartialOrd for SEv {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SEv {
+    /// Reversed (min-heap), mirroring the sequential loop's ordering.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.total_cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One availability mutation, snapshotted by a shard worker right
+/// after it landed on the server. Replayed through
+/// [`crate::cluster::Cluster::replay_index_update`] at the barrier in
+/// `(at, seq)` order — feeding the *snapshot* (not the server's final
+/// state) keeps the index's signed float deltas accumulating in the
+/// exact sequential hook order. At most one note per event (`Grow`
+/// notes its alloc, `Finish` its free), so `(at, seq)` is unique.
+#[derive(Debug, Clone, Copy)]
+struct AllocNote {
+    at: Millis,
+    seq: u64,
+    server: ServerId,
+    avail: Resources,
+    unmarked: Resources,
+    marked: bool,
+}
+
+/// Per-shard worker state. Persists across epochs so heaps, slabs and
+/// note buffers reuse their capacity — no steady-state allocation.
+struct ShardCtx {
+    heap: BinaryHeap<SEv>,
+    slab: Slab,
+    notes: Vec<AllocNote>,
+    /// Latest event time this shard has applied (merged into the
+    /// global clock at each barrier; max is order-insensitive).
+    end_time: Millis,
+    local_events: u64,
+    batch_moments: StreamingMoments,
+    batch_p95: P2Quantile,
+}
+
+impl ShardCtx {
+    fn new() -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(64),
+            slab: Slab::new(),
+            notes: Vec::with_capacity(64),
+            end_time: 0.0,
+            local_events: 0,
+            batch_moments: StreamingMoments::new(),
+            batch_p95: P2Quantile::new(0.95),
+        }
+    }
+}
+
+/// A shard worker's window onto the cluster: direct mutable access to
+/// its own rack's server slice, recording an [`AllocNote`] per
+/// availability mutation in place of the sequential loop's immediate
+/// index update. Indexing is `id - base`, so an event routed to the
+/// wrong shard panics instead of corrupting a neighbor — the routing
+/// invariant is load-bearing and this enforces it.
+struct ShardView<'a> {
+    servers: &'a mut [Server],
+    base: usize,
+    notes: &'a mut Vec<AllocNote>,
+    at: Millis,
+    seq: u64,
+}
+
+impl ShardView<'_> {
+    /// Snapshot `id`'s availability after a mutation — exactly the
+    /// fields [`crate::cluster::Cluster::replay_index_update`] consumes.
+    fn note(&mut self, id: ServerId) {
+        let s = &self.servers[id.0 - self.base];
+        let (avail, unmarked, marked) =
+            (s.available(), s.available_unmarked(), s.marked() != Resources::ZERO);
+        self.notes.push(AllocNote {
+            at: self.at,
+            seq: self.seq,
+            server: id,
+            avail,
+            unmarked,
+            marked,
+        });
+    }
+}
+
+impl AllocSink for ShardView<'_> {
+    fn try_alloc(&mut self, id: ServerId, amount: Resources, now: Millis) -> bool {
+        if !self.servers[id.0 - self.base].try_alloc(amount, now) {
+            return false;
+        }
+        self.note(id);
+        true
+    }
+    fn add_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        // accounting only — the sequential hook has no index effect
+        // either, so no note
+        self.servers[id.0 - self.base].add_used(delta, now);
+    }
+    fn sub_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        self.servers[id.0 - self.base].sub_used(delta, now);
+    }
+    fn free(&mut self, id: ServerId, amount: Resources, now: Millis) {
+        self.servers[id.0 - self.base].free(amount, now);
+        self.note(id);
+    }
+}
+
+/// A shard batch handed to the worker pool: disjoint `&mut` borrows of
+/// one shard's context and its rack's server slice.
+struct Job<'a> {
+    ctx: &'a mut ShardCtx,
+    servers: &'a mut [Server],
+    base: usize,
+}
+
+/// `(at, seq) < fence` in the loop's canonical event order.
+fn before(at: Millis, seq: u64, fence: (Millis, u64)) -> bool {
+    match at.total_cmp(&fence.0) {
+        Ordering::Less => true,
+        Ordering::Equal => seq < fence.1,
+        Ordering::Greater => false,
+    }
+}
+
+/// Phase A for one shard: pop and apply every local event strictly
+/// before the fence, in `(at, seq)` order, against the shard's own
+/// rack slice. Runs on a worker thread (engaged batches) or inline.
+fn run_shard_batch(ctx: &mut ShardCtx, servers: &mut [Server], base: usize, fence: (Millis, u64)) {
+    let mut n = 0u64;
+    while ctx.heap.peek().map_or(false, |t| before(t.at, t.seq, fence)) {
+        let ev = ctx.heap.pop().expect("peeked above");
+        ctx.end_time = ctx.end_time.max(ev.at);
+        if let Some(st) = ctx.slab.state_mut(ev.idx) {
+            let mut view = ShardView {
+                servers: &mut *servers,
+                base,
+                notes: &mut ctx.notes,
+                at: ev.at,
+                seq: ev.seq,
+            };
+            apply_timeline_on(&mut view, st, ev.server, ev.ev, ev.at);
+        }
+        n += 1;
+    }
+    ctx.local_events += n;
+    ctx.batch_moments.push(n as f64);
+    ctx.batch_p95.push(n as f64);
+}
+
+/// The rack every pending event of the freshly started wave lands on,
+/// if they all land on one (and it is a real rack). `None` for empty,
+/// mixed-rack or out-of-range placements — those waves stay on the
+/// coordinator so their per-server mutation order is trivially
+/// sequential.
+fn wave_home(
+    pending: &[(Millis, u32, ServerId, TimelineEv)],
+    spr: usize,
+    shards: usize,
+) -> Option<usize> {
+    let mut home: Option<usize> = None;
+    for (_, _, server, _) in pending {
+        let r = server.0 / spr;
+        if r >= shards {
+            return None;
+        }
+        match home {
+            None => home = Some(r),
+            Some(h) if h == r => {}
+            Some(_) => return None,
+        }
+    }
+    home
+}
+
+fn slot_meta(ctxs: &[ShardCtx], gslab: &Slab, slot: SlabRef) -> Option<(usize, usize)> {
+    if slot.shard == GLOBAL {
+        gslab.meta(slot.idx)
+    } else {
+        ctxs[slot.shard].slab.meta(slot.idx)
+    }
+}
+
+fn slot_state_mut<'s>(
+    ctxs: &'s mut [ShardCtx],
+    gslab: &'s mut Slab,
+    slot: SlabRef,
+) -> Option<&'s mut OngoingInvocation> {
+    if slot.shard == GLOBAL {
+        gslab.state_mut(slot.idx)
+    } else {
+        ctxs[slot.shard].slab.state_mut(slot.idx)
+    }
+}
+
+fn slot_take(
+    ctxs: &mut [ShardCtx],
+    gslab: &mut Slab,
+    slot: SlabRef,
+) -> Option<(usize, usize, OngoingInvocation)> {
+    if slot.shard == GLOBAL {
+        gslab.take(slot.idx)
+    } else {
+        ctxs[slot.shard].slab.take(slot.idx)
+    }
+}
+
+/// The whole mutable state of one sharded replay. One instance per
+/// [`run_platform_sharded`] call; methods are the loop's phases.
+struct Engine<'a, 'b> {
+    apps: &'a [TenantApp],
+    schedule: &'b Schedule,
+    platform: Platform,
+    gheap: BinaryHeap<GEv>,
+    seq: u64,
+    gslab: Slab,
+    ctxs: Vec<ShardCtx>,
+    /// Phase-B merge cursors, one per shard (persist to avoid a
+    /// per-barrier allocation).
+    cursors: Vec<usize>,
+    agg: Aggregator<'a>,
+    completed_mask: BitMask,
+    rejected_per_app: Vec<usize>,
+    aborted_per_app: Vec<usize>,
+    queues: DeferredQueues,
+    queueing: bool,
+    in_flight: usize,
+    max_in_flight: usize,
+    end_time: Millis,
+    next_arrival: usize,
+    fault_plan: FaultPlan,
+    spr: usize,
+    workers: usize,
+    epoch_ms: f64,
+    faulted_per_app: Vec<usize>,
+    recovered_per_app: Vec<usize>,
+    faulted_unrec_per_app: Vec<usize>,
+    recovery_moments: StreamingMoments,
+    recovery_p95: P2Quantile,
+    epochs: u64,
+    engaged_batches: u64,
+}
+
+impl<'a, 'b> Engine<'a, 'b> {
+    /// Open and start one invocation, mirroring the sequential loop's
+    /// `try_admit` exactly — same `begin_at`/`start_wave` call
+    /// sequence, same sequence numbers — with the slab and event
+    /// routing decided by the new wave's placement.
+    fn try_admit_sharded(&mut self, arr: Arrival, sched_idx: usize, at: Millis) -> bool {
+        let graph = &self.apps[arr.app].graph;
+        let mut st = self.platform.begin_at(graph, Invocation::new(arr.scale), at, None);
+        match self.platform.start_wave(graph, &mut st) {
+            Ok(()) => {
+                self.in_flight += 1;
+                self.max_in_flight = self.max_in_flight.max(self.in_flight);
+                let home = wave_home(&st.pending, self.spr, self.ctxs.len());
+                let mut pending = std::mem::take(&mut st.pending);
+                let wave_done_at = st.wave_done_at();
+                let slot = match home {
+                    Some(r) => SlabRef {
+                        shard: r,
+                        idx: self.ctxs[r].slab.insert(arr.app, sched_idx, st),
+                    },
+                    None => {
+                        SlabRef { shard: GLOBAL, idx: self.gslab.insert(arr.app, sched_idx, st) }
+                    }
+                };
+                self.route_wave(slot, home, &mut pending);
+                if let Some(st) = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot) {
+                    // hand the drained buffer back so the next wave
+                    // reuses its capacity
+                    st.pending = pending;
+                }
+                self.gheap.push(GEv {
+                    at: wave_done_at,
+                    seq: self.seq,
+                    kind: GKind::WaveDone { slot },
+                });
+                self.seq += 1;
+                true
+            }
+            Err(_) => {
+                self.platform.recycle_shell(st);
+                false
+            }
+        }
+    }
+
+    /// Route one started wave's pending timeline events, assigning the
+    /// same global sequence numbers (push order) the sequential loop
+    /// would: to the resident shard's heap when the wave is wholly on
+    /// that shard's rack, to the coordinator heap otherwise. All-or-
+    /// nothing per wave — a wave's per-server mutation order is only
+    /// sequential if one executor owns all of it.
+    fn route_wave(
+        &mut self,
+        slot: SlabRef,
+        home: Option<usize>,
+        pending: &mut Vec<(Millis, u32, ServerId, TimelineEv)>,
+    ) {
+        let local = slot.shard != GLOBAL && home == Some(slot.shard);
+        for (at, _wave_seq, server, ev) in pending.drain(..) {
+            if local {
+                self.ctxs[slot.shard].heap.push(SEv {
+                    at,
+                    seq: self.seq,
+                    idx: slot.idx,
+                    server,
+                    ev,
+                });
+            } else {
+                self.gheap.push(GEv {
+                    at,
+                    seq: self.seq,
+                    kind: GKind::Timeline { slot, server, ev },
+                });
+            }
+            self.seq += 1;
+        }
+    }
+
+    /// The sequential loop's deferred-queue service pass, verbatim,
+    /// over the sharded admission path.
+    fn drain_deferred_sharded(&mut self, now: Millis) {
+        while self.queues.pop_expired(now).is_some() {}
+        let fair = self.queues.policy().skips_blocked_tenant();
+        let mut consecutive_failures = 0usize;
+        while let Some(p) = self.queues.pop_next() {
+            let arr = self.schedule.arrivals[p.sched];
+            let admitted = self.try_admit_sharded(arr, p.sched, now);
+            if admitted {
+                self.queues.record_admitted(p.app, now - p.enqueued_at);
+                consecutive_failures = 0;
+            } else if fair {
+                self.queues.unpop_skip_tenant(p);
+                consecutive_failures += 1;
+                if consecutive_failures >= self.queues.non_empty_tenants() {
+                    break;
+                }
+            } else {
+                self.queues.unpop(p);
+                break;
+            }
+        }
+    }
+
+    /// Crash in-flight work on `server` across every slab. The scan
+    /// order differs from the sequential loop's single-slab order, but
+    /// every effect (set `fault_at` once, count once, pin the crash
+    /// state) is idempotent per invocation and commutative across
+    /// invocations, so the end state is identical.
+    fn crash_scan_all(&mut self, server: ServerId, at: Millis) {
+        crash_scan(&mut self.gslab, &mut self.faulted_per_app, server, at);
+        for ctx in &mut self.ctxs {
+            crash_scan(&mut ctx.slab, &mut self.faulted_per_app, server, at);
+        }
+    }
+
+    /// Handle one coordinator-side event — the sequential loop's event
+    /// arm, with slab access indirected through [`SlabRef`].
+    fn handle_global(&mut self, kind: GKind, at: Millis) {
+        match kind {
+            GKind::Timeline { slot, server, ev } => {
+                if let Some(st) = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot) {
+                    self.platform.apply_timeline(st, server, ev, at);
+                }
+            }
+            GKind::Fault { idx } => {
+                let kind = self.fault_plan.events[idx].kind;
+                match kind {
+                    FaultKind::ServerCrash(s) => {
+                        if self.platform.cluster.fail_server(s, at) {
+                            self.crash_scan_all(s, at);
+                        }
+                    }
+                    FaultKind::RackOutage(r) => {
+                        for i in r.0 * self.spr..(r.0 + 1) * self.spr {
+                            let s = ServerId(i);
+                            if self.platform.cluster.fail_server(s, at) {
+                                self.crash_scan_all(s, at);
+                            }
+                        }
+                    }
+                    FaultKind::TransientCompute(s) => {
+                        self.crash_scan_all(s, at);
+                    }
+                    FaultKind::ServerRepair(s) => {
+                        self.platform.cluster.repair_server(s, at);
+                    }
+                    FaultKind::RackRepair(r) => {
+                        for i in r.0 * self.spr..(r.0 + 1) * self.spr {
+                            self.platform.cluster.repair_server(ServerId(i), at);
+                        }
+                    }
+                }
+            }
+            GKind::WaveDone { slot } => {
+                let (app_idx, _sched_idx) = match slot_meta(&self.ctxs, &self.gslab, slot) {
+                    Some(m) => m,
+                    None => return,
+                };
+                let graph = &self.apps[app_idx].graph;
+                let finished = {
+                    let st = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot)
+                        .expect("busy slot");
+                    self.platform.wave_done(graph, st)
+                };
+                if finished {
+                    let (app_idx, sched_idx, st) =
+                        slot_take(&mut self.ctxs, &mut self.gslab, slot).expect("busy slot");
+                    self.in_flight -= 1;
+                    let warm = st.first_wave_warm().unwrap_or(false);
+                    let growths = st.growths();
+                    if let Some(t_fault) = st.fault_at {
+                        self.recovered_per_app[app_idx] += 1;
+                        self.recovery_moments.push(at - t_fault);
+                        self.recovery_p95.push(at - t_fault);
+                    }
+                    let (exec_ms, consumption) = self.platform.finish_invocation_attrib(graph, st);
+                    self.completed_mask.set(sched_idx);
+                    self.agg.record(app_idx, exec_ms, growths, warm, consumption);
+                } else {
+                    let start = {
+                        let st = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot)
+                            .expect("busy slot");
+                        self.platform.start_wave(graph, st)
+                    };
+                    match start {
+                        Ok(()) => {
+                            let shards = self.ctxs.len();
+                            let (mut pending, wave_done_at, home) = {
+                                let st = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot)
+                                    .expect("busy slot");
+                                let home = wave_home(&st.pending, self.spr, shards);
+                                (std::mem::take(&mut st.pending), st.wave_done_at(), home)
+                            };
+                            // the continuation wave may live on a
+                            // different rack than the slot: then its
+                            // events run coordinator-side (the slab
+                            // residence never migrates)
+                            self.route_wave(slot, home, &mut pending);
+                            if let Some(st) =
+                                slot_state_mut(&mut self.ctxs, &mut self.gslab, slot)
+                            {
+                                st.pending = pending;
+                            }
+                            self.gheap.push(GEv {
+                                at: wave_done_at,
+                                seq: self.seq,
+                                kind: GKind::WaveDone { slot },
+                            });
+                            self.seq += 1;
+                        }
+                        Err(_) => {
+                            self.in_flight -= 1;
+                            if let Some((_, _, st)) =
+                                slot_take(&mut self.ctxs, &mut self.gslab, slot)
+                            {
+                                if st.fault_at.is_some() {
+                                    self.faulted_unrec_per_app[app_idx] += 1;
+                                } else {
+                                    self.aborted_per_app[app_idx] += 1;
+                                }
+                                self.platform.recycle_shell(st);
+                            } else {
+                                self.aborted_per_app[app_idx] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Process exactly the fence item: the next arrival or global
+    /// event, whichever the sequential loop would take (arrival wins
+    /// ties). Only called in batch mode, where the deferred queues are
+    /// empty — so the sequential arrival branch's expire/drain/park
+    /// preamble is vacuous and omitted.
+    fn step_fence(&mut self) {
+        let take_arrival =
+            match (self.schedule.arrivals.get(self.next_arrival), self.gheap.peek()) {
+                (Some(a), Some(h)) => a.at <= h.at,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => return,
+            };
+        if take_arrival {
+            let i = self.next_arrival;
+            self.next_arrival += 1;
+            let arr = self.schedule.arrivals[i];
+            self.end_time = self.end_time.max(arr.at);
+            let admitted = self.try_admit_sharded(arr, i, arr.at);
+            if !admitted && !self.queues.try_park(arr.app, i, arr.at) {
+                self.rejected_per_app[arr.app] += 1;
+            }
+        } else {
+            let GEv { at, kind, .. } = self.gheap.pop().expect("peeked above");
+            self.end_time = self.end_time.max(at);
+            self.handle_global(kind, at);
+            // the sequential loop's post-event deferred drain is gated
+            // on a non-empty queue — empty here by batch-mode invariant
+        }
+    }
+
+    /// One exact sequential step while the deferred queues are
+    /// occupied: the earliest item across the arrival cursor, the
+    /// coordinator heap and every shard heap, with the sequential
+    /// loop's full arrival preamble and post-event drain gates.
+    fn serialize_step(&mut self) {
+        let mut best: Option<(Millis, u64, Option<usize>)> =
+            self.gheap.peek().map(|h| (h.at, h.seq, None));
+        for (r, ctx) in self.ctxs.iter().enumerate() {
+            if let Some(t) = ctx.heap.peek() {
+                let better = match best {
+                    None => true,
+                    Some((at, s, _)) => match t.at.total_cmp(&at) {
+                        Ordering::Less => true,
+                        Ordering::Equal => t.seq < s,
+                        Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((t.at, t.seq, Some(r)));
+                }
+            }
+        }
+        let take_arrival = match (self.schedule.arrivals.get(self.next_arrival), best) {
+            (Some(a), Some((at, _, _))) => a.at <= at,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => {
+                // trace exhausted, every heap drained, entries still
+                // parked: one final full drain, then expire the rest
+                let before_len = self.queues.len();
+                let now = self.end_time;
+                self.drain_deferred_sharded(now);
+                if self.queues.len() == before_len {
+                    self.queues.expire_all();
+                }
+                return;
+            }
+        };
+
+        if take_arrival {
+            let i = self.next_arrival;
+            self.next_arrival += 1;
+            let arr = self.schedule.arrivals[i];
+            self.end_time = self.end_time.max(arr.at);
+            while self.queues.pop_expired(arr.at).is_some() {}
+            if !self.queues.is_empty() && self.platform.cluster.has_dirty_racks() {
+                self.drain_deferred_sharded(arr.at);
+            }
+            if !self.queues.is_empty() {
+                if !self.queues.try_park(arr.app, i, arr.at) {
+                    self.rejected_per_app[arr.app] += 1;
+                }
+                return;
+            }
+            let admitted = self.try_admit_sharded(arr, i, arr.at);
+            if !admitted && !self.queues.try_park(arr.app, i, arr.at) {
+                self.rejected_per_app[arr.app] += 1;
+            }
+            return;
+        }
+
+        let (_, _, src) = best.expect("event branch");
+        let at = match src {
+            Some(r) => {
+                let ev = self.ctxs[r].heap.pop().expect("peeked above");
+                self.end_time = self.end_time.max(ev.at);
+                // while serialized, every mutation goes through the
+                // full cluster hooks — the drains below read the index
+                // and the dirty-rack feed immediately
+                if let Some(st) = self.ctxs[r].slab.state_mut(ev.idx) {
+                    self.platform.apply_timeline(st, ev.server, ev.ev, ev.at);
+                }
+                ev.at
+            }
+            None => {
+                let GEv { at, kind, .. } = self.gheap.pop().expect("peeked above");
+                self.end_time = self.end_time.max(at);
+                self.handle_global(kind, at);
+                at
+            }
+        };
+        if !self.queues.is_empty() && self.platform.cluster.has_dirty_racks() {
+            self.drain_deferred_sharded(at);
+        }
+    }
+
+    /// Phases A + B of one epoch: drain every shard up to the fence
+    /// (threaded when engaged, inline otherwise), then replay the
+    /// availability snapshots into the placement index in canonical
+    /// `(time, seq)` order and merge the shard clocks.
+    fn run_window(&mut self, fence: (Millis, u64), engage: bool) {
+        let spr = self.spr;
+        {
+            let all = self.platform.cluster.servers_for_replay();
+            if engage {
+                self.engaged_batches += 1;
+                let jobs: Vec<Job<'_>> = self
+                    .ctxs
+                    .iter_mut()
+                    .zip(all.chunks_mut(spr))
+                    .enumerate()
+                    .map(|(r, (ctx, servers))| Job { ctx, servers, base: r * spr })
+                    .collect();
+                // The one allocation of an engaged batch: S fat
+                // pointers. The engagement threshold keeps it off the
+                // common path; the inline path allocates nothing.
+                let queue = Mutex::new(jobs);
+                std::thread::scope(|scope| {
+                    for _ in 0..self.workers {
+                        scope.spawn(|| loop {
+                            let job = queue.lock().expect("worker queue poisoned").pop();
+                            match job {
+                                Some(j) => run_shard_batch(j.ctx, j.servers, j.base, fence),
+                                None => break,
+                            }
+                        });
+                    }
+                });
+            } else {
+                for (r, (ctx, servers)) in self.ctxs.iter_mut().zip(all.chunks_mut(spr)).enumerate()
+                {
+                    run_shard_batch(ctx, servers, r * spr, fence);
+                }
+            }
+        }
+
+        // barrier: k-way merge of the per-shard note runs (each already
+        // `(at, seq)`-sorted) replayed into the index in global order
+        loop {
+            let mut best: Option<(usize, Millis, u64)> = None;
+            for (r, ctx) in self.ctxs.iter().enumerate() {
+                if let Some(n) = ctx.notes.get(self.cursors[r]) {
+                    let better = match best {
+                        None => true,
+                        Some((_, at, s)) => match n.at.total_cmp(&at) {
+                            Ordering::Less => true,
+                            Ordering::Equal => n.seq < s,
+                            Ordering::Greater => false,
+                        },
+                    };
+                    if better {
+                        best = Some((r, n.at, n.seq));
+                    }
+                }
+            }
+            let Some((r, _, _)) = best else { break };
+            let n = self.ctxs[r].notes[self.cursors[r]];
+            self.cursors[r] += 1;
+            self.platform.cluster.replay_index_update(n.server, n.avail, n.unmarked, n.marked);
+        }
+        for (r, ctx) in self.ctxs.iter_mut().enumerate() {
+            ctx.notes.clear();
+            self.cursors[r] = 0;
+            self.end_time = self.end_time.max(ctx.end_time);
+        }
+    }
+
+    fn run(mut self, label: &str) -> DriverReport {
+        loop {
+            // while a deferred queue is occupied, admission decisions
+            // depend on every event — replay exactly, one at a time
+            if self.queueing && !self.queues.is_empty() {
+                self.serialize_step();
+                continue;
+            }
+
+            // the natural fence: the next coordinator item in the
+            // sequential order (arrival wins ties, as ever)
+            let natural: Option<(Millis, u64)> =
+                match (self.schedule.arrivals.get(self.next_arrival), self.gheap.peek()) {
+                    (Some(a), Some(h)) => {
+                        Some(if a.at <= h.at { (a.at, 0) } else { (h.at, h.seq) })
+                    }
+                    (Some(a), None) => Some((a.at, 0)),
+                    (None, Some(h)) => Some((h.at, h.seq)),
+                    (None, None) => None,
+                };
+
+            // earliest shard-local event + work census for engagement
+            let mut min_local: Option<(Millis, u64)> = None;
+            let mut busy_shards = 0usize;
+            let mut local_items = 0usize;
+            for ctx in &self.ctxs {
+                if let Some(t) = ctx.heap.peek() {
+                    busy_shards += 1;
+                    local_items += ctx.heap.len();
+                    let better = match min_local {
+                        None => true,
+                        Some((at, s)) => match t.at.total_cmp(&at) {
+                            Ordering::Less => true,
+                            Ordering::Equal => t.seq < s,
+                            Ordering::Greater => false,
+                        },
+                    };
+                    if better {
+                        min_local = Some((t.at, t.seq));
+                    }
+                }
+            }
+            let have_local = match (min_local, natural) {
+                (None, _) => false,
+                (Some(_), None) => true,
+                (Some((lat, lseq)), Some(f)) => before(lat, lseq, f),
+            };
+
+            if !have_local {
+                if natural.is_none() {
+                    break; // heaps drained, trace done, nothing parked
+                }
+                self.step_fence();
+                continue;
+            }
+
+            // epoch window [first local event, +epoch_ms), clipped to
+            // the natural fence; a capped window replays local work
+            // only and comes back for the fence item — always
+            // processing at least one event, so the loop advances
+            let (lat, _) = min_local.expect("have_local");
+            let cap = (lat + self.epoch_ms, 0u64);
+            let (fence, capped) = match natural {
+                Some(f) if !before(cap.0, cap.1, f) => (f, false),
+                _ => (cap, true),
+            };
+            self.epochs += 1;
+            let engage = self.workers > 1 && busy_shards >= 2 && local_items >= PAR_THRESHOLD;
+            self.run_window(fence, engage);
+            if !capped {
+                self.step_fence();
+            }
+        }
+        self.finish(label)
+    }
+
+    fn finish(mut self, label: &str) -> DriverReport {
+        #[cfg(debug_assertions)]
+        {
+            let high_water: usize = self.gslab.high_water()
+                + self.ctxs.iter().map(|c| c.slab.high_water()).sum::<usize>();
+            debug_assert!(high_water <= self.schedule.arrivals.len());
+            let live: usize =
+                self.gslab.live() + self.ctxs.iter().map(|c| c.slab.live()).sum::<usize>();
+            debug_assert_eq!(live, self.in_flight, "slab/in-flight accounting out of sync");
+            debug_assert_eq!(self.in_flight, 0, "events drained with invocations still in flight");
+            for s in self.platform.cluster.servers() {
+                debug_assert!(
+                    s.allocated().cpu < 1e-3 && s.allocated().mem_mb < 1e-3,
+                    "server {:?} leaked allocations: {:?}",
+                    s.id,
+                    s.allocated()
+                );
+                debug_assert!(
+                    s.marked().cpu < 1e-3 && s.marked().mem_mb < 1e-3,
+                    "server {:?} leaked marks: {:?}",
+                    s.id,
+                    s.marked()
+                );
+            }
+        }
+        let fleet = self.platform.cluster.total_consumption(self.end_time);
+        let adm = self.queues.finish(&self.rejected_per_app, &self.aborted_per_app);
+        let route = self.platform.global.route_stats();
+
+        // shard telemetry, reduced in ascending shard order — merged
+        // accumulators feed digest-excluded fields only
+        let mut batch_moments = StreamingMoments::new();
+        let mut batch_p95 = P2Quantile::new(0.95);
+        let mut shard_jain = JainAccumulator::new();
+        let mut local_events = 0u64;
+        for ctx in &self.ctxs {
+            batch_moments.merge(&ctx.batch_moments);
+            batch_p95.merge(&ctx.batch_p95);
+            let mut one = JainAccumulator::new();
+            one.push(ctx.local_events as f64);
+            shard_jain.merge(&one);
+            local_events += ctx.local_events;
+        }
+
+        let mut report = self.agg.finish(
+            label,
+            adm,
+            fleet,
+            self.end_time,
+            self.max_in_flight,
+            self.completed_mask,
+        );
+        report.route_fast_hits = route.fast_hits;
+        report.route_scans = route.scans;
+        report.faulted = self.faulted_per_app.iter().sum();
+        report.recovered = self.recovered_per_app.iter().sum();
+        report.faulted_unrecovered = self.faulted_unrec_per_app.iter().sum();
+        if self.recovery_moments.count() > 0 {
+            report.mean_recovery_ms = self.recovery_moments.mean();
+            report.p95_recovery_ms = self.recovery_p95.value();
+        }
+        for (i, a) in report.apps.iter_mut().enumerate() {
+            a.faulted = self.faulted_per_app[i];
+            a.recovered = self.recovered_per_app[i];
+            a.faulted_unrecovered = self.faulted_unrec_per_app[i];
+        }
+        report.workers = self.workers;
+        report.epochs = self.epochs;
+        report.parallel_batches = self.engaged_batches;
+        report.parallel_local_events = local_events;
+        report.epoch_batch_mean = batch_moments.mean();
+        report.epoch_batch_p95 = batch_p95.value();
+        report.epoch_shard_jain = shard_jain.value();
+        report
+    }
+}
+
+/// The sharded epoch-barrier replay of one schedule. Entered from
+/// [`MultiTenantDriver`]'s `run_platform` when
+/// [`super::driver::DriverConfig::workers`] `> 1`; digest-identical to
+/// the sequential loop for every worker count.
+pub(crate) fn run_platform_sharded(
+    driver: &MultiTenantDriver<'_>,
+    schedule: &Schedule,
+    config: ZenixConfig,
+    label: &str,
+) -> DriverReport {
+    let apps = driver.apps;
+    let cfg = &driver.cfg;
+    let shards = cfg.cluster.racks.max(1);
+    let spr = cfg.cluster.servers_per_rack;
+    let workers = cfg.workers.min(shards).max(1);
+
+    let mut sched_counts = vec![0usize; apps.len()];
+    for arr in &schedule.arrivals {
+        sched_counts[arr.app] += 1;
+    }
+
+    let mut queues = DeferredQueues::new(cfg.admission, apps.len());
+    let queueing = queues.policy().queues();
+    if queueing {
+        if matches!(cfg.admission, AdmissionPolicy::WeightedFairShare { .. }) {
+            let weights: Vec<f64> = apps.iter().map(|a| a.weight).collect();
+            queues.set_weights(&weights);
+        }
+        if let AdmissionPolicy::Deadline { deadline_ms, .. } = cfg.admission {
+            let slos: Vec<f64> =
+                apps.iter().map(|a| a.deadline_ms.unwrap_or(deadline_ms)).collect();
+            queues.set_deadlines(&slos);
+        }
+    }
+
+    let mut gheap: BinaryHeap<GEv> = BinaryHeap::with_capacity(256);
+    let mut seq = 0u64;
+    let horizon = schedule.arrivals.last().map_or(0.0, |a| a.at);
+    let fault_plan = FaultPlan::generate(&cfg.faults, cfg.seed, &cfg.cluster, horizon);
+    for idx in 0..fault_plan.events.len() {
+        gheap.push(GEv { at: fault_plan.events[idx].at, seq, kind: GKind::Fault { idx } });
+        seq += 1;
+    }
+
+    let engine = Engine {
+        apps,
+        schedule,
+        platform: Platform::new(cfg.cluster, config),
+        gheap,
+        seq,
+        gslab: Slab::new(),
+        ctxs: (0..shards).map(|_| ShardCtx::new()).collect(),
+        cursors: vec![0usize; shards],
+        agg: Aggregator::new(apps, &sched_counts, cfg.exact_stats),
+        completed_mask: BitMask::new(schedule.arrivals.len()),
+        rejected_per_app: vec![0usize; apps.len()],
+        aborted_per_app: vec![0usize; apps.len()],
+        queues,
+        queueing,
+        in_flight: 0,
+        max_in_flight: 0,
+        end_time: 0.0,
+        next_arrival: 0,
+        fault_plan,
+        spr,
+        workers,
+        epoch_ms: cfg.epoch_ms.max(1.0),
+        faulted_per_app: vec![0usize; apps.len()],
+        recovered_per_app: vec![0usize; apps.len()],
+        faulted_unrec_per_app: vec![0usize; apps.len()],
+        recovery_moments: StreamingMoments::new(),
+        recovery_p95: P2Quantile::new(0.95),
+        epochs: 0,
+        engaged_batches: 0,
+    };
+    engine.run(label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::admission::AdmissionPolicy;
+    use super::super::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use super::super::faults::FaultConfig;
+    use crate::trace::Archetype;
+
+    fn zenix_digest(cfg: DriverConfig) -> (u64, usize, usize, usize) {
+        let apps = standard_mix(6, Archetype::Average);
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        // the failure split partitions the arrivals in every mode
+        assert_eq!(
+            r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered,
+            schedule.arrivals.len(),
+            "conservation identity (workers = {})",
+            cfg.workers
+        );
+        (r.digest, r.completed, r.warm_hits, r.max_in_flight)
+    }
+
+    #[test]
+    fn parallel_replay_digest_matches_sequential() {
+        let base = DriverConfig {
+            seed: 9,
+            invocations: 240,
+            mean_iat_ms: 120.0,
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let sequential = zenix_digest(base);
+        for workers in [2usize, 4, 8] {
+            let parallel = zenix_digest(DriverConfig { workers, ..base });
+            assert_eq!(
+                parallel, sequential,
+                "workers = {workers} must reproduce the sequential outcome"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_width_cannot_affect_the_digest() {
+        let base = DriverConfig {
+            seed: 5,
+            invocations: 180,
+            mean_iat_ms: 150.0,
+            workers: 4,
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let wide = zenix_digest(DriverConfig { epoch_ms: 10_000.0, ..base });
+        let narrow = zenix_digest(DriverConfig { epoch_ms: 5.0, ..base });
+        assert_eq!(wide, narrow, "epoch width is a batching knob, not a semantic one");
+    }
+
+    #[test]
+    fn parallel_replay_matches_under_queueing_policies() {
+        for admission in [
+            AdmissionPolicy::FifoQueue { max_wait_ms: 60_000.0, max_depth: 32 },
+            AdmissionPolicy::FairShare { max_wait_ms: 60_000.0, max_depth: 32 },
+        ] {
+            let base = DriverConfig {
+                seed: 11,
+                invocations: 200,
+                mean_iat_ms: 40.0, // saturating: queues must engage
+                admission,
+                ..DriverConfig::default()
+            }
+            .with_racks(2);
+            let sequential = zenix_digest(base);
+            for workers in [2usize, 4] {
+                let parallel = zenix_digest(DriverConfig { workers, ..base });
+                assert_eq!(
+                    parallel, sequential,
+                    "queueing replay must serialize exactly (workers = {workers})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_replay_matches_under_fault_injection() {
+        let base = DriverConfig {
+            seed: 7,
+            invocations: 200,
+            mean_iat_ms: 150.0,
+            faults: FaultConfig { rate_per_min: 10.0, repair_ms: 5_000.0, rack_outage: true },
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let sequential = zenix_digest(base);
+        for workers in [2usize, 4] {
+            let parallel = zenix_digest(DriverConfig { workers, ..base });
+            assert_eq!(
+                parallel, sequential,
+                "chaos replay must stay digest-identical (workers = {workers})"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_run_reports_parallel_telemetry() {
+        let apps = standard_mix(6, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 9,
+            invocations: 240,
+            mean_iat_ms: 120.0,
+            workers: 4,
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        assert_eq!(r.workers, 4);
+        assert!(r.epochs > 0, "a multi-rack run must execute epoch windows");
+        assert!(
+            r.parallel_local_events > 0,
+            "single-rack waves must replay inside shard batches"
+        );
+        assert!(r.epoch_shard_jain > 0.0 && r.epoch_shard_jain <= 1.0 + 1e-12);
+        // the sequential loop reports the idle defaults
+        let seq = MultiTenantDriver::new(&apps, DriverConfig { workers: 1, ..cfg })
+            .run_zenix(&schedule);
+        assert_eq!(seq.workers, 1);
+        assert_eq!(seq.epochs, 0);
+        assert_eq!(seq.parallel_local_events, 0);
+    }
+
+    #[test]
+    fn comparison_fanout_is_byte_identical() {
+        let apps = standard_mix(5, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 13,
+            invocations: 150,
+            mean_iat_ms: 200.0,
+            ..DriverConfig::default()
+        }
+        .with_racks(2);
+        let a = MultiTenantDriver::new(&apps, cfg).run_comparison();
+        let b = MultiTenantDriver::new(&apps, cfg).run_comparison_with_workers(3);
+        assert_eq!(a.zenix.digest, b.zenix.digest);
+        assert_eq!(a.peak.digest, b.peak.digest);
+        assert_eq!(a.faas.digest, b.faas.digest);
+        assert_eq!(a.faas_on_completed.digest, b.faas_on_completed.digest);
+    }
+
+    #[test]
+    fn worker_count_clamps_to_the_rack_count() {
+        let apps = standard_mix(4, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 3,
+            invocations: 80,
+            mean_iat_ms: 300.0,
+            workers: 64,
+            ..DriverConfig::default()
+        }
+        .with_racks(2);
+        let driver = MultiTenantDriver::new(&apps, cfg);
+        let schedule = driver.schedule();
+        let r = driver.run_zenix(&schedule);
+        assert_eq!(r.workers, 2, "workers clamp to the shard (rack) count");
+    }
+}

@@ -925,31 +925,7 @@ impl Platform {
         ev: TimelineEv,
         at: Millis,
     ) {
-        match ev {
-            TimelineEv::Grow { comp, extra_mb, used_mb } => {
-                if self.cluster.try_alloc(server, Resources::mem_only(extra_mb), at) {
-                    self.cluster.add_used(server, Resources::mem_only(used_mb), at);
-                    st.grown[comp] = Some((extra_mb, used_mb, at));
-                }
-                // else: cluster full — the growth never landed, so the
-                // Finish below must not release or un-use it.
-            }
-            TimelineEv::Finish { comp, started, base_alloc, used } => {
-                let (extra, grown_used, grown_at) =
-                    st.grown[comp].take().unwrap_or((0.0, 0.0, at));
-                self.cluster
-                    .sub_used(server, used.plus(Resources::mem_only(grown_used)), at);
-                self.cluster
-                    .free(server, base_alloc.plus(Resources::mem_only(extra)), at);
-                // attributed per-invocation integrals
-                let dur_s = (at - started).max(0.0) / 1000.0;
-                let grown_s = (at - grown_at).max(0.0) / 1000.0;
-                st.attrib.alloc_cpu_s += base_alloc.cpu * dur_s;
-                st.attrib.alloc_mem_mb_s += base_alloc.mem_mb * dur_s + extra * grown_s;
-                st.attrib.used_cpu_s += used.cpu * dur_s;
-                st.attrib.used_mem_mb_s += used.mem_mb * dur_s + grown_used * grown_s;
-            }
-        }
+        apply_timeline_on(&mut self.cluster, st, server, ev, at);
     }
 
     /// Complete the wave in flight (all its timeline events applied):
@@ -1347,6 +1323,76 @@ pub enum TimelineEv {
     /// growth actually landed, and drop exactly the used share that was
     /// added (`used` is the base share committed at placement).
     Finish { comp: usize, started: Millis, base_alloc: Resources, used: Resources },
+}
+
+/// The four cluster mutations a timeline event may perform, abstracted
+/// so [`apply_timeline_on`] can run against either the real [`Cluster`]
+/// (hooks keep the placement index and dirty-rack feed in sync
+/// immediately — the sequential replay) or a shard worker's rack-local
+/// server slice (the parallel replay applies servers directly and
+/// records index/dirty effects as notes, replayed at the next epoch
+/// barrier in canonical `(time, seq)` order — see
+/// [`super::epoch`]). Both sinks drive the *identical* `Server`
+/// mutation sequence, which is what makes the parallel digest
+/// bit-identical to the sequential one.
+pub(crate) trait AllocSink {
+    /// Try to allocate `amount` on `id`; true iff it landed.
+    fn try_alloc(&mut self, id: ServerId, amount: Resources, now: Millis) -> bool;
+    /// Raise the used share (accounting only — no index effect).
+    fn add_used(&mut self, id: ServerId, delta: Resources, now: Millis);
+    /// Lower the used share (accounting only — no index effect).
+    fn sub_used(&mut self, id: ServerId, delta: Resources, now: Millis);
+    /// Release an allocation on `id`.
+    fn free(&mut self, id: ServerId, amount: Resources, now: Millis);
+}
+
+impl AllocSink for Cluster {
+    fn try_alloc(&mut self, id: ServerId, amount: Resources, now: Millis) -> bool {
+        Cluster::try_alloc(self, id, amount, now)
+    }
+    fn add_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        Cluster::add_used(self, id, delta, now);
+    }
+    fn sub_used(&mut self, id: ServerId, delta: Resources, now: Millis) {
+        Cluster::sub_used(self, id, delta, now);
+    }
+    fn free(&mut self, id: ServerId, amount: Resources, now: Millis) {
+        Cluster::free(self, id, amount, now);
+    }
+}
+
+/// [`Platform::apply_timeline`]'s body, generic over the allocation
+/// sink: the one copy of the Grow/Finish semantics both the sequential
+/// and the sharded replay execute.
+pub(crate) fn apply_timeline_on<S: AllocSink>(
+    sink: &mut S,
+    st: &mut OngoingInvocation,
+    server: ServerId,
+    ev: TimelineEv,
+    at: Millis,
+) {
+    match ev {
+        TimelineEv::Grow { comp, extra_mb, used_mb } => {
+            if sink.try_alloc(server, Resources::mem_only(extra_mb), at) {
+                sink.add_used(server, Resources::mem_only(used_mb), at);
+                st.grown[comp] = Some((extra_mb, used_mb, at));
+            }
+            // else: cluster full — the growth never landed, so the
+            // Finish below must not release or un-use it.
+        }
+        TimelineEv::Finish { comp, started, base_alloc, used } => {
+            let (extra, grown_used, grown_at) = st.grown[comp].take().unwrap_or((0.0, 0.0, at));
+            sink.sub_used(server, used.plus(Resources::mem_only(grown_used)), at);
+            sink.free(server, base_alloc.plus(Resources::mem_only(extra)), at);
+            // attributed per-invocation integrals
+            let dur_s = (at - started).max(0.0) / 1000.0;
+            let grown_s = (at - grown_at).max(0.0) / 1000.0;
+            st.attrib.alloc_cpu_s += base_alloc.cpu * dur_s;
+            st.attrib.alloc_mem_mb_s += base_alloc.mem_mb * dur_s + extra * grown_s;
+            st.attrib.used_cpu_s += used.cpu * dur_s;
+            st.attrib.used_mem_mb_s += used.mem_mb * dur_s + grown_used * grown_s;
+        }
+    }
 }
 
 /// Consumption difference (after - before), saturating at zero.

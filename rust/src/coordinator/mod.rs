@@ -18,6 +18,11 @@
 //! - [`driver`] — multi-tenant trace-driven workload driver: overlapping
 //!   invocations from N apps interleaved on one shared platform over
 //!   simulated time (the Fig 22/26/29 load scenario).
+//! - [`epoch`] — the driver's sharded epoch-barrier event loop:
+//!   per-rack shard workers replay rack-local timelines inside bounded
+//!   epochs; cross-shard effects exchange at a deterministic barrier in
+//!   canonical `(time, seq)` order, so every worker count produces the
+//!   sequential loop's exact digest.
 //! - [`admission`] — admission control for the driver: deferred-arrival
 //!   queueing policies (FIFO, fair-share, weighted fair-share,
 //!   SLO-deadline EDF), burst arrival models (MMPP / rate replay), and
@@ -30,6 +35,7 @@
 pub mod adjust;
 pub mod admission;
 pub mod driver;
+pub mod epoch;
 pub mod exec;
 pub mod failure;
 pub mod faults;

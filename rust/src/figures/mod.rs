@@ -14,6 +14,7 @@ pub mod admission_figs;
 pub mod chaos_figs;
 pub mod lr_figs;
 pub mod platform_figs;
+pub mod scaling_figs;
 pub mod sharding_figs;
 pub mod tpcds_figs;
 pub mod video_figs;

@@ -1,0 +1,113 @@
+//! Worker-count scaling sweep: the identical multi-tenant replay
+//! through the sharded epoch-barrier loop at increasing worker counts.
+//!
+//! The tentpole claim (ISSUE 8) is that the parallel replay is a pure
+//! execution strategy: shards are racks, cross-shard effects exchange
+//! at a deterministic `(time, seq)` barrier, and therefore **every
+//! worker count produces the identical digest** — the sweep's first
+//! column of results is constant by construction, and the shape test
+//! pins that. What *does* vary with workers is the parallel-loop
+//! telemetry: how many epoch windows engaged the pool, how much work
+//! stayed rack-local inside shard batches (the parallelizable
+//! fraction), batch-size distribution (the barrier-overhead axis) and
+//! Jain's index over per-shard event totals (shard balance — the
+//! ceiling on achievable speedup). Wall-clock speedup itself is
+//! measured by `rust/benches/scheduler.rs` (`driver_1m_parallel_w*`),
+//! not here: figure code is part of the deterministic simulation
+//! surface and stays wall-clock-free (`zenix_lint` D2).
+
+use crate::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use crate::trace::Archetype;
+
+/// One worker-count cell of the scaling sweep.
+#[derive(Debug, Clone)]
+pub struct ScalingSweepRow {
+    /// Worker threads requested for this cell.
+    pub workers_requested: usize,
+    /// Worker threads actually used (clamped to the rack count).
+    pub workers: usize,
+    /// Epoch windows the sharded loop executed (0 = sequential loop).
+    pub epochs: u64,
+    /// Epoch windows whose shard batches engaged the worker pool.
+    pub parallel_batches: u64,
+    /// Timeline events applied inside shard batches — the rack-local,
+    /// parallelizable fraction of the replay.
+    pub parallel_local_events: u64,
+    /// Mean shard-batch size (events per shard per epoch).
+    pub epoch_batch_mean: f64,
+    /// P² p95 shard-batch size.
+    pub epoch_batch_p95: f64,
+    /// Jain's index over per-shard local-event totals (1.0 = balanced).
+    pub epoch_shard_jain: f64,
+    /// Invocations that ran to completion.
+    pub completed: usize,
+    /// The replay's order-stable digest — identical across the whole
+    /// sweep, or the epoch barrier is broken.
+    pub digest: u64,
+}
+
+/// Replay the identical `standard_mix` schedule on a `racks`-rack
+/// cluster at each worker count in `worker_counts` (canonically
+/// `&[1, 2, 4, 8]`). The schedule is generated once: it depends only
+/// on the seed and the mix, never on the execution strategy, so every
+/// cell replays byte-identical input and any digest difference is
+/// attributable to the epoch engine alone.
+pub fn fig_worker_scaling(
+    apps: usize,
+    invocations: usize,
+    seed: u64,
+    racks: usize,
+    worker_counts: &[usize],
+) -> Vec<ScalingSweepRow> {
+    let mix = standard_mix(apps, Archetype::Average);
+    let base =
+        DriverConfig { seed, invocations, ..DriverConfig::default() }.with_racks(racks);
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let mut rows = Vec::with_capacity(worker_counts.len());
+    for &workers in worker_counts {
+        let cfg = DriverConfig { workers, ..base };
+        let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+        rows.push(ScalingSweepRow {
+            workers_requested: workers,
+            workers: r.workers,
+            epochs: r.epochs,
+            parallel_batches: r.parallel_batches,
+            parallel_local_events: r.parallel_local_events,
+            epoch_batch_mean: r.epoch_batch_mean,
+            epoch_batch_p95: r.epoch_batch_p95,
+            epoch_shard_jain: r.epoch_shard_jain,
+            completed: r.completed,
+            digest: r.digest,
+        });
+    }
+    rows
+}
+
+/// Render the sweep as a figure-row text block.
+pub fn render_scaling(title: &str, rows: &[ScalingSweepRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<8} {:>7} {:>8} {:>9} {:>12} {:>10} {:>9} {:>6} {:>18}",
+        "workers", "used", "epochs", "par-wins", "local-events", "batch-mean", "batch-p95", "jain", "digest"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>7} {:>8} {:>9} {:>12} {:>10.1} {:>9.1} {:>6.3} {:>#18x}",
+            r.workers_requested,
+            r.workers,
+            r.epochs,
+            r.parallel_batches,
+            r.parallel_local_events,
+            r.epoch_batch_mean,
+            r.epoch_batch_p95,
+            r.epoch_shard_jain,
+            r.digest,
+        );
+    }
+    out
+}

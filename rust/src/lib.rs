@@ -45,13 +45,11 @@ pub mod figures;
 #[allow(missing_docs)]
 pub mod memory;
 pub mod metrics;
-#[allow(missing_docs)]
 pub mod net;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod trace;
-#[allow(missing_docs)]
 pub mod util;
 
 /// Convenient result alias used across the crate.

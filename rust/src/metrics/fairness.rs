@@ -52,6 +52,16 @@ impl JainAccumulator {
         self.n
     }
 
+    /// Fold another accumulator into this one (parallel reduction).
+    /// Exact: the three scalars are plain sums, so merging per-shard
+    /// accumulators in ascending shard order gives the same index bits
+    /// as folding every tenant through one accumulator in that order.
+    pub fn merge(&mut self, other: &Self) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+
     /// Jain's index over the folded values: (Σx)²/(n·Σx²), in
     /// [1/n, 1]. By convention the index of an empty set or an all-zero
     /// allocation is 1.0 — every tenant holds the identical (empty)
@@ -138,6 +148,25 @@ mod tests {
         let j = jains_index([-1.0, 2.0]);
         assert_eq!(j, jains_index([0.0, 2.0]));
         assert!(j >= 0.5 - 1e-12 && j <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn sharded_merge_matches_sequential_fold() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.2, 2.6, 0.0, 7.7];
+        let mut whole = JainAccumulator::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut merged = JainAccumulator::new();
+        for chunk in xs.chunks(3) {
+            let mut shard = JainAccumulator::new();
+            for &x in chunk {
+                shard.push(x);
+            }
+            merged.merge(&shard);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.value().to_bits(), whole.value().to_bits());
     }
 
     #[test]

@@ -105,6 +105,36 @@ impl StreamingMoments {
             (self.m2 / self.n as f64).sqrt()
         }
     }
+
+    /// Fold another accumulator into this one (parallel reduction).
+    ///
+    /// Deterministic given a fixed fold order: the sharded replay
+    /// merges per-shard accumulators in ascending shard index, so the
+    /// same trace always produces the same merged state. The merged
+    /// `sum` is the chunk-wise sum, which differs from a sequential
+    /// fold by float non-associativity; `m2`/`mean_w` use Chan et al.'s
+    /// pairwise update, which matches Welford to within float noise.
+    /// For both reasons merged accumulators feed only digest-*excluded*
+    /// telemetry — digest-folded values are accumulated
+    /// coordinator-side in canonical event order, never merged.
+    pub fn merge(&mut self, other: &Self) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean_w - self.mean_w;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.mean_w += delta * nb / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// P² streaming quantile estimator (Jain & Chlamtac, CACM 1985).
@@ -215,6 +245,41 @@ impl P2Quantile {
         self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
     }
 
+    /// Fold another estimator for the same quantile into this one
+    /// (parallel reduction).
+    ///
+    /// Approximate but deterministic: `other`'s five marker heights are
+    /// replayed into `self` as synthetic observations, each repeated so
+    /// the total replayed count equals `other.count()` (markers split
+    /// the count as evenly as five integers allow, low markers first).
+    /// This keeps the merged estimate weighted by shard size at O(1)
+    /// memory; accuracy is the usual few-percent P² band, which is fine
+    /// for the digest-*excluded* telemetry this feeds. Merge in a fixed
+    /// shard order for reproducible output.
+    pub fn merge(&mut self, other: &Self) {
+        assert!(
+            self.p == other.p,
+            "cannot merge P² estimators for different quantiles"
+        );
+        if other.n == 0 {
+            return;
+        }
+        if other.n < 5 {
+            for i in 0..cast::usize_of(other.n) {
+                self.push(other.init[i]);
+            }
+            return;
+        }
+        let base = other.n / 5;
+        let rem = cast::usize_of(other.n % 5);
+        for (i, &h) in other.q.iter().enumerate() {
+            let reps = base + u64::from(i < rem);
+            for _ in 0..reps {
+                self.push(h);
+            }
+        }
+    }
+
     /// Current estimate; exact for n ≤ 5 (nearest-rank over the
     /// buffered observations), 0.0 when empty.
     pub fn value(&self) -> f64 {
@@ -262,6 +327,87 @@ mod tests {
         assert_eq!(m.min(), 0.0);
         assert_eq!(m.max(), 0.0);
         assert_eq!(m.stddev(), 0.0);
+    }
+
+    #[test]
+    fn moments_merge_matches_sequential_fold() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.2, 2.6, 5.3, 5.8, 0.1];
+        let mut whole = StreamingMoments::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut merged = StreamingMoments::new();
+        for chunk in xs.chunks(4) {
+            let mut shard = StreamingMoments::new();
+            for &x in chunk {
+                shard.push(x);
+            }
+            merged.merge(&shard);
+        }
+        assert_eq!(merged.count(), whole.count());
+        // Chunked sums differ from the sequential fold only by float
+        // non-associativity — which is why digest-folded values never
+        // pass through merge(); they are accumulated coordinator-side.
+        assert!((merged.sum() - whole.sum()).abs() < 1e-9);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        // Chan's pairwise M2 agrees with Welford to float noise.
+        assert!((merged.stddev() - whole.stddev()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_merge_empty_identities() {
+        let mut a = StreamingMoments::new();
+        let mut b = StreamingMoments::new();
+        b.push(2.0);
+        b.push(8.0);
+        a.merge(&b); // empty ← nonempty: adopt
+        assert_eq!(a.mean(), 5.0);
+        let before = (a.count(), a.sum().to_bits());
+        a.merge(&StreamingMoments::new()); // nonempty ← empty: no-op
+        assert_eq!((a.count(), a.sum().to_bits()), before);
+    }
+
+    #[test]
+    fn p2_merge_approximates_pooled_quantile() {
+        let mut pooled = Vec::new();
+        let mut merged = P2Quantile::new(0.95);
+        for seed in [21u64, 22, 23, 24] {
+            let mut shard = P2Quantile::new(0.95);
+            let mut rng = Rng::new(seed);
+            for _ in 0..2000 {
+                let x = rng.uniform(0.0, 1000.0);
+                shard.push(x);
+                pooled.push(x);
+            }
+            merged.merge(&shard);
+        }
+        let exact = stats::percentile(&pooled, 95.0);
+        let got = merged.value();
+        assert!(
+            (got - exact).abs() <= 0.08 * exact.abs() + 1.0,
+            "merged P² {got} vs pooled exact {exact}"
+        );
+        assert_eq!(merged.count(), 8000);
+    }
+
+    #[test]
+    fn p2_merge_is_deterministic_and_handles_small_shards() {
+        let build = || {
+            let mut m = P2Quantile::new(0.5);
+            let mut tiny = P2Quantile::new(0.5);
+            tiny.push(4.0);
+            tiny.push(2.0);
+            m.merge(&tiny); // n < 5: replays the raw buffered values
+            let mut big = P2Quantile::new(0.5);
+            for i in 0..100 {
+                big.push(i as f64);
+            }
+            m.merge(&big);
+            m
+        };
+        assert_eq!(build().value().to_bits(), build().value().to_bits());
+        assert_eq!(build().count(), 102);
     }
 
     #[test]

@@ -31,6 +31,8 @@ pub enum ControlPath {
 /// Computes control-plane setup latency and per-connection state.
 #[derive(Debug, Clone, Copy)]
 pub struct ControlPlane {
+    /// Startup-latency constants (overlay/netvirt attach, QP/TCP
+    /// handshakes, user-code load) the setup costs draw from.
     pub startup: StartupModel,
     /// Scheduler message RTT for the metadata exchange (executor ->
     /// scheduler -> peer executor, §9.4).

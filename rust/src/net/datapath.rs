@@ -16,11 +16,13 @@ pub enum NetKind {
 /// Transfer cost model.
 #[derive(Debug, Clone, Copy)]
 pub struct NetModel {
-    /// One-way small-message latency (ms).
+    /// One-way small-message TCP latency (ms).
     pub tcp_latency_ms: Millis,
+    /// One-way small-message one-sided RDMA latency (ms).
     pub rdma_latency_ms: Millis,
-    /// Effective bandwidth (MB per ms == GB/s).
+    /// Effective TCP bandwidth (MB per ms == GB/s).
     pub tcp_bw_mb_per_ms: f64,
+    /// Effective one-sided RDMA bandwidth (MB per ms == GB/s).
     pub rdma_bw_mb_per_ms: f64,
     /// Copy overhead factor for two-sided TCP (memory-controller copy in
     /// and out; RDMA is zero-copy).

@@ -20,14 +20,20 @@ use super::stats;
 /// One benchmark's report.
 #[derive(Debug, Clone)]
 pub struct Report {
+    /// Benchmark name as passed to [`Bencher::bench`].
     pub name: String,
+    /// Total iterations measured (samples × per-sample batch).
     pub iters: u64,
+    /// Mean wall time per iteration (ns).
     pub mean_ns: f64,
+    /// Median wall time per iteration (ns).
     pub p50_ns: f64,
+    /// 95th-percentile wall time per iteration (ns).
     pub p95_ns: f64,
 }
 
 impl Report {
+    /// Mean time per iteration as a [`Duration`].
     pub fn mean(&self) -> Duration {
         Duration::from_nanos(self.mean_ns as u64)
     }
@@ -47,6 +53,8 @@ pub struct Bencher {
     quick: bool,
     /// Explicit `--json <path>` destination (wins over the env var).
     json_path: Option<PathBuf>,
+    /// Every report collected so far, in run order (the rows
+    /// [`Self::write_json`] emits).
     pub reports: Vec<Report>,
 }
 

@@ -12,15 +12,22 @@ use crate::Result;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Number(f64),
+    /// A string, with escapes resolved.
     String(String),
+    /// An array of values.
     Array(Vec<Value>),
+    /// An object; keys sorted (BTreeMap), so display order is stable.
     Object(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The underlying map, or an error naming the actual type.
     pub fn as_object(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Object(m) => Ok(m),
@@ -28,6 +35,7 @@ impl Value {
         }
     }
 
+    /// The underlying array, or an error naming the actual type.
     pub fn as_array(&self) -> Result<&[Value]> {
         match self {
             Value::Array(v) => Ok(v),
@@ -35,6 +43,7 @@ impl Value {
         }
     }
 
+    /// The underlying string, or an error naming the actual type.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::String(s) => Ok(s),
@@ -42,6 +51,7 @@ impl Value {
         }
     }
 
+    /// The numeric value, or an error naming the actual type.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Number(n) => Ok(*n),
@@ -49,6 +59,8 @@ impl Value {
         }
     }
 
+    /// The value as a non-negative integer index/count; errors on
+    /// negative or fractional numbers.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {

@@ -35,6 +35,7 @@ impl Rng {
         Self::new(nanos ^ 0xD1B54A32D192ED03)
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

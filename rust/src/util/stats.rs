@@ -32,17 +32,22 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// Fixed-bin histogram over [lo, hi); values outside clamp to edge bins.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Inclusive lower edge of the binned range.
     pub lo: f64,
+    /// Exclusive upper edge of the binned range.
     pub hi: f64,
+    /// Per-bin counts, lowest bin first.
     pub bins: Vec<u64>,
 }
 
 impl Histogram {
+    /// `nbins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Self { lo, hi, bins: vec![0; nbins] }
     }
 
+    /// Count one observation (out-of-range values clamp to edge bins).
     pub fn add(&mut self, x: f64) {
         let n = self.bins.len();
         let t = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
@@ -50,6 +55,7 @@ impl Histogram {
         self.bins[idx] += 1;
     }
 
+    /// Total observations counted.
     pub fn total(&self) -> u64 {
         self.bins.iter().sum()
     }

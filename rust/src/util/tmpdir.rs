@@ -12,6 +12,8 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    /// Create a fresh uniquely-named directory under the system temp
+    /// root (prefix + pid + counter + timestamp).
     pub fn new(prefix: &str) -> std::io::Result<Self> {
         let id = COUNTER.fetch_add(1, Ordering::Relaxed);
         let nanos = std::time::SystemTime::now()
@@ -26,6 +28,7 @@ impl TempDir {
         Ok(Self { path })
     }
 
+    /// The directory's path (valid until drop).
     pub fn path(&self) -> &Path {
         &self.path
     }

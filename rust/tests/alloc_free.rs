@@ -198,4 +198,47 @@ fn steady_state_arrivals_allocate_nothing() {
              {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
         );
     }
+
+    // ---- phase 5: parallel replay steady state ----------------------
+    // ISSUE 8 tentpole: with the sharded epoch-barrier loop engaged
+    // (4 workers over 4 racks), the marginal allocation count per
+    // extra invocation *per worker* stays below one. Shard heaps,
+    // slabs and note buffers keep their capacity across windows, the
+    // barrier merge replays notes in place, and telemetry folds into
+    // preallocated accumulators — what remains is the scoped worker
+    // pool itself (thread spawns per engaged window), amortized over
+    // the whole window's arrivals by the wide epoch.
+    {
+        let cfg_small = DriverConfig {
+            seed: 5,
+            invocations: 2000,
+            mean_iat_ms: 60.0, // dense: every window clears PAR_THRESHOLD
+            exact_stats: false,
+            workers: 4,
+            epoch_ms: 2_000.0,
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let cfg_big = DriverConfig { invocations: 4000, ..cfg_small };
+        let d_small = MultiTenantDriver::new(&apps, cfg_small);
+        let d_big = MultiTenantDriver::new(&apps, cfg_big);
+        let s_small = d_small.schedule();
+        let s_big = d_big.schedule();
+        let (rep_small, a_small) = counted(|| d_small.run_zenix(&s_small));
+        let (rep_big, a_big) = counted(|| d_big.run_zenix(&s_big));
+        assert!(
+            rep_big.parallel_batches > rep_small.parallel_batches,
+            "the worker pool must engage on the marginal window for this gate to bind \
+             ({} batches @2k vs {} @4k)",
+            rep_small.parallel_batches,
+            rep_big.parallel_batches
+        );
+        std::hint::black_box((&rep_small, &rep_big));
+        let per_worker = a_big.saturating_sub(a_small) as f64 / 2000.0 / 4.0;
+        assert!(
+            per_worker < 1.0,
+            "parallel driver loop marginal allocations per invocation per worker too high: \
+             {per_worker:.3} ({a_small} @2k vs {a_big} @4k, 4 workers)"
+        );
+    }
 }

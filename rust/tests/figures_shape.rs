@@ -4,7 +4,8 @@
 
 use zenix::apps::lr;
 use zenix::figures::{
-    admission_figs, chaos_figs, lr_figs, platform_figs, sharding_figs, tpcds_figs, video_figs,
+    admission_figs, chaos_figs, lr_figs, platform_figs, scaling_figs, sharding_figs, tpcds_figs,
+    video_figs,
 };
 
 // ---- §6.1.1 TPC-DS ------------------------------------------------------
@@ -326,6 +327,48 @@ fn sharding_sweep_fixed_capacity_deterministic_and_rendered() {
     }
     // the renderer lists every cell (header + one line per row)
     let text = sharding_figs::render_sharding("sharding", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
+}
+
+// ---- worker-count scaling sweep -----------------------------------------
+
+#[test]
+fn scaling_sweep_digest_constant_across_worker_counts() {
+    // ISSUE 8 tentpole shape: the digest column is *flat* across the
+    // whole sweep (parallelism is pure execution strategy), workers
+    // clamp to the rack count, and the sharded cells actually report
+    // parallel-loop telemetry — the sweep measures something real.
+    let worker_counts = [1usize, 2, 4, 8];
+    let rows = scaling_figs::fig_worker_scaling(6, 240, 9, 4, &worker_counts);
+    assert_eq!(rows.len(), 4);
+    let seq = &rows[0];
+    assert_eq!(seq.workers, 1);
+    assert_eq!(seq.epochs, 0, "workers=1 must take the sequential loop");
+    for (r, &w) in rows.iter().zip(&worker_counts) {
+        assert_eq!(r.workers_requested, w);
+        assert_eq!(r.workers, w.min(4), "workers clamp to the rack count");
+        assert_eq!(r.digest, seq.digest, "workers={w}: the digest moved");
+        assert_eq!(r.completed, seq.completed, "workers={w}: completions moved");
+        if r.workers > 1 {
+            assert!(r.epochs > 0, "workers={w}: the epoch loop never engaged");
+            assert!(
+                r.parallel_local_events > 0,
+                "workers={w}: no rack-local work ran in shard batches"
+            );
+            assert!(
+                r.epoch_shard_jain > 0.0 && r.epoch_shard_jain <= 1.0 + 1e-9,
+                "workers={w}: shard jain {} out of range",
+                r.epoch_shard_jain
+            );
+        }
+    }
+    // per-seed digest stability of the sweep itself
+    let again = scaling_figs::fig_worker_scaling(6, 240, 9, 4, &worker_counts);
+    for (a, b) in rows.iter().zip(&again) {
+        assert_eq!(a.digest, b.digest, "workers={}: sweep must be digest-stable", a.workers);
+    }
+    // the renderer lists every cell (header + one line per row)
+    let text = scaling_figs::render_scaling("scaling", &rows);
     assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
 }
 

@@ -718,3 +718,85 @@ fn fault_injection_partitions_arrivals_and_leaks_nothing() {
         },
     );
 }
+
+/// Tentpole invariant (ISSUE 8): the sharded epoch-barrier replay is
+/// digest-identical to the sequential loop for *every* worker count —
+/// over random seeds, rack counts, admission policies and fault rates.
+/// Shards are racks (worker-count-independent), cross-shard effects
+/// exchange at the `(time, seq)` barrier, and queueing replays
+/// serialize exactly, so `workers = n` must reproduce `workers = 1`
+/// bit-for-bit: same digest, same conservation split, same fault
+/// accounting.
+#[test]
+fn parallel_replay_digest_matches_single_worker() {
+    use zenix::coordinator::admission::AdmissionPolicy;
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::coordinator::faults::FaultConfig;
+    use zenix::trace::Archetype;
+
+    forall(
+        5,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(4, 8),             // apps
+                rng.range(80, 200),          // invocations
+                rng.uniform(60.0, 300.0),    // fleet mean IAT
+                [2usize, 4, 8][rng.range(0, 3)], // racks (shards; must divide the 8-server testbed)
+                rng.uniform(0.0, 8.0),       // fault rate per minute
+                rng.range(0, 3),             // admission policy
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms, racks, rate, policy)| {
+            let mix = standard_mix(apps, Archetype::Average);
+            let admission = match policy {
+                0 => AdmissionPolicy::RejectImmediately,
+                1 => AdmissionPolicy::FifoQueue { max_wait_ms: 60_000.0, max_depth: 64 },
+                _ => AdmissionPolicy::FairShare { max_wait_ms: 60_000.0, max_depth: 64 },
+            };
+            let base = DriverConfig {
+                seed,
+                invocations,
+                mean_iat_ms,
+                admission,
+                faults: FaultConfig {
+                    rate_per_min: rate,
+                    repair_ms: 5_000.0,
+                    rack_outage: rate > 4.0,
+                },
+                ..DriverConfig::default()
+            }
+            .with_racks(racks);
+
+            let driver = MultiTenantDriver::new(&mix, base);
+            let schedule = driver.schedule();
+            let seq = driver.run_zenix(&schedule);
+            // the sequential replay satisfies conservation...
+            if seq.completed + seq.rejected + seq.aborted + seq.timed_out
+                + seq.faulted_unrecovered
+                != invocations
+            {
+                return false;
+            }
+            for workers in [2usize, 4, 8] {
+                let cfg = DriverConfig { workers, ..base };
+                let par = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+                // ...and every parallel replay reproduces it exactly
+                if par.digest != seq.digest
+                    || par.completed != seq.completed
+                    || par.rejected != seq.rejected
+                    || par.aborted != seq.aborted
+                    || par.timed_out != seq.timed_out
+                    || par.faulted != seq.faulted
+                    || par.recovered != seq.recovered
+                    || par.faulted_unrecovered != seq.faulted_unrecovered
+                    || par.warm_hits != seq.warm_hits
+                    || par.max_in_flight != seq.max_in_flight
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
