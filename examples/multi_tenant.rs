@@ -53,6 +53,19 @@
 //!   With N > 1 the three system replays (zenix / peak-provision /
 //!   faas) also run concurrently.
 //!
+//! Tiered cold starts:
+//!
+//! - `--snapshot-budget MB` gives every rack a byte-budgeted snapshot
+//!   cache (LRU over per-app images, charged against rack memory):
+//!   first environments tier into warm-pool hits, snapshot restores
+//!   and residual cold boots. `--prewarm` turns on the predictive
+//!   pre-warm policy (top-k images per rack by expected arrivals);
+//!   `--always-cold` disables proactive start-up so every first
+//!   environment pays the full reactive cold boot (the reference
+//!   policy for the ≥10x p99 smoke in `scripts/ci.sh`, which greps
+//!   the `coldstart:` line). Budget 0 (the default) leaves the layer
+//!   off and the digest byte-identical to a build without the flags.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
 //! deterministic arrival schedule, and dispatches the overlapping
@@ -65,6 +78,7 @@
 use zenix::coordinator::admission::{AdmissionPolicy, ArrivalModel};
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
 use zenix::coordinator::faults::FaultConfig;
+use zenix::coordinator::ZenixConfig;
 use zenix::trace::Archetype;
 
 fn arg_value(args: &[String], i: usize, flag: &str) -> String {
@@ -94,6 +108,9 @@ fn main() {
     let mut rack_outage = false;
     let mut workers = 1usize;
     let mut epoch_ms = 250.0f64;
+    let mut snapshot_budget_mb = 0u64;
+    let mut prewarm = false;
+    let mut always_cold = false;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -166,6 +183,20 @@ fn main() {
                 epoch_ms = arg_value(&args, i, "--epoch-ms").parse().expect("--epoch-ms MS");
                 i += 2;
             }
+            "--snapshot-budget" => {
+                snapshot_budget_mb = arg_value(&args, i, "--snapshot-budget")
+                    .parse()
+                    .expect("--snapshot-budget MB");
+                i += 2;
+            }
+            "--prewarm" => {
+                prewarm = true;
+                i += 1;
+            }
+            "--always-cold" => {
+                always_cold = true;
+                i += 1;
+            }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
                 arch = *Archetype::ALL
@@ -226,6 +257,9 @@ fn main() {
         faults: FaultConfig { rate_per_min: fault_rate, repair_ms, rack_outage },
         workers,
         epoch_ms,
+        snapshot_budget_bytes: snapshot_budget_mb * 1024 * 1024,
+        prewarm,
+        config: ZenixConfig { proactive: !always_cold, ..ZenixConfig::default() },
         ..DriverConfig::default()
     }
     .with_racks(racks);
@@ -317,6 +351,24 @@ fn main() {
         out.zenix.faulted_unrecovered,
         out.zenix.mean_recovery_ms,
         out.zenix.p95_recovery_ms,
+    );
+    // parsed by scripts/ci.sh: the coldstart smoke greps p99-start-ms=
+    // (and digest= at budget 0) across the tiered-start policies
+    println!(
+        "coldstart: budget-mb={snapshot_budget_mb} prewarm={prewarm} always-cold={always_cold} \
+         started={} cold={} restored={} warm={} mean-start-ms={:.1} p95-start-ms={:.1} \
+         p99-start-ms={:.1} hits={} misses={} evictions={} prewarms={}",
+        out.zenix.started,
+        out.zenix.tier_cold,
+        out.zenix.tier_restored,
+        out.zenix.tier_warm,
+        out.zenix.mean_start_ms,
+        out.zenix.p95_start_ms,
+        out.zenix.p99_start_ms,
+        out.zenix.snap_hits,
+        out.zenix.snap_misses,
+        out.zenix.snap_evictions,
+        out.zenix.snap_prewarms,
     );
     // parsed by scripts/ci.sh: the parallel smoke pins digest= equality
     // across --workers values (and against DRIVER_DIGEST.lock)

@@ -7,7 +7,7 @@ use std::fmt::Write as _;
 use std::fs;
 
 use zenix::apps::lr;
-use zenix::figures::{lr_figs, platform_figs, render, tpcds_figs, video_figs};
+use zenix::figures::{coldstart_figs, lr_figs, platform_figs, render, scaling_figs, tpcds_figs, video_figs};
 
 fn main() -> zenix::Result<()> {
     fs::create_dir_all("results")?;
@@ -178,6 +178,26 @@ fn main() -> zenix::Result<()> {
         let _ = writeln!(s, "{name:<12} {makespan:>12.1} {:>11.0}%", util * 100.0);
     }
     emit("fig30_cluster_util", s);
+
+    // worker-scaling sweep (epoch-barrier parallel replay; the digest
+    // column is identical down the whole table by construction)
+    emit(
+        "fig_worker_scaling",
+        scaling_figs::render_scaling(
+            "parallel replay, 4 racks",
+            &scaling_figs::fig_worker_scaling(6, 240, 9, 4, &[1, 2, 4, 8]),
+        ),
+    );
+
+    // cold-start-vs-cache-size sweep (tiered start model; row 0 is the
+    // always-cold reference, the p99 start tail collapses with budget)
+    emit(
+        "fig_coldstart_cache",
+        coldstart_figs::render_coldstart(
+            "cold-start tail vs snapshot-cache budget",
+            &coldstart_figs::fig_coldstart_cache(6, 240, 9, &[256, 1024, 8192]),
+        ),
+    );
 
     fs::write("results/INDEX.md", index)?;
     println!("all figures regenerated under results/");

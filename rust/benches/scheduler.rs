@@ -254,6 +254,40 @@ fn main() {
         }
     }
 
+    // ---- tiered 100k: snapshot caches + predictive pre-warm --------------
+    // ISSUE 9 row: the identical 100k replay under the tiered start
+    // model — an 8 GiB/rack byte-budgeted snapshot cache with the
+    // predictive pre-warm policy on. Exercises cache touches, LRU
+    // insert/evict, snapshot restores and pre-warm passes at rack-dirty
+    // instants, all on the hot path; the cache is a slot arena with
+    // intrusive lists, so the row adds lookups, not allocation.
+    // scripts/ci.sh gates the per-invocation cost at ≤1.2x the
+    // untiered driver_100k row.
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::trace::Archetype;
+        let mix = standard_mix(16, Archetype::Average);
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            snapshot_budget_bytes: 8192 * 1024 * 1024,
+            prewarm: true,
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_tiered", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            println!(
+                "  -> 100k-invocation tiered driver: {:.1} µs/invocation \
+                 (8 GiB/rack snapshot cache + predictive pre-warm on the hot path)",
+                r.mean_ns / 1e3 / 100_000.0,
+            );
+        }
+    }
+
     // ---- 1M-invocation parallel replay: the sharded epoch loop ----------
     // ISSUE 8 rows: the bulky-trace scale the tentpole targets — 1M
     // invocations on the 8-rack testbed, replayed through the

@@ -7,21 +7,18 @@
 //! *allocation-shape* claims (GB·s, vCPU·s, makespan, utilization)
 //! reproduce on commodity hardware.
 
-// `clock`, `index`, `startup` (and this module's own items) are
-// rustdoc-swept; the other submodules await theirs and are shielded
-// from `missing_docs` (D6-inventoried in the zenix_lint allowlist).
 pub mod clock;
 pub mod index;
-#[allow(missing_docs)]
 pub mod server;
+pub mod snapshot;
 pub mod startup;
-#[allow(missing_docs)]
 pub mod topology;
 
 pub use clock::Clock;
 pub use index::PlacementIndex;
 pub use server::{Server, ServerId};
-pub use startup::StartupModel;
+pub use snapshot::{SnapshotCache, SnapshotStats};
+pub use startup::{StartupModel, StartupTier};
 pub use topology::{Cluster, ClusterSpec, RackId};
 
 /// CPU (vCPUs) + memory (MB) bundle used for every allocation decision.

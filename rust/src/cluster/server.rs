@@ -34,6 +34,7 @@ pub struct Consumption {
 }
 
 impl Consumption {
+    /// Component-wise sum (fleet aggregation).
     pub fn plus(&self, o: &Consumption) -> Consumption {
         Consumption {
             alloc_cpu_s: self.alloc_cpu_s + o.alloc_cpu_s,
@@ -48,6 +49,7 @@ impl Consumption {
         self.alloc_mem_mb_s / 1024.0
     }
 
+    /// Used GB·s of memory (the paper's "actually exercised" bar).
     pub fn used_gb_s(&self) -> f64 {
         self.used_mem_mb_s / 1024.0
     }
@@ -61,6 +63,7 @@ impl Consumption {
         }
     }
 
+    /// CPU utilization: used / allocated (1.0 when nothing allocated).
     pub fn cpu_utilization(&self) -> f64 {
         if self.alloc_cpu_s <= 0.0 {
             1.0
@@ -73,8 +76,11 @@ impl Consumption {
 /// A server with explicit allocation bookkeeping.
 #[derive(Debug, Clone)]
 pub struct Server {
+    /// Dense id (index into the cluster's server table).
     pub id: ServerId,
+    /// The rack this server lives in.
     pub rack: RackId,
+    /// Total resources the server offers.
     pub capacity: Resources,
     allocated: Resources,
     used: Resources,
@@ -92,6 +98,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Fresh, empty, up server with the given identity and capacity.
     pub fn new(id: ServerId, rack: RackId, capacity: Resources) -> Self {
         Self {
             id,
@@ -146,14 +153,17 @@ impl Server {
         self.up = true;
     }
 
+    /// Currently reserved resources.
     pub fn allocated(&self) -> Resources {
         self.allocated
     }
 
+    /// Currently exercised share of the allocation.
     pub fn used(&self) -> Resources {
         self.used
     }
 
+    /// Currently outstanding low-priority marks.
     pub fn marked(&self) -> Resources {
         self.marked
     }
@@ -204,6 +214,7 @@ impl Server {
         self.set_used(u, now);
     }
 
+    /// Adjust the used share downward by a delta (saturating at zero).
     pub fn sub_used(&mut self, delta: Resources, now: Millis) {
         let u = self.used.minus(delta);
         self.set_used(u, now);

@@ -1,0 +1,384 @@
+//! Per-rack bounded snapshot cache.
+//!
+//! Production serverless stacks keep checkpoint/restore images of hot
+//! applications near the compute so a start can skip the container boot
+//! path (the reuse survey in PAPERS.md identifies snapshot restore as
+//! the dominant cold-start mitigation after environment reuse). This
+//! module models that layer: a byte-budgeted LRU cache of per-app
+//! snapshot images, one per rack, whose resident bytes are charged
+//! against rack memory by the coordinator so cached images *compete
+//! with invocations for capacity*.
+//!
+//! Determinism contract: the cache is a `Vec` slot arena threaded by
+//! intrusive doubly-linked lists (recency chain + free list) — no hash
+//! maps anywhere, so lookup, hit/miss accounting and eviction order are
+//! pure functions of the operation sequence (D1-clean). Slots are
+//! recycled through the free list, so steady-state operation allocates
+//! nothing after the first few insertions.
+
+use super::server::ServerId;
+
+/// Sentinel for "no slot" in the intrusive lists.
+const NIL: usize = usize::MAX;
+
+/// Hit/miss/eviction telemetry for one cache (merged fleet-wide by the
+/// driver; digest-excluded — counters never feed the replay digest).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// Lookups that found the app's image resident.
+    pub hits: u64,
+    /// Lookups that missed (the start pays the cold path).
+    pub misses: u64,
+    /// Images evicted to make room (capacity pressure or server loss).
+    pub evictions: u64,
+    /// Images installed by the predictive pre-warm pass (vs on demand).
+    pub prewarms: u64,
+    /// High-water mark of resident bytes.
+    pub bytes_hwm: u64,
+}
+
+impl SnapshotStats {
+    /// Fold `other` into `self`: counters sum, the high-water mark is
+    /// the per-cache maximum (each cache has its own budget).
+    pub fn absorb(&mut self, other: &SnapshotStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.prewarms += other.prewarms;
+        self.bytes_hwm = self.bytes_hwm.max(other.bytes_hwm);
+    }
+}
+
+/// One resident image: interned app name, image size, and the server
+/// whose memory the image is charged against.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    app: &'static str,
+    bytes: u64,
+    home: ServerId,
+    /// Toward the MRU end (NIL at the head).
+    prev: usize,
+    /// Toward the LRU end (NIL at the tail); doubles as the free-list
+    /// link while the slot is unused.
+    next: usize,
+}
+
+/// Byte-budgeted LRU cache of per-app snapshot images for one rack.
+///
+/// The cache itself never talks to the cluster: the coordinator charges
+/// and releases the backing memory through the [`Cluster`] hooks and
+/// records the charged server as the image's `home` so a server crash
+/// can wipe exactly the images it held.
+///
+/// [`Cluster`]: super::topology::Cluster
+#[derive(Debug)]
+pub struct SnapshotCache {
+    budget: u64,
+    bytes: u64,
+    slots: Vec<Slot>,
+    /// Most-recently-used end of the recency chain.
+    head: usize,
+    /// Least-recently-used end of the recency chain (eviction victim).
+    tail: usize,
+    free_head: usize,
+    len: usize,
+    /// Telemetry for this cache (public so the coordinator can count
+    /// pre-warm installs at the install site).
+    pub stats: SnapshotStats,
+}
+
+impl SnapshotCache {
+    /// Empty cache holding at most `budget_bytes` of images.
+    pub fn new(budget_bytes: u64) -> Self {
+        Self {
+            budget: budget_bytes,
+            bytes: 0,
+            slots: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free_head: NIL,
+            len: 0,
+            stats: SnapshotStats::default(),
+        }
+    }
+
+    /// The byte budget this cache was built with.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Bytes currently resident.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Number of resident images.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no image is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Peak slot count ever live — the arena never shrinks, so this is
+    /// also its length. The allocation-free harness asserts it stays
+    /// bounded while images churn (slots recycle through the free
+    /// list).
+    pub fn slot_high_water(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when an image of `bytes` would fit in the remaining budget.
+    pub fn fits(&self, bytes: u64) -> bool {
+        bytes <= self.budget.saturating_sub(self.bytes)
+    }
+
+    /// Whether `app`'s image is resident. No recency or telemetry
+    /// effect (the pre-warm pass probes with this).
+    pub fn contains(&self, app: &'static str) -> bool {
+        self.find(app) != NIL
+    }
+
+    /// Start-path lookup: on a hit the image moves to the MRU position
+    /// and `hits` increments; on a miss `misses` increments.
+    pub fn touch(&mut self, app: &'static str) -> bool {
+        let i = self.find(app);
+        if i == NIL {
+            self.stats.misses += 1;
+            return false;
+        }
+        self.stats.hits += 1;
+        if self.head != i {
+            self.detach(i);
+            self.push_front(i);
+        }
+        true
+    }
+
+    /// Install `app`'s image (charged against `home`'s memory by the
+    /// caller) at the MRU position. Returns false — and installs
+    /// nothing — if the image is already resident or does not fit the
+    /// remaining budget; the caller decides whether to evict first.
+    pub fn insert(&mut self, app: &'static str, bytes: u64, home: ServerId) -> bool {
+        if !self.fits(bytes) || self.contains(app) {
+            return false;
+        }
+        let i = self.alloc_slot(app, bytes, home);
+        self.push_front(i);
+        self.bytes += bytes;
+        self.len += 1;
+        self.stats.bytes_hwm = self.stats.bytes_hwm.max(self.bytes);
+        true
+    }
+
+    /// Evict the least-recently-used image, returning it so the caller
+    /// can release the backing memory. Counts toward `evictions`.
+    pub fn evict_lru(&mut self) -> Option<(&'static str, u64, ServerId)> {
+        if self.tail == NIL {
+            return None;
+        }
+        let i = self.tail;
+        self.stats.evictions += 1;
+        Some(self.remove_slot(i))
+    }
+
+    /// Wipe every image homed on `server` (the server crashed and its
+    /// memory — snapshot images included — is gone), handing each
+    /// `(app, bytes)` to `f` so the caller can release the charge.
+    /// Counts toward `evictions`. Walks MRU→LRU, so the wipe order is a
+    /// pure function of the recency state.
+    pub fn evict_homed_on(&mut self, server: ServerId, mut f: impl FnMut(&'static str, u64)) {
+        let mut i = self.head;
+        while i != NIL {
+            let next = self.slots[i].next;
+            if self.slots[i].home == server {
+                let (app, bytes, _) = self.remove_slot(i);
+                self.stats.evictions += 1;
+                f(app, bytes);
+            }
+            i = next;
+        }
+    }
+
+    /// Tear the cache down at end of run, handing each resident
+    /// `(app, bytes, home)` to `f` so the caller can release the
+    /// charges. Not counted as evictions (no capacity pressure).
+    pub fn drain(&mut self, mut f: impl FnMut(&'static str, u64, ServerId)) {
+        while self.head != NIL {
+            let (app, bytes, home) = self.remove_slot(self.head);
+            f(app, bytes, home);
+        }
+    }
+
+    // ---- intrusive-list plumbing --------------------------------------
+
+    /// Linear scan of the recency chain (racks cache a handful of
+    /// images; a map would buy nothing and cost determinism review).
+    fn find(&self, app: &'static str) -> usize {
+        let mut i = self.head;
+        while i != NIL {
+            if self.slots[i].app == app {
+                return i;
+            }
+            i = self.slots[i].next;
+        }
+        NIL
+    }
+
+    fn alloc_slot(&mut self, app: &'static str, bytes: u64, home: ServerId) -> usize {
+        let slot = Slot { app, bytes, home, prev: NIL, next: NIL };
+        if self.free_head != NIL {
+            let i = self.free_head;
+            self.free_head = self.slots[i].next;
+            self.slots[i] = slot;
+            i
+        } else {
+            self.slots.push(slot);
+            self.slots.len() - 1
+        }
+    }
+
+    fn remove_slot(&mut self, i: usize) -> (&'static str, u64, ServerId) {
+        let Slot { app, bytes, home, .. } = self.slots[i];
+        self.detach(i);
+        self.slots[i].next = self.free_head;
+        self.free_head = i;
+        self.bytes -= bytes;
+        self.len -= 1;
+        (app, bytes, home)
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: u64 = 1024 * 1024;
+
+    fn sid(i: usize) -> ServerId {
+        ServerId(i)
+    }
+
+    #[test]
+    fn lru_eviction_order_is_recency_order() {
+        let mut c = SnapshotCache::new(10 * MIB);
+        assert!(c.insert("a", 3 * MIB, sid(0)));
+        assert!(c.insert("b", 3 * MIB, sid(0)));
+        assert!(c.insert("c", 3 * MIB, sid(1)));
+        // touch "a" so "b" becomes the LRU victim
+        assert!(c.touch("a"));
+        assert_eq!(c.evict_lru().map(|(app, ..)| app), Some("b"));
+        assert_eq!(c.evict_lru().map(|(app, ..)| app), Some("c"));
+        assert_eq!(c.evict_lru().map(|(app, ..)| app), Some("a"));
+        assert_eq!(c.evict_lru(), None);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.evictions, 3);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn budget_is_enforced_at_insert() {
+        let mut c = SnapshotCache::new(5 * MIB);
+        assert!(c.insert("a", 4 * MIB, sid(0)));
+        assert!(!c.insert("b", 2 * MIB, sid(0)), "over budget must refuse");
+        assert!(c.fits(MIB));
+        assert!(!c.fits(2 * MIB));
+        assert!(!c.insert("a", MIB, sid(0)), "duplicate insert refused");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 4 * MIB);
+        assert_eq!(c.stats.bytes_hwm, 4 * MIB);
+    }
+
+    #[test]
+    fn touch_counts_hits_and_misses() {
+        let mut c = SnapshotCache::new(4 * MIB);
+        assert!(!c.touch("a"));
+        assert!(c.insert("a", MIB, sid(0)));
+        assert!(c.touch("a"));
+        assert!(!c.touch("b"));
+        assert_eq!((c.stats.hits, c.stats.misses), (1, 2));
+    }
+
+    #[test]
+    fn server_crash_wipes_exactly_its_images() {
+        let mut c = SnapshotCache::new(100 * MIB);
+        assert!(c.insert("a", MIB, sid(0)));
+        assert!(c.insert("b", MIB, sid(1)));
+        assert!(c.insert("c", MIB, sid(0)));
+        let mut wiped = Vec::new();
+        c.evict_homed_on(sid(0), |app, _| wiped.push(app));
+        // MRU→LRU walk: "c" (most recent) before "a"
+        assert_eq!(wiped, vec!["c", "a"]);
+        assert!(c.contains("b"));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.evictions, 2);
+    }
+
+    #[test]
+    fn slots_recycle_through_the_free_list() {
+        let mut c = SnapshotCache::new(2 * MIB);
+        for round in 0..100 {
+            let name: &'static str = if round % 2 == 0 { "even" } else { "odd" };
+            while !c.fits(2 * MIB) {
+                assert!(c.evict_lru().is_some());
+            }
+            assert!(c.insert(name, 2 * MIB, sid(round % 3)));
+        }
+        assert!(
+            c.slot_high_water() <= 2,
+            "churn must recycle slots, not grow the arena (hwm {})",
+            c.slot_high_water()
+        );
+    }
+
+    #[test]
+    fn drain_releases_everything_without_counting_evictions() {
+        let mut c = SnapshotCache::new(10 * MIB);
+        assert!(c.insert("a", 2 * MIB, sid(0)));
+        assert!(c.insert("b", 3 * MIB, sid(1)));
+        let mut freed = 0;
+        c.drain(|_, bytes, _| freed += bytes);
+        assert_eq!(freed, 5 * MIB);
+        assert!(c.is_empty());
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn stats_absorb_sums_counters_and_maxes_hwm() {
+        let mut a = SnapshotStats { hits: 1, misses: 2, evictions: 3, prewarms: 4, bytes_hwm: 10 };
+        let b = SnapshotStats { hits: 10, misses: 20, evictions: 30, prewarms: 40, bytes_hwm: 7 };
+        a.absorb(&b);
+        assert_eq!(a, SnapshotStats { hits: 11, misses: 22, evictions: 33, prewarms: 44, bytes_hwm: 10 });
+    }
+}

@@ -38,6 +38,13 @@ pub struct StartupModel {
     pub cold_lambda: Millis,
     /// AWS Step Functions cold invoke (public-cloud baseline).
     pub cold_step_functions: Millis,
+    /// Fixed cost of restoring an environment from a local snapshot
+    /// image: page-table setup, device reattach and dispatch. Sized so
+    /// restores land between a warm hit and a pre-warmed cold start.
+    pub snapshot_restore_base: Millis,
+    /// Restore cost per GiB of snapshot image (lazy page-in over the
+    /// rack-local RDMA fabric, so far cheaper than a container boot).
+    pub snapshot_restore_per_gb: Millis,
 }
 
 impl Default for StartupModel {
@@ -63,8 +70,24 @@ impl Default for StartupModel {
             warm_zenix: 10.0,
             cold_lambda: 140.0,
             cold_step_functions: 215.0,
+            snapshot_restore_base: 18.0,
+            snapshot_restore_per_gb: 12.0,
         }
     }
+}
+
+/// Which start-latency tier an invocation's first environment resolved
+/// to (the hierarchy production stacks expose, from cheapest to most
+/// expensive path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartupTier {
+    /// Nothing reusable: pay the full cold path for the platform.
+    ColdBoot,
+    /// A snapshot image of the app was resident in the rack's snapshot
+    /// cache; restore cost scales with image size.
+    SnapshotRestore,
+    /// A live warm environment was reused (warm-pool hit).
+    WarmHit,
 }
 
 /// Which platform's startup path to model.
@@ -121,6 +144,16 @@ impl StartupModel {
         }
     }
 
+    /// Latency of restoring one environment from a snapshot image of
+    /// `image_bytes` bytes ([`StartupTier::SnapshotRestore`]): fixed
+    /// restore overhead plus size-proportional page-in.
+    pub fn restore(&self, image_bytes: u64) -> Millis {
+        const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+        // cast: safe(u64 -> f64 may round above 2^53; image sizes are
+        // clamped to single-digit GiB by the snapshot layer)
+        self.snapshot_restore_base + self.snapshot_restore_per_gb * (image_bytes as f64 / GIB)
+    }
+
     /// Connection setup cost on the data path between two components
     /// (§5.2.2): synchronous unless hidden behind user-code load.
     pub fn conn_setup(&self, rdma: bool, asynchronous: bool) -> Millis {
@@ -163,6 +196,21 @@ mod tests {
         assert!(m.cold(StartupPath::ZenixOverlay) < m.cold(StartupPath::OpenWhiskOverlay));
         assert!(m.cold(StartupPath::ZenixPrewarmed) < m.cold(StartupPath::Zenix));
         assert!(m.warm(StartupPath::Zenix) < m.warm(StartupPath::OpenWhisk));
+    }
+
+    #[test]
+    fn restore_tier_sits_between_warm_and_prewarmed_cold() {
+        // The tier hierarchy the driver exposes: warm hit < snapshot
+        // restore (any plausible image size) < pre-warmed cold < cold.
+        let m = StartupModel::default();
+        const MIB: u64 = 1024 * 1024;
+        let small = m.restore(64 * MIB);
+        let large = m.restore(1024 * MIB);
+        assert!(m.warm(StartupPath::Zenix) < small);
+        assert!(small < large, "restore cost scales with image size");
+        assert!(large < m.cold(StartupPath::ZenixPrewarmed));
+        assert!(m.cold(StartupPath::ZenixPrewarmed) < m.cold(StartupPath::Zenix));
+        assert_eq!(m.restore(0), m.snapshot_restore_base);
     }
 
     #[test]

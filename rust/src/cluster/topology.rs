@@ -27,8 +27,11 @@ pub struct RackId(pub usize);
 /// 2×16-core Xeons (32 vCPU) and 64 GB (§6 Environment).
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterSpec {
+    /// Number of racks.
     pub racks: usize,
+    /// Servers per rack (uniform).
     pub servers_per_rack: usize,
+    /// Per-server capacity (uniform).
     pub server_capacity: Resources,
 }
 
@@ -78,6 +81,7 @@ impl ClusterSpec {
 /// Racks of servers with aggregate accounting.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// The construction parameters (rack fan-out and server shape).
     pub spec: ClusterSpec,
     servers: Vec<Server>,
     /// Mutation epoch: bumped by raw mutable access (`server_mut`,
@@ -95,6 +99,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Build the fleet `spec` describes, every server up and empty.
     pub fn new(spec: ClusterSpec) -> Self {
         let mut servers = Vec::with_capacity(spec.racks * spec.servers_per_rack);
         for r in 0..spec.racks {
@@ -121,6 +126,7 @@ impl Cluster {
         }
     }
 
+    /// Shared access to one server.
     pub fn server(&self, id: ServerId) -> &Server {
         &self.servers[id.0]
     }
@@ -133,6 +139,8 @@ impl Cluster {
         &mut self.servers[id.0]
     }
 
+    /// All servers, rack-major (server `i` lives in rack
+    /// `i / servers_per_rack`).
     pub fn servers(&self) -> &[Server] {
         &self.servers
     }
@@ -337,6 +345,7 @@ impl Cluster {
             .map(|s| s.id)
     }
 
+    /// All rack ids, in order.
     pub fn racks(&self) -> impl Iterator<Item = RackId> {
         (0..self.spec.racks).map(RackId)
     }

@@ -102,7 +102,7 @@ use crate::apps::{lr, tpcds, video, Invocation};
 use crate::baselines::faas;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
-use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel};
+use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel, StartupTier};
 use crate::metrics::fairness;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 use crate::trace::{Archetype, UsageTrace};
@@ -198,6 +198,17 @@ pub struct DriverConfig {
     /// how much work one barrier exchange covers. Ignored when
     /// `workers == 1`. Clamped below to 1 ms.
     pub epoch_ms: f64,
+    /// Per-rack snapshot-cache byte budget. `0` (the default) disables
+    /// the snapshot layer entirely — the replay is byte-identical to a
+    /// build without it (pinned by tests and CI). A positive budget
+    /// charges resident images against rack memory, so the cache
+    /// genuinely competes with invocations for capacity.
+    pub snapshot_budget_bytes: u64,
+    /// Predictive pre-warming: at rack-dirty instants the coordinator
+    /// installs the top-[`PREWARM_TOP_K`] expected-rate app images into
+    /// each rack's spare snapshot budget. Ignored (and digest-inert)
+    /// while `snapshot_budget_bytes == 0`.
+    pub prewarm: bool,
 }
 
 impl Default for DriverConfig {
@@ -214,6 +225,8 @@ impl Default for DriverConfig {
             faults: FaultConfig::default(),
             workers: 1,
             epoch_ms: 250.0,
+            snapshot_budget_bytes: 0,
+            prewarm: false,
         }
     }
 }
@@ -381,6 +394,21 @@ pub struct AppStats {
     /// here *instead of* `aborted`, so the failure split stays a
     /// partition of arrivals.
     pub faulted_unrecovered: usize,
+    /// Invocations admitted and started. The tier split below is a
+    /// partition of it: `tier_cold + tier_restored + tier_warm ==
+    /// started` (pinned by the conservation regression test).
+    pub started: usize,
+    /// Started invocations whose first environment paid a full cold
+    /// boot (no warm-pool hit, no resident snapshot image).
+    pub tier_cold: usize,
+    /// Started invocations restored from a resident snapshot image.
+    pub tier_restored: usize,
+    /// Started invocations served straight from the warm pool.
+    pub tier_warm: usize,
+    /// Mean start latency (ms) over this app's started invocations.
+    pub mean_start_ms: f64,
+    /// P² p95 start latency (ms) over this app's started invocations.
+    pub p95_start_ms: f64,
 }
 
 impl AppStats {
@@ -528,6 +556,48 @@ pub struct DriverReport {
     /// (then the parallel loop degenerates to sequential + barriers).
     // digest: excluded(parallel-loop telemetry; worker-count dependent batching, results are not)
     pub epoch_shard_jain: f64,
+    /// Invocations admitted and started, fleet-wide. The tier split is
+    /// a partition of it: `tier_cold + tier_restored + tier_warm ==
+    /// started`, fleet-wide and per app.
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub started: usize,
+    /// Started invocations that paid a full cold boot (no warm-pool
+    /// hit, no resident snapshot image).
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub tier_cold: usize,
+    /// Started invocations restored from a resident snapshot image
+    /// (restore cost scales with the per-program image size).
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub tier_restored: usize,
+    /// Started invocations served straight from the warm pool.
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub tier_warm: usize,
+    /// Mean start latency (ms) over every started invocation.
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub mean_start_ms: f64,
+    /// P² p95 start latency (ms) over every started invocation.
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub p95_start_ms: f64,
+    /// P² p99 start latency (ms) over every started invocation — the
+    /// cold-start-vs-cache-size sweep's tail axis.
+    // digest: excluded(cold-start tier telemetry added after the digest was pinned)
+    pub p99_start_ms: f64,
+    /// Snapshot-cache hits (tier resolutions served by a resident image).
+    // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
+    pub snap_hits: u64,
+    /// Snapshot-cache misses (cold boots that consulted the cache).
+    // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
+    pub snap_misses: u64,
+    /// Images evicted to make room (LRU displacement or a fault taking
+    /// their home server down).
+    // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
+    pub snap_evictions: u64,
+    /// Images installed proactively by the pre-warm policy.
+    // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
+    pub snap_prewarms: u64,
+    /// High-water mark of resident snapshot bytes, max over racks.
+    // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
+    pub snap_bytes_hwm: u64,
     /// Index-aligned with the schedule: which arrivals this system
     /// completed (all-true for the closed-form FaaS baseline). A
     /// bitset — one bit per arrival, the only per-invocation structure
@@ -964,6 +1034,14 @@ impl<'a> Aggregator<'a> {
                     faulted: 0,
                     recovered: 0,
                     faulted_unrecovered: 0,
+                    // overwritten by the driver's admission-time tier
+                    // telemetry; the closed-form baselines start nothing
+                    started: 0,
+                    tier_cold: 0,
+                    tier_restored: 0,
+                    tier_warm: 0,
+                    mean_start_ms: 0.0,
+                    p95_start_ms: 0.0,
                 }
             })
             .collect();
@@ -1040,8 +1118,133 @@ impl<'a> Aggregator<'a> {
             epoch_batch_mean: 0.0,
             epoch_batch_p95: 0.0,
             epoch_shard_jain: 1.0,
+            // overwritten by the event loops' tier telemetry; the
+            // closed-form baselines replay no platform, start nothing
+            // and keep no snapshot caches
+            started: 0,
+            tier_cold: 0,
+            tier_restored: 0,
+            tier_warm: 0,
+            mean_start_ms: 0.0,
+            p95_start_ms: 0.0,
+            p99_start_ms: 0.0,
+            snap_hits: 0,
+            snap_misses: 0,
+            snap_evictions: 0,
+            snap_prewarms: 0,
+            snap_bytes_hwm: 0,
             completed_mask,
             digest: h,
+        }
+    }
+}
+
+// ---- cold-start tier telemetry ------------------------------------------
+
+/// Pre-warm breadth: the coordinator keeps at most this many of the
+/// highest-expected-rate app images resident per rack.
+pub const PREWARM_TOP_K: usize = 8;
+
+/// Snapshot image size for one program: a fixed fraction of its
+/// unit-scale peak-memory estimate (a checkpoint captures the resident
+/// set after init, not the peak working set), clamped to [64 MiB, 1 GiB].
+pub fn snapshot_image_bytes(program: &Program) -> u64 {
+    const MIB: f64 = 1024.0 * 1024.0;
+    let image_mb = (program.peak_estimate(1.0).mem_mb * 0.25).clamp(64.0, 1024.0);
+    // cast: safe(image_mb clamped to [64, 1024] MiB, so the product is an exact u64)
+    (image_mb * MIB) as u64
+}
+
+/// Pre-warm candidate order: every app's image, sorted by expected
+/// arrivals descending. Scheduled counts are proportional to each app's
+/// long-run offered rate under all three arrival models (Poisson, MMPP
+/// and rate-replay modulate instants at fixed per-app totals), so they
+/// are the rate signal the coordinator already has. Ties break to the
+/// lower app index — the order is deterministic and permutation-stable.
+pub(crate) fn prewarm_order(apps: &[TenantApp], sched_counts: &[usize]) -> Vec<(&'static str, u64)> {
+    let mut order: Vec<usize> = (0..apps.len()).collect();
+    order.sort_by(|&a, &b| sched_counts[b].cmp(&sched_counts[a]).then(a.cmp(&b)));
+    order
+        .into_iter()
+        .map(|i| {
+            let program = &apps[i].graph.program;
+            (program.name, snapshot_image_bytes(program))
+        })
+        .collect()
+}
+
+/// Start-tier telemetry, accumulated at admission time (the instant a
+/// start's tier resolves) by both event loops so the sequential and
+/// sharded replays report identical tier splits. Digest-excluded
+/// throughout: the pinned digest predates the tier model.
+pub(crate) struct TierTelemetry {
+    started: usize,
+    started_per_app: Vec<usize>,
+    cold: Vec<usize>,
+    restored: Vec<usize>,
+    warm: Vec<usize>,
+    app_start: Vec<StreamingMoments>,
+    app_p95: Vec<P2Quantile>,
+    fleet_start: StreamingMoments,
+    fleet_p95: P2Quantile,
+    fleet_p99: P2Quantile,
+}
+
+impl TierTelemetry {
+    pub(crate) fn new(n_apps: usize) -> Self {
+        Self {
+            started: 0,
+            started_per_app: vec![0; n_apps],
+            cold: vec![0; n_apps],
+            restored: vec![0; n_apps],
+            warm: vec![0; n_apps],
+            app_start: vec![StreamingMoments::new(); n_apps],
+            app_p95: vec![P2Quantile::new(0.95); n_apps],
+            fleet_start: StreamingMoments::new(),
+            fleet_p95: P2Quantile::new(0.95),
+            fleet_p99: P2Quantile::new(0.99),
+        }
+    }
+
+    /// Record one admitted invocation's resolved tier + start latency.
+    pub(crate) fn record(&mut self, app: usize, tier: StartupTier, start_ms: f64) {
+        self.started += 1;
+        self.started_per_app[app] += 1;
+        match tier {
+            StartupTier::ColdBoot => self.cold[app] += 1,
+            StartupTier::SnapshotRestore => self.restored[app] += 1,
+            StartupTier::WarmHit => self.warm[app] += 1,
+        }
+        self.app_start[app].push(start_ms);
+        self.app_p95[app].push(start_ms);
+        self.fleet_start.push(start_ms);
+        self.fleet_p95.push(start_ms);
+        self.fleet_p99.push(start_ms);
+    }
+
+    /// Copy the tier split and start-latency estimates into a finished
+    /// report. The aggregator writes zeros for these fields; this
+    /// overwrites them — the same pattern the chaos telemetry uses, so
+    /// the `Aggregator::finish` signature stays put.
+    pub(crate) fn apply_to(&self, report: &mut DriverReport) {
+        report.started = self.started;
+        report.tier_cold = self.cold.iter().sum();
+        report.tier_restored = self.restored.iter().sum();
+        report.tier_warm = self.warm.iter().sum();
+        if self.fleet_start.count() > 0 {
+            report.mean_start_ms = self.fleet_start.mean();
+            report.p95_start_ms = self.fleet_p95.value();
+            report.p99_start_ms = self.fleet_p99.value();
+        }
+        for (i, a) in report.apps.iter_mut().enumerate() {
+            a.started = self.started_per_app[i];
+            a.tier_cold = self.cold[i];
+            a.tier_restored = self.restored[i];
+            a.tier_warm = self.warm[i];
+            if self.app_start[i].count() > 0 {
+                a.mean_start_ms = self.app_start[i].mean();
+                a.p95_start_ms = self.app_p95[i].value();
+            }
         }
     }
 }
@@ -1163,6 +1366,17 @@ impl<'a> MultiTenantDriver<'a> {
         for arr in &schedule.arrivals {
             sched_counts[arr.app] += 1;
         }
+        // A zero budget leaves the snapshot layer entirely off — the
+        // replay is byte-identical to a build without it.
+        if self.cfg.snapshot_budget_bytes > 0 {
+            platform.enable_snapshots(
+                self.cfg.snapshot_budget_bytes,
+                self.cfg.prewarm,
+                prewarm_order(self.apps, &sched_counts),
+                PREWARM_TOP_K,
+            );
+        }
+        let mut tiers = TierTelemetry::new(self.apps.len());
         let mut agg = Aggregator::new(self.apps, &sched_counts, self.cfg.exact_stats);
         let mut completed_mask = BitMask::new(schedule.arrivals.len());
         let mut rejected_per_app = vec![0usize; self.apps.len()];
@@ -1235,6 +1449,7 @@ impl<'a> MultiTenantDriver<'a> {
                         &mut slab,
                         &mut in_flight,
                         &mut max_in_flight,
+                        &mut tiers,
                     );
                     if queues.len() == before {
                         queues.expire_all();
@@ -1268,6 +1483,7 @@ impl<'a> MultiTenantDriver<'a> {
                             &mut slab,
                             &mut in_flight,
                             &mut max_in_flight,
+                            &mut tiers,
                         );
                     }
                     if !queues.is_empty() {
@@ -1288,6 +1504,7 @@ impl<'a> MultiTenantDriver<'a> {
                     &mut slab,
                     &mut in_flight,
                     &mut max_in_flight,
+                    &mut tiers,
                 );
                 if !admitted && !queues.try_park(arr.app, i, arr.at) {
                     // saturated beyond degradation and nowhere to park:
@@ -1308,6 +1525,7 @@ impl<'a> MultiTenantDriver<'a> {
                 EvKind::Fault { idx } => match fault_plan.events[idx].kind {
                     FaultKind::ServerCrash(s) => {
                         if platform.cluster.fail_server(s, at) {
+                            platform.evict_snapshots_on(s, at);
                             crash_scan(&mut slab, &mut faulted_per_app, s, at);
                         }
                     }
@@ -1315,6 +1533,7 @@ impl<'a> MultiTenantDriver<'a> {
                         for i in r.0 * spr..(r.0 + 1) * spr {
                             let s = ServerId(i);
                             if platform.cluster.fail_server(s, at) {
+                                platform.evict_snapshots_on(s, at);
                                 crash_scan(&mut slab, &mut faulted_per_app, s, at);
                             }
                         }
@@ -1418,9 +1637,15 @@ impl<'a> MultiTenantDriver<'a> {
                     &mut slab,
                     &mut in_flight,
                     &mut max_in_flight,
+                    &mut tiers,
                 );
             }
         }
+
+        // Tear down the snapshot layer before the leak asserts: resident
+        // images return their rack-memory charge at end of trace (not
+        // counted as evictions — nothing displaced them).
+        platform.drain_snapshot_caches(end_time);
 
         debug_assert!(slab.high_water() <= schedule.arrivals.len());
         debug_assert_eq!(slab.live(), in_flight, "slab/in-flight accounting out of sync");
@@ -1462,6 +1687,13 @@ impl<'a> MultiTenantDriver<'a> {
             a.recovered = recovered_per_app[i];
             a.faulted_unrecovered = faulted_unrec_per_app[i];
         }
+        tiers.apply_to(&mut report);
+        let snap = platform.snapshot_stats();
+        report.snap_hits = snap.hits;
+        report.snap_misses = snap.misses;
+        report.snap_evictions = snap.evictions;
+        report.snap_prewarms = snap.prewarms;
+        report.snap_bytes_hwm = snap.bytes_hwm;
         report
     }
 
@@ -1584,6 +1816,7 @@ fn try_admit(
     slab: &mut Slab,
     in_flight: &mut usize,
     max_in_flight: &mut usize,
+    tiers: &mut TierTelemetry,
 ) -> bool {
     let graph = &apps[arr.app].graph;
     let mut st = platform.begin_at(graph, Invocation::new(arr.scale), at, None);
@@ -1593,6 +1826,11 @@ fn try_admit(
             *max_in_flight = (*max_in_flight).max(*in_flight);
             let slot = slab.insert(arr.app, sched_idx, st);
             let st = slab.state_mut(slot).expect("just inserted");
+            tiers.record(
+                arr.app,
+                st.start_tier().unwrap_or(StartupTier::ColdBoot),
+                st.start_latency_ms(),
+            );
             drain_pending(heap, seq, slot, st);
             heap.push(HeapEv { at: st.wave_done_at(), seq: *seq, kind: EvKind::WaveDone { slot } });
             *seq += 1;
@@ -1629,6 +1867,7 @@ fn drain_deferred(
     slab: &mut Slab,
     in_flight: &mut usize,
     max_in_flight: &mut usize,
+    tiers: &mut TierTelemetry,
 ) {
     while queues.pop_expired(now).is_some() {}
     let fair = queues.policy().skips_blocked_tenant();
@@ -1646,6 +1885,7 @@ fn drain_deferred(
             slab,
             in_flight,
             max_in_flight,
+            tiers,
         );
         if admitted {
             queues.record_admitted(p.app, now - p.enqueued_at);

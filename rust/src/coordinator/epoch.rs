@@ -70,14 +70,14 @@ use std::sync::Mutex;
 use crate::apps::Invocation;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Server;
-use crate::cluster::{Resources, ServerId};
+use crate::cluster::{Resources, ServerId, StartupTier};
 use crate::metrics::fairness::JainAccumulator;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 
 use super::admission::{AdmissionPolicy, DeferredQueues};
 use super::driver::{
-    crash_scan, Aggregator, Arrival, BitMask, DriverReport, MultiTenantDriver, Schedule, Slab,
-    TenantApp,
+    crash_scan, prewarm_order, Aggregator, Arrival, BitMask, DriverReport, MultiTenantDriver,
+    Schedule, Slab, TenantApp, TierTelemetry, PREWARM_TOP_K,
 };
 use super::exec::{apply_timeline_on, AllocSink, OngoingInvocation, TimelineEv};
 use super::faults::{FaultKind, FaultPlan};
@@ -397,6 +397,7 @@ struct Engine<'a, 'b> {
     faulted_unrec_per_app: Vec<usize>,
     recovery_moments: StreamingMoments,
     recovery_p95: P2Quantile,
+    tiers: TierTelemetry,
     epochs: u64,
     engaged_batches: u64,
 }
@@ -413,6 +414,11 @@ impl<'a, 'b> Engine<'a, 'b> {
             Ok(()) => {
                 self.in_flight += 1;
                 self.max_in_flight = self.max_in_flight.max(self.in_flight);
+                self.tiers.record(
+                    arr.app,
+                    st.start_tier().unwrap_or(StartupTier::ColdBoot),
+                    st.start_latency_ms(),
+                );
                 let home = wave_home(&st.pending, self.spr, self.ctxs.len());
                 let mut pending = std::mem::take(&mut st.pending);
                 let wave_done_at = st.wave_done_at();
@@ -530,6 +536,7 @@ impl<'a, 'b> Engine<'a, 'b> {
                 match kind {
                     FaultKind::ServerCrash(s) => {
                         if self.platform.cluster.fail_server(s, at) {
+                            self.platform.evict_snapshots_on(s, at);
                             self.crash_scan_all(s, at);
                         }
                     }
@@ -537,6 +544,7 @@ impl<'a, 'b> Engine<'a, 'b> {
                         for i in r.0 * self.spr..(r.0 + 1) * self.spr {
                             let s = ServerId(i);
                             if self.platform.cluster.fail_server(s, at) {
+                                self.platform.evict_snapshots_on(s, at);
                                 self.crash_scan_all(s, at);
                             }
                         }
@@ -897,6 +905,9 @@ impl<'a, 'b> Engine<'a, 'b> {
     }
 
     fn finish(mut self, label: &str) -> DriverReport {
+        // Same teardown order as the sequential loop: resident snapshot
+        // images return their rack-memory charge before the leak asserts.
+        self.platform.drain_snapshot_caches(self.end_time);
         #[cfg(debug_assertions)]
         {
             let high_water: usize = self.gslab.high_water()
@@ -969,6 +980,13 @@ impl<'a, 'b> Engine<'a, 'b> {
         report.epoch_batch_mean = batch_moments.mean();
         report.epoch_batch_p95 = batch_p95.value();
         report.epoch_shard_jain = shard_jain.value();
+        self.tiers.apply_to(&mut report);
+        let snap = self.platform.snapshot_stats();
+        report.snap_hits = snap.hits;
+        report.snap_misses = snap.misses;
+        report.snap_evictions = snap.evictions;
+        report.snap_prewarms = snap.prewarms;
+        report.snap_bytes_hwm = snap.bytes_hwm;
         report
     }
 }
@@ -1017,10 +1035,22 @@ pub(crate) fn run_platform_sharded(
         seq += 1;
     }
 
+    let mut platform = Platform::new(cfg.cluster, config);
+    // Same gate as the sequential loop: a zero budget leaves the
+    // snapshot layer off and the replay byte-identical to legacy.
+    if cfg.snapshot_budget_bytes > 0 {
+        platform.enable_snapshots(
+            cfg.snapshot_budget_bytes,
+            cfg.prewarm,
+            prewarm_order(apps, &sched_counts),
+            PREWARM_TOP_K,
+        );
+    }
+
     let engine = Engine {
         apps,
         schedule,
-        platform: Platform::new(cfg.cluster, config),
+        platform,
         gheap,
         seq,
         gslab: Slab::new(),
@@ -1045,6 +1075,7 @@ pub(crate) fn run_platform_sharded(
         faulted_unrec_per_app: vec![0usize; apps.len()],
         recovery_moments: StreamingMoments::new(),
         recovery_p95: P2Quantile::new(0.95),
+        tiers: TierTelemetry::new(apps.len()),
         epochs: 0,
         engaged_batches: 0,
     };

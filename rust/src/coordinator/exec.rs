@@ -53,7 +53,8 @@ use std::collections::HashMap;
 use crate::apps::Invocation;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
-use crate::cluster::{Cluster, ClusterSpec, RackId, Resources, ServerId, StartupModel};
+use crate::cluster::snapshot::{SnapshotCache, SnapshotStats};
+use crate::cluster::{Cluster, ClusterSpec, RackId, Resources, ServerId, StartupModel, StartupTier};
 use crate::memory::MemoryController;
 use crate::metrics::{Breakdown, RunReport};
 use crate::net::{ControlPath, ControlPlane, NetKind, NetModel};
@@ -189,6 +190,65 @@ pub struct Platform {
     /// Pooled history-values buffer for the periodic §5.2.3 re-tune
     /// (`Profile::values_into`) — keeps the solver call allocation-free.
     solver_scratch: std::cell::RefCell<Vec<f64>>,
+    /// Tiered cold-start state ([`Self::enable_snapshots`]): per-rack
+    /// snapshot caches plus the predictive pre-warm inputs. `None` (the
+    /// default) keeps the flat cold/warm model and the legacy replay
+    /// byte-identical.
+    snapshots: Option<SnapshotLayer>,
+}
+
+/// Coordinator-side snapshot/restore state: one byte-budgeted cache per
+/// rack, and the pre-warm policy inputs the driver derives from its
+/// arrival schedule. All mutation happens on the coordinator side of
+/// both event loops (`begin_at` / `start_wave` / fault handling), so
+/// tiered replays stay digest-identical at every worker count.
+struct SnapshotLayer {
+    /// Per-rack caches, indexed by rack id.
+    caches: Vec<SnapshotCache>,
+    /// Predictive pre-warm enabled.
+    prewarm: bool,
+    /// Whether the initial pre-warm fill ran (later passes trigger only
+    /// at rack-dirty instants).
+    primed: bool,
+    /// Per-app snapshot image sizes in descending expected-arrival
+    /// order (the driver scores apps by scheduled arrivals over the
+    /// run's horizon — the normalized long-run rate of all three
+    /// arrival models).
+    images: Vec<(&'static str, u64)>,
+    /// Pre-warm considers only the first `top_k` images per rack.
+    top_k: usize,
+}
+
+impl SnapshotLayer {
+    /// Image size for `app` (linear scan of the interned-name table —
+    /// app counts are small and the scan is allocation-free).
+    fn image_bytes(&self, app: &'static str) -> u64 {
+        self.images
+            .iter()
+            .find(|(name, _)| *name == app)
+            .map_or(0, |&(_, bytes)| bytes)
+    }
+}
+
+/// Snapshot image size in MB for cluster memory charging.
+fn image_mb(bytes: u64) -> f64 {
+    // cast: safe(image sizes are clamped to single-digit GiB by the
+    // driver's sizing rule, far below f64's 2^53 integer range)
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// The server in `rack` with the most available memory that can hold
+/// `need_mb` (ties break to the lowest id; down servers report zero
+/// availability and are skipped naturally). `None` when nothing fits.
+fn best_mem_server(cluster: &Cluster, rack: RackId, need_mb: f64) -> Option<ServerId> {
+    let mut best: Option<(ServerId, f64)> = None;
+    for id in cluster.rack_servers(rack) {
+        let avail = cluster.server(id).available().mem_mb;
+        if avail + 1e-9 >= need_mb && best.map_or(true, |(_, b)| avail > b) {
+            best = Some((id, avail));
+        }
+    }
+    best.map(|(id, _)| id)
 }
 
 /// Scratch buffers for the wave loop's placement decisions. Taken out
@@ -277,6 +337,12 @@ pub struct OngoingInvocation {
     pub(crate) growth_count: usize,
     /// Whether wave 0 hit the warm pool (None before wave 0 ran).
     pub(crate) first_wave_warm: Option<bool>,
+    /// Which start tier the first environment resolved to (None before
+    /// wave 0 ran). Resolved exactly once — rewound wave-0 re-runs
+    /// after a crash reuse it (the environment is already up).
+    pub(crate) start_tier: Option<StartupTier>,
+    /// Start latency the resolved tier charged (0 before wave 0 ran).
+    pub(crate) start_latency_ms: f64,
     /// Simulated instant the driver's fault injector marked this
     /// invocation as hit (None when unaffected). Set at most once;
     /// completion then counts as a recovery and the delta to the
@@ -318,6 +384,8 @@ impl OngoingInvocation {
             data_track: Vec::new(),
             growth_count: 0,
             first_wave_warm: None,
+            start_tier: None,
+            start_latency_ms: 0.0,
             fault_at: None,
         }
     }
@@ -365,6 +433,8 @@ impl OngoingInvocation {
         self.attrib = Consumption::default();
         self.growth_count = 0;
         self.first_wave_warm = None;
+        self.start_tier = None;
+        self.start_latency_ms = 0.0;
         self.fault_at = None;
     }
 
@@ -386,6 +456,17 @@ impl OngoingInvocation {
     /// Whether the first environment hit the warm pool.
     pub fn first_wave_warm(&self) -> Option<bool> {
         self.first_wave_warm
+    }
+
+    /// Which start tier the first environment resolved to (None before
+    /// wave 0 ran).
+    pub fn start_tier(&self) -> Option<StartupTier> {
+        self.start_tier
+    }
+
+    /// Start latency the resolved tier charged (0 before wave 0 ran).
+    pub fn start_latency_ms(&self) -> f64 {
+        self.start_latency_ms
     }
 
     /// Map a crashed `server` onto this invocation's execution state:
@@ -482,6 +563,7 @@ impl Platform {
             scratch: PlacementCtx::default(),
             shell_pool: Vec::new(),
             solver_scratch: std::cell::RefCell::new(Vec::new()),
+            snapshots: None,
         }
     }
 
@@ -585,6 +667,14 @@ impl Platform {
 
         let mut st = self.shell_pool.pop().unwrap_or_else(OngoingInvocation::empty);
         st.reset(graph, scale, inv_id, at, crash);
+
+        // ---- predictive pre-warm (tiered cold starts) -------------------
+        // Refresh the per-rack snapshot caches at rack-dirty instants
+        // (capacity moved since the last admission) so the routing below
+        // sees post-pre-warm availability — the cache genuinely competes
+        // with this invocation for rack memory. No-op with the snapshot
+        // layer off.
+        self.prewarm_pass(at);
 
         // ---- global scheduling: route to a rack -------------------------
         // Rack availability reaches the global scheduler as incremental
@@ -766,13 +856,39 @@ impl Platform {
             if st.wave_idx == 0 && st.first_wave_warm.is_none() {
                 st.first_wave_warm = Some(self.config.proactive && app_warm);
             }
-            let startup_ms = self.startup_cost(
-                st.wave_idx,
-                merged,
-                colocated && self.config.adaptive,
-                st.prev_wave_dur,
-                app_warm,
-            );
+            let startup_ms = if st.wave_idx == 0 && self.snapshots.is_some() {
+                // Tiered start (snapshot layer on): the tier is resolved
+                // once per invocation; sibling wave-0 components and
+                // rewound wave-0 re-runs after a crash reuse its latency.
+                if st.start_tier.is_none() {
+                    let (tier, ms) =
+                        self.resolve_start_tier(program.name, rack_id, app_warm, wave_start);
+                    st.start_tier = Some(tier);
+                    st.start_latency_ms = ms;
+                }
+                st.start_latency_ms
+            } else {
+                let ms = self.startup_cost(
+                    st.wave_idx,
+                    merged,
+                    colocated && self.config.adaptive,
+                    st.prev_wave_dur,
+                    app_warm,
+                );
+                if st.wave_idx == 0 && st.start_tier.is_none() {
+                    // Flat-model bookkeeping (snapshot layer off): record
+                    // the warm/cold split and wave-0 cost as the tier so
+                    // the telemetry and its conservation identity hold in
+                    // every configuration. Digest-excluded state only.
+                    st.start_tier = Some(if self.config.proactive && app_warm {
+                        StartupTier::WarmHit
+                    } else {
+                        StartupTier::ColdBoot
+                    });
+                    st.start_latency_ms = ms;
+                }
+                ms
+            };
             st.breakdown.startup_ms += startup_ms;
 
             // -- connection setup for remote data --------------------
@@ -1308,6 +1424,161 @@ impl Platform {
         } else {
             self.startup.cold(StartupPath::Zenix)
         }
+    }
+
+    // ---- tiered cold starts (snapshot/restore layer) --------------------
+
+    /// Turn the tiered cold-start model on: one byte-budgeted snapshot
+    /// cache per rack, and (optionally) the predictive pre-warm pass.
+    /// `images` lists every app's snapshot image size in descending
+    /// expected-arrival order; pre-warm considers only the first
+    /// `top_k` per rack. With the layer off (the default) the platform
+    /// runs the flat cold/warm model byte-for-byte.
+    pub fn enable_snapshots(
+        &mut self,
+        budget_bytes: u64,
+        prewarm: bool,
+        images: Vec<(&'static str, u64)>,
+        top_k: usize,
+    ) {
+        let caches = self
+            .cluster
+            .racks()
+            .map(|_| SnapshotCache::new(budget_bytes))
+            .collect();
+        self.snapshots = Some(SnapshotLayer { caches, prewarm, primed: false, images, top_k });
+    }
+
+    /// Predictive pre-warm: install the top-k expected-arrival images
+    /// into each rack's spare snapshot budget. Runs on the first
+    /// admission and then at rack-dirty instants (capacity moved since
+    /// the last pass); never evicts — demand installs own the
+    /// contended end of the budget. Allocation-free.
+    fn prewarm_pass(&mut self, now: Millis) {
+        let Some(sn) = self.snapshots.as_mut() else { return };
+        if !sn.prewarm || (sn.primed && !self.cluster.has_dirty_racks()) {
+            return;
+        }
+        sn.primed = true;
+        let k = sn.top_k.min(sn.images.len());
+        for r in 0..sn.caches.len() {
+            for &(app, bytes) in &sn.images[..k] {
+                let cache = &mut sn.caches[r];
+                if cache.contains(app) || !cache.fits(bytes) {
+                    continue; // already resident, or would need an eviction
+                }
+                let mb = image_mb(bytes);
+                let Some(server) = best_mem_server(&self.cluster, RackId(r), mb) else {
+                    continue; // rack memory is contended: invocations win
+                };
+                if self.cluster.try_alloc(server, Resources::mem_only(mb), now) {
+                    let installed = cache.insert(app, bytes, server);
+                    debug_assert!(installed, "fit and absence were pre-checked");
+                    if installed {
+                        cache.stats.prewarms += 1;
+                    } else {
+                        self.cluster.free(server, Resources::mem_only(mb), now);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Resolve the start tier of an invocation's first environment
+    /// against the routed rack's snapshot cache (requires the snapshot
+    /// layer). A warm-pool hit wins outright (a live environment beats
+    /// any restore — the cache is not consulted); a resident image
+    /// restores at size-scaled cost; a miss pays the flat cold path and
+    /// demand-installs the image — evicting least-recently-used images
+    /// as needed — so repeat misses turn into restores.
+    fn resolve_start_tier(
+        &mut self,
+        app: &'static str,
+        rack: RackId,
+        app_warm: bool,
+        now: Millis,
+    ) -> (StartupTier, Millis) {
+        use crate::cluster::startup::StartupPath;
+        if self.config.proactive && app_warm {
+            return (StartupTier::WarmHit, self.startup.warm(StartupPath::Zenix));
+        }
+        let sn = self
+            .snapshots
+            .as_mut()
+            .expect("tier resolution runs only with the snapshot layer on");
+        let bytes = sn.image_bytes(app);
+        let cache = &mut sn.caches[rack.0];
+        if cache.touch(app) {
+            return (StartupTier::SnapshotRestore, self.startup.restore(bytes));
+        }
+        let cold = if self.config.proactive {
+            self.startup.cold(StartupPath::ZenixPrewarmed)
+        } else {
+            self.startup.cold(StartupPath::Zenix)
+        };
+        if bytes <= cache.budget() {
+            while !cache.fits(bytes) {
+                match cache.evict_lru() {
+                    Some((_, b, home)) => {
+                        self.cluster.free(home, Resources::mem_only(image_mb(b)), now);
+                    }
+                    None => break,
+                }
+            }
+            let mb = image_mb(bytes);
+            if let Some(server) = best_mem_server(&self.cluster, rack, mb) {
+                if self.cluster.try_alloc(server, Resources::mem_only(mb), now) {
+                    let installed = cache.insert(app, bytes, server);
+                    debug_assert!(installed, "budget was made available above");
+                    if !installed {
+                        self.cluster.free(server, Resources::mem_only(mb), now);
+                    }
+                }
+            }
+        }
+        (StartupTier::ColdBoot, cold)
+    }
+
+    /// Wipe cached images homed on a crashed server, releasing their
+    /// memory charges (the crash destroyed them; [`Cluster::free`]
+    /// works on downed servers, mirroring how invocation allocations
+    /// unwind after a crash). Both event loops call this at the same
+    /// fault instants, coordinator-side, so tiered replays stay
+    /// digest-identical at every worker count.
+    pub fn evict_snapshots_on(&mut self, server: ServerId, now: Millis) {
+        let Some(sn) = self.snapshots.as_mut() else { return };
+        let cluster = &mut self.cluster;
+        let rack = cluster.server(server).rack;
+        sn.caches[rack.0].evict_homed_on(server, |_, bytes| {
+            cluster.free(server, Resources::mem_only(image_mb(bytes)), now);
+        });
+    }
+
+    /// Tear the snapshot caches down at `now`, releasing every image's
+    /// memory charge. The drivers call this after their event loops
+    /// drain, before the end-of-run leak asserts and the fleet
+    /// consumption readout.
+    pub fn drain_snapshot_caches(&mut self, now: Millis) {
+        let Some(sn) = self.snapshots.as_mut() else { return };
+        let cluster = &mut self.cluster;
+        for cache in &mut sn.caches {
+            cache.drain(|_, bytes, home| {
+                cluster.free(home, Resources::mem_only(image_mb(bytes)), now);
+            });
+        }
+    }
+
+    /// Aggregate snapshot-cache telemetry across racks (counters sum;
+    /// the bytes high-water mark is the per-rack maximum, comparable to
+    /// the per-rack budget). Zeros with the layer off.
+    pub fn snapshot_stats(&self) -> SnapshotStats {
+        let mut total = SnapshotStats::default();
+        if let Some(sn) = &self.snapshots {
+            for cache in &sn.caches {
+                total.absorb(&cache.stats);
+            }
+        }
+        total
     }
 }
 

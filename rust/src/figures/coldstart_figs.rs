@@ -1,0 +1,146 @@
+//! Cold-start-vs-cache-size sweep: the identical multi-tenant replay
+//! under the tiered start model at increasing snapshot-cache budgets.
+//!
+//! Row 0 is the *always-cold* reference: proactive start-up disabled
+//! and a zero snapshot budget, so every first environment pays the
+//! full cold boot (the no-prewarm Zenix column of Fig 8). Each further
+//! row replays the byte-identical schedule with a per-rack snapshot
+//! cache of the given budget and predictive pre-warming on: start
+//! latency tiers into warm-pool hits, snapshot restores (cost scaled
+//! by the per-program image size) and residual cold boots, and the
+//! p95/p99 start-latency tail collapses as the budget grows. The shape
+//! test (`rust/tests/figures_shape.rs`) pins the tier-split
+//! conservation per row, digest stability across repeated sweeps, and
+//! the ≥10x p99 gap between the biggest-budget cell and the
+//! always-cold reference.
+
+use crate::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+use crate::coordinator::ZenixConfig;
+use crate::trace::Archetype;
+
+/// One cache-budget cell of the cold-start sweep.
+#[derive(Debug, Clone)]
+pub struct ColdstartSweepRow {
+    /// Policy label: `always-cold` for the reference row, `tiered` for
+    /// the budgeted cells.
+    pub policy: &'static str,
+    /// Per-rack snapshot-cache budget (MiB; 0 = snapshot layer off).
+    pub budget_mb: u64,
+    /// Invocations that ran to completion.
+    pub completed: usize,
+    /// Invocations admitted and started (tier-split base).
+    pub started: usize,
+    /// Started invocations that paid a full cold boot.
+    pub tier_cold: usize,
+    /// Started invocations restored from a resident snapshot image.
+    pub tier_restored: usize,
+    /// Started invocations served from the warm pool.
+    pub tier_warm: usize,
+    /// P² p95 start latency (ms).
+    pub p95_start_ms: f64,
+    /// P² p99 start latency (ms) — the sweep's tail axis.
+    pub p99_start_ms: f64,
+    /// Snapshot-cache hits across the run.
+    pub snap_hits: u64,
+    /// Snapshot-cache misses across the run.
+    pub snap_misses: u64,
+    /// Snapshot-cache evictions across the run.
+    pub snap_evictions: u64,
+    /// The replay's order-stable digest (budget-dependent: the cache
+    /// competes with invocations for rack memory; stable across
+    /// repeated sweeps at the same budget).
+    pub digest: u64,
+}
+
+/// Replay the identical `standard_mix` schedule once always-cold and
+/// once per snapshot budget in `budgets_mb` (MiB per rack, pre-warm
+/// on). The schedule is generated once — it depends only on the seed
+/// and the mix, never on the start-tier policy — so every cell replays
+/// byte-identical input and the tail differences are attributable to
+/// the tier model alone.
+pub fn fig_coldstart_cache(
+    apps: usize,
+    invocations: usize,
+    seed: u64,
+    budgets_mb: &[u64],
+) -> Vec<ColdstartSweepRow> {
+    const MIB: u64 = 1024 * 1024;
+    let mix = standard_mix(apps, Archetype::Average);
+    let base = DriverConfig { seed, invocations, ..DriverConfig::default() };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+
+    let mut rows = Vec::with_capacity(budgets_mb.len() + 1);
+    let cold_cfg = DriverConfig {
+        config: ZenixConfig { proactive: false, ..base.config },
+        ..base
+    };
+    let r = MultiTenantDriver::new(&mix, cold_cfg).run_zenix(&schedule);
+    rows.push(row("always-cold", 0, &r));
+
+    for &budget_mb in budgets_mb {
+        let cfg = DriverConfig {
+            snapshot_budget_bytes: budget_mb * MIB,
+            prewarm: budget_mb > 0,
+            ..base
+        };
+        let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+        rows.push(row("tiered", budget_mb, &r));
+    }
+    rows
+}
+
+fn row(
+    policy: &'static str,
+    budget_mb: u64,
+    r: &crate::coordinator::driver::DriverReport,
+) -> ColdstartSweepRow {
+    ColdstartSweepRow {
+        policy,
+        budget_mb,
+        completed: r.completed,
+        started: r.started,
+        tier_cold: r.tier_cold,
+        tier_restored: r.tier_restored,
+        tier_warm: r.tier_warm,
+        p95_start_ms: r.p95_start_ms,
+        p99_start_ms: r.p99_start_ms,
+        snap_hits: r.snap_hits,
+        snap_misses: r.snap_misses,
+        snap_evictions: r.snap_evictions,
+        digest: r.digest,
+    }
+}
+
+/// Render the sweep as a figure-row text block.
+pub fn render_coldstart(title: &str, rows: &[ColdstartSweepRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<12} {:>9} {:>8} {:>8} {:>6} {:>9} {:>6} {:>10} {:>10} {:>6} {:>7} {:>6} {:>18}",
+        "policy", "budgetMB", "started", "cold", "rest", "warm", "compl", "p95-start", "p99-start",
+        "hits", "misses", "evict", "digest"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<12} {:>9} {:>8} {:>8} {:>6} {:>9} {:>6} {:>10.1} {:>10.1} {:>6} {:>7} {:>6} {:>#18x}",
+            r.policy,
+            r.budget_mb,
+            r.started,
+            r.tier_cold,
+            r.tier_restored,
+            r.tier_warm,
+            r.completed,
+            r.p95_start_ms,
+            r.p99_start_ms,
+            r.snap_hits,
+            r.snap_misses,
+            r.snap_evictions,
+            r.digest,
+        );
+    }
+    out
+}

@@ -12,6 +12,7 @@
 
 pub mod admission_figs;
 pub mod chaos_figs;
+pub mod coldstart_figs;
 pub mod lr_figs;
 pub mod platform_figs;
 pub mod scaling_figs;

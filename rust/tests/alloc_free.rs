@@ -241,4 +241,49 @@ fn steady_state_arrivals_allocate_nothing() {
              {per_worker:.3} ({a_small} @2k vs {a_big} @4k, 4 workers)"
         );
     }
+
+    // ---- phase 6: snapshot-cache + pre-warm steady state ------------
+    // ISSUE 9 tentpole: with the tiered start model live (per-rack
+    // byte-budgeted snapshot caches, predictive pre-warm passes at
+    // rack-dirty instants), the marginal allocation count per extra
+    // invocation stays below one. The cache is a slot arena with
+    // intrusive MRU/free lists — touches, inserts, evictions and
+    // pre-warm placements all recycle slots in place; the tier
+    // telemetry folds into preallocated streaming moments and P²
+    // markers. Only the caches' one-time slot growth to their
+    // high-water mark remains, amortized.
+    {
+        let cfg_small = DriverConfig {
+            seed: 5,
+            invocations: 2000,
+            mean_iat_ms: 300.0,
+            exact_stats: false,
+            snapshot_budget_bytes: 512 * 1024 * 1024,
+            prewarm: true,
+            ..DriverConfig::default()
+        };
+        let cfg_big = DriverConfig { invocations: 4000, ..cfg_small };
+        let d_small = MultiTenantDriver::new(&apps, cfg_small);
+        let d_big = MultiTenantDriver::new(&apps, cfg_big);
+        let s_small = d_small.schedule();
+        let s_big = d_big.schedule();
+        let (rep_small, a_small) = counted(|| d_small.run_zenix(&s_small));
+        let (rep_big, a_big) = counted(|| d_big.run_zenix(&s_big));
+        assert!(
+            rep_big.snap_hits > 0,
+            "the snapshot cache must serve hits for this gate to bind"
+        );
+        assert_eq!(
+            rep_big.tier_cold + rep_big.tier_restored + rep_big.tier_warm,
+            rep_big.started,
+            "tier split must partition starts under the counting window"
+        );
+        std::hint::black_box((&rep_small, &rep_big));
+        let marginal = a_big.saturating_sub(a_small) as f64 / 2000.0;
+        assert!(
+            marginal < 1.0,
+            "tiered driver loop marginal allocations per invocation too high: \
+             {marginal:.3} ({a_small} @2k vs {a_big} @4k)"
+        );
+    }
 }

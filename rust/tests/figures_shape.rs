@@ -4,8 +4,8 @@
 
 use zenix::apps::lr;
 use zenix::figures::{
-    admission_figs, chaos_figs, lr_figs, platform_figs, scaling_figs, sharding_figs, tpcds_figs,
-    video_figs,
+    admission_figs, chaos_figs, coldstart_figs, lr_figs, platform_figs, scaling_figs,
+    sharding_figs, tpcds_figs, video_figs,
 };
 
 // ---- §6.1.1 TPC-DS ------------------------------------------------------
@@ -465,5 +465,61 @@ fn chaos_sweep_goodput_and_recovery_vs_fault_rate() {
     }
     // the renderer lists header + one line per cell
     let text = chaos_figs::render_chaos("chaos", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
+}
+
+// ---- cold-start-vs-cache-size sweep -------------------------------------
+
+#[test]
+fn coldstart_sweep_tail_collapses_with_budget() {
+    // ISSUE 9 tentpole shape: an always-cold reference row, then the
+    // tiered replay at growing per-rack snapshot budgets. Tier splits
+    // conserve in every cell, the snapshot layer genuinely engages, and
+    // the fully-budgeted cell beats the always-cold p99 start latency
+    // by ≥10x (warm hits and snapshot restores displace cold boots).
+    let budgets = [256u64, 1024, 8192];
+    let rows = coldstart_figs::fig_coldstart_cache(6, 240, 9, &budgets);
+    assert_eq!(rows.len(), 1 + budgets.len());
+    let cold = &rows[0];
+    assert_eq!(cold.policy, "always-cold");
+    assert_eq!(cold.budget_mb, 0);
+    // the reference row never restores and never warms: every start is
+    // a full cold boot, and the snapshot layer is off entirely
+    assert_eq!(cold.tier_restored, 0, "always-cold restored something");
+    assert_eq!(cold.tier_warm, 0, "always-cold hit the warm pool");
+    assert_eq!(cold.snap_hits + cold.snap_misses, 0, "layer must be off");
+    assert!(cold.p99_start_ms > 0.0);
+    for r in &rows {
+        // tier-split conservation in every cell
+        assert_eq!(
+            r.tier_cold + r.tier_restored + r.tier_warm,
+            r.started,
+            "{} @ {} MB: tier split does not partition starts",
+            r.policy,
+            r.budget_mb
+        );
+        assert!(r.started >= r.completed, "{} @ {} MB", r.policy, r.budget_mb);
+    }
+    // budgeted cells must actually exercise the cache…
+    let big = rows.last().unwrap();
+    assert!(big.snap_hits > 0, "biggest budget never hit the cache");
+    assert!(
+        big.tier_restored + big.tier_warm > 0,
+        "biggest budget never escaped a cold boot"
+    );
+    // …and the tail collapses: ≥10x p99 start-latency improvement
+    assert!(
+        big.p99_start_ms * 10.0 <= cold.p99_start_ms,
+        "p99 start {} vs always-cold {}: less than 10x",
+        big.p99_start_ms,
+        cold.p99_start_ms
+    );
+    // per-seed digest stability of the whole sweep
+    let again = coldstart_figs::fig_coldstart_cache(6, 240, 9, &budgets);
+    for (a, b) in rows.iter().zip(&again) {
+        assert_eq!(a.digest, b.digest, "{} @ {} MB: sweep must be digest-stable", a.policy, a.budget_mb);
+    }
+    // the renderer lists every cell (header + one line per row)
+    let text = coldstart_figs::render_coldstart("coldstart", &rows);
     assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
 }

@@ -343,6 +343,115 @@ fn fair_share_restores_fairness_under_asymmetric_overload() {
     );
 }
 
+/// ISSUE 9 acceptance gate: at a fixed snapshot budget, predictive
+/// pre-warming plus snapshot restore must beat an always-cold fleet by
+/// ≥10x on p99 start latency over the *byte-identical* arrival
+/// schedule. Always-cold disables proactive start-up and keeps the
+/// snapshot layer off, so every environment pays the full reactive
+/// cold boot; the tiered run pre-warms the top-k images per rack and
+/// serves the rest from the warm pool, collapsing the start tail from
+/// hundreds of milliseconds to tens.
+#[test]
+fn prewarmed_p99_start_beats_always_cold_by_10x_at_fixed_budget() {
+    const MIB: u64 = 1024 * 1024;
+    let mix = standard_mix(6, Archetype::Average);
+    let base = DriverConfig { seed: 7, invocations: 600, ..DriverConfig::default() };
+    let driver = MultiTenantDriver::new(&mix, base);
+    // the schedule depends only on seed and mix, never on the start
+    // tier policy — both runs replay identical arrivals
+    let schedule = driver.schedule();
+
+    let cold_cfg = DriverConfig {
+        config: ZenixConfig { proactive: false, ..base.config },
+        ..base
+    };
+    let cold = MultiTenantDriver::new(&mix, cold_cfg).run_zenix(&schedule);
+    let tiered_cfg = DriverConfig {
+        snapshot_budget_bytes: 8192 * MIB,
+        prewarm: true,
+        ..base
+    };
+    let tiered = MultiTenantDriver::new(&mix, tiered_cfg).run_zenix(&schedule);
+
+    // engagement guards: the comparison must be between a genuinely
+    // all-cold fleet and a genuinely tiered one
+    assert!(cold.started > 0 && tiered.started > 0);
+    assert_eq!(
+        cold.tier_cold, cold.started,
+        "always-cold must cold-boot every start ({} of {})",
+        cold.tier_cold, cold.started
+    );
+    assert_eq!(cold.tier_restored + cold.tier_warm, 0);
+    assert!(
+        tiered.snap_prewarms > 0,
+        "pre-warm must prime images before first use"
+    );
+    assert!(
+        tiered.tier_restored + tiered.tier_warm > 0,
+        "tiered run must serve starts below cold-boot cost"
+    );
+
+    // the acceptance bar: ≥10x on the p99 start-latency tail
+    assert!(
+        tiered.p99_start_ms * 10.0 <= cold.p99_start_ms,
+        "need ≥10x p99 start improvement: tiered {:.1} ms vs always-cold {:.1} ms",
+        tiered.p99_start_ms,
+        cold.p99_start_ms
+    );
+    // and the mean moves the same direction
+    assert!(tiered.mean_start_ms < cold.mean_start_ms);
+}
+
+/// Tier-split conservation regression (ISSUE 9): every started
+/// invocation lands in exactly one start tier — `cold + restored +
+/// warm == started` — fleet-wide *and* per app, in every
+/// configuration: snapshot layer off, budget without pre-warm, budget
+/// with pre-warm, and always-cold.
+#[test]
+fn tier_split_conserves_started_invocations_fleet_and_per_app() {
+    const MIB: u64 = 1024 * 1024;
+    let mix = standard_mix(8, Archetype::Average);
+    let base = DriverConfig { seed: 13, invocations: 400, ..DriverConfig::default() };
+    let schedule = MultiTenantDriver::new(&mix, base).schedule();
+
+    let configs = [
+        ("layer-off", base),
+        ("budget", DriverConfig { snapshot_budget_bytes: 512 * MIB, ..base }),
+        (
+            "prewarm",
+            DriverConfig { snapshot_budget_bytes: 512 * MIB, prewarm: true, ..base },
+        ),
+        (
+            "always-cold",
+            DriverConfig { config: ZenixConfig { proactive: false, ..base.config }, ..base },
+        ),
+    ];
+    for (label, cfg) in configs {
+        let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+        assert!(r.started > 0, "{label}: nothing started");
+        assert_eq!(
+            r.tier_cold + r.tier_restored + r.tier_warm,
+            r.started,
+            "{label}: fleet tier split must partition starts"
+        );
+        let mut per_app_started = 0;
+        for (i, a) in r.apps.iter().enumerate() {
+            assert_eq!(
+                a.tier_cold + a.tier_restored + a.tier_warm,
+                a.started,
+                "{label}: app {i} tier split must partition its starts"
+            );
+            per_app_started += a.started;
+        }
+        assert_eq!(
+            per_app_started, r.started,
+            "{label}: per-app starts must sum to the fleet total"
+        );
+        // started bounds completed: nothing completes without starting
+        assert!(r.completed <= r.started, "{label}: completed exceeds started");
+    }
+}
+
 /// Locate the AOT artifacts or skip the test (they require `make
 /// artifacts` plus a build with the `pjrt` feature; plain CI runs
 /// without either — even with artifacts present — and must stay

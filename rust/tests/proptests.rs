@@ -2,7 +2,7 @@
 //! quickcheck harness, `zenix::util::quickcheck`).
 
 use zenix::apps::{lr, program, tpcds, video, Invocation, Program};
-use zenix::cluster::{Cluster, ClusterSpec, Resources, ServerId};
+use zenix::cluster::{Cluster, ClusterSpec, Resources, ServerId, SnapshotCache};
 use zenix::coordinator::adjust::{self, AdjustParams};
 use zenix::coordinator::graph::ResourceGraph;
 use zenix::coordinator::msglog::{LogEntry, MessageLog};
@@ -792,6 +792,235 @@ fn parallel_replay_digest_matches_single_worker() {
                     || par.faulted_unrecovered != seq.faulted_unrecovered
                     || par.warm_hits != seq.warm_hits
                     || par.max_in_flight != seq.max_in_flight
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Tentpole invariant (ISSUE 9): the byte-budgeted snapshot cache never
+/// exceeds its budget, agrees decision-for-decision with a naive
+/// reference LRU over random op sequences, and evicts in the exact
+/// reference recency order. The structure is a slot arena plus
+/// intrusive lists — no hash map anywhere (`zenix_lint` D1) — so the
+/// same op sequence replays identically on every run and machine: the
+/// eviction order is a pure function of the operations, never of
+/// iteration order.
+#[test]
+fn snapshot_cache_respects_budget_and_is_permutation_deterministic() {
+    const NAMES: [&str; 6] = ["cache-a", "cache-b", "cache-c", "cache-d", "cache-e", "cache-f"];
+    forall(
+        80,
+        |rng: &mut Rng| {
+            let budget = rng.range(64, 4096) as u64;
+            let ops: Vec<(u8, usize, u64, usize)> = (0..rng.range(10, 120))
+                .map(|_| {
+                    (
+                        rng.range(0, 3) as u8,     // 0 touch, 1 insert, 2 evict_lru
+                        rng.range(0, NAMES.len()), // app
+                        rng.range(1, 1500) as u64, // image bytes
+                        rng.range(0, 8),           // home server
+                    )
+                })
+                .collect();
+            (budget, ops)
+        },
+        |(budget, ops)| {
+            let budget = *budget;
+            let mut cache = SnapshotCache::new(budget);
+            // reference model: MRU-at-front Vec, linear everything
+            let mut model: Vec<(&'static str, u64, usize)> = Vec::new();
+            let mut used = 0u64;
+            let (mut hits, mut misses, mut evictions) = (0u64, 0u64, 0u64);
+            for &(op, app, bytes, home) in ops {
+                let name = NAMES[app];
+                match op {
+                    0 => {
+                        let hit = cache.touch(name);
+                        match model.iter().position(|e| e.0 == name) {
+                            Some(i) => {
+                                if !hit {
+                                    return false;
+                                }
+                                hits += 1;
+                                let e = model.remove(i);
+                                model.insert(0, e);
+                            }
+                            None => {
+                                if hit {
+                                    return false;
+                                }
+                                misses += 1;
+                            }
+                        }
+                    }
+                    1 => {
+                        let ok = cache.insert(name, bytes, ServerId(home));
+                        let dup = model.iter().any(|e| e.0 == name);
+                        let want = !dup && bytes <= budget.saturating_sub(used);
+                        if ok != want {
+                            return false;
+                        }
+                        if ok {
+                            model.insert(0, (name, bytes, home));
+                            used += bytes;
+                        }
+                    }
+                    _ => match (cache.evict_lru(), model.pop()) {
+                        (None, None) => {}
+                        (Some((gn, gb, gs)), Some((wn, wb, ws))) => {
+                            if gn != wn || gb != wb || gs != ServerId(ws) {
+                                return false;
+                            }
+                            evictions += 1;
+                            used -= wb;
+                        }
+                        _ => return false,
+                    },
+                }
+                // the budget bound holds after *every* operation
+                if cache.bytes() > budget
+                    || cache.bytes() != used
+                    || cache.len() != model.len()
+                {
+                    return false;
+                }
+            }
+            // telemetry agrees with the reference count-for-count
+            if cache.stats.hits != hits
+                || cache.stats.misses != misses
+                || cache.stats.evictions != evictions
+            {
+                return false;
+            }
+            // teardown drains in exact reference LRU order
+            while let Some((gn, gb, gs)) = cache.evict_lru() {
+                match model.pop() {
+                    Some((wn, wb, ws)) if gn == wn && gb == wb && gs == ServerId(ws) => {}
+                    _ => return false,
+                }
+            }
+            model.is_empty() && cache.is_empty() && cache.bytes() == 0
+        },
+    );
+}
+
+/// Tentpole safety (ISSUE 9): a zero snapshot budget leaves the replay
+/// byte-identical to the legacy engine — the `DRIVER_DIGEST.lock`
+/// semantics cannot move. Random seeds, loads, rack counts and worker
+/// counts, with the `prewarm` flag set both ways at budget 0 (pre-warm
+/// is gated on the budget, so it must be inert): every variant
+/// reproduces the plain default-config digest bit-for-bit, and the
+/// snapshot layer reports zero activity.
+#[test]
+fn zero_budget_no_prewarm_is_digest_identical_to_seed_replay() {
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::trace::Archetype;
+
+    forall(
+        6,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(4, 8),              // apps
+                rng.range(80, 200),           // invocations
+                rng.uniform(60.0, 300.0),     // fleet mean IAT
+                [1usize, 2, 4][rng.range(0, 3)], // racks
+                [1usize, 4][rng.range(0, 2)], // workers
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms, racks, workers)| {
+            let mix = standard_mix(apps, Archetype::Average);
+            let base = DriverConfig { seed, invocations, mean_iat_ms, workers, ..DriverConfig::default() }
+                .with_racks(racks);
+            let driver = MultiTenantDriver::new(&mix, base);
+            let schedule = driver.schedule();
+            let legacy = driver.run_zenix(&schedule);
+            for prewarm in [false, true] {
+                let cfg = DriverConfig { snapshot_budget_bytes: 0, prewarm, ..base };
+                let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+                if r.digest != legacy.digest
+                    || r.completed != legacy.completed
+                    || r.warm_hits != legacy.warm_hits
+                    || r.snap_hits + r.snap_misses + r.snap_prewarms + r.snap_evictions != 0
+                    || r.snap_bytes_hwm != 0
+                {
+                    return false;
+                }
+                // the tier split still partitions starts with the layer
+                // off (the flat model maps to WarmHit/ColdBoot)
+                if r.tier_cold + r.tier_restored + r.tier_warm != r.started
+                    || r.tier_restored != 0
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Tentpole invariant (ISSUE 9 × ISSUE 8): the tiered replay stays
+/// worker-count invariant. Snapshot caches, pre-warm passes and tier
+/// resolution all run coordinator-side at `(time, seq)`-identical
+/// instants in both event loops, so random budgets and pre-warm flags
+/// must reproduce the sequential digest — and the *entire*
+/// digest-excluded tier/cache telemetry — at every worker count.
+#[test]
+fn parallel_tiered_replay_matches_single_worker() {
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::trace::Archetype;
+
+    forall(
+        5,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(4, 8),                        // apps
+                rng.range(80, 200),                     // invocations
+                rng.uniform(60.0, 300.0),               // fleet mean IAT
+                [2usize, 4, 8][rng.range(0, 3)],        // racks (shards)
+                [0u64, 64, 256, 2048][rng.range(0, 4)], // budget MiB per rack
+                rng.chance(0.5),                        // prewarm
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms, racks, budget_mb, prewarm)| {
+            let mix = standard_mix(apps, Archetype::Average);
+            let base = DriverConfig {
+                seed,
+                invocations,
+                mean_iat_ms,
+                snapshot_budget_bytes: budget_mb * 1024 * 1024,
+                prewarm,
+                ..DriverConfig::default()
+            }
+            .with_racks(racks);
+            let driver = MultiTenantDriver::new(&mix, base);
+            let schedule = driver.schedule();
+            let seq = driver.run_zenix(&schedule);
+            // the sequential tier split partitions starts...
+            if seq.tier_cold + seq.tier_restored + seq.tier_warm != seq.started {
+                return false;
+            }
+            for workers in [2usize, 4, 8] {
+                let cfg = DriverConfig { workers, ..base };
+                let par = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+                // ...and every parallel replay reproduces digest AND
+                // tier/cache telemetry exactly
+                if par.digest != seq.digest
+                    || par.completed != seq.completed
+                    || par.started != seq.started
+                    || par.tier_cold != seq.tier_cold
+                    || par.tier_restored != seq.tier_restored
+                    || par.tier_warm != seq.tier_warm
+                    || par.snap_hits != seq.snap_hits
+                    || par.snap_misses != seq.snap_misses
+                    || par.snap_evictions != seq.snap_evictions
+                    || par.snap_prewarms != seq.snap_prewarms
+                    || par.snap_bytes_hwm != seq.snap_bytes_hwm
                 {
                     return false;
                 }

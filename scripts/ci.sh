@@ -231,6 +231,38 @@ if (( elapsed > 120 )); then
 fi
 echo "parallel smoke passed in ${elapsed}s: ${pdig} == sequential, workers=${pworkers}, epochs=${epochs}"
 
+echo "== driver smoke: tiered cold starts (budget-0 pinned, pre-warm >=10x p99 vs always-cold)"
+# ISSUE 9: a zero snapshot budget leaves the tiered-start layer off —
+# the 1k digest must stay byte-identical to the pinned sequential
+# digest — and at a fixed budget the predictive pre-warm policy must
+# beat an always-cold fleet by >=10x on p99 start latency over the
+# byte-identical arrival schedule (the coldstart: line).
+cold_args="--apps 20 --invocations 1000 --seed 7"
+off1k=$(cargo run --release --example multi_tenant -- $cold_args --snapshot-budget 0)
+odig=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$off1k" | head -1)
+if [[ -z "$odig" || "$odig" != "$dig1" ]]; then
+    echo "FAIL: budget-0 tiered digest ${odig} must be byte-identical to the pinned ${dig1}" >&2
+    exit 1
+fi
+coldref=$(cargo run --release --example multi_tenant -- $cold_args --always-cold)
+warmed=$(cargo run --release --example multi_tenant -- $cold_args --snapshot-budget 8192 --prewarm)
+cold_p99=$(grep -oE 'p99-start-ms=[0-9.]+' <<<"$coldref" | head -1 | cut -d= -f2 || true)
+warm_p99=$(grep -oE 'p99-start-ms=[0-9.]+' <<<"$warmed" | head -1 | cut -d= -f2 || true)
+prewarms=$(grep -oE 'prewarms=[0-9]+' <<<"$warmed" | head -1 | tr -dc '0-9' || true)
+if [[ -z "$cold_p99" || -z "$warm_p99" || -z "$prewarms" ]]; then
+    echo "FAIL: could not parse the coldstart: line from the driver output" >&2
+    exit 1
+fi
+if (( prewarms == 0 )); then
+    echo "FAIL: coldstart smoke never pre-warmed an image — the policy no longer engages; retune cold_args" >&2
+    exit 1
+fi
+awk -v c="$cold_p99" -v w="$warm_p99" 'BEGIN { exit (w + 0 > 0 && (w + 0) * 10.0 <= c + 0) ? 0 : 1 }' || {
+    echo "FAIL: pre-warmed p99 start ${warm_p99} ms must sit >=10x below always-cold ${cold_p99} ms" >&2
+    exit 1
+}
+echo "coldstart smoke passed: budget-0 digest == pinned; p99 start ${warm_p99} ms vs always-cold ${cold_p99} ms"
+
 echo "== bench smoke: scheduler (quick budget, json to repo root)"
 out=$(mktemp)
 ZENIX_BENCH_JSON=. cargo bench --bench scheduler -- --quick | tee "$out"
@@ -299,6 +331,21 @@ awk -v m="$faulted_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 2.0 * (s + 0
     exit 1
 }
 echo "faulted driver per-invocation rate: ${faulted_rate} µs (<= 2x fault-free ${us_per_inv} µs)"
+
+# ISSUE 9: the tiered 100k row (8 GiB/rack snapshot budget + pre-warm)
+# must be present and stay within 1.2x of the untiered per-invocation
+# cost — cache touches, snapshot restores and pre-warm passes ride the
+# same allocation-free loop.
+tiered_rate=$(grep -E '100k-invocation tiered driver' "$out" | grep -oE '[0-9]+(\.[0-9]+)? µs/invocation' | head -1 | tr -dc '0-9.' || true)
+if [[ -z "$tiered_rate" ]]; then
+    echo "FAIL: could not find the 100k-invocation tiered (driver_100k_tiered) row" >&2
+    exit 1
+fi
+awk -v m="$tiered_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 1.2 * (s + 0)) ? 0 : 1 }' || {
+    echo "FAIL: tiered driver at ${tiered_rate} µs/invocation > 1.2x the untiered ${us_per_inv} µs (snapshot-layer overhead regression)" >&2
+    exit 1
+}
+echo "tiered driver per-invocation rate: ${tiered_rate} µs (<= 1.2x untiered ${us_per_inv} µs)"
 
 # ISSUE 8: the 1M-invocation parallel rows must be present for every
 # worker count, and the 1-worker sharded run must hold the 60 µs/inv
