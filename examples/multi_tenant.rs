@@ -66,6 +66,20 @@
 //!   the `coldstart:` line). Budget 0 (the default) leaves the layer
 //!   off and the digest byte-identical to a build without the flags.
 //!
+//! Workflow tenants:
+//!
+//! - `--workflow single|pipeline|fanout` gives every tenant an
+//!   inter-invocation DAG: each scheduled arrival runs the DAG's root
+//!   and stage completions spawn the declared downstream invocations
+//!   with data handoff (`--workflow-stages K` stages or fan-out width,
+//!   `--workflow-handoff MB` per edge). `--workflow-affinity off`
+//!   routes ready stages blind (smallest fit) instead of preferring
+//!   the rack holding their resident inputs — the `workflow:` line
+//!   `scripts/ci.sh` greps reports the cross-rack traffic and
+//!   end-to-end latency both ways. `--workflow single` (a DAG of one
+//!   stage) is digest-identical to no workflow at all, which CI pins
+//!   against `DRIVER_DIGEST.lock`.
+//!
 //! Registers N applications (the bulky evaluation programs plus
 //! synthetic apps shaped by an Azure usage archetype), draws a
 //! deterministic arrival schedule, and dispatches the overlapping
@@ -78,7 +92,7 @@
 use zenix::coordinator::admission::{AdmissionPolicy, ArrivalModel};
 use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
 use zenix::coordinator::faults::FaultConfig;
-use zenix::coordinator::ZenixConfig;
+use zenix::coordinator::{Workflow, ZenixConfig};
 use zenix::trace::Archetype;
 
 fn arg_value(args: &[String], i: usize, flag: &str) -> String {
@@ -111,6 +125,10 @@ fn main() {
     let mut snapshot_budget_mb = 0u64;
     let mut prewarm = false;
     let mut always_cold = false;
+    let mut workflow_shape: Option<String> = None;
+    let mut wf_stages = 3usize;
+    let mut wf_handoff_mb = 300.0f64;
+    let mut wf_affinity = true;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0usize;
     while i < args.len() {
@@ -197,6 +215,33 @@ fn main() {
                 always_cold = true;
                 i += 1;
             }
+            "--workflow" => {
+                workflow_shape = Some(arg_value(&args, i, "--workflow"));
+                i += 2;
+            }
+            "--workflow-stages" => {
+                wf_stages = arg_value(&args, i, "--workflow-stages")
+                    .parse()
+                    .expect("--workflow-stages K");
+                i += 2;
+            }
+            "--workflow-handoff" => {
+                wf_handoff_mb = arg_value(&args, i, "--workflow-handoff")
+                    .parse()
+                    .expect("--workflow-handoff MB");
+                i += 2;
+            }
+            "--workflow-affinity" => {
+                wf_affinity = match arg_value(&args, i, "--workflow-affinity").as_str() {
+                    "on" => true,
+                    "off" => false,
+                    other => {
+                        eprintln!("--workflow-affinity on|off, got {other}");
+                        std::process::exit(2);
+                    }
+                };
+                i += 2;
+            }
             "--archetype" => {
                 let name = arg_value(&args, i, "--archetype");
                 arch = *Archetype::ALL
@@ -247,6 +292,20 @@ fn main() {
     if skew != 1.0 && !mix.is_empty() {
         mix[0].weight *= skew;
     }
+    if let Some(shape) = workflow_shape.as_deref() {
+        let dag = match shape {
+            "single" => Workflow::single(),
+            "pipeline" => Workflow::pipeline(wf_stages, wf_handoff_mb),
+            "fanout" => Workflow::fan_out_in(wf_stages, 0.6, wf_handoff_mb),
+            other => {
+                eprintln!("unknown workflow shape {other} (single|pipeline|fanout)");
+                std::process::exit(2);
+            }
+        };
+        for app in mix.iter_mut() {
+            app.workflow = Some(dag.clone());
+        }
+    }
     let cfg = DriverConfig {
         seed,
         invocations,
@@ -259,6 +318,7 @@ fn main() {
         epoch_ms,
         snapshot_budget_bytes: snapshot_budget_mb * 1024 * 1024,
         prewarm,
+        workflow_affinity: wf_affinity,
         config: ZenixConfig { proactive: !always_cold, ..ZenixConfig::default() },
         ..DriverConfig::default()
     }
@@ -369,6 +429,27 @@ fn main() {
         out.zenix.snap_misses,
         out.zenix.snap_evictions,
         out.zenix.snap_prewarms,
+    );
+    // parsed by scripts/ci.sh: the workflow smoke compares
+    // cross-rack-mb= across --workflow-affinity settings and pins the
+    // --workflow single digest against DRIVER_DIGEST.lock
+    println!(
+        "workflow: shape={} affinity={} runs={} runs-completed={} stages-started={} \
+         stages-completed={} spawned={} cross-rack-mb={:.1} e2e-mean-ms={:.1} \
+         e2e-p95-ms={:.1} e2e-p99-ms={:.1} hits={} spills={}",
+        workflow_shape.as_deref().unwrap_or("none"),
+        if wf_affinity { "on" } else { "off" },
+        out.zenix.wf_runs,
+        out.zenix.wf_runs_completed,
+        out.zenix.wf_stages_started,
+        out.zenix.wf_stages_completed,
+        out.zenix.wf_spawned,
+        out.zenix.wf_cross_rack_mb,
+        out.zenix.wf_e2e_mean_ms,
+        out.zenix.wf_e2e_p95_ms,
+        out.zenix.wf_e2e_p99_ms,
+        out.zenix.wf_affinity_hits,
+        out.zenix.wf_affinity_spills,
     );
     // parsed by scripts/ci.sh: the parallel smoke pins digest= equality
     // across --workers values (and against DRIVER_DIGEST.lock)

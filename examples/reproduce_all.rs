@@ -7,7 +7,10 @@ use std::fmt::Write as _;
 use std::fs;
 
 use zenix::apps::lr;
-use zenix::figures::{coldstart_figs, lr_figs, platform_figs, render, scaling_figs, tpcds_figs, video_figs};
+use zenix::figures::{
+    coldstart_figs, lr_figs, platform_figs, render, scaling_figs, tpcds_figs, video_figs,
+    workflow_figs,
+};
 
 fn main() -> zenix::Result<()> {
     fs::create_dir_all("results")?;
@@ -196,6 +199,25 @@ fn main() -> zenix::Result<()> {
         coldstart_figs::render_coldstart(
             "cold-start tail vs snapshot-cache budget",
             &coldstart_figs::fig_coldstart_cache(6, 240, 9, &[256, 1024, 8192]),
+        ),
+    );
+
+    // workflow-tenant sweep (rack-affinity vs blind stage placement on
+    // the identical schedule, per handoff size)
+    emit(
+        "fig_workflow_affinity",
+        workflow_figs::render_workflow(
+            "workflow stage placement, 4 racks",
+            &workflow_figs::fig_workflow_affinity(6, 240, 17, &[100.0, 400.0, 900.0]),
+        ),
+    );
+
+    // workflow apps vs the function-DAG baseline (PyWren parameters)
+    emit(
+        "fig_workflow_vs_dag",
+        workflow_figs::render_workflow_baseline(
+            "workflow apps vs function-DAG baseline",
+            &workflow_figs::fig_workflow_vs_function_dag(180, 11, 300.0),
         ),
     );
 

@@ -288,6 +288,45 @@ fn main() {
         }
     }
 
+    // ---- workflow 100k: DAG tenants + rack-affinity placement ------------
+    // ISSUE 10 row: the 100k replay with every tenant declaring a
+    // three-stage pipeline workflow on a four-rack fleet — each root
+    // arrival spawns two downstream stages, so the row drives ~300k
+    // stage invocations and the printed rate is per *stage* invocation.
+    // Exercises coordinator-side DAG bookkeeping, handoff ledgers on
+    // the producer's rack, and the rack-affinity placement preference,
+    // all on the hot path. scripts/ci.sh gates the per-stage cost at
+    // ≤1.5x the independent-arrival driver_100k row, so what the gate
+    // measures is the DAG layer's overhead, not the 3x stage fan-out.
+    {
+        use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+        use zenix::coordinator::Workflow;
+        use zenix::trace::Archetype;
+        let mut mix = standard_mix(16, Archetype::Average);
+        for app in mix.iter_mut() {
+            app.workflow = Some(Workflow::pipeline(3, 300.0));
+        }
+        let cfg = DriverConfig {
+            seed: 7,
+            invocations: 100_000,
+            exact_stats: false,
+            ..DriverConfig::default()
+        }
+        .with_racks(4);
+        let driver = MultiTenantDriver::new(&mix, cfg);
+        let schedule = driver.schedule();
+        if let Some(r) = b.bench_macro("driver_100k_workflow", 3, || {
+            std::hint::black_box(driver.run_zenix(&schedule));
+        }) {
+            // 100k roots × 3 pipeline stages = the nominal stage count.
+            println!(
+                "  -> 100k-invocation workflow driver: {:.1} µs/invocation \
+                 (per stage, 300k stages; 3-stage pipelines, 4 racks, rack-affinity placement)",
+                r.mean_ns / 1e3 / 300_000.0,
+            );
+        }
+    }
+
     // ---- 1M-invocation parallel replay: the sharded epoch loop ----------
     // ISSUE 8 rows: the bulky-trace scale the tentpole targets — 1M
     // invocations on the 8-rack testbed, replayed through the

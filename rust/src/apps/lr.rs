@@ -14,8 +14,9 @@ use crate::cluster::Resources;
 
 use super::program::{compute, DataSpec, Program};
 
-/// Input presets from the paper.
+/// The paper's small input preset (12 MB, 0.78 GB peak).
 pub const SMALL_INPUT_MB: f64 = 12.0;
+/// The paper's large input preset (44 MB, 2.4 GB peak; scale 1.0).
 pub const LARGE_INPUT_MB: f64 = 44.0;
 
 /// Scale for an input of `mb` megabytes (44 MB reference).

@@ -14,6 +14,7 @@ use crate::cluster::Resources;
 /// A `@compute`-annotated call site.
 #[derive(Debug, Clone)]
 pub struct ComputeSpec {
+    /// Human-readable site name (matches the annotated source symbol).
     pub name: &'static str,
     /// Total CPU work (vCPU·ms) at input scale 1.0 across all workers.
     pub work_ms: f64,
@@ -59,6 +60,7 @@ impl ComputeSpec {
 /// A `@data`-annotated allocation site.
 #[derive(Debug, Clone)]
 pub struct DataSpec {
+    /// Human-readable allocation-site name.
     pub name: &'static str,
     /// Size (MB) at input scale 1.0.
     pub size_mb: f64,
@@ -70,6 +72,7 @@ pub struct DataSpec {
 }
 
 impl DataSpec {
+    /// Size (MB) for `scale`.
     pub fn size_at(&self, scale: f64) -> f64 {
         self.size_mb * scale.powf(self.size_exp)
     }
@@ -83,6 +86,7 @@ pub struct Invocation {
 }
 
 impl Invocation {
+    /// An invocation at the given input scale.
     pub fn new(input_scale: f64) -> Self {
         Self { input_scale }
     }
@@ -91,10 +95,13 @@ impl Invocation {
 /// An annotated monolithic program.
 #[derive(Debug, Clone)]
 pub struct Program {
+    /// Program name (used in figure rows and trace labels).
     pub name: &'static str,
     /// `@app_limit(max_cpu, max_mem)`.
     pub app_limit: Resources,
+    /// All `@compute` sites, trigger-edge indices relative to this list.
     pub computes: Vec<ComputeSpec>,
+    /// All `@data` sites, access-edge indices relative to this list.
     pub data: Vec<DataSpec>,
     /// Index of the entry compute component.
     pub entry: usize,

@@ -26,14 +26,19 @@ pub const UNITS: usize = 16;
 /// Resolution presets: scale relative to 720P.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Resolution {
+    /// 240P (~0.10 MP) — the paper's smallest input.
     P240,
+    /// 720P (~0.92 MP) — the reference scale (1.0).
     P720,
+    /// 4K (~8.3 MP) — the paper's largest input.
     K4,
 }
 
 impl Resolution {
+    /// The three paper resolutions, smallest first.
     pub const ALL: [Resolution; 3] = [Resolution::P240, Resolution::P720, Resolution::K4];
 
+    /// Input scale relative to 720P.
     pub fn scale(&self) -> f64 {
         match self {
             Resolution::P240 => 0.11,
@@ -42,6 +47,7 @@ impl Resolution {
         }
     }
 
+    /// Display label used in figure rows.
     pub fn name(&self) -> &'static str {
         match self {
             Resolution::P240 => "240P",

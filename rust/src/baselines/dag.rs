@@ -24,7 +24,9 @@ use super::orion;
 /// Intermediate-data strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KvChoice {
+    /// Peak-provisioned long-running Redis instance.
     Redis,
+    /// Object store: slower hops, no provisioned instance.
     S3,
     /// Direct streaming through a long-running coordinator (original
     /// ExCamera's fixed VM).
@@ -46,8 +48,11 @@ pub enum FnSizing {
 /// One function-DAG system configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct DagParams {
+    /// System label used in figure rows.
     pub name: &'static str,
+    /// Intermediate-data strategy.
     pub kv: KvChoice,
+    /// Stage function-sizing policy.
     pub sizing: FnSizing,
     /// Sub-functions per logical worker (gg represents one frame batch
     /// with 80 functions → more startups + more KV hops).
@@ -56,6 +61,7 @@ pub struct DagParams {
     pub cpu_efficiency: f64,
     /// Fraction of function starts served warm.
     pub warm_fraction: f64,
+    /// Which platform's startup-latency model applies.
     pub startup_path: StartupPath,
     /// AWS CPU-memory coupling (Lambda: 1 vCPU / 1769 MB).
     pub aws_coupling: bool,

@@ -10,10 +10,13 @@ use crate::apps::{Invocation, Program};
 use crate::cluster::server::Consumption;
 use crate::metrics::{Breakdown, RunReport};
 
-/// Allocation and achieved utilization from the paper's measurement.
+/// Cores allocated to the encoder box (paper's measurement).
 pub const ALLOC_CORES: f64 = 32.0;
+/// Cores the encoder actually keeps busy (18 of 32).
 pub const USED_CORES: f64 = 18.0;
+/// Memory allocated to the encoder box (16 GB).
 pub const ALLOC_MEM_MB: f64 = 16384.0;
+/// Memory the encoder actually touches (14 of 16 GB).
 pub const USED_MEM_MB: f64 = 14336.0;
 
 /// Run the transcode natively on one server.

@@ -410,8 +410,11 @@ struct Slot {
 struct TenantQueueStats {
     /// Entries ever parked.
     enqueued: usize,
-    /// Entries that timed out (or were expired at end of trace).
+    /// Entries whose SLO deadline genuinely passed while parked.
     timed_out: usize,
+    /// Entries still parked when the trace ended whose deadline lay
+    /// *beyond* the last event — drained without an SLO violation.
+    expired: usize,
     /// Peak queue depth.
     depth_hwm: usize,
     /// Queueing delay of entries admitted from the queue.
@@ -424,6 +427,7 @@ impl TenantQueueStats {
         Self {
             enqueued: 0,
             timed_out: 0,
+            expired: 0,
             depth_hwm: 0,
             delay: StreamingMoments::new(),
             delay_p95: P2Quantile::new(0.95),
@@ -681,8 +685,19 @@ impl DeferredQueues {
     /// parked entry (per-entry deadlines may be non-monotone within a
     /// chain — O(parked)) and unlinks the winner mid-chain.
     pub fn pop_expired(&mut self, now: Millis) -> Option<(usize, usize)> {
-        let (app, i) = if matches!(self.policy, AdmissionPolicy::Deadline { .. }) {
-            self.earliest_deadline_at_most(now)?
+        let (app, i) = self.find_overdue(now)?;
+        let slot = self.detach(app, i);
+        self.stats[app].timed_out += 1;
+        Some((app, slot.sched))
+    }
+
+    /// Locate the globally smallest `(deadline, seq)` entry whose
+    /// deadline is ≤ `now` without detaching or counting it — the
+    /// shared selection behind [`Self::pop_expired`] and the end-of-
+    /// trace [`Self::expire_all`] split. Returns `(app, slot index)`.
+    fn find_overdue(&self, now: Millis) -> Option<(usize, usize)> {
+        if matches!(self.policy, AdmissionPolicy::Deadline { .. }) {
+            self.earliest_deadline_at_most(now)
         } else {
             let mut best: Option<(f64, u64, usize)> = None; // (deadline, seq, app)
             for app in 0..self.head.len() {
@@ -701,11 +716,8 @@ impl DeferredQueues {
                 }
             }
             let (_, _, app) = best?;
-            (app, self.head[app])
-        };
-        let slot = self.detach(app, i);
-        self.stats[app].timed_out += 1;
-        Some((app, slot.sched))
+            Some((app, self.head[app]))
+        }
     }
 
     /// Globally smallest `(deadline, seq)` entry whose deadline is
@@ -729,10 +741,22 @@ impl DeferredQueues {
         best.map(|(_, _, app, i)| (app, i))
     }
 
-    /// Expire *every* remaining entry (end of trace: no further
-    /// capacity-freeing events can admit them). Counted as timeouts.
-    pub fn expire_all(&mut self) {
-        while self.pop_expired(f64::INFINITY).is_some() {}
+    /// Drain *every* remaining entry at end of trace (`now` = the last
+    /// event time; no further capacity-freeing events can admit them),
+    /// splitting the accounting by whether the SLO was actually
+    /// violated: an entry whose deadline passed by `now` timed out
+    /// like any mid-trace expiry, while an entry whose deadline lies
+    /// *beyond* the last event never violated its SLO and is counted
+    /// as `expired` instead — the trace simply ended first.
+    pub fn expire_all(&mut self, now: Millis) {
+        while let Some((app, i)) = self.find_overdue(f64::INFINITY) {
+            let slot = self.detach(app, i);
+            if slot.deadline <= now {
+                self.stats[app].timed_out += 1;
+            } else {
+                self.stats[app].expired += 1;
+            }
+        }
     }
 
     /// Hand out the next entry to retry, in policy order:
@@ -919,6 +943,7 @@ impl DeferredQueues {
                     rejected: rejected[a],
                     aborted: aborted[a],
                     timed_out: st.timed_out,
+                    expired: st.expired,
                     queued: st.enqueued,
                     drained: cast::usize_of(st.delay.count()),
                     queue_depth_hwm: st.depth_hwm,
@@ -936,6 +961,7 @@ impl DeferredQueues {
             fleet.rejected += t.rejected;
             fleet.aborted += t.aborted;
             fleet.timed_out += t.timed_out;
+            fleet.expired += t.expired;
             fleet.queued += t.queued;
             fleet.drained += t.drained;
             fleet.queue_depth_hwm = fleet.queue_depth_hwm.max(t.queue_depth_hwm);
@@ -953,9 +979,12 @@ pub struct TenantAdmission {
     /// Invocations admitted but aborted mid-run (a later wave could
     /// not allocate even degraded).
     pub aborted: usize,
-    /// Parked entries that timed out before capacity freed (includes
-    /// entries expired when the trace ended).
+    /// Parked entries whose SLO deadline genuinely passed before
+    /// capacity freed (mid-trace or by the end of the trace).
     pub timed_out: usize,
+    /// Parked entries drained at end of trace whose deadline lay
+    /// beyond the last event — no SLO violation, the trace just ended.
+    pub expired: usize,
     /// Entries parked in the deferred queue at least once.
     pub queued: usize,
     /// Parked entries later admitted successfully.
@@ -970,8 +999,11 @@ pub struct TenantAdmission {
 
 impl TenantAdmission {
     /// Total arrivals that never completed for admission-side reasons.
+    /// The end-of-trace `expired` refinement stays inside this sum, so
+    /// the digest-folded total is byte-identical to the pre-split
+    /// accounting.
     pub fn failed(&self) -> usize {
-        self.rejected + self.aborted + self.timed_out
+        self.rejected + self.aborted + self.timed_out + self.expired
     }
 }
 
@@ -1137,15 +1169,44 @@ mod tests {
     }
 
     #[test]
-    fn expire_all_drains_everything_as_timeouts() {
-        let mut q = DeferredQueues::new(fair(1e9, 8), 3);
+    fn expire_all_splits_violations_from_trace_end_expiries() {
+        // Wait bound 100 ms: entries parked at t=0 deadline at t=100.
+        let mut q = DeferredQueues::new(fair(100.0, 8), 3);
         for app in 0..3 {
             assert!(q.try_park(app, app, 0.0));
         }
-        q.expire_all();
+        // Trace ends at t=250: every deadline has passed → timeouts.
+        q.expire_all(250.0);
         assert!(q.is_empty());
         let out = q.finish(&[0; 3], &[0; 3]);
         assert_eq!(out.fleet.timed_out, 3);
+        assert_eq!(out.fleet.expired, 0);
+        assert_eq!(out.fleet.failed(), 3);
+    }
+
+    /// Satellite regression (ISSUE 10): a late arrival parked under a
+    /// long deadline must drain as `expired` (its SLO was never
+    /// violated — the trace just ended), not as `timed_out`, while an
+    /// entry whose deadline genuinely passed stays a timeout. The sum
+    /// the digest folds (`failed()`) covers both, so the refinement is
+    /// invisible to pinned digests.
+    #[test]
+    fn expire_all_counts_unviolated_deadlines_as_expired_not_timed_out() {
+        let mut q = DeferredQueues::new(edf(1e9, 16), 2);
+        // tenant 0: deadline 50 — passed well before the trace ends
+        assert!(q.park_with_deadline(0, 7, 0.0, 50.0));
+        // tenant 1: parked late, deadline 10_000 — far beyond trace end
+        assert!(q.park_with_deadline(1, 8, 190.0, 10_000.0));
+        q.expire_all(200.0);
+        assert!(q.is_empty());
+        let out = q.finish(&[0, 0], &[0, 0]);
+        assert_eq!(out.per_tenant[0].timed_out, 1, "violated SLO stays a timeout");
+        assert_eq!(out.per_tenant[0].expired, 0);
+        assert_eq!(out.per_tenant[1].timed_out, 0, "unviolated SLO is not a timeout");
+        assert_eq!(out.per_tenant[1].expired, 1);
+        assert_eq!(out.fleet.timed_out, 1);
+        assert_eq!(out.fleet.expired, 1);
+        assert_eq!(out.fleet.failed(), 2, "digest-folded sum unchanged by the split");
     }
 
     // ---- SLO-aware (Deadline) policy ------------------------------------

@@ -102,7 +102,7 @@ use crate::apps::{lr, tpcds, video, Invocation};
 use crate::baselines::faas;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Consumption;
-use crate::cluster::{ClusterSpec, Resources, ServerId, StartupModel, StartupTier};
+use crate::cluster::{ClusterSpec, RackId, Resources, ServerId, StartupModel, StartupTier};
 use crate::metrics::fairness;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 use crate::trace::{Archetype, UsageTrace};
@@ -116,6 +116,7 @@ use super::admission::{
 use super::exec::{OngoingInvocation, TimelineEv};
 use super::faults::{FaultConfig, FaultKind, FaultPlan};
 use super::graph::ResourceGraph;
+use super::workflow::{StageLaunch, Workflow, WorkflowRuntime};
 use super::{Platform, ZenixConfig};
 
 /// How one tenant draws its per-invocation input scale.
@@ -147,6 +148,13 @@ pub struct TenantApp {
     /// arrival is evicted. `None` uses the policy's default
     /// `deadline_ms`. Ignored by the other policies.
     pub deadline_ms: Option<f64>,
+    /// Inter-invocation DAG this tenant's arrivals drive
+    /// ([`super::workflow`]): each scheduled arrival runs the DAG's
+    /// root stage, and stage completions spawn the declared downstream
+    /// invocations with data handoff. `None` (and the trivial
+    /// [`Workflow::single`]) replay byte-identically to independent
+    /// arrivals.
+    pub workflow: Option<Workflow>,
 }
 
 /// Driver parameters. The same config (and therefore the same
@@ -209,6 +217,13 @@ pub struct DriverConfig {
     /// each rack's spare snapshot budget. Ignored (and digest-inert)
     /// while `snapshot_budget_bytes == 0`.
     pub prewarm: bool,
+    /// Rack-affinity placement for workflow downstream stages (the
+    /// default): a ready stage prefers the rack holding the most
+    /// resident input bytes, spilling to the ordinary smallest-fit
+    /// when the candidate cannot fit. `false` routes every stage
+    /// blind (smallest-fit) — the ablation axis of the workflow
+    /// figure sweep. Digest-inert for DAG-less mixes.
+    pub workflow_affinity: bool,
 }
 
 impl Default for DriverConfig {
@@ -227,6 +242,7 @@ impl Default for DriverConfig {
             epoch_ms: 250.0,
             snapshot_budget_bytes: 0,
             prewarm: false,
+            workflow_affinity: true,
         }
     }
 }
@@ -356,6 +372,15 @@ pub struct AppStats {
     pub aborted: usize,
     /// Deferred-queue entries that timed out before capacity freed.
     pub timed_out: usize,
+    /// Entries still parked when the trace ended whose deadline lay
+    /// beyond the last event — drained, not SLO-violated (the
+    /// end-of-trace split of [`AppStats::timed_out`]).
+    pub expired: usize,
+    /// Workflow downstream-stage launch attempts this app spawned
+    /// beyond its scheduled arrivals (zero for DAG-less tenants).
+    /// These widen the conservation identity's right-hand side:
+    /// `completed + failed() == scheduled + spawned`.
+    pub spawned: usize,
     /// Arrivals parked in the deferred queue at least once.
     pub queued: usize,
     /// Peak deferred-queue depth for this tenant.
@@ -413,12 +438,14 @@ pub struct AppStats {
 
 impl AppStats {
     /// Arrivals that never completed: admission-time rejections plus
-    /// mid-run aborts plus queue timeouts plus unrecovered faults (the
-    /// distinct failure modes the old conflated `failed` counter
-    /// merged). Together with `completed` this partitions the app's
-    /// arrivals: `completed + failed() == scheduled`.
+    /// mid-run aborts plus queue timeouts plus end-of-trace expiries
+    /// plus unrecovered faults (the distinct failure modes the old
+    /// conflated `failed` counter merged). Together with `completed`
+    /// this partitions the app's invocations: `completed + failed() ==
+    /// scheduled + spawned` (the `spawned` term covers workflow
+    /// downstream stages; it is zero for DAG-less tenants).
     pub fn failed(&self) -> usize {
-        self.rejected + self.aborted + self.timed_out + self.faulted_unrecovered
+        self.rejected + self.aborted + self.timed_out + self.expired + self.faulted_unrecovered
     }
 
     /// This tenant's goodput/demand ratio: completed over scheduled
@@ -450,11 +477,14 @@ pub struct DriverReport {
     pub completed: usize,
     /// Total failed arrivals: `rejected + aborted + timed_out` (kept as
     /// one number because the digest folds it; the split fields below
-    /// are the meaningful breakdown). Unrecovered faults are *not*
-    /// folded in — they live in [`DriverReport::faulted_unrecovered`]
-    /// so the digest-folded quantity keeps its pre-chaos meaning; the
-    /// full conservation identity is `completed + rejected + aborted +
-    /// timed_out + faulted_unrecovered == arrivals`.
+    /// are the meaningful breakdown; since the end-of-trace split,
+    /// `timed_out + expired` together replace the old drain-everything
+    /// `timed_out`, so the folded sum is byte-identical). Unrecovered
+    /// faults are *not* folded in — they live in
+    /// [`DriverReport::faulted_unrecovered`] so the digest-folded
+    /// quantity keeps its pre-chaos meaning; the full conservation
+    /// identity is `completed + rejected + aborted + timed_out +
+    /// expired + faulted_unrecovered == arrivals + spawned`.
     // digest: folded
     pub failed: usize,
     /// Admission-time rejections across the fleet.
@@ -463,9 +493,15 @@ pub struct DriverReport {
     /// Mid-run aborts across the fleet.
     // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
     pub aborted: usize,
-    /// Deferred-queue timeouts across the fleet.
+    /// Deferred-queue timeouts across the fleet (entries whose
+    /// deadline genuinely passed — SLO violations).
     // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
     pub timed_out: usize,
+    /// Entries still parked at end-of-trace whose deadline lay beyond
+    /// the last event: drained because the trace ended, not because
+    /// their SLO was violated.
+    // digest: excluded(breakdown of the folded `failed` total; folding both would double-count)
+    pub expired: usize,
     /// Invocations hit by an injected fault mid-run (fleet-wide;
     /// `faulted == recovered + faulted_unrecovered`).
     // digest: excluded(chaos telemetry added after the digest was pinned; zero in default-policy runs)
@@ -598,6 +634,47 @@ pub struct DriverReport {
     /// High-water mark of resident snapshot bytes, max over racks.
     // digest: excluded(snapshot-cache telemetry; an optimization counter, not a result)
     pub snap_bytes_hwm: u64,
+    /// Workflow runs opened (one per admitted arrival of a tenant with
+    /// a non-trivial DAG; 0 for DAG-less mixes).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_runs: u64,
+    /// Workflow runs whose every stage completed.
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_runs_completed: u64,
+    /// Workflow stage invocations admitted and started (roots
+    /// included).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_stages_started: u64,
+    /// Workflow stage invocations that ran to completion.
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_stages_completed: u64,
+    /// Downstream-stage launch attempts (the `spawned` term of the
+    /// conservation identity, fleet-wide).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_spawned: u64,
+    /// Handoff megabytes transferred across racks because a consumer
+    /// stage was placed off the producer's rack — the quantity
+    /// rack-affinity placement exists to shrink.
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_cross_rack_mb: f64,
+    /// Mean end-to-end workflow latency (root admission to last stage
+    /// completion, ms; 0 when no run completed).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_e2e_mean_ms: f64,
+    /// P² p95 end-to-end workflow latency (ms).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_e2e_p95_ms: f64,
+    /// P² p99 end-to-end workflow latency (ms).
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_e2e_p99_ms: f64,
+    /// Downstream-stage placements that landed on the preferred
+    /// (input-resident) rack.
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_affinity_hits: u64,
+    /// Downstream-stage placements whose preferred rack could not fit,
+    /// spilling to the ordinary smallest-fit route.
+    // digest: excluded(workflow telemetry added after the digest was pinned; zero in DAG-less runs)
+    pub wf_affinity_spills: u64,
     /// Index-aligned with the schedule: which arrivals this system
     /// completed (all-true for the closed-form FaaS baseline). A
     /// bitset — one bit per arrival, the only per-invocation structure
@@ -715,6 +792,12 @@ enum EvKind {
     /// fires (server crash, rack outage, transient compute crash, or
     /// a repair bringing capacity back).
     Fault { idx: usize },
+    /// A workflow downstream stage becomes launchable: its inputs have
+    /// arrived on the pinned rack (transfer delay included) and the
+    /// coordinator attempts admission. Enqueued by the producing
+    /// stage's `WaveDone` in edge-declaration order, so replay stays
+    /// deterministic.
+    StageLaunch { run: u32, stage: u32 },
 }
 
 struct HeapEv {
@@ -766,16 +849,24 @@ pub(crate) struct Slab {
     slots: Vec<Slot>,
     free_head: usize,
     live: usize,
+    /// Workflow `(run, stage)` side table, index-aligned with `slots`
+    /// (`(NO_WF, _)` for non-workflow invocations). A side table so the
+    /// `Slot::Busy` shape — pattern-matched across both event loops —
+    /// stays untouched.
+    wf: Vec<(u32, u32)>,
 }
+
+/// Sentinel run id marking a slab slot as not workflow-tracked.
+const NO_WF: u32 = u32::MAX;
 
 impl Slab {
     pub(crate) fn new() -> Self {
-        Self { slots: Vec::with_capacity(64), free_head: NIL, live: 0 }
+        Self { slots: Vec::with_capacity(64), free_head: NIL, live: 0, wf: Vec::new() }
     }
 
     pub(crate) fn insert(&mut self, app: usize, sched: usize, st: OngoingInvocation) -> usize {
         self.live += 1;
-        if self.free_head != NIL {
+        let i = if self.free_head != NIL {
             let i = self.free_head;
             self.free_head = match self.slots[i] {
                 Slot::Free { next } => next,
@@ -786,6 +877,24 @@ impl Slab {
         } else {
             self.slots.push(Slot::Busy { app, sched, st });
             self.slots.len() - 1
+        };
+        if self.wf.len() <= i {
+            self.wf.resize(i + 1, (NO_WF, 0));
+        }
+        self.wf[i] = (NO_WF, 0);
+        i
+    }
+
+    /// Tag a busy slot as workflow stage `(run, stage)`.
+    pub(crate) fn set_wf(&mut self, i: usize, run: u32, stage: u32) {
+        self.wf[i] = (run, stage);
+    }
+
+    /// Workflow `(run, stage)` of a busy slot, if it is one.
+    pub(crate) fn wf_meta(&self, i: usize) -> Option<(u32, u32)> {
+        match self.wf.get(i) {
+            Some(&(run, stage)) if run != NO_WF => Some((run, stage)),
+            _ => None,
         }
     }
 
@@ -1018,6 +1127,10 @@ impl<'a> Aggregator<'a> {
                     rejected: t.rejected,
                     aborted: t.aborted,
                     timed_out: t.timed_out,
+                    expired: t.expired,
+                    // overwritten by the driver for workflow tenants;
+                    // DAG-less apps and the baselines spawn nothing
+                    spawned: 0,
                     queued: t.queued,
                     queue_depth_hwm: t.queue_depth_hwm,
                     mean_queue_delay_ms: t.mean_queue_delay_ms,
@@ -1048,10 +1161,12 @@ impl<'a> Aggregator<'a> {
 
         let completed = self.completed;
         let p99_exec_ms = self.p99.value();
-        // rejected + aborted + timed_out: identical to the old conflated
-        // sum under RejectImmediately (timeouts only exist with
-        // queueing), so the digest below is unchanged for the pinned
-        // default configuration.
+        // rejected + aborted + timed_out + expired: identical to the
+        // old conflated sum under RejectImmediately (timeouts and
+        // end-of-trace expiries only exist with queueing), and the
+        // timed_out/expired split re-partitions the exact entries the
+        // old drain counted — the digest below is unchanged for every
+        // previously pinned configuration.
         let failed = adm.fleet.failed();
         let warm_hits: usize = self.per_app.iter().map(|a| a.warm).sum();
         let cold_starts: usize = self.per_app.iter().map(|a| a.cold).sum();
@@ -1092,6 +1207,7 @@ impl<'a> Aggregator<'a> {
             rejected: adm.fleet.rejected,
             aborted: adm.fleet.aborted,
             timed_out: adm.fleet.timed_out,
+            expired: adm.fleet.expired,
             // overwritten by the driver when fault injection is live
             faulted: 0,
             recovered: 0,
@@ -1133,6 +1249,19 @@ impl<'a> Aggregator<'a> {
             snap_evictions: 0,
             snap_prewarms: 0,
             snap_bytes_hwm: 0,
+            // overwritten by the event loops when workflow tenants are
+            // present; DAG-less runs keep the idle defaults
+            wf_runs: 0,
+            wf_runs_completed: 0,
+            wf_stages_started: 0,
+            wf_stages_completed: 0,
+            wf_spawned: 0,
+            wf_cross_rack_mb: 0.0,
+            wf_e2e_mean_ms: 0.0,
+            wf_e2e_p95_ms: 0.0,
+            wf_e2e_p99_ms: 0.0,
+            wf_affinity_hits: 0,
+            wf_affinity_spills: 0,
             completed_mask,
             digest: h,
         }
@@ -1423,6 +1552,14 @@ impl<'a> MultiTenantDriver<'a> {
         let mut recovery_moments = StreamingMoments::new();
         let mut recovery_p95 = P2Quantile::new(0.95);
 
+        // Workflow runtime: inert (no runs, no events, no cluster
+        // mutation) unless some tenant declares a non-trivial DAG, so
+        // DAG-less replays stay byte-identical to the pinned digest.
+        let mut wfrt = WorkflowRuntime::new();
+        wfrt.set_net(platform.config.net);
+        let mut spawned_per_app = vec![0usize; self.apps.len()];
+        let mut stage_buf: Vec<StageLaunch> = Vec::new();
+
         loop {
             let take_arrival = match (schedule.arrivals.get(next_arrival), heap.peek()) {
                 (Some(a), Some(h)) => a.at <= h.at,
@@ -1450,9 +1587,10 @@ impl<'a> MultiTenantDriver<'a> {
                         &mut in_flight,
                         &mut max_in_flight,
                         &mut tiers,
+                        &mut wfrt,
                     );
                     if queues.len() == before {
-                        queues.expire_all();
+                        queues.expire_all(end_time);
                     }
                     continue;
                 }
@@ -1484,6 +1622,7 @@ impl<'a> MultiTenantDriver<'a> {
                             &mut in_flight,
                             &mut max_in_flight,
                             &mut tiers,
+                            &mut wfrt,
                         );
                     }
                     if !queues.is_empty() {
@@ -1505,6 +1644,7 @@ impl<'a> MultiTenantDriver<'a> {
                     &mut in_flight,
                     &mut max_in_flight,
                     &mut tiers,
+                    &mut wfrt,
                 );
                 if !admitted && !queues.try_park(arr.app, i, arr.at) {
                     // saturated beyond degradation and nowhere to park:
@@ -1566,11 +1706,13 @@ impl<'a> MultiTenantDriver<'a> {
                         platform.wave_done(graph, st)
                     };
                     if finished {
+                        let wf_meta = slab.wf_meta(slot);
                         let (app_idx, sched_idx, st) =
                             slab.take(slot).expect("busy slot");
                         in_flight -= 1;
                         let warm = st.first_wave_warm().unwrap_or(false);
                         let growths = st.growths();
+                        let done_rack = st.rack_id;
                         if let Some(t_fault) = st.fault_at {
                             recovered_per_app[app_idx] += 1;
                             recovery_moments.push(at - t_fault);
@@ -1580,6 +1722,35 @@ impl<'a> MultiTenantDriver<'a> {
                             platform.finish_invocation_attrib(graph, st);
                         completed_mask.set(sched_idx);
                         agg.record(app_idx, exec_ms, growths, warm, consumption);
+                        if let Some((run, stage)) = wf_meta {
+                            // Stage completion: retain out-edge handoffs
+                            // on this rack and enqueue ready successors
+                            // as ordinary heap events in edge order.
+                            let wf = self.apps[app_idx]
+                                .workflow
+                                .as_ref()
+                                .expect("workflow-tagged slot without a DAG");
+                            stage_buf.clear();
+                            wfrt.on_stage_done(
+                                run,
+                                stage,
+                                done_rack,
+                                at,
+                                wf,
+                                &graph.program,
+                                &mut platform,
+                                self.cfg.workflow_affinity,
+                                &mut stage_buf,
+                            );
+                            for l in stage_buf.drain(..) {
+                                heap.push(HeapEv {
+                                    at: l.at,
+                                    seq,
+                                    kind: EvKind::StageLaunch { run: l.run, stage: l.stage },
+                                });
+                                seq += 1;
+                            }
+                        }
                     } else {
                         let start = {
                             let st = slab.state_mut(slot).expect("busy slot");
@@ -1603,6 +1774,7 @@ impl<'a> MultiTenantDriver<'a> {
                                 // not an abort — the failure split
                                 // stays a partition of arrivals.
                                 in_flight -= 1;
+                                let wf_meta = slab.wf_meta(slot);
                                 if let Some((_, _, st)) = slab.take(slot) {
                                     if st.fault_at.is_some() {
                                         faulted_unrec_per_app[app_idx] += 1;
@@ -1613,7 +1785,49 @@ impl<'a> MultiTenantDriver<'a> {
                                 } else {
                                     aborted_per_app[app_idx] += 1;
                                 }
+                                if let Some((run, _)) = wf_meta {
+                                    // The run fails: downstream stages
+                                    // stop spawning and held handoff
+                                    // charges release at retirement.
+                                    wfrt.on_stage_aborted(run, &mut platform, at);
+                                }
                             }
+                        }
+                    }
+                }
+                EvKind::StageLaunch { run, stage } => {
+                    let app = wfrt.run_app(run);
+                    let wf = self.apps[app]
+                        .workflow
+                        .as_ref()
+                        .expect("stage launch for a DAG-less tenant");
+                    if wfrt.begin_launch(run, stage, wf, &mut platform, at) {
+                        spawned_per_app[app] += 1;
+                        let admitted = try_admit_stage(
+                            &mut platform,
+                            self.apps,
+                            app,
+                            wfrt.run_sched(run),
+                            run,
+                            stage,
+                            wfrt.stage_scale(run, stage, wf),
+                            wfrt.pinned_rack(run, stage),
+                            at,
+                            &mut heap,
+                            &mut seq,
+                            &mut slab,
+                            &mut in_flight,
+                            &mut max_in_flight,
+                            &mut tiers,
+                        );
+                        if admitted {
+                            wfrt.on_stage_admitted(run);
+                        } else {
+                            // A stage the cluster cannot place fails
+                            // its run; the attempt still conserves as
+                            // a rejection against the spawned total.
+                            rejected_per_app[app] += 1;
+                            wfrt.on_stage_rejected(run, &mut platform, at);
                         }
                     }
                 }
@@ -1638,6 +1852,7 @@ impl<'a> MultiTenantDriver<'a> {
                     &mut in_flight,
                     &mut max_in_flight,
                     &mut tiers,
+                    &mut wfrt,
                 );
             }
         }
@@ -1646,8 +1861,11 @@ impl<'a> MultiTenantDriver<'a> {
         // images return their rack-memory charge at end of trace (not
         // counted as evictions — nothing displaced them).
         platform.drain_snapshot_caches(end_time);
+        // Every workflow run must have retired (the heap drained, so no
+        // stage can still be pending) with its handoff charges freed.
+        wfrt.assert_idle();
 
-        debug_assert!(slab.high_water() <= schedule.arrivals.len());
+        debug_assert!(slab.high_water() <= schedule.arrivals.len() + spawned_per_app.iter().sum::<usize>());
         debug_assert_eq!(slab.live(), in_flight, "slab/in-flight accounting out of sync");
         debug_assert_eq!(in_flight, 0, "events drained with invocations still in flight");
         #[cfg(debug_assertions)]
@@ -1694,6 +1912,23 @@ impl<'a> MultiTenantDriver<'a> {
         report.snap_evictions = snap.evictions;
         report.snap_prewarms = snap.prewarms;
         report.snap_bytes_hwm = snap.bytes_hwm;
+        let wstats = &wfrt.stats;
+        report.wf_runs = wstats.runs;
+        report.wf_runs_completed = wstats.runs_completed;
+        report.wf_stages_started = wstats.stages_started;
+        report.wf_stages_completed = wstats.stages_completed;
+        report.wf_spawned = wstats.spawned;
+        report.wf_cross_rack_mb = wstats.cross_rack_mb;
+        if wstats.e2e.count() > 0 {
+            report.wf_e2e_mean_ms = wstats.e2e.mean();
+            report.wf_e2e_p95_ms = wstats.e2e_p95.value();
+            report.wf_e2e_p99_ms = wstats.e2e_p99.value();
+        }
+        report.wf_affinity_hits = route.affinity_hits;
+        report.wf_affinity_spills = route.affinity_spills;
+        for (i, a) in report.apps.iter_mut().enumerate() {
+            a.spawned = spawned_per_app[i];
+        }
         report
     }
 
@@ -1817,6 +2052,7 @@ fn try_admit(
     in_flight: &mut usize,
     max_in_flight: &mut usize,
     tiers: &mut TierTelemetry,
+    wfrt: &mut WorkflowRuntime,
 ) -> bool {
     let graph = &apps[arr.app].graph;
     let mut st = platform.begin_at(graph, Invocation::new(arr.scale), at, None);
@@ -1828,6 +2064,61 @@ fn try_admit(
             let st = slab.state_mut(slot).expect("just inserted");
             tiers.record(
                 arr.app,
+                st.start_tier().unwrap_or(StartupTier::ColdBoot),
+                st.start_latency_ms(),
+            );
+            drain_pending(heap, seq, slot, st);
+            heap.push(HeapEv { at: st.wave_done_at(), seq: *seq, kind: EvKind::WaveDone { slot } });
+            *seq += 1;
+            if let Some(wf) = apps[arr.app].workflow.as_ref() {
+                // The admitted arrival is a workflow root: open its run
+                // so this invocation's completion spawns the DAG.
+                let run = wfrt.on_root_admitted(arr.app, sched_idx, arr.scale, at, wf);
+                slab.set_wf(slot, run, 0);
+            }
+            true
+        }
+        Err(_) => {
+            platform.recycle_shell(st);
+            false
+        }
+    }
+}
+
+/// Admit one workflow downstream stage on its pinned rack: `begin_at_on`
+/// (no re-route) + first `start_wave`, slab registration tagged with the
+/// `(run, stage)` workflow metadata. Stages bypass the deferred queues —
+/// a stage that cannot be admitted fails its run (counted as a
+/// rejection of the spawning tenant), it does not park.
+#[allow(clippy::too_many_arguments)]
+fn try_admit_stage(
+    platform: &mut Platform,
+    apps: &[TenantApp],
+    app: usize,
+    sched_idx: usize,
+    run: u32,
+    stage: u32,
+    scale: f64,
+    rack: RackId,
+    at: Millis,
+    heap: &mut BinaryHeap<HeapEv>,
+    seq: &mut u64,
+    slab: &mut Slab,
+    in_flight: &mut usize,
+    max_in_flight: &mut usize,
+    tiers: &mut TierTelemetry,
+) -> bool {
+    let graph = &apps[app].graph;
+    let mut st = platform.begin_at_on(graph, Invocation::new(scale), at, None, Some(rack));
+    match platform.start_wave(graph, &mut st) {
+        Ok(()) => {
+            *in_flight += 1;
+            *max_in_flight = (*max_in_flight).max(*in_flight);
+            let slot = slab.insert(app, sched_idx, st);
+            slab.set_wf(slot, run, stage);
+            let st = slab.state_mut(slot).expect("just inserted");
+            tiers.record(
+                app,
                 st.start_tier().unwrap_or(StartupTier::ColdBoot),
                 st.start_latency_ms(),
             );
@@ -1868,6 +2159,7 @@ fn drain_deferred(
     in_flight: &mut usize,
     max_in_flight: &mut usize,
     tiers: &mut TierTelemetry,
+    wfrt: &mut WorkflowRuntime,
 ) {
     while queues.pop_expired(now).is_some() {}
     let fair = queues.policy().skips_blocked_tenant();
@@ -1886,6 +2178,7 @@ fn drain_deferred(
             in_flight,
             max_in_flight,
             tiers,
+            wfrt,
         );
         if admitted {
             queues.record_admitted(p.app, now - p.enqueued_at);
@@ -2009,6 +2302,7 @@ pub fn standard_mix(n_apps: usize, arch: Archetype) -> Vec<TenantApp> {
             weight: 1.0,
             scales: ScaleModel::Fixed(scale),
             deadline_ms: None,
+            workflow: None,
         });
     }
     let mut i = 0usize;
@@ -2020,6 +2314,7 @@ pub fn standard_mix(n_apps: usize, arch: Archetype) -> Vec<TenantApp> {
             weight: 1.0,
             scales: ScaleModel::AzureTrace(arch),
             deadline_ms: None,
+            workflow: None,
         });
         i += 1;
     }

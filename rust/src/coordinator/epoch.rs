@@ -70,7 +70,7 @@ use std::sync::Mutex;
 use crate::apps::Invocation;
 use crate::cluster::clock::Millis;
 use crate::cluster::server::Server;
-use crate::cluster::{Resources, ServerId, StartupTier};
+use crate::cluster::{RackId, Resources, ServerId, StartupTier};
 use crate::metrics::fairness::JainAccumulator;
 use crate::metrics::streaming::{P2Quantile, StreamingMoments};
 
@@ -81,6 +81,7 @@ use super::driver::{
 };
 use super::exec::{apply_timeline_on, AllocSink, OngoingInvocation, TimelineEv};
 use super::faults::{FaultKind, FaultPlan};
+use super::workflow::{StageLaunch, WorkflowRuntime};
 use super::{Platform, ZenixConfig};
 
 /// Sentinel shard index for the global (cross-rack) slab.
@@ -112,6 +113,12 @@ enum GKind {
     WaveDone { slot: SlabRef },
     /// Scheduled fault/repair event `idx` of the run's [`FaultPlan`].
     Fault { idx: usize },
+    /// A workflow downstream stage becomes launchable (always
+    /// coordinator-side: stage admission routes, allocates and spawns
+    /// across racks, exactly like the fence events above — so every
+    /// worker count observes the identical launch order and the digest
+    /// stays worker-count invariant).
+    StageLaunch { run: u32, stage: u32 },
 }
 
 struct GEv {
@@ -365,6 +372,22 @@ fn slot_take(
     }
 }
 
+fn slot_set_wf(ctxs: &mut [ShardCtx], gslab: &mut Slab, slot: SlabRef, run: u32, stage: u32) {
+    if slot.shard == GLOBAL {
+        gslab.set_wf(slot.idx, run, stage);
+    } else {
+        ctxs[slot.shard].slab.set_wf(slot.idx, run, stage);
+    }
+}
+
+fn slot_wf_meta(ctxs: &[ShardCtx], gslab: &Slab, slot: SlabRef) -> Option<(u32, u32)> {
+    if slot.shard == GLOBAL {
+        gslab.wf_meta(slot.idx)
+    } else {
+        ctxs[slot.shard].slab.wf_meta(slot.idx)
+    }
+}
+
 /// The whole mutable state of one sharded replay. One instance per
 /// [`run_platform_sharded`] call; methods are the loop's phases.
 struct Engine<'a, 'b> {
@@ -400,6 +423,13 @@ struct Engine<'a, 'b> {
     tiers: TierTelemetry,
     epochs: u64,
     engaged_batches: u64,
+    /// Workflow runtime — all bookkeeping happens at coordinator-side
+    /// instants (`WaveDone`, `StageLaunch`), so the sharded replay
+    /// observes the sequential loop's exact launch order.
+    wfrt: WorkflowRuntime,
+    workflow_affinity: bool,
+    spawned_per_app: Vec<usize>,
+    stage_buf: Vec<StageLaunch>,
 }
 
 impl<'a, 'b> Engine<'a, 'b> {
@@ -435,6 +465,65 @@ impl<'a, 'b> Engine<'a, 'b> {
                 if let Some(st) = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot) {
                     // hand the drained buffer back so the next wave
                     // reuses its capacity
+                    st.pending = pending;
+                }
+                self.gheap.push(GEv {
+                    at: wave_done_at,
+                    seq: self.seq,
+                    kind: GKind::WaveDone { slot },
+                });
+                self.seq += 1;
+                if let Some(wf) = self.apps[arr.app].workflow.as_ref() {
+                    let run = self.wfrt.on_root_admitted(arr.app, sched_idx, arr.scale, at, wf);
+                    slot_set_wf(&mut self.ctxs, &mut self.gslab, slot, run, 0);
+                }
+                true
+            }
+            Err(_) => {
+                self.platform.recycle_shell(st);
+                false
+            }
+        }
+    }
+
+    /// Admit one workflow downstream stage on its pinned rack —
+    /// [`try_admit_sharded`] with `begin_at_on` (no re-route) and the
+    /// slab entry tagged with the stage's workflow metadata.
+    #[allow(clippy::too_many_arguments)]
+    fn try_admit_stage_sharded(
+        &mut self,
+        app: usize,
+        sched_idx: usize,
+        run: u32,
+        stage: u32,
+        scale: f64,
+        rack: RackId,
+        at: Millis,
+    ) -> bool {
+        let graph = &self.apps[app].graph;
+        let mut st =
+            self.platform.begin_at_on(graph, Invocation::new(scale), at, None, Some(rack));
+        match self.platform.start_wave(graph, &mut st) {
+            Ok(()) => {
+                self.in_flight += 1;
+                self.max_in_flight = self.max_in_flight.max(self.in_flight);
+                self.tiers.record(
+                    app,
+                    st.start_tier().unwrap_or(StartupTier::ColdBoot),
+                    st.start_latency_ms(),
+                );
+                let home = wave_home(&st.pending, self.spr, self.ctxs.len());
+                let mut pending = std::mem::take(&mut st.pending);
+                let wave_done_at = st.wave_done_at();
+                let slot = match home {
+                    Some(r) => {
+                        SlabRef { shard: r, idx: self.ctxs[r].slab.insert(app, sched_idx, st) }
+                    }
+                    None => SlabRef { shard: GLOBAL, idx: self.gslab.insert(app, sched_idx, st) },
+                };
+                slot_set_wf(&mut self.ctxs, &mut self.gslab, slot, run, stage);
+                self.route_wave(slot, home, &mut pending);
+                if let Some(st) = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot) {
                     st.pending = pending;
                 }
                 self.gheap.push(GEv {
@@ -574,11 +663,13 @@ impl<'a, 'b> Engine<'a, 'b> {
                     self.platform.wave_done(graph, st)
                 };
                 if finished {
+                    let wf_meta = slot_wf_meta(&self.ctxs, &self.gslab, slot);
                     let (app_idx, sched_idx, st) =
                         slot_take(&mut self.ctxs, &mut self.gslab, slot).expect("busy slot");
                     self.in_flight -= 1;
                     let warm = st.first_wave_warm().unwrap_or(false);
                     let growths = st.growths();
+                    let done_rack = st.rack_id;
                     if let Some(t_fault) = st.fault_at {
                         self.recovered_per_app[app_idx] += 1;
                         self.recovery_moments.push(at - t_fault);
@@ -587,6 +678,34 @@ impl<'a, 'b> Engine<'a, 'b> {
                     let (exec_ms, consumption) = self.platform.finish_invocation_attrib(graph, st);
                     self.completed_mask.set(sched_idx);
                     self.agg.record(app_idx, exec_ms, growths, warm, consumption);
+                    if let Some((run, stage)) = wf_meta {
+                        let wf = self.apps[app_idx]
+                            .workflow
+                            .as_ref()
+                            .expect("workflow-tagged slot without a DAG");
+                        let mut buf = std::mem::take(&mut self.stage_buf);
+                        buf.clear();
+                        self.wfrt.on_stage_done(
+                            run,
+                            stage,
+                            done_rack,
+                            at,
+                            wf,
+                            &graph.program,
+                            &mut self.platform,
+                            self.workflow_affinity,
+                            &mut buf,
+                        );
+                        for l in buf.drain(..) {
+                            self.gheap.push(GEv {
+                                at: l.at,
+                                seq: self.seq,
+                                kind: GKind::StageLaunch { run: l.run, stage: l.stage },
+                            });
+                            self.seq += 1;
+                        }
+                        self.stage_buf = buf;
+                    }
                 } else {
                     let start = {
                         let st = slot_state_mut(&mut self.ctxs, &mut self.gslab, slot)
@@ -621,6 +740,7 @@ impl<'a, 'b> Engine<'a, 'b> {
                         }
                         Err(_) => {
                             self.in_flight -= 1;
+                            let wf_meta = slot_wf_meta(&self.ctxs, &self.gslab, slot);
                             if let Some((_, _, st)) =
                                 slot_take(&mut self.ctxs, &mut self.gslab, slot)
                             {
@@ -633,7 +753,31 @@ impl<'a, 'b> Engine<'a, 'b> {
                             } else {
                                 self.aborted_per_app[app_idx] += 1;
                             }
+                            if let Some((run, _)) = wf_meta {
+                                self.wfrt.on_stage_aborted(run, &mut self.platform, at);
+                            }
                         }
+                    }
+                }
+            }
+            GKind::StageLaunch { run, stage } => {
+                let app = self.wfrt.run_app(run);
+                let wf = self.apps[app]
+                    .workflow
+                    .as_ref()
+                    .expect("stage launch for a DAG-less tenant");
+                if self.wfrt.begin_launch(run, stage, wf, &mut self.platform, at) {
+                    self.spawned_per_app[app] += 1;
+                    let sched_idx = self.wfrt.run_sched(run);
+                    let scale = self.wfrt.stage_scale(run, stage, wf);
+                    let rack = self.wfrt.pinned_rack(run, stage);
+                    let admitted =
+                        self.try_admit_stage_sharded(app, sched_idx, run, stage, scale, rack, at);
+                    if admitted {
+                        self.wfrt.on_stage_admitted(run);
+                    } else {
+                        self.rejected_per_app[app] += 1;
+                        self.wfrt.on_stage_rejected(run, &mut self.platform, at);
                     }
                 }
             }
@@ -704,7 +848,7 @@ impl<'a, 'b> Engine<'a, 'b> {
                 let now = self.end_time;
                 self.drain_deferred_sharded(now);
                 if self.queues.len() == before_len {
-                    self.queues.expire_all();
+                    self.queues.expire_all(now);
                 }
                 return;
             }
@@ -908,11 +1052,17 @@ impl<'a, 'b> Engine<'a, 'b> {
         // Same teardown order as the sequential loop: resident snapshot
         // images return their rack-memory charge before the leak asserts.
         self.platform.drain_snapshot_caches(self.end_time);
+        // Every workflow run retired with its handoff charges released.
+        self.wfrt.assert_idle();
         #[cfg(debug_assertions)]
         {
             let high_water: usize = self.gslab.high_water()
                 + self.ctxs.iter().map(|c| c.slab.high_water()).sum::<usize>();
-            debug_assert!(high_water <= self.schedule.arrivals.len());
+            debug_assert!(
+                high_water
+                    <= self.schedule.arrivals.len()
+                        + self.spawned_per_app.iter().sum::<usize>()
+            );
             let live: usize =
                 self.gslab.live() + self.ctxs.iter().map(|c| c.slab.live()).sum::<usize>();
             debug_assert_eq!(live, self.in_flight, "slab/in-flight accounting out of sync");
@@ -987,6 +1137,23 @@ impl<'a, 'b> Engine<'a, 'b> {
         report.snap_evictions = snap.evictions;
         report.snap_prewarms = snap.prewarms;
         report.snap_bytes_hwm = snap.bytes_hwm;
+        let wstats = &self.wfrt.stats;
+        report.wf_runs = wstats.runs;
+        report.wf_runs_completed = wstats.runs_completed;
+        report.wf_stages_started = wstats.stages_started;
+        report.wf_stages_completed = wstats.stages_completed;
+        report.wf_spawned = wstats.spawned;
+        report.wf_cross_rack_mb = wstats.cross_rack_mb;
+        if wstats.e2e.count() > 0 {
+            report.wf_e2e_mean_ms = wstats.e2e.mean();
+            report.wf_e2e_p95_ms = wstats.e2e_p95.value();
+            report.wf_e2e_p99_ms = wstats.e2e_p99.value();
+        }
+        report.wf_affinity_hits = route.affinity_hits;
+        report.wf_affinity_spills = route.affinity_spills;
+        for (i, a) in report.apps.iter_mut().enumerate() {
+            a.spawned = self.spawned_per_app[i];
+        }
         report
     }
 }
@@ -1035,6 +1202,8 @@ pub(crate) fn run_platform_sharded(
         seq += 1;
     }
 
+    let mut wfrt = WorkflowRuntime::new();
+    wfrt.set_net(config.net);
     let mut platform = Platform::new(cfg.cluster, config);
     // Same gate as the sequential loop: a zero budget leaves the
     // snapshot layer off and the replay byte-identical to legacy.
@@ -1078,6 +1247,10 @@ pub(crate) fn run_platform_sharded(
         tiers: TierTelemetry::new(apps.len()),
         epochs: 0,
         engaged_batches: 0,
+        wfrt,
+        workflow_affinity: cfg.workflow_affinity,
+        spawned_per_app: vec![0usize; apps.len()],
+        stage_buf: Vec::new(),
     };
     engine.run(label)
 }
@@ -1094,10 +1267,17 @@ mod tests {
         let driver = MultiTenantDriver::new(&apps, cfg);
         let schedule = driver.schedule();
         let r = driver.run_zenix(&schedule);
-        // the failure split partitions the arrivals in every mode
+        // the failure split partitions the invocations in every mode
+        // (spawned widens the right-hand side for workflow mixes; this
+        // DAG-less mix spawns nothing)
         assert_eq!(
-            r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered,
-            schedule.arrivals.len(),
+            r.completed
+                + r.rejected
+                + r.aborted
+                + r.timed_out
+                + r.expired
+                + r.faulted_unrecovered,
+            schedule.arrivals.len() + usize::try_from(r.wf_spawned).expect("spawned fits usize"),
             "conservation identity (workers = {})",
             cfg.workers
         );

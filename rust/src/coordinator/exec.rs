@@ -217,7 +217,25 @@ struct SnapshotLayer {
     images: Vec<(&'static str, u64)>,
     /// Pre-warm considers only the first `top_k` images per rack.
     top_k: usize,
+    /// Live decayed arrival-rate score per image (`rate[i]` pairs with
+    /// `images[i]`): `(score, last_update)`. Every admission folds in
+    /// with half-life [`PREWARM_RATE_HALF_LIFE_MS`], so diurnal
+    /// day/night turnover re-ranks the pre-warm candidates toward the
+    /// tenants arriving *now* instead of the schedule's static
+    /// expectation. All-zero scores (no arrivals yet) reproduce the
+    /// static ranking exactly.
+    rate: Vec<(f64, Millis)>,
+    /// Scratch index order for the live re-rank (capacity persists —
+    /// the pass stays allocation-free after warm-up).
+    order: Vec<u32>,
 }
+
+/// Half-life (ms) of the live arrival-rate decay that ranks pre-warm
+/// candidates: short enough that a diurnal phase flip (tens of seconds
+/// in the driver's compressed traces) demotes the idle tenant within
+/// one phase, long enough that Poisson gaps at the default 400 ms IAT
+/// do not thrash the ranking.
+const PREWARM_RATE_HALF_LIFE_MS: f64 = 5_000.0;
 
 impl SnapshotLayer {
     /// Image size for `app` (linear scan of the interned-name table —
@@ -660,6 +678,23 @@ impl Platform {
         at: Millis,
         crash: Option<(Crash, usize)>,
     ) -> OngoingInvocation {
+        self.begin_at_on(graph, inv, at, crash, None)
+    }
+
+    /// [`Self::begin_at`] with an optionally pinned destination rack.
+    /// Workflow downstream stages route at stage-*ready* time (the
+    /// affinity scorer picked the rack holding their resident inputs,
+    /// or the blind router its smallest fit) and must not be re-routed
+    /// at launch; every other caller passes `None` and takes the
+    /// ordinary routing path below, byte-for-byte.
+    pub fn begin_at_on(
+        &mut self,
+        graph: &ResourceGraph,
+        inv: Invocation,
+        at: Millis,
+        crash: Option<(Crash, usize)>,
+        pinned: Option<RackId>,
+    ) -> OngoingInvocation {
         let scale = inv.input_scale;
         let program = &graph.program;
         let inv_id = self.next_invocation;
@@ -667,6 +702,12 @@ impl Platform {
 
         let mut st = self.shell_pool.pop().unwrap_or_else(OngoingInvocation::empty);
         st.reset(graph, scale, inv_id, at, crash);
+
+        // ---- live arrival-rate state (pre-warm ranking input) -----------
+        // Fold this admission into the decayed per-app rate scores
+        // *before* the pre-warm pass so the ranking reflects the arrival
+        // being admitted. No-op with the snapshot layer off.
+        self.note_arrival(program.name, at);
 
         // ---- predictive pre-warm (tiered cold starts) -------------------
         // Refresh the per-rack snapshot caches at rack-dirty instants
@@ -685,7 +726,10 @@ impl Platform {
         let global = &mut self.global;
         self.cluster
             .for_each_dirty_rack(|r, avail| global.update_rack(r, avail));
-        let rack_id = self.global.route(estimate);
+        let rack_id = match pinned {
+            Some(r) => r,
+            None => self.global.route(estimate),
+        };
         st.breakdown.sched_ms += 2.0 * self.control.sched_msg_ms; // request + dispatch
         let rack = &self.racks[rack_id.0];
 
@@ -706,6 +750,44 @@ impl Platform {
         st.estimate = estimate;
         st.rack_id = rack_id;
         st
+    }
+
+    // ---- workflow stage routing & handoff retention ---------------------
+
+    /// Route a workflow stage at its ready instant: drain the
+    /// incremental rack-availability deltas (same freshness contract as
+    /// admission routing), then take the affinity path when a preferred
+    /// (data-resident) rack is given, or the ordinary smallest-fit when
+    /// not. Returns the chosen rack and whether the preference held.
+    pub fn route_stage(&mut self, estimate: Resources, prefer: Option<RackId>) -> (RackId, bool) {
+        let global = &mut self.global;
+        self.cluster
+            .for_each_dirty_rack(|r, avail| global.update_rack(r, avail));
+        match prefer {
+            Some(p) => self.global.route_with_affinity(estimate, p),
+            None => (self.global.route(estimate), false),
+        }
+    }
+
+    /// Retain a workflow handoff region on the producer's rack: charge
+    /// `mb` of memory on the rack's most-available server until the
+    /// consumer stage launches, so resident intermediates genuinely
+    /// compete with invocations for rack capacity. `None` when no
+    /// server can hold the region — it spills to the disaggregated
+    /// store and the consumer prices it as a cross-rack transfer.
+    pub fn retain_handoff(&mut self, rack: RackId, mb: f64, now: Millis) -> Option<ServerId> {
+        let server = best_mem_server(&self.cluster, rack, mb)?;
+        if self.cluster.try_alloc(server, Resources::mem_only(mb), now) {
+            Some(server)
+        } else {
+            None
+        }
+    }
+
+    /// Release a retained handoff region (the consumer launched, or its
+    /// run retired without consuming it).
+    pub fn release_handoff(&mut self, server: ServerId, mb: f64, now: Millis) {
+        self.cluster.free(server, Resources::mem_only(mb), now);
     }
 
     /// Execute the scheduling/placement of the next wave at
@@ -1083,6 +1165,23 @@ impl Platform {
                     let redo_wave = graph.wave[first];
                     st.breakdown.sched_ms += 5.0; // recovery decision
                     st.wave_idx = redo_wave;
+                    // A rewind to wave 0 restarts the invocation's first
+                    // environment — a fresh start like any other, so it
+                    // must re-resolve its tier instead of replaying the
+                    // pre-crash latency: the original cold boot
+                    // demand-installed the app's image, so the post-repair
+                    // start restores from the rack's snapshot cache.
+                    // Gated on the image actually being resident: with a
+                    // zero cache budget (or the layer off) nothing is ever
+                    // resident and the replay stays byte-identical.
+                    if redo_wave == 0 {
+                        if let Some(sn) = &self.snapshots {
+                            if sn.caches[st.rack_id.0].contains(graph.program.name) {
+                                st.start_tier = None;
+                                st.start_latency_ms = 0.0;
+                            }
+                        }
+                    }
                     return false;
                 }
             }
@@ -1446,14 +1545,46 @@ impl Platform {
             .racks()
             .map(|_| SnapshotCache::new(budget_bytes))
             .collect();
-        self.snapshots = Some(SnapshotLayer { caches, prewarm, primed: false, images, top_k });
+        let rate = vec![(0.0, 0.0); images.len()];
+        self.snapshots = Some(SnapshotLayer {
+            caches,
+            prewarm,
+            primed: false,
+            images,
+            top_k,
+            rate,
+            order: Vec::new(),
+        });
     }
 
-    /// Predictive pre-warm: install the top-k expected-arrival images
-    /// into each rack's spare snapshot budget. Runs on the first
-    /// admission and then at rack-dirty instants (capacity moved since
-    /// the last pass); never evicts — demand installs own the
-    /// contended end of the budget. Allocation-free.
+    /// Fold one admitted arrival of `app` into the live arrival-rate
+    /// scores the pre-warm pass ranks by (exponentially-decayed count,
+    /// the platform-side mirror of the admission layer's rate state).
+    /// Runs coordinator-side at admission instants in both event loops,
+    /// so the ranking — and therefore the digest — stays worker-count
+    /// invariant. No-op with the snapshot layer or pre-warm off.
+    fn note_arrival(&mut self, app: &'static str, now: Millis) {
+        let Some(sn) = self.snapshots.as_mut() else { return };
+        if !sn.prewarm {
+            return;
+        }
+        for (i, &(name, _)) in sn.images.iter().enumerate() {
+            if name == app {
+                let (score, last) = sn.rate[i];
+                let decay = (-((now - last).max(0.0)) / PREWARM_RATE_HALF_LIFE_MS).exp2();
+                sn.rate[i] = (score * decay + 1.0, now);
+                return;
+            }
+        }
+    }
+
+    /// Predictive pre-warm: install the top-k images by *live* decayed
+    /// arrival rate (static expected-arrival order breaks ties, and is
+    /// the ranking until the first arrivals land) into each rack's
+    /// spare snapshot budget. Runs on the first admission and then at
+    /// rack-dirty instants (capacity moved since the last pass); never
+    /// evicts — demand installs own the contended end of the budget.
+    /// Allocation-free after warm-up.
     fn prewarm_pass(&mut self, now: Millis) {
         let Some(sn) = self.snapshots.as_mut() else { return };
         if !sn.prewarm || (sn.primed && !self.cluster.has_dirty_racks()) {
@@ -1461,8 +1592,23 @@ impl Platform {
         }
         sn.primed = true;
         let k = sn.top_k.min(sn.images.len());
+        // Live re-rank: decayed score descending, static order (index
+        // ascending) as the tie-break — an all-zero score table keeps
+        // the static ranking byte-for-byte.
+        let mut order = std::mem::take(&mut sn.order);
+        order.clear();
+        order.extend((0..sn.images.len()).map(cast::u32_of));
+        let decayed = |i: usize| {
+            let (score, last) = sn.rate[i];
+            score * (-((now - last).max(0.0)) / PREWARM_RATE_HALF_LIFE_MS).exp2()
+        };
+        order.sort_unstable_by(|&a, &b| {
+            let (ua, ub) = (cast::usize_of(u64::from(a)), cast::usize_of(u64::from(b)));
+            decayed(ub).total_cmp(&decayed(ua)).then(a.cmp(&b))
+        });
         for r in 0..sn.caches.len() {
-            for &(app, bytes) in &sn.images[..k] {
+            for &oi in &order[..k] {
+                let (app, bytes) = sn.images[cast::usize_of(u64::from(oi))];
                 let cache = &mut sn.caches[r];
                 if cache.contains(app) || !cache.fits(bytes) {
                     continue; // already resident, or would need an eviction
@@ -1482,6 +1628,7 @@ impl Platform {
                 }
             }
         }
+        sn.order = order; // keep the scratch capacity
     }
 
     /// Resolve the start tier of an invocation's first environment
@@ -1893,5 +2040,74 @@ mod tests {
             s.used(),
             tenant
         );
+    }
+
+    /// Regression (PR 10 satellite): a crash that rewinds to wave 0
+    /// must re-resolve its start tier instead of replaying the
+    /// pre-crash cold-boot latency. The original cold boot
+    /// demand-installed the app's image, so the post-repair restart
+    /// restores from the rack's snapshot cache: exactly one miss (the
+    /// first start) and one hit (the restart).
+    #[test]
+    fn post_repair_wave0_restart_restores_from_snapshot_cache() {
+        const MIB: u64 = 1024 * 1024;
+        let g = ResourceGraph::from_program(&lr::program()).unwrap();
+        let mut p = Platform::testbed();
+        p.enable_snapshots(2048 * MIB, false, vec![(g.program.name, 256 * MIB)], 4);
+        // Crash compute 0 after wave 1: the recovery plan's earliest
+        // dirty component is the entry, so the rewind lands on wave 0.
+        p.invoke_with_crash(&g, Invocation::new(1.0), Crash::Compute(0), 1).unwrap();
+        let stats = p.snapshot_stats();
+        assert_eq!(stats.misses, 1, "first start cold-boots and demand-installs");
+        assert_eq!(stats.hits, 1, "post-repair wave-0 restart restores from cache");
+        p.drain_snapshot_caches(p.now());
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO, "leak on {:?}", s.id);
+        }
+    }
+
+    /// Regression (PR 10 satellite): the pre-warm ranking follows the
+    /// *live* decayed arrival rate, not the static expected-arrival
+    /// order. With a top-1 pre-warm and a workload that shifts from app
+    /// A to app B across an idle gap, the live ranking pre-warms B
+    /// before its first start — zero misses, which the static ranking
+    /// (pinned to A forever) provably cannot achieve.
+    #[test]
+    fn prewarm_reranks_from_live_arrival_rates() {
+        const MIB: u64 = 1024 * 1024;
+        let a = ResourceGraph::from_program(&lr::program()).unwrap();
+        let b = ResourceGraph::from_program(&tpcds::query(16)).unwrap();
+        // proactive off: every start resolves through the snapshot
+        // cache, so hit/miss counts cover all six invocations.
+        let cfg = ZenixConfig { proactive: false, ..ZenixConfig::default() };
+        let mut p = Platform::new(ClusterSpec::paper_testbed(), cfg);
+        // The budget fits BOTH images (pre-warm never evicts), but with
+        // top_k = 1 the ranking alone decides which app is resident
+        // before its own first start.
+        p.enable_snapshots(
+            2048 * MIB,
+            true,
+            vec![(a.program.name, 256 * MIB), (b.program.name, 256 * MIB)],
+            1,
+        );
+        // Phase 1: app A arrivals back-to-back (A tops the live rank).
+        for _ in 0..3 {
+            p.invoke(&a, Invocation::new(0.5)).unwrap();
+        }
+        // Phase 2, several half-lives later: the workload shifts to B.
+        // A's decayed score falls under B's fresh arrival, the pass
+        // re-ranks, and B is resident before its first start resolves.
+        let shift = p.now() + 40_000.0;
+        for i in 0..3u32 {
+            p.invoke_at(&b, Invocation::new(0.2), shift + 1_000.0 * f64::from(i)).unwrap();
+        }
+        let stats = p.snapshot_stats();
+        assert_eq!(stats.misses, 0, "live re-rank pre-warms B before its first start");
+        assert_eq!(stats.hits, 6, "every start restores from a pre-warmed image");
+        assert!(stats.prewarms >= 2, "both apps pre-warmed in turn: {stats:?}");
+        p.drain_snapshot_caches(p.now());
+        for s in p.cluster.servers() {
+            assert_eq!(s.allocated(), Resources::ZERO, "leak on {:?}", s.id);
+        }
     }
 }

@@ -27,6 +27,11 @@
 //!   queueing policies (FIFO, fair-share, weighted fair-share,
 //!   SLO-deadline EDF), burst arrival models (MMPP / rate replay), and
 //!   the rejected/aborted/timed-out accounting split.
+//! - [`workflow`] — workflow-structured tenants: inter-invocation DAGs
+//!   (pipelines, fan-out/fan-in) whose stage completions enqueue
+//!   downstream invocations through either event loop, with handoff
+//!   data retained on the producer's rack and rack-affinity placement
+//!   for downstream stages.
 
 // Modules below that have not yet had their rustdoc sweep are shielded
 // from the crate-level `missing_docs` lint; drop the `allow` when
@@ -45,6 +50,7 @@ pub mod msglog;
 pub mod placement;
 pub mod scheduler;
 pub mod sync;
+pub mod workflow;
 
 pub use admission::{AdmissionOutcome, AdmissionPolicy, ArrivalModel, DeferredQueues};
 pub use faults::{FaultConfig, FaultPlan};
@@ -53,3 +59,4 @@ pub use scheduler::RouteStats;
 pub use exec::{OngoingInvocation, Platform, ZenixConfig};
 pub use graph::{NodeId, NodeKind, ResourceGraph};
 pub use history::ProfileStore;
+pub use workflow::{StageLaunch, Workflow, WorkflowEdge, WorkflowRuntime, WorkflowStats};

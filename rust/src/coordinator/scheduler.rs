@@ -65,6 +65,11 @@ pub struct GlobalScheduler {
     /// the driver surfaces both per run).
     fast_hits: u64,
     scans: u64,
+    /// Affinity-routed decisions (workflow downstream stages): the
+    /// preferred rack fit and was taken / could not fit and the
+    /// decision fell back to the ordinary smallest-fit `route`.
+    affinity_hits: u64,
+    affinity_spills: u64,
 }
 
 /// How the global scheduler answered its routing decisions: via the
@@ -78,6 +83,10 @@ pub struct RouteStats {
     pub fast_hits: u64,
     /// Decisions that fell back to the full rack scan.
     pub scans: u64,
+    /// Affinity routes where the preferred (data-resident) rack fit.
+    pub affinity_hits: u64,
+    /// Affinity routes that spilled to the ordinary smallest-fit path.
+    pub affinity_spills: u64,
 }
 
 impl GlobalScheduler {
@@ -93,13 +102,20 @@ impl GlobalScheduler {
             cursor: 0,
             fast_hits: 0,
             scans: 0,
+            affinity_hits: 0,
+            affinity_spills: 0,
         }
     }
 
     /// Routing-path telemetry: fast-path vs full-scan decision counts
-    /// since construction.
+    /// (and affinity hit/spill counts) since construction.
     pub fn route_stats(&self) -> RouteStats {
-        RouteStats { fast_hits: self.fast_hits, scans: self.scans }
+        RouteStats {
+            fast_hits: self.fast_hits,
+            scans: self.scans,
+            affinity_hits: self.affinity_hits,
+            affinity_spills: self.affinity_spills,
+        }
     }
 
     /// Refresh the rough view for one rack (rack schedulers push this).
@@ -197,6 +213,22 @@ impl GlobalScheduler {
         };
         self.cursor = (self.cursor + 1) % n;
         RackId(chosen)
+    }
+
+    /// Route a workflow downstream stage with rack affinity: take the
+    /// preferred rack (where the stage's input handoff bytes are
+    /// resident) when its rough availability fits `estimate`, otherwise
+    /// fall back to the ordinary smallest-fit [`GlobalScheduler::route`]
+    /// (§5.3.1's bounce semantics). Returns the chosen rack and whether
+    /// the affinity candidate was taken. The hit/spill split is
+    /// surfaced through [`GlobalScheduler::route_stats`].
+    pub fn route_with_affinity(&mut self, estimate: Resources, prefer: RackId) -> (RackId, bool) {
+        if prefer.0 < self.rack_avail.len() && self.rack_avail[prefer.0].fits(estimate) {
+            self.affinity_hits += 1;
+            return (prefer, true);
+        }
+        self.affinity_spills += 1;
+        (self.route(estimate), false)
     }
 
     /// Look up / install a compilation (returns true on cache hit).
@@ -396,6 +428,27 @@ mod tests {
         // an unfittable estimate forces the fallback scan
         let _ = g.route(Resources::new(1e6, 1e9));
         assert_eq!(g.route_stats().scans, s.scans + 1);
+    }
+
+    #[test]
+    fn affinity_route_prefers_resident_rack_then_spills() {
+        let mut g = GlobalScheduler::new(2);
+        g.update_rack(RackId(0), Resources::new(100.0, 100000.0));
+        g.update_rack(RackId(1), Resources::new(4.0, 2048.0));
+        // rack 1 fits a small stage: affinity wins even though rack 0
+        // has far more available resources
+        let (rack, hit) = g.route_with_affinity(Resources::new(1.0, 512.0), RackId(1));
+        assert_eq!(rack, RackId(1));
+        assert!(hit);
+        // a stage too big for the preferred rack spills to smallest-fit
+        let (rack, hit) = g.route_with_affinity(Resources::new(16.0, 32000.0), RackId(1));
+        assert_eq!(rack, RackId(0));
+        assert!(!hit);
+        let s = g.route_stats();
+        assert_eq!((s.affinity_hits, s.affinity_spills), (1, 1));
+        // out-of-range preference never panics, it spills
+        let (_, hit) = g.route_with_affinity(Resources::new(1.0, 1.0), RackId(9));
+        assert!(!hit);
     }
 
     #[test]

@@ -1,0 +1,710 @@
+//! Workflow-structured tenants: inter-invocation DAGs with data
+//! handoff, plus the bookkeeping behind rack-affinity placement of
+//! downstream stages (§2.2's pipeline shape, driven end-to-end on the
+//! shared cluster instead of being asserted from the function-DAG
+//! baseline's closed-form model).
+//!
+//! A [`Workflow`] attached to a `TenantApp` turns each scheduled
+//! arrival into the *root stage* of a run. When a stage's invocation
+//! completes, its declared out-edges hand data off to downstream
+//! stages: the handoff region is retained (memory-charged) on the
+//! producer's rack until the consumer launches, so resident
+//! intermediates genuinely compete with invocations for rack capacity.
+//! A downstream stage becomes ready when all its in-edges have
+//! completed; it is routed immediately — with rack affinity (prefer
+//! the rack holding the most resident input bytes, spill to the
+//! ordinary smallest-fit when the candidate cannot fit) or blind — and
+//! enqueued as an ordinary `(time, seq)` heap event delayed by the
+//! cross-rack transfer cost of its non-resident inputs.
+//!
+//! ## Determinism contract
+//!
+//! All workflow bookkeeping runs coordinator-side at `WaveDone` /
+//! `StageLaunch` instants in canonical `(time, seq)` order — directly
+//! in the sequential loop, as coordinator fence events in the sharded
+//! epoch loop — so digests stay worker-count invariant. Downstream
+//! enqueue order is fixed by edge declaration order (ready successors
+//! are visited in ascending edge index and receive ascending event
+//! sequence numbers). An app without a workflow, or with the trivial
+//! [`Workflow::single`], performs no cluster mutation, pushes no
+//! events and draws no randomness: the replay is byte-identical to the
+//! independent-arrival replay.
+
+use crate::apps::program::Program;
+use crate::cluster::clock::Millis;
+use crate::cluster::{RackId, ServerId};
+use crate::metrics::streaming::{P2Quantile, StreamingMoments};
+use crate::net::{NetKind, NetModel};
+use crate::util::cast;
+
+use super::exec::Platform;
+
+/// Sentinel rack id for "not yet produced / not yet pinned".
+const NO_RACK: u32 = u32::MAX;
+
+/// One inter-invocation DAG edge: stage `from` hands `handoff_mb`
+/// megabytes of output to stage `to`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkflowEdge {
+    /// Producer stage index.
+    pub from: u32,
+    /// Consumer stage index (validation requires `from < to`).
+    pub to: u32,
+    /// Handoff payload size (MB) retained on the producer's rack until
+    /// the consumer launches. Zero-byte edges carry ordering only.
+    pub handoff_mb: f64,
+}
+
+/// An inter-invocation DAG declared by a tenant: each scheduled
+/// arrival runs stage 0 (the sole root), and every edge `from → to`
+/// spawns the consumer once all of its producers completed.
+///
+/// Stages reuse the tenant's program; a stage's invocation input scale
+/// is the root arrival's scale times the stage's `scale_mult`.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    /// Per-stage input-scale multiplier applied to the root scale.
+    scale_mult: Vec<f64>,
+    /// Declared edges (validated: `from < to`, so the graph is acyclic
+    /// by construction and edge order is a topological order).
+    edges: Vec<WorkflowEdge>,
+    /// CSR out-adjacency: `succ[succ_off[s]..succ_off[s+1]]` holds the
+    /// edge indices leaving stage `s`, in declaration order.
+    succ_off: Vec<u32>,
+    succ: Vec<u32>,
+    /// CSR in-adjacency (edge indices entering each stage).
+    pred_off: Vec<u32>,
+    pred: Vec<u32>,
+    /// In-degree per stage.
+    indeg: Vec<u32>,
+}
+
+impl Workflow {
+    /// Build and validate a workflow. Requirements: at least one
+    /// stage, every `scale_mult > 0`, stage 0 has scale multiplier 1.0
+    /// (so a workflow root replays byte-identically to an independent
+    /// arrival), every edge satisfies `from < to` with both endpoints
+    /// in range and `handoff_mb >= 0`, and stage 0 is the *only* root
+    /// (every other stage has at least one in-edge).
+    pub fn new(scale_mult: Vec<f64>, edges: Vec<WorkflowEdge>) -> crate::Result<Self> {
+        if scale_mult.is_empty() {
+            anyhow::bail!("workflow has no stages");
+        }
+        if (scale_mult[0] - 1.0).abs() >= 1e-12 {
+            anyhow::bail!("stage 0 must keep the root arrival's scale (mult 1.0)");
+        }
+        for (i, &m) in scale_mult.iter().enumerate() {
+            if m <= 0.0 {
+                anyhow::bail!("stage {i} scale multiplier must be positive");
+            }
+        }
+        let n = scale_mult.len();
+        let mut indeg = vec![0u32; n];
+        for (i, e) in edges.iter().enumerate() {
+            let (f, t) = (cast::usize_of(u64::from(e.from)), cast::usize_of(u64::from(e.to)));
+            if f >= n || t >= n {
+                anyhow::bail!("edge {i} endpoint out of range");
+            }
+            if e.from >= e.to {
+                anyhow::bail!("edge {i} must satisfy from < to (acyclic by construction)");
+            }
+            if e.handoff_mb < 0.0 {
+                anyhow::bail!("edge {i} negative handoff");
+            }
+            indeg[t] += 1;
+        }
+        for (s, &d) in indeg.iter().enumerate().skip(1) {
+            if d == 0 {
+                anyhow::bail!("stage {s} is unreachable (only stage 0 may be a root)");
+            }
+        }
+        // CSR out- and in-adjacency over edge indices, declaration order.
+        let mut succ_off = vec![0u32; n + 1];
+        let mut pred_off = vec![0u32; n + 1];
+        for e in &edges {
+            succ_off[cast::usize_of(u64::from(e.from)) + 1] += 1;
+            pred_off[cast::usize_of(u64::from(e.to)) + 1] += 1;
+        }
+        for s in 0..n {
+            succ_off[s + 1] += succ_off[s];
+            pred_off[s + 1] += pred_off[s];
+        }
+        let mut succ = vec![0u32; edges.len()];
+        let mut pred = vec![0u32; edges.len()];
+        let mut scur = succ_off.clone();
+        let mut pcur = pred_off.clone();
+        for (i, e) in edges.iter().enumerate() {
+            let idx = cast::u32_of(i);
+            succ[cast::usize_of(u64::from(scur[cast::usize_of(u64::from(e.from))]))] = idx;
+            scur[cast::usize_of(u64::from(e.from))] += 1;
+            pred[cast::usize_of(u64::from(pcur[cast::usize_of(u64::from(e.to))]))] = idx;
+            pcur[cast::usize_of(u64::from(e.to))] += 1;
+        }
+        Ok(Self { scale_mult, edges, succ_off, succ, pred_off, pred, indeg })
+    }
+
+    /// The trivial one-stage workflow (no edges): a run is exactly one
+    /// independent invocation, byte-identical to no workflow at all.
+    pub fn single() -> Self {
+        Self::new(vec![1.0], vec![]).expect("trivial workflow is valid")
+    }
+
+    /// A linear pipeline of `stages` stages, each handing `handoff_mb`
+    /// to the next.
+    pub fn pipeline(stages: usize, handoff_mb: f64) -> Self {
+        assert!(stages >= 1, "pipeline needs at least one stage");
+        let edges = (1..stages)
+            .map(|t| WorkflowEdge {
+                from: cast::u32_of(t - 1),
+                to: cast::u32_of(t),
+                handoff_mb,
+            })
+            .collect();
+        Self::new(vec![1.0; stages], edges).expect("pipeline shape is valid")
+    }
+
+    /// Fan-out/fan-in: a root scatters `handoff_mb` to `width` branch
+    /// stages (each at `branch_mult` of the root scale), which gather
+    /// into one final stage.
+    pub fn fan_out_in(width: usize, branch_mult: f64, handoff_mb: f64) -> Self {
+        assert!(width >= 1, "fan-out needs at least one branch");
+        let gather = cast::u32_of(width + 1);
+        let mut mults = vec![1.0];
+        mults.extend(std::iter::repeat(branch_mult).take(width));
+        mults.push(1.0);
+        let mut edges = Vec::with_capacity(2 * width);
+        for b in 1..=width {
+            edges.push(WorkflowEdge { from: 0, to: cast::u32_of(b), handoff_mb });
+        }
+        for b in 1..=width {
+            edges.push(WorkflowEdge { from: cast::u32_of(b), to: gather, handoff_mb });
+        }
+        Self::new(mults, edges).expect("fan-out/fan-in shape is valid")
+    }
+
+    /// Number of stages.
+    pub fn n_stages(&self) -> usize {
+        self.scale_mult.len()
+    }
+
+    /// True for the degenerate DAG-of-1 (one stage, no edges): the
+    /// driver still books a run, but no handoff/affinity machinery can
+    /// engage, so the replay matches the independent-arrival replay.
+    pub fn is_trivial(&self) -> bool {
+        self.scale_mult.len() == 1 && self.edges.is_empty()
+    }
+
+    /// The declared edges.
+    pub fn edges(&self) -> &[WorkflowEdge] {
+        &self.edges
+    }
+
+    /// Input-scale multiplier of `stage`.
+    pub fn scale_mult(&self, stage: usize) -> f64 {
+        self.scale_mult[stage]
+    }
+
+    /// Edge indices leaving `stage`, in declaration order.
+    fn out_edges(&self, stage: usize) -> &[u32] {
+        let lo = cast::usize_of(u64::from(self.succ_off[stage]));
+        let hi = cast::usize_of(u64::from(self.succ_off[stage + 1]));
+        &self.succ[lo..hi]
+    }
+
+    /// Edge indices entering `stage`, in declaration order.
+    fn in_edges(&self, stage: usize) -> &[u32] {
+        let lo = cast::usize_of(u64::from(self.pred_off[stage]));
+        let hi = cast::usize_of(u64::from(self.pred_off[stage + 1]));
+        &self.pred[lo..hi]
+    }
+}
+
+/// A retained handoff region: where the producer parked the bytes.
+#[derive(Debug, Clone, Copy)]
+struct EdgeCharge {
+    server: ServerId,
+    mb: f64,
+}
+
+/// One live workflow run (all stages spawned by one root arrival).
+#[derive(Debug, Default)]
+struct WfRun {
+    app: usize,
+    /// Root arrival's schedule index: downstream stages reuse it for
+    /// per-app attribution, exactly like the root invocation.
+    sched: usize,
+    root_scale: f64,
+    t0: Millis,
+    /// Remaining un-completed in-edges per stage.
+    pending_in: Vec<u32>,
+    /// Rack each completed stage ran on (`NO_RACK` before completion).
+    produced_rack: Vec<u32>,
+    /// Rack each enqueued stage was pinned to at ready time.
+    pinned_rack: Vec<u32>,
+    /// Per-edge retained handoff region (None: not produced yet,
+    /// zero-byte, spilled, or already consumed/freed).
+    charge: Vec<Option<EdgeCharge>>,
+    /// Stages not yet completed.
+    remaining: u32,
+    /// Stage invocations admitted and still in flight.
+    inflight: u32,
+    /// `StageLaunch` events enqueued but not yet fired.
+    pending_launch: u32,
+    /// A stage failed (rejected launch or fault-aborted): downstream
+    /// stages stop spawning and the run retires without an e2e sample.
+    failed: bool,
+    /// Slot is on the free list.
+    free: bool,
+}
+
+/// A downstream launch the caller must enqueue as a heap event at
+/// `at` (with its own monotone sequence number).
+#[derive(Debug, Clone, Copy)]
+pub struct StageLaunch {
+    /// Run slot in the [`WorkflowRuntime`].
+    pub run: u32,
+    /// Stage to launch.
+    pub stage: u32,
+    /// Simulated launch instant (ready time + cross-rack transfer).
+    pub at: Millis,
+}
+
+/// Digest-excluded workflow telemetry for the driver report.
+#[derive(Debug)]
+pub struct WorkflowStats {
+    /// Workflow runs opened (= admitted root arrivals of workflow apps).
+    pub runs: u64,
+    /// Runs whose every stage completed.
+    pub runs_completed: u64,
+    /// Stage invocations admitted (roots + spawned downstream stages).
+    pub stages_started: u64,
+    /// Stage invocations completed.
+    pub stages_completed: u64,
+    /// Downstream stage launches attempted beyond the arrival schedule
+    /// (the `spawned` term of the workflow conservation identity).
+    pub spawned: u64,
+    /// Handoff megabytes consumed from a different rack than the one
+    /// the consumer stage ran on.
+    pub cross_rack_mb: f64,
+    /// End-to-end workflow latency (root arrival → last stage
+    /// completion) over fully-successful runs.
+    pub e2e: StreamingMoments,
+    /// P² p95 estimator over the same samples.
+    pub e2e_p95: P2Quantile,
+    /// P² p99 estimator over the same samples.
+    pub e2e_p99: P2Quantile,
+}
+
+impl Default for WorkflowStats {
+    fn default() -> Self {
+        Self {
+            runs: 0,
+            runs_completed: 0,
+            stages_started: 0,
+            stages_completed: 0,
+            spawned: 0,
+            cross_rack_mb: 0.0,
+            e2e: StreamingMoments::default(),
+            e2e_p95: P2Quantile::new(0.95),
+            e2e_p99: P2Quantile::new(0.99),
+        }
+    }
+}
+
+/// Coordinator-side workflow state for one replay: live runs (slab
+/// slots with an intrusive free list — shells recycle their vectors,
+/// so steady state allocates nothing once capacities are warm) plus
+/// the digest-excluded telemetry.
+#[derive(Debug)]
+pub struct WorkflowRuntime {
+    runs: Vec<WfRun>,
+    free: Vec<u32>,
+    live: usize,
+    /// Cross-rack handoff transfers price through the TCP path of this
+    /// model (intermediates move through the memory controller, not
+    /// the RDMA compute fabric).
+    net: NetModel,
+    /// Telemetry (digest-excluded in the driver report).
+    pub stats: WorkflowStats,
+}
+
+impl Default for WorkflowRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkflowRuntime {
+    /// Fresh runtime (default net model; the driver replaces it with
+    /// the platform's own model at construction).
+    pub fn new() -> Self {
+        Self {
+            runs: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            net: NetModel::default(),
+            stats: WorkflowStats::default(),
+        }
+    }
+
+    /// Use `net` for cross-rack handoff pricing (the driver passes the
+    /// platform's model so workflow transfers and data-path transfers
+    /// price identically).
+    pub fn set_net(&mut self, net: NetModel) {
+        self.net = net;
+    }
+
+    /// Live (unretired) runs.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// The app index a run belongs to.
+    pub fn run_app(&self, run: u32) -> usize {
+        self.runs[cast::usize_of(u64::from(run))].app
+    }
+
+    /// The root arrival's schedule index (per-app attribution).
+    pub fn run_sched(&self, run: u32) -> usize {
+        self.runs[cast::usize_of(u64::from(run))].sched
+    }
+
+    /// Input scale for `stage` of `run`.
+    pub fn stage_scale(&self, run: u32, stage: u32, wf: &Workflow) -> f64 {
+        self.runs[cast::usize_of(u64::from(run))].root_scale
+            * wf.scale_mult(cast::usize_of(u64::from(stage)))
+    }
+
+    /// The rack `stage` was pinned to at ready time.
+    pub fn pinned_rack(&self, run: u32, stage: u32) -> RackId {
+        let r = self.runs[cast::usize_of(u64::from(run))].pinned_rack
+            [cast::usize_of(u64::from(stage))];
+        debug_assert_ne!(r, NO_RACK, "stage launched without a pinned rack");
+        RackId(cast::usize_of(u64::from(r)))
+    }
+
+    /// Open a run for an admitted root arrival. Returns the run slot
+    /// to store in the root invocation's slab entry.
+    pub fn on_root_admitted(
+        &mut self,
+        app: usize,
+        sched: usize,
+        scale: f64,
+        t0: Millis,
+        wf: &Workflow,
+    ) -> u32 {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.runs.push(WfRun::default());
+                cast::u32_of(self.runs.len() - 1)
+            }
+        };
+        let n = wf.n_stages();
+        let r = &mut self.runs[cast::usize_of(u64::from(id))];
+        r.app = app;
+        r.sched = sched;
+        r.root_scale = scale;
+        r.t0 = t0;
+        r.pending_in.clear();
+        r.pending_in.extend_from_slice(&wf.indeg);
+        r.produced_rack.clear();
+        r.produced_rack.resize(n, NO_RACK);
+        r.pinned_rack.clear();
+        r.pinned_rack.resize(n, NO_RACK);
+        r.charge.clear();
+        r.charge.resize(wf.edges().len(), None);
+        r.remaining = cast::u32_of(n);
+        r.inflight = 1; // the root is in flight
+        r.pending_launch = 0;
+        r.failed = false;
+        r.free = false;
+        self.live += 1;
+        self.stats.runs += 1;
+        self.stats.stages_started += 1;
+        id
+    }
+
+    /// A stage invocation completed on `rack` at `now`: retain its
+    /// out-edge handoffs on the producer rack, mark ready successors,
+    /// route them (affinity-aware when `affinity`), and append their
+    /// launch events to `out` in deterministic edge order. The caller
+    /// pushes each [`StageLaunch`] into its event heap with the next
+    /// monotone sequence number.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_stage_done(
+        &mut self,
+        run: u32,
+        stage: u32,
+        rack: RackId,
+        now: Millis,
+        wf: &Workflow,
+        program: &Program,
+        platform: &mut Platform,
+        affinity: bool,
+        out: &mut Vec<StageLaunch>,
+    ) {
+        let ri = cast::usize_of(u64::from(run));
+        let si = cast::usize_of(u64::from(stage));
+        self.stats.stages_completed += 1;
+        {
+            let r = &mut self.runs[ri];
+            debug_assert!(!r.free, "completion for a retired run");
+            r.inflight -= 1;
+            r.remaining -= 1;
+            r.produced_rack[si] = cast::u32_of(rack.0);
+        }
+        if self.runs[ri].failed {
+            self.maybe_retire(run, platform, now);
+            return;
+        }
+        // Retain this stage's out-edge handoffs on the producer rack.
+        // A full rack spills the region to the disaggregated store
+        // (charge None): nothing is retained, and the consumer prices
+        // the edge as a cross-rack transfer regardless of placement.
+        for k in 0..wf.out_edges(si).len() {
+            let e = cast::usize_of(u64::from(wf.out_edges(si)[k]));
+            let mb = wf.edges()[e].handoff_mb;
+            if mb > 0.0 {
+                self.runs[ri].charge[e] =
+                    platform.retain_handoff(rack, mb, now).map(|server| EdgeCharge { server, mb });
+            }
+        }
+        // Ready successors, in edge-declaration order.
+        for k in 0..wf.out_edges(si).len() {
+            let e = cast::usize_of(u64::from(wf.out_edges(si)[k]));
+            let to = cast::usize_of(u64::from(wf.edges()[e].to));
+            self.runs[ri].pending_in[to] -= 1;
+            if self.runs[ri].pending_in[to] > 0 {
+                continue;
+            }
+            let launch_at = self.route_ready_stage(run, to, wf, program, platform, affinity, now);
+            self.runs[ri].pending_launch += 1;
+            out.push(StageLaunch { run, stage: cast::u32_of(to), at: launch_at });
+        }
+        self.maybe_retire(run, platform, now);
+    }
+
+    /// Route a ready stage (all in-edges complete): pick its rack —
+    /// affinity-aware (prefer the rack with the most resident input
+    /// bytes, deterministic ties to the lowest rack id) or blind — pin
+    /// it, price the cross-rack inputs, and return the launch instant.
+    #[allow(clippy::too_many_arguments)]
+    fn route_ready_stage(
+        &mut self,
+        run: u32,
+        to: usize,
+        wf: &Workflow,
+        program: &Program,
+        platform: &mut Platform,
+        affinity: bool,
+        now: Millis,
+    ) -> Millis {
+        let ri = cast::usize_of(u64::from(run));
+        let scale = self.runs[ri].root_scale * wf.scale_mult(to);
+        let estimate = program.peak_estimate(scale);
+        // Affinity candidate: the rack holding the most *resident*
+        // input bytes (spilled/zero edges contribute nothing).
+        let prefer = if affinity {
+            let mut best: Option<(usize, f64)> = None;
+            for &ei in wf.in_edges(to) {
+                let e = cast::usize_of(u64::from(ei));
+                if let Some(c) = self.runs[ri].charge[e] {
+                    let pr = cast::usize_of(u64::from(
+                        self.runs[ri].produced_rack
+                            [cast::usize_of(u64::from(wf.edges()[e].from))],
+                    ));
+                    let mut mb = c.mb;
+                    // accumulate other resident in-edges on the same rack
+                    if let Some((br, bmb)) = best {
+                        if br == pr {
+                            mb += bmb;
+                        } else if bmb >= mb {
+                            continue;
+                        }
+                    }
+                    best = Some((pr, mb));
+                }
+            }
+            best.map(|(r, _)| RackId(r))
+        } else {
+            None
+        };
+        let (dest, _hit) = platform.route_stage(estimate, prefer);
+        self.runs[ri].pinned_rack[to] = cast::u32_of(dest.0);
+        // Launch delay: the slowest non-resident input transfer. Edges
+        // resident on the destination rack are consumed in place (the
+        // compute maps the region, no bulk move).
+        let mut xfer = 0.0f64;
+        for &ei in wf.in_edges(to) {
+            let e = cast::usize_of(u64::from(ei));
+            let mb = wf.edges()[e].handoff_mb;
+            if mb <= 0.0 {
+                continue;
+            }
+            let resident_on_dest = self.runs[ri].charge[e].map_or(false, |c| {
+                self.runs[ri].produced_rack[cast::usize_of(u64::from(wf.edges()[e].from))]
+                    == cast::u32_of(dest.0)
+                    && c.mb > 0.0
+            });
+            if !resident_on_dest {
+                self.stats.cross_rack_mb += mb;
+                xfer = xfer.max(self.net.transfer(NetKind::Tcp, mb, true));
+            }
+        }
+        now + xfer
+    }
+
+    /// A `StageLaunch` event fired: consume (free) the stage's in-edge
+    /// handoff regions and report whether the launch should proceed.
+    /// Returns `false` (and retires the run if possible) when the run
+    /// already failed — the stage is skipped, not admitted.
+    pub fn begin_launch(
+        &mut self,
+        run: u32,
+        stage: u32,
+        wf: &Workflow,
+        platform: &mut Platform,
+        now: Millis,
+    ) -> bool {
+        let ri = cast::usize_of(u64::from(run));
+        self.runs[ri].pending_launch -= 1;
+        if self.runs[ri].failed {
+            self.maybe_retire(run, platform, now);
+            return false;
+        }
+        for &ei in wf.in_edges(cast::usize_of(u64::from(stage))) {
+            let e = cast::usize_of(u64::from(ei));
+            if let Some(c) = self.runs[ri].charge[e].take() {
+                platform.release_handoff(c.server, c.mb, now);
+            }
+        }
+        self.stats.spawned += 1;
+        true
+    }
+
+    /// The launched stage was admitted: it is now in flight.
+    pub fn on_stage_admitted(&mut self, run: u32) {
+        let r = &mut self.runs[cast::usize_of(u64::from(run))];
+        r.inflight += 1;
+        self.stats.stages_started += 1;
+    }
+
+    /// The launched stage failed admission: the run fails (downstream
+    /// stages stop spawning) and retires once nothing is in flight.
+    pub fn on_stage_rejected(&mut self, run: u32, platform: &mut Platform, now: Millis) {
+        self.runs[cast::usize_of(u64::from(run))].failed = true;
+        self.maybe_retire(run, platform, now);
+    }
+
+    /// An in-flight stage invocation was aborted (fault-struck without
+    /// recovery): the run fails and retires once drained.
+    pub fn on_stage_aborted(&mut self, run: u32, platform: &mut Platform, now: Millis) {
+        let ri = cast::usize_of(u64::from(run));
+        let r = &mut self.runs[ri];
+        debug_assert!(!r.free, "abort for a retired run");
+        r.inflight -= 1;
+        r.remaining -= 1;
+        r.failed = true;
+        self.maybe_retire(run, platform, now);
+    }
+
+    /// Retire the run if it is complete (every stage done → record the
+    /// end-to-end sample) or failed and drained (free any still-held
+    /// handoff charges so the cluster drains to exactly empty).
+    fn maybe_retire(&mut self, run: u32, platform: &mut Platform, now: Millis) {
+        let ri = cast::usize_of(u64::from(run));
+        let r = &self.runs[ri];
+        if r.free {
+            return;
+        }
+        let done = r.remaining == 0 && r.pending_launch == 0 && r.inflight == 0;
+        let dead = r.failed && r.inflight == 0 && r.pending_launch == 0;
+        if !(done || dead) {
+            return;
+        }
+        if done && !r.failed {
+            self.stats.runs_completed += 1;
+            let e2e = now - r.t0;
+            self.stats.e2e.push(e2e);
+            self.stats.e2e_p95.push(e2e);
+            self.stats.e2e_p99.push(e2e);
+        }
+        let r = &mut self.runs[ri];
+        for c in r.charge.iter_mut() {
+            if let Some(c) = c.take() {
+                platform.release_handoff(c.server, c.mb, now);
+            }
+        }
+        r.free = true;
+        self.live -= 1;
+        self.free.push(run);
+    }
+
+    /// Debug invariant for the driver's end-of-replay leak asserts:
+    /// every run retired and every handoff charge released.
+    pub fn assert_idle(&self) {
+        debug_assert_eq!(self.live, 0, "unretired workflow runs at end of replay");
+        debug_assert!(
+            self.runs.iter().all(|r| r.charge.iter().all(Option::is_none)),
+            "leaked workflow handoff charges"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_shapes() {
+        assert!(Workflow::new(vec![], vec![]).is_err());
+        assert!(Workflow::new(vec![2.0], vec![]).is_err(), "root must keep scale");
+        assert!(Workflow::new(
+            vec![1.0, 1.0],
+            vec![WorkflowEdge { from: 1, to: 0, handoff_mb: 1.0 }]
+        )
+        .is_err());
+        assert!(Workflow::new(vec![1.0, 1.0], vec![]).is_err(), "stage 1 unreachable");
+        assert!(Workflow::new(
+            vec![1.0, 1.0],
+            vec![WorkflowEdge { from: 0, to: 1, handoff_mb: -1.0 }]
+        )
+        .is_err());
+        let ok = Workflow::new(
+            vec![1.0, 0.5],
+            vec![WorkflowEdge { from: 0, to: 1, handoff_mb: 64.0 }],
+        )
+        .unwrap();
+        assert_eq!(ok.n_stages(), 2);
+        assert!(!ok.is_trivial());
+    }
+
+    #[test]
+    fn constructors_shape_csr() {
+        let single = Workflow::single();
+        assert!(single.is_trivial());
+        assert_eq!(single.n_stages(), 1);
+        assert!(single.out_edges(0).is_empty());
+
+        let pipe = Workflow::pipeline(4, 32.0);
+        assert_eq!(pipe.n_stages(), 4);
+        assert_eq!(pipe.edges().len(), 3);
+        assert_eq!(pipe.out_edges(0), &[0]);
+        assert_eq!(pipe.in_edges(3), &[2]);
+        assert_eq!(pipe.indeg, vec![0, 1, 1, 1]);
+
+        let fan = Workflow::fan_out_in(3, 0.5, 16.0);
+        assert_eq!(fan.n_stages(), 5);
+        assert_eq!(fan.edges().len(), 6);
+        assert_eq!(fan.out_edges(0).len(), 3, "root scatters to every branch");
+        assert_eq!(fan.in_edges(4).len(), 3, "gather collects every branch");
+        assert!((fan.scale_mult(2) - 0.5).abs() < 1e-12);
+        assert!((fan.scale_mult(4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_of_one_is_trivial() {
+        assert!(Workflow::pipeline(1, 64.0).is_trivial());
+    }
+}

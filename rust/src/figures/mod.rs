@@ -19,6 +19,7 @@ pub mod scaling_figs;
 pub mod sharding_figs;
 pub mod tpcds_figs;
 pub mod video_figs;
+pub mod workflow_figs;
 
 use crate::apps::Invocation;
 use crate::cluster::ClusterSpec;

@@ -1,0 +1,232 @@
+//! Workflow-tenant figures (ISSUE 10): rack-affinity placement vs
+//! blind routing, and the function-DAG baseline comparison.
+//!
+//! The tentpole claim is that when tenants declare inter-invocation
+//! DAGs with data handoff, placing a ready stage on the rack already
+//! holding its inputs beats smallest-fit routing on *both* end-to-end
+//! workflow latency and cross-rack handoff traffic. The sweep holds
+//! the workload and the arrival schedule fixed — the schedule is
+//! placement-independent, so one generation serves every row — and
+//! varies only the `workflow_affinity` flag per handoff size. Every
+//! difference between the paired rows is attributable to placement
+//! alone; `rust/tests/figures_shape.rs` pins the shape (affinity wins
+//! both axes at every handoff size) and per-seed digest stability.
+//!
+//! The companion table runs each *real* workflow app through the
+//! function-DAG baseline ([`crate::baselines::dag`], PyWren-style
+//! per-function boxes over a KV store) at the same input scale — the
+//! related-work systems the paper's bulky-app argument is made
+//! against.
+
+use crate::apps::Invocation;
+use crate::baselines::dag::{self, DagParams};
+use crate::cluster::{ClusterSpec, StartupModel};
+use crate::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver, ScaleModel};
+use crate::coordinator::Workflow;
+use crate::net::NetModel;
+use crate::trace::Archetype;
+
+/// One (handoff size × placement) cell of the affinity sweep.
+#[derive(Debug, Clone)]
+pub struct WorkflowSweepRow {
+    /// Placement label: `"affinity"` or `"blind"`.
+    pub placement: &'static str,
+    /// Per-edge handoff size (MB) of the three-stage pipeline.
+    pub handoff_mb: f64,
+    /// Stage invocations that ran to completion.
+    pub completed: usize,
+    /// Workflow runs whose every stage completed.
+    pub wf_runs_completed: u64,
+    /// Mean end-to-end workflow latency (root admission → last stage).
+    pub wf_e2e_mean_ms: f64,
+    /// P² p95 end-to-end workflow latency.
+    pub wf_e2e_p95_ms: f64,
+    /// Handoff megabytes that crossed racks (the quantity affinity
+    /// placement exists to shrink).
+    pub cross_rack_mb: f64,
+    /// Stage placements that landed on the preferred (input-resident)
+    /// rack. Zero for blind rows (nothing is preferred).
+    pub affinity_hits: u64,
+    /// Stage placements whose preferred rack could not fit.
+    pub affinity_spills: u64,
+    /// The replay's order-stable digest (per-seed determinism pin).
+    pub digest: u64,
+}
+
+/// Affinity-vs-blind sweep: every tenant runs a three-stage pipeline,
+/// and each handoff size replays the *identical* schedule under both
+/// placements on a four-rack fleet. Canonical sweep:
+/// `&[100.0, 400.0, 900.0]` MB.
+pub fn fig_workflow_affinity(
+    apps: usize,
+    invocations: usize,
+    seed: u64,
+    handoffs_mb: &[f64],
+) -> Vec<WorkflowSweepRow> {
+    let mut rows = Vec::with_capacity(2 * handoffs_mb.len());
+    for &handoff_mb in handoffs_mb {
+        let mut mix = standard_mix(apps, Archetype::Average);
+        for app in mix.iter_mut() {
+            app.workflow = Some(Workflow::pipeline(3, handoff_mb));
+        }
+        let base = DriverConfig {
+            seed,
+            invocations,
+            mean_iat_ms: 500.0,
+            cluster: ClusterSpec::multi_rack(4, 4),
+            ..DriverConfig::default()
+        };
+        let driver = MultiTenantDriver::new(&mix, base);
+        let schedule = driver.schedule();
+        for (placement, affinity) in [("affinity", true), ("blind", false)] {
+            let cfg = DriverConfig { workflow_affinity: affinity, ..base };
+            let r = MultiTenantDriver::new(&mix, cfg).run_zenix(&schedule);
+            rows.push(WorkflowSweepRow {
+                placement,
+                handoff_mb,
+                completed: r.completed,
+                wf_runs_completed: r.wf_runs_completed,
+                wf_e2e_mean_ms: r.wf_e2e_mean_ms,
+                wf_e2e_p95_ms: r.wf_e2e_p95_ms,
+                cross_rack_mb: r.wf_cross_rack_mb,
+                affinity_hits: r.wf_affinity_hits,
+                affinity_spills: r.wf_affinity_spills,
+                digest: r.digest,
+            });
+        }
+    }
+    rows
+}
+
+/// One workflow app against the function-DAG baseline.
+#[derive(Debug, Clone)]
+pub struct WorkflowBaselineRow {
+    /// Program name.
+    pub app: &'static str,
+    /// Root input scale the tenant's arrivals use.
+    pub scale: f64,
+    /// Mean per-stage execution latency under the Zenix workflow
+    /// replay (ms).
+    pub zenix_mean_exec_ms: f64,
+    /// Zenix attributed allocation over the app's run (GB·s).
+    pub zenix_alloc_gb_s: f64,
+    /// Single-invocation latency of the PyWren-style function-DAG
+    /// baseline on the same program and scale (ms).
+    pub dag_exec_ms: f64,
+    /// The baseline's allocation integral for that invocation (GB·s).
+    pub dag_alloc_gb_s: f64,
+}
+
+/// Per-workflow-app comparison against the function-DAG baseline: the
+/// three real evaluation apps (LR, TPC-DS q16, video transcode) run as
+/// pipeline tenants through the driver, and the same programs run
+/// once each through [`dag::run`] (PyWren parameters, provisioned at
+/// the same scale). The driver side measures steady-state stage
+/// latency under sharing; the baseline side is the per-function-box
+/// execution model the paper argues against.
+pub fn fig_workflow_vs_function_dag(
+    invocations: usize,
+    seed: u64,
+    handoff_mb: f64,
+) -> Vec<WorkflowBaselineRow> {
+    // exactly the three real programs, no synthetic fillers
+    let mut mix = standard_mix(3, Archetype::Average);
+    for app in mix.iter_mut() {
+        app.workflow = Some(Workflow::pipeline(3, handoff_mb));
+    }
+    let base = DriverConfig {
+        seed,
+        invocations,
+        mean_iat_ms: 600.0,
+        cluster: ClusterSpec::multi_rack(4, 4),
+        ..DriverConfig::default()
+    };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let r = driver.run_zenix(&schedule);
+    mix.iter()
+        .zip(&r.apps)
+        .map(|(tenant, stats)| {
+            let scale = match tenant.scales {
+                ScaleModel::Fixed(s) => s,
+                ScaleModel::AzureTrace(_) => 1.0,
+            };
+            let d = dag::run(
+                &tenant.graph.program,
+                Invocation::new(scale),
+                DagParams::pywren(scale),
+                &NetModel::default(),
+                &StartupModel::default(),
+            );
+            WorkflowBaselineRow {
+                app: tenant.graph.program.name,
+                scale,
+                zenix_mean_exec_ms: stats.mean_exec_ms,
+                zenix_alloc_gb_s: stats.consumption.alloc_gb_s(),
+                dag_exec_ms: d.exec_ms,
+                dag_alloc_gb_s: d.consumption.alloc_gb_s(),
+            }
+        })
+        .collect()
+}
+
+/// Render the affinity sweep as a figure-row text block.
+pub fn render_workflow(title: &str, rows: &[WorkflowSweepRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<10} {:>10} {:>10} {:>9} {:>12} {:>12} {:>13} {:>6} {:>7}",
+        "placement",
+        "handoff MB",
+        "completed",
+        "wf done",
+        "e2e mean ms",
+        "e2e p95 ms",
+        "x-rack MB",
+        "hits",
+        "spills"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>10.0} {:>10} {:>9} {:>12.1} {:>12.1} {:>13.0} {:>6} {:>7}",
+            r.placement,
+            r.handoff_mb,
+            r.completed,
+            r.wf_runs_completed,
+            r.wf_e2e_mean_ms,
+            r.wf_e2e_p95_ms,
+            r.cross_rack_mb,
+            r.affinity_hits,
+            r.affinity_spills,
+        );
+    }
+    out
+}
+
+/// Render the function-DAG baseline table.
+pub fn render_workflow_baseline(title: &str, rows: &[WorkflowBaselineRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    let _ = writeln!(
+        out,
+        "{:<18} {:>6} {:>16} {:>14} {:>14} {:>12}",
+        "app", "scale", "zenix stage ms", "zenix GB·s", "pywren ms", "pywren GB·s"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<18} {:>6.2} {:>16.1} {:>14.1} {:>14.1} {:>12.1}",
+            r.app,
+            r.scale,
+            r.zenix_mean_exec_ms,
+            r.zenix_alloc_gb_s,
+            r.dag_exec_ms,
+            r.dag_alloc_gb_s,
+        );
+    }
+    out
+}

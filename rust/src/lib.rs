@@ -34,9 +34,7 @@
 #![warn(missing_docs)]
 
 pub mod analysis;
-#[allow(missing_docs)]
 pub mod apps;
-#[allow(missing_docs)]
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;

@@ -523,3 +523,96 @@ fn coldstart_sweep_tail_collapses_with_budget() {
     let text = coldstart_figs::render_coldstart("coldstart", &rows);
     assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
 }
+
+// ---- workflow affinity sweep --------------------------------------------
+
+#[test]
+fn workflow_sweep_affinity_wins_both_axes_at_every_handoff() {
+    use zenix::figures::workflow_figs;
+
+    // ISSUE 10 tentpole shape: at every handoff size the affinity row
+    // must beat its blind twin (identical schedule) on cross-rack
+    // handoff bytes AND end-to-end workflow latency, mean and p95.
+    let handoffs = [100.0, 400.0, 900.0];
+    let rows = workflow_figs::fig_workflow_affinity(6, 240, 17, &handoffs);
+    assert_eq!(rows.len(), 2 * handoffs.len());
+    for pair in rows.chunks(2) {
+        let (aff, blind) = (&pair[0], &pair[1]);
+        assert_eq!(aff.placement, "affinity");
+        assert_eq!(blind.placement, "blind");
+        assert_eq!(aff.handoff_mb, blind.handoff_mb);
+        // engagement: workflows must genuinely run in both cells
+        assert!(aff.wf_runs_completed > 0, "@{} MB: no workflow completed", aff.handoff_mb);
+        assert!(aff.affinity_hits > 0, "@{} MB: affinity never engaged", aff.handoff_mb);
+        assert_eq!(blind.affinity_hits, 0, "blind routing has no preferred rack");
+        assert!(
+            blind.cross_rack_mb > 0.0,
+            "@{} MB: blind routing must pay cross-rack handoffs",
+            aff.handoff_mb
+        );
+        // the tentpole: both axes, every handoff size
+        assert!(
+            aff.cross_rack_mb < blind.cross_rack_mb,
+            "@{} MB: cross-rack {} vs {}",
+            aff.handoff_mb,
+            aff.cross_rack_mb,
+            blind.cross_rack_mb
+        );
+        assert!(
+            aff.wf_e2e_mean_ms < blind.wf_e2e_mean_ms,
+            "@{} MB: e2e mean {} vs {}",
+            aff.handoff_mb,
+            aff.wf_e2e_mean_ms,
+            blind.wf_e2e_mean_ms
+        );
+        assert!(
+            aff.wf_e2e_p95_ms < blind.wf_e2e_p95_ms,
+            "@{} MB: e2e p95 {} vs {}",
+            aff.handoff_mb,
+            aff.wf_e2e_p95_ms,
+            blind.wf_e2e_p95_ms
+        );
+    }
+    // per-seed digest stability of the whole sweep
+    let again = workflow_figs::fig_workflow_affinity(6, 240, 17, &handoffs);
+    for (a, b) in rows.iter().zip(&again) {
+        assert_eq!(
+            a.digest, b.digest,
+            "{} @ {} MB: sweep must be digest-stable",
+            a.placement, a.handoff_mb
+        );
+    }
+    // the renderer lists every cell (header + one line per row)
+    let text = workflow_figs::render_workflow("workflow", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
+}
+
+#[test]
+fn workflow_vs_function_dag_reports_every_real_app() {
+    use zenix::figures::workflow_figs;
+
+    // The per-app baseline table: all three real evaluation apps, each
+    // with a meaningful Zenix measurement and a function-DAG (PyWren)
+    // reference on the same program and scale.
+    let rows = workflow_figs::fig_workflow_vs_function_dag(180, 11, 300.0);
+    assert_eq!(rows.len(), 3, "one row per real workflow app");
+    let names: Vec<&str> = rows.iter().map(|r| r.app).collect();
+    assert!(names.contains(&"logreg"), "{names:?}");
+    assert!(names.contains(&"video-transcode"), "{names:?}");
+    for r in &rows {
+        assert!(r.zenix_mean_exec_ms > 0.0, "{}: zenix never completed a stage", r.app);
+        assert!(r.dag_exec_ms > 0.0, "{}: baseline must execute", r.app);
+        assert!(r.zenix_alloc_gb_s > 0.0 && r.dag_alloc_gb_s > 0.0, "{}", r.app);
+        // the bulky-app argument: the per-function-box baseline pays
+        // more wall-clock than a Zenix stage on the same program
+        assert!(
+            r.zenix_mean_exec_ms < r.dag_exec_ms,
+            "{}: zenix stage {} ms vs pywren {} ms",
+            r.app,
+            r.zenix_mean_exec_ms,
+            r.dag_exec_ms
+        );
+    }
+    let text = workflow_figs::render_workflow_baseline("workflow-vs-dag", &rows);
+    assert_eq!(text.lines().count(), 2 + rows.len(), "render rows:\n{text}");
+}

@@ -202,8 +202,14 @@ fn fifo_queueing_beats_rejection_under_mmpp_burst() {
     }
     assert!(fifo.p95_queue_delay_ms > 0.0, "fleet P² p95 must be reported");
     // conservation both ways
-    assert_eq!(reject.completed + reject.rejected + reject.aborted + reject.timed_out, 800);
-    assert_eq!(fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out, 800);
+    assert_eq!(
+        reject.completed + reject.rejected + reject.aborted + reject.timed_out + reject.expired,
+        800
+    );
+    assert_eq!(
+        fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out + fifo.expired,
+        800
+    );
     // the queued replay is deterministic too
     let fifo2 = MultiTenantDriver::new(&mix, fifo_cfg).run_zenix(&schedule);
     assert_eq!(fifo.digest, fifo2.digest);
@@ -275,6 +281,7 @@ fn fair_share_restores_fairness_under_asymmetric_overload() {
             weight,
             scales: ScaleModel::Fixed(600.0),
             deadline_ms: None,
+            workflow: None,
         };
         vec![mk("tenant-heavy", 6.0), mk("tenant-light", 1.0)]
     }
@@ -309,8 +316,14 @@ fn fair_share_restores_fairness_under_asymmetric_overload() {
         "overload must exceed capacity: {} of 1200 completed",
         fifo.completed
     );
-    assert_eq!(fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out, 1200);
-    assert_eq!(fair.completed + fair.rejected + fair.aborted + fair.timed_out, 1200);
+    assert_eq!(
+        fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out + fifo.expired,
+        1200
+    );
+    assert_eq!(
+        fair.completed + fair.rejected + fair.aborted + fair.timed_out + fair.expired,
+        1200
+    );
 
     // the acceptance bars: FIFO mirrors the 6:1 arrival monopoly,
     // FairShare restores near-equal per-tenant service
@@ -450,6 +463,182 @@ fn tier_split_conserves_started_invocations_fleet_and_per_app() {
         // started bounds completed: nothing completes without starting
         assert!(r.completed <= r.started, "{label}: completed exceeds started");
     }
+}
+
+/// Satellite regression (ISSUE 10): end-of-trace queue expiry must
+/// split genuine SLO violations (`timed_out`, deadline passed) from
+/// entries drained only because the trace ended (`expired`, deadline
+/// beyond the last event) — end-to-end through the driver, not just at
+/// the queue layer. The tenant is a "whale" whose single wave accesses
+/// eight server-sized data components: admission deterministically
+/// fails even on an idle cluster, so every arrival parks and the final
+/// drain makes no progress.
+#[test]
+fn end_of_trace_expiry_splits_slo_misses_from_drained_entries() {
+    use zenix::apps::program::{compute, data};
+    use zenix::apps::Program;
+    use zenix::cluster::Resources;
+    use zenix::coordinator::admission::AdmissionPolicy;
+
+    // Eight data components each the size of a whole default server
+    // (65536 MB): the degraded-allocation fallback shrinks free memory
+    // by 10x per component and the launch path runs out well before the
+    // last one, so the app can never be admitted — even idle.
+    let mut c = compute("whale", 40.0, 1.0, 1.0);
+    c.accesses = (0..8).collect();
+    c.access_intensity = 0.2;
+    let whale = Program {
+        name: "whale",
+        app_limit: Resources::new(32.0, 1_048_576.0),
+        computes: vec![c],
+        data: (0..8).map(|_| data("blob", 65_536.0)).collect(),
+        entry: 0,
+    };
+    let mix = vec![TenantApp {
+        graph: ResourceGraph::from_program(&whale).expect("whale compiles"),
+        weight: 1.0,
+        scales: ScaleModel::Fixed(1.0),
+        deadline_ms: None,
+        workflow: None,
+    }];
+    let base = DriverConfig {
+        seed: 31,
+        invocations: 40,
+        mean_iat_ms: 200.0,
+        cluster: ClusterSpec::multi_rack(1, 1),
+        ..DriverConfig::default()
+    };
+    let schedule = MultiTenantDriver::new(&mix, base).schedule();
+
+    // Long wait bound: every parked deadline lies beyond the last
+    // event, so nothing is an SLO violation — all arrivals must drain
+    // as `expired`, none as `timed_out`.
+    let long_cfg = DriverConfig {
+        admission: AdmissionPolicy::FifoQueue { max_wait_ms: 1e12, max_depth: 64 },
+        ..base
+    };
+    let long = MultiTenantDriver::new(&mix, long_cfg).run_zenix(&schedule);
+    assert_eq!(long.completed, 0, "the whale must never be admitted");
+    assert_eq!(long.rejected, 0, "the queue is deep enough for every arrival");
+    assert_eq!(long.timed_out, 0, "no deadline passed before the trace ended");
+    assert_eq!(long.expired, 40, "every parked entry drains as expired");
+    assert_eq!(long.failed, 40, "the digest-folded failure sum covers both splits");
+    assert_eq!(long.apps[0].expired, 40, "the split must reach the per-app stats");
+    assert_eq!(
+        long.apps[0].completed + long.apps[0].failed(),
+        long.apps[0].scheduled + long.apps[0].spawned,
+        "per-app conservation with the expired term"
+    );
+
+    // Short wait bound (10 ms against a ~200 ms mean IAT): earlier
+    // entries genuinely violate their SLO (timeouts), while an arrival
+    // parked within 10 ms of the last event still holds an unviolated
+    // deadline and must expire, not time out.
+    let short_cfg = DriverConfig {
+        admission: AdmissionPolicy::FifoQueue { max_wait_ms: 10.0, max_depth: 64 },
+        ..base
+    };
+    let short = MultiTenantDriver::new(&mix, short_cfg).run_zenix(&schedule);
+    assert_eq!(short.completed, 0);
+    assert!(short.timed_out >= 1, "10 ms deadlines must produce real SLO misses");
+    assert!(short.expired >= 1, "the trace-end parker must expire, not time out");
+    assert_eq!(
+        short.timed_out + short.expired + short.rejected,
+        40,
+        "the failure modes must partition the whale's arrivals"
+    );
+
+    // the split replay stays deterministic
+    let again = MultiTenantDriver::new(&mix, short_cfg).run_zenix(&schedule);
+    assert_eq!(short.digest, again.digest);
+    assert_eq!(short.expired, again.expired);
+}
+
+/// ISSUE 10 tentpole acceptance: on the *identical* schedule, rack-
+/// affinity stage placement must beat blind (smallest-fit) placement
+/// on BOTH end-to-end workflow latency — mean AND p95 — and cross-rack
+/// handoff traffic. Every tenant runs a three-stage pipeline with a
+/// ~900 MB handoff, so a consumer placed off its producer's rack pays
+/// a real transfer before it can launch.
+#[test]
+fn workflow_affinity_beats_blind_routing_on_latency_and_cross_rack_bytes() {
+    use zenix::coordinator::Workflow;
+
+    let mut mix = standard_mix(6, Archetype::Average);
+    for app in mix.iter_mut() {
+        app.workflow = Some(Workflow::pipeline(3, 900.0));
+    }
+    let base = DriverConfig {
+        seed: 17,
+        invocations: 300,
+        mean_iat_ms: 500.0,
+        cluster: ClusterSpec::multi_rack(4, 4),
+        ..DriverConfig::default()
+    };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let aff = driver.run_zenix(&schedule);
+    let blind =
+        MultiTenantDriver::new(&mix, DriverConfig { workflow_affinity: false, ..base })
+            .run_zenix(&schedule);
+
+    // engagement guards: both runs must genuinely drive the DAGs
+    assert!(aff.wf_runs > 0 && aff.wf_spawned > 0, "workflows must run");
+    assert!(aff.wf_runs_completed > 0, "some workflow must complete end-to-end");
+    assert!(aff.wf_affinity_hits > 0, "affinity must land stages on preferred racks");
+    assert!(blind.wf_cross_rack_mb > 0.0, "blind routing must pay cross-rack handoffs");
+    assert_eq!(aff.wf_runs, blind.wf_runs, "identical schedule, identical root count");
+
+    assert!(
+        aff.wf_cross_rack_mb < blind.wf_cross_rack_mb,
+        "affinity must shrink cross-rack handoff bytes: {:.0} vs {:.0} MB",
+        aff.wf_cross_rack_mb,
+        blind.wf_cross_rack_mb
+    );
+    assert!(
+        aff.wf_e2e_mean_ms < blind.wf_e2e_mean_ms,
+        "affinity must shrink mean workflow latency: {:.1} vs {:.1} ms",
+        aff.wf_e2e_mean_ms,
+        blind.wf_e2e_mean_ms
+    );
+    assert!(
+        aff.wf_e2e_p95_ms < blind.wf_e2e_p95_ms,
+        "affinity must shrink p95 workflow latency: {:.1} vs {:.1} ms",
+        aff.wf_e2e_p95_ms,
+        blind.wf_e2e_p95_ms
+    );
+
+    // the workflow-coupled replay stays deterministic, telemetry included
+    let again = MultiTenantDriver::new(&mix, base).run_zenix(&schedule);
+    assert_eq!(aff.digest, again.digest);
+    assert_eq!(aff.wf_cross_rack_mb.to_bits(), again.wf_cross_rack_mb.to_bits());
+    assert_eq!(aff.wf_affinity_hits, again.wf_affinity_hits);
+}
+
+/// Satellite companion (ISSUE 10): with a zero snapshot budget nothing
+/// is ever resident, so the post-repair tier re-resolution — and every
+/// other snapshot-layer knob — must be digest-inert even under fault
+/// injection (the coupling the bugfix touched).
+#[test]
+fn faulted_zero_budget_replay_ignores_snapshot_knobs() {
+    use zenix::coordinator::FaultConfig;
+
+    let mix = standard_mix(8, Archetype::Average);
+    let base = DriverConfig {
+        seed: 23,
+        invocations: 400,
+        faults: FaultConfig { rate_per_min: 2.0, ..FaultConfig::default() },
+        ..DriverConfig::default()
+    };
+    let driver = MultiTenantDriver::new(&mix, base);
+    let schedule = driver.schedule();
+    let a = driver.run_zenix(&schedule);
+    assert!(a.faulted > 0, "chaos must engage for this gate to mean anything");
+    let b = MultiTenantDriver::new(&mix, DriverConfig { prewarm: true, ..base })
+        .run_zenix(&schedule);
+    assert_eq!(a.digest, b.digest, "budget-0 snapshot knobs must stay digest-inert");
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.faulted, b.faulted);
 }
 
 /// Locate the AOT artifacts or skip the test (they require `make

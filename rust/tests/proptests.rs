@@ -531,10 +531,13 @@ fn deferred_queueing_never_loses_completed_work() {
 
             // conservation: every arrival ends in exactly one bucket
             let n = invocations;
-            if reject.completed + reject.rejected + reject.aborted + reject.timed_out != n {
+            if reject.completed + reject.rejected + reject.aborted + reject.timed_out
+                + reject.expired
+                != n
+            {
                 return false;
             }
-            if fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out != n {
+            if fifo.completed + fifo.rejected + fifo.aborted + fifo.timed_out + fifo.expired != n {
                 return false;
             }
             // unbounded queue: nothing is rejected for depth
@@ -701,7 +704,8 @@ fn fault_injection_partitions_arrivals_and_leaks_nothing() {
             };
             let driver = MultiTenantDriver::new(&mix, cfg);
             let r = driver.run_zenix(&driver.schedule());
-            if r.completed + r.rejected + r.aborted + r.timed_out + r.faulted_unrecovered
+            if r.completed + r.rejected + r.aborted + r.timed_out + r.expired
+                + r.faulted_unrecovered
                 != invocations
             {
                 return false;
@@ -713,7 +717,7 @@ fn fault_injection_partitions_arrivals_and_leaks_nothing() {
                 (acc.0 + a.faulted, acc.1 + a.recovered, acc.2 + a.faulted_unrecovered)
             });
             sums == (r.faulted, r.recovered, r.faulted_unrecovered)
-                && r.apps.iter().all(|a| a.completed + a.failed() == a.scheduled)
+                && r.apps.iter().all(|a| a.completed + a.failed() == a.scheduled + a.spawned)
                 && r.fleet.used_mem_mb_s <= r.fleet.alloc_mem_mb_s + 1e-6
         },
     );
@@ -772,7 +776,7 @@ fn parallel_replay_digest_matches_single_worker() {
             let schedule = driver.schedule();
             let seq = driver.run_zenix(&schedule);
             // the sequential replay satisfies conservation...
-            if seq.completed + seq.rejected + seq.aborted + seq.timed_out
+            if seq.completed + seq.rejected + seq.aborted + seq.timed_out + seq.expired
                 + seq.faulted_unrecovered
                 != invocations
             {
@@ -787,6 +791,7 @@ fn parallel_replay_digest_matches_single_worker() {
                     || par.rejected != seq.rejected
                     || par.aborted != seq.aborted
                     || par.timed_out != seq.timed_out
+                    || par.expired != seq.expired
                     || par.faulted != seq.faulted
                     || par.recovered != seq.recovered
                     || par.faulted_unrecovered != seq.faulted_unrecovered
@@ -1026,6 +1031,124 @@ fn parallel_tiered_replay_matches_single_worker() {
                 }
             }
             true
+        },
+    );
+}
+
+/// Tentpole property (ISSUE 10): workflow-structured replays conserve
+/// every stage invocation and degenerate exactly. Random DAG shapes
+/// (pipeline, fan-out/fan-in, trivial), seeds, loads and affinity
+/// settings:
+///   1. fleet and per-app, `completed + failed() == scheduled +
+///      spawned` — every downstream stage launch lands in exactly one
+///      conservation term;
+///   2. the sharded loop reproduces the sequential digest AND the
+///      workflow telemetry bit-for-bit at workers ∈ {2, 4};
+///   3. a DAG-of-1 mix replays byte-identical to the same mix with no
+///      workflow at all (trivial DAGs are digest-inert).
+#[test]
+fn workflow_replay_conserves_and_degenerates() {
+    use zenix::coordinator::driver::{standard_mix, DriverConfig, MultiTenantDriver};
+    use zenix::coordinator::Workflow;
+    use zenix::trace::Archetype;
+
+    forall(
+        5,
+        |rng: &mut Rng| {
+            (
+                rng.next_u64(),
+                rng.range(3, 7),           // apps
+                rng.range(60, 140),        // root invocations
+                rng.uniform(150.0, 400.0), // fleet mean IAT
+                rng.range(0, 3),           // DAG shape selector
+                rng.range(2, 5),           // stages / fan-out width
+                rng.uniform(1.0, 150.0),   // handoff MB
+                rng.chance(0.5),           // affinity on/off
+            )
+        },
+        |&(seed, apps, invocations, mean_iat_ms, shape, k, handoff_mb, affinity)| {
+            let dag = match shape {
+                0 => Workflow::pipeline(k, handoff_mb),
+                1 => Workflow::fan_out_in(k, 0.6, handoff_mb),
+                _ => Workflow::single(),
+            };
+            let mut mix = standard_mix(apps, Archetype::Average);
+            for (i, app) in mix.iter_mut().enumerate() {
+                // every other tenant carries the DAG: workflow and
+                // independent tenants must coexist in one replay
+                if i % 2 == 0 {
+                    app.workflow = Some(dag.clone());
+                }
+            }
+            let base = DriverConfig {
+                seed,
+                invocations,
+                mean_iat_ms,
+                workflow_affinity: affinity,
+                ..DriverConfig::default()
+            }
+            .with_racks(4);
+            let driver = MultiTenantDriver::new(&mix, base);
+            let schedule = driver.schedule();
+            let seq = driver.run_zenix(&schedule);
+
+            // 1. conservation with the spawned term: fleet...
+            let spawned = usize::try_from(seq.wf_spawned).expect("spawned fits usize");
+            let lhs = seq.completed
+                + seq.rejected
+                + seq.aborted
+                + seq.timed_out
+                + seq.expired
+                + seq.faulted_unrecovered;
+            if lhs != schedule.arrivals.len() + spawned {
+                return false;
+            }
+            // ...and per app, with per-app spawned summing to the fleet term
+            let mut spawned_sum = 0usize;
+            for a in &seq.apps {
+                if a.completed + a.failed() != a.scheduled + a.spawned {
+                    return false;
+                }
+                spawned_sum += a.spawned;
+            }
+            if spawned_sum != spawned
+                || seq.wf_stages_completed > seq.wf_stages_started
+                || seq.wf_runs_completed > seq.wf_runs
+            {
+                return false;
+            }
+
+            // 2. worker invariance: digest AND workflow telemetry
+            for workers in [2usize, 4] {
+                let par = MultiTenantDriver::new(&mix, DriverConfig { workers, ..base })
+                    .run_zenix(&schedule);
+                if par.digest != seq.digest
+                    || par.wf_spawned != seq.wf_spawned
+                    || par.wf_runs != seq.wf_runs
+                    || par.wf_runs_completed != seq.wf_runs_completed
+                    || par.wf_stages_started != seq.wf_stages_started
+                    || par.wf_stages_completed != seq.wf_stages_completed
+                    || par.wf_affinity_hits != seq.wf_affinity_hits
+                    || par.wf_affinity_spills != seq.wf_affinity_spills
+                    || par.wf_cross_rack_mb.to_bits() != seq.wf_cross_rack_mb.to_bits()
+                    || par.expired != seq.expired
+                {
+                    return false;
+                }
+            }
+
+            // 3. the trivial DAG degenerates to independent arrivals
+            let mut trivial = standard_mix(apps, Archetype::Average);
+            for app in trivial.iter_mut() {
+                app.workflow = Some(Workflow::single());
+            }
+            let one = MultiTenantDriver::new(&trivial, base).run_zenix(&schedule);
+            let plain_mix = standard_mix(apps, Archetype::Average);
+            let plain = MultiTenantDriver::new(&plain_mix, base).run_zenix(&schedule);
+            one.digest == plain.digest
+                && one.completed == plain.completed
+                && one.wf_spawned == 0
+                && one.wf_cross_rack_mb == 0.0
         },
     );
 }

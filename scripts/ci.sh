@@ -263,6 +263,40 @@ awk -v c="$cold_p99" -v w="$warm_p99" 'BEGIN { exit (w + 0 > 0 && (w + 0) * 10.0
 }
 echo "coldstart smoke passed: budget-0 digest == pinned; p99 start ${warm_p99} ms vs always-cold ${cold_p99} ms"
 
+echo "== driver smoke: workflow tenants (DAG-of-1 pinned, affinity beats blind on cross-rack bytes)"
+# ISSUE 10: a DAG-of-1 workflow wraps every arrival in a single-stage
+# DAG — nothing spawned, nothing handed off — so the 1k digest must
+# stay byte-identical to the pinned sequential digest. With 3-stage
+# pipelines on a 4-rack fleet, rack-affinity placement must strictly
+# shrink cross-rack handoff traffic vs affinity-blind routing on the
+# identical schedule (the workflow: line).
+wf_args="--apps 20 --invocations 1000 --seed 7"
+single1k=$(cargo run --release --example multi_tenant -- $wf_args --workflow single)
+wfdig=$(grep -oE 'digest=0x[0-9a-f]+' <<<"$single1k" | head -1)
+if [[ -z "$wfdig" || "$wfdig" != "$dig1" ]]; then
+    echo "FAIL: DAG-of-1 workflow digest ${wfdig} must be byte-identical to the pinned ${dig1}" >&2
+    exit 1
+fi
+pipe_args="$wf_args --racks 4 --workflow pipeline --workflow-stages 3 --workflow-handoff 400"
+aff_out=$(cargo run --release --example multi_tenant -- $pipe_args)
+blind_out=$(cargo run --release --example multi_tenant -- $pipe_args --workflow-affinity off)
+aff_xr=$(grep -oE 'cross-rack-mb=[0-9.]+' <<<"$aff_out" | head -1 | cut -d= -f2 || true)
+blind_xr=$(grep -oE 'cross-rack-mb=[0-9.]+' <<<"$blind_out" | head -1 | cut -d= -f2 || true)
+wf_done=$(grep -oE 'runs-completed=[0-9]+' <<<"$aff_out" | head -1 | tr -dc '0-9' || true)
+if [[ -z "$aff_xr" || -z "$blind_xr" || -z "$wf_done" ]]; then
+    echo "FAIL: could not parse the workflow: line from the driver output" >&2
+    exit 1
+fi
+if (( wf_done == 0 )); then
+    echo "FAIL: workflow smoke completed 0 workflow runs — the pipeline no longer engages; retune pipe_args" >&2
+    exit 1
+fi
+awk -v a="$aff_xr" -v b="$blind_xr" 'BEGIN { exit (b + 0 > 0 && a + 0 < b + 0) ? 0 : 1 }' || {
+    echo "FAIL: affinity cross-rack ${aff_xr} MB must sit strictly below blind ${blind_xr} MB" >&2
+    exit 1
+}
+echo "workflow smoke passed: DAG-of-1 digest == pinned; cross-rack ${aff_xr} MB (affinity) < ${blind_xr} MB (blind), ${wf_done} runs completed"
+
 echo "== bench smoke: scheduler (quick budget, json to repo root)"
 out=$(mktemp)
 ZENIX_BENCH_JSON=. cargo bench --bench scheduler -- --quick | tee "$out"
@@ -346,6 +380,23 @@ awk -v m="$tiered_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 1.2 * (s + 0)
     exit 1
 }
 echo "tiered driver per-invocation rate: ${tiered_rate} µs (<= 1.2x untiered ${us_per_inv} µs)"
+
+# ISSUE 10: the workflow 100k row (three-stage pipelines on four racks,
+# rack-affinity placement) must be present and its per-*stage* cost
+# must stay within 1.5x of the independent-arrival per-invocation rate
+# — the row reports mean_ns over ~300k stage invocations, so the gate
+# measures the DAG layer's bookkeeping (handoff ledgers, ready-stage
+# scans, affinity preference checks), not the 3x stage fan-out.
+workflow_rate=$(grep -E '100k-invocation workflow driver' "$out" | grep -oE '[0-9]+(\.[0-9]+)? µs/invocation' | head -1 | tr -dc '0-9.' || true)
+if [[ -z "$workflow_rate" ]]; then
+    echo "FAIL: could not find the 100k-invocation workflow (driver_100k_workflow) row" >&2
+    exit 1
+fi
+awk -v m="$workflow_rate" -v s="$us_per_inv" 'BEGIN { exit (m + 0 <= 1.5 * (s + 0)) ? 0 : 1 }' || {
+    echo "FAIL: workflow driver at ${workflow_rate} µs/stage > 1.5x the independent-arrival ${us_per_inv} µs (DAG-layer overhead regression)" >&2
+    exit 1
+}
+echo "workflow driver per-stage rate: ${workflow_rate} µs (<= 1.5x independent ${us_per_inv} µs)"
 
 # ISSUE 8: the 1M-invocation parallel rows must be present for every
 # worker count, and the 1-worker sharded run must hold the 60 µs/inv
